@@ -1,0 +1,101 @@
+//! End-to-end serving driver (the DESIGN.md §e2e validation run).
+//!
+//! Loads the trained Qwen-like MoE through the full stack — flash image →
+//! expert cache → cache-aware router → AOT PJRT executables — behind the
+//! serving coordinator, and pushes a mixed short/long-prompt workload
+//! through it, reporting per-request TTFT, wall-clock and simulated-device
+//! throughput. This is the run recorded in EXPERIMENTS.md §E2E.
+//!
+//! Run: `cargo run --release --offline --example serving_assistant`
+
+use anyhow::Result;
+use moe_cache::cache::Policy;
+use moe_cache::config::{DeviceProfile, Quant};
+use moe_cache::coordinator::{Coordinator, Request, ServerConfig};
+use moe_cache::eval::EvalData;
+use moe_cache::model::{Engine, EngineOptions};
+use moe_cache::report::Table;
+use moe_cache::routing::{DeltaMode, Strategy};
+
+fn main() -> Result<()> {
+    let arts = moe_cache::artifacts_dir();
+    anyhow::ensure!(
+        arts.join("qwen-tiny").join("manifest.json").exists(),
+        "run `make artifacts` first"
+    );
+    let data = EvalData::load(&arts.join("data"))?;
+
+    let arts2 = arts.clone();
+    let coord = Coordinator::spawn(
+        move || {
+            Engine::load(
+                &arts2,
+                "qwen-tiny",
+                EngineOptions {
+                    quant: Quant::Int4,
+                    cache_capacity: 30,
+                    policy: Policy::Lru,
+                    strategy: Strategy::CachePrior {
+                        lambda: 0.5,
+                        j: 2,
+                        delta: DeltaMode::RunningAvg,
+                    },
+                    device: DeviceProfile::device_12gb(),
+                    seed: 17,
+                    record_trace: false,
+                    record_logits: false,
+                },
+            )
+        },
+        ServerConfig::default(),
+    )?;
+
+    // Mixed workload: alternate short (40-60 tok) and long (300-400 tok)
+    // prompts, 32 new tokens each — a mobile-assistant-like session mix.
+    let mut workload: Vec<Vec<u32>> = Vec::new();
+    for i in 0..4 {
+        workload.push(data.prompts_short[i].clone());
+        workload.push(data.prompts_long[i].clone());
+    }
+
+    let mut t = Table::new(
+        "serving_assistant",
+        &["req", "prompt_len", "generated", "ttft_s", "wall_tps", "device_tps", "hit_rate"],
+    );
+    let t0 = std::time::Instant::now();
+    let mut total_generated = 0usize;
+    for (i, prompt) in workload.iter().enumerate() {
+        let res = coord.submit(Request {
+            id: i as u64,
+            prompt: prompt.clone(),
+            max_new: 32,
+            temperature: 0.8,
+            stop_token: None,
+        })?;
+        total_generated += res.generated.len();
+        t.row(vec![
+            i.to_string(),
+            prompt.len().to_string(),
+            res.generated.len().to_string(),
+            format!("{:.3}", res.ttft_s),
+            format!("{:.1}", res.decode_tps),
+            format!("{:.2}", res.device_tps),
+            format!(
+                "{:.3}",
+                res.cache_hits as f64 / (res.cache_hits + res.cache_misses).max(1) as f64
+            ),
+        ]);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    t.print();
+    let m = coord.shutdown();
+    println!("server: {}", m.summary());
+    println!(
+        "workload: {} requests, {} tokens generated, {:.1}s wall, {:.2} tok/s end-to-end",
+        workload.len(),
+        total_generated,
+        wall,
+        total_generated as f64 / wall
+    );
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Accuracy / cache-efficiency trade-off in one picture (paper Fig. 4, one
+//! model): sweep the four routing strategies on the language-modeling task
+//! and print perplexity vs miss rate, showing Cache-Prior Pareto-dominating
+//! the baselines.
+//!
+//! Run: `cargo run --release --offline --example tradeoff_sweep [model]`
+
+use anyhow::Result;
+use moe_cache::config::Quant;
+use moe_cache::eval::sweep::{run_point, strategy_family, EvalBudget, Task};
+use moe_cache::eval::EvalData;
+use moe_cache::report::Table;
+use moe_cache::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "phi-tiny".into());
+    let arts = moe_cache::artifacts_dir();
+    let rt = Runtime::load(&arts.join(&model))?;
+    let cfg = rt.config.clone();
+    drop(rt);
+    let data = EvalData::load(&arts.join("data"))?;
+    let budget = EvalBudget { chunk_len: 128, max_chunks: 3, max_items: 16, gen_tokens: 8 };
+    let cache = cfg.n_experts / 2;
+
+    println!(
+        "sweeping {model} (cache {}/{} experts, J={})...",
+        cache,
+        cfg.n_experts,
+        cfg.default_top_j()
+    );
+    let mut t = Table::new(
+        &format!("tradeoff_{model}"),
+        &["family", "strategy", "ppl", "miss_rate"],
+    );
+    for strategy in moe_cache::eval::sweep::strategy_grid(
+        cfg.top_k,
+        cfg.n_experts,
+        cfg.default_top_j(),
+        false,
+    ) {
+        let fam = strategy_family(&strategy);
+        let p = run_point(&arts, &model, strategy, cache, Quant::Int4, Task::Ppl, &data, &budget)?;
+        t.row(vec![
+            fam.into(),
+            p.strategy.clone(),
+            format!("{:.3}", p.result.metric),
+            format!("{:.4}", p.result.miss_rate),
+        ]);
+        println!("  {:<22} ppl {:8.3}  miss {:.4}", p.strategy, p.result.metric, p.result.miss_rate);
+    }
+    println!();
+    t.print();
+    t.write_csv(&moe_cache::report::results_dir())?;
+    println!("expected shape (paper Fig. 4): cache-prior dominates cumsum > max-rank > pruning");
+    Ok(())
+}

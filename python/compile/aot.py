@@ -1,0 +1,134 @@
+"""AOT lowering: every model component -> HLO *text* artifact + manifest.
+
+The interchange format is HLO text, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (what the published `xla` 0.1.6 crate binds) rejects
+(`proto.id() <= INT_MAX`). The text parser reassigns ids and round-trips
+cleanly — see /opt/xla-example/README.md.
+
+Per config we emit artifacts/<name>/:
+    embed.hlo.txt    (embed[V,D], pos_embed[T,D], tok s32[], pos s32[]) -> (h,)
+    attn.hlo.txt     (h, ln1, wq, wk, wv, wo, kc, vc, pos)  -> (h1, kc', vc')
+    router.hlo.txt   (h1, ln2, router_w)                    -> (z, xn)
+    experts.hlo.txt  (xn, w1s[E,..], w3s, w2s, coef[E])     -> (y,)
+    expert1.hlo.txt  (xn, w1, w3, w2)                       -> (y,)
+    lm_head.hlo.txt  (h, lnf, head_w)                       -> (logits,)
+    manifest.json    component arg/output shapes + config — the Rust
+                     runtime loads executables strictly from this manifest.
+
+The attention block and the expert FFN lower through the Pallas kernels
+(interpret=True), so the L1 kernels are *inside* these artifacts.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import ModelConfig, CONFIGS, get_config
+from . import model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def component_signatures(cfg: ModelConfig):
+    """(name -> (fn, [arg specs])) for every AOT component."""
+    d, v, t = cfg.d_model, cfg.vocab, cfg.max_seq
+    h_kv = (cfg.n_heads, cfg.max_seq, cfg.head_dim)
+    n, f = cfg.n_experts, cfg.d_ff
+    e = cfg.n_ffn_calls
+
+    def embed_fn(ew, pw, tok, pos):
+        return (model.embed_step(ew, pw, tok, pos),)
+
+    def attn_fn(h, ln1, wq, wk, wv, wo, kc, vc, pos):
+        return model.attn_step(cfg, h, ln1, wq, wk, wv, wo, kc, vc, pos)
+
+    def router_fn(h1, ln2, wr):
+        return model.router_step(cfg, h1, ln2, wr)
+
+    def experts_fn(xn, w1s, w3s, w2s, coef):
+        return (model.experts_step(xn, w1s, w3s, w2s, coef),)
+
+    def expert1_fn(xn, w1, w3, w2):
+        return (model.expert_single_step(xn, w1, w3, w2),)
+
+    def layer_fn(h, ln1, wq, wk, wv, wo, kc, vc, pos, ln2, wr):
+        return model.layer_fused_step(cfg, h, ln1, wq, wk, wv, wo, kc, vc,
+                                      pos, ln2, wr)
+
+    def lm_head_fn(h, lnf, hw):
+        return (model.lm_head_step(cfg, h, lnf, hw),)
+
+    return {
+        "embed": (embed_fn,
+                  [spec((v, d)), spec((t, d)), spec((), I32), spec((), I32)]),
+        "attn": (attn_fn,
+                 [spec((1, d)), spec((d,)), spec((d, d)), spec((d, d)),
+                  spec((d, d)), spec((d, d)), spec(h_kv), spec(h_kv),
+                  spec((), I32)]),
+        "router": (router_fn, [spec((1, d)), spec((d,)), spec((d, n))]),
+        "layer": (layer_fn,
+                  [spec((1, d)), spec((d,)), spec((d, d)), spec((d, d)),
+                   spec((d, d)), spec((d, d)), spec(h_kv), spec(h_kv),
+                   spec((), I32), spec((d,)), spec((d, n))]),
+        "experts": (experts_fn,
+                    [spec((1, d)), spec((e, d, f)), spec((e, d, f)),
+                     spec((e, f, d)), spec((e,))]),
+        "expert1": (expert1_fn,
+                    [spec((1, d)), spec((d, f)), spec((d, f)),
+                     spec((f, d))]),
+        "lm_head": (lm_head_fn, [spec((1, d)), spec((d,)), spec((d, v))]),
+    }
+
+
+def lower_config(cfg: ModelConfig, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"config": cfg.to_dict(), "components": {}}
+    for name, (fn, args) in component_signatures(cfg).items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as fh:
+            fh.write(text)
+        outs = jax.eval_shape(fn, *args)
+        manifest["components"][name] = {
+            "file": fname,
+            "args": [{"shape": list(a.shape), "dtype": str(a.dtype)}
+                     for a in args],
+            "outputs": [{"shape": list(o.shape), "dtype": str(o.dtype)}
+                        for o in outs],
+        }
+        print(f"[aot] {cfg.name}/{fname}: {len(text)} chars")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("configs", nargs="*", default=[])
+    args = ap.parse_args()
+    base = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    names = args.configs or sorted(CONFIGS)
+    for name in names:
+        lower_config(get_config(name), os.path.join(base, name))
+
+
+if __name__ == "__main__":
+    main()

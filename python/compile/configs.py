@@ -1,0 +1,83 @@
+"""Model configurations: four tiny MoE topologies mirroring the paper's
+Table 1 architectures (Mixtral-8x7B, Phi-3.5-MoE, DeepSeek-V2-Lite,
+Qwen1.5-MoE-A2.7B).
+
+The *routing topology* — number of routed experts N, top-K, shared experts,
+granularity (expert FFN width), expansion rate K/N — matches the paper's
+models; the embedding width / depth are scaled down so the whole family
+trains and serves on a single CPU core. See DESIGN.md §1 for why this
+substitution preserves the paper's phenomena.
+"""
+
+from dataclasses import dataclass, asdict, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    head_dim: int = 32
+    max_seq: int = 512
+    # MoE topology
+    n_experts: int = 8          # routed experts per layer (paper: N)
+    top_k: int = 2              # routed experts selected per token (paper: K)
+    n_shared: int = 0           # always-active shared experts (DeepSeek/Qwen)
+    d_ff: int = 256             # expert hidden width (granularity)
+    renorm_topk: bool = True    # renormalize gate weights over the selected set
+    rms_eps: float = 1e-5
+    # paper-analog bookkeeping (documentation only)
+    paper_model: str = ""
+
+    @property
+    def n_ffn_calls(self) -> int:
+        """Experts executed per token per layer (routed + shared)."""
+        return self.top_k + self.n_shared
+
+    @property
+    def expert_params(self) -> int:
+        """Parameters of a single routed expert (w1, w3: DxF; w2: FxD)."""
+        return 3 * self.d_model * self.d_ff
+
+    @property
+    def expansion_rate(self) -> float:
+        return self.top_k / self.n_experts
+
+    def to_dict(self):
+        d = asdict(self)
+        d["expert_params"] = self.expert_params
+        d["expansion_rate"] = self.expansion_rate
+        return d
+
+
+# The four paper-analog topologies. Expert counts / top-K / shared experts
+# match Table 1; d_ff is chosen so the expert-size *ratio* between coarse
+# (Mixtral-like) and granular (Qwen/DeepSeek-like) experts matches the paper's
+# 176M vs 8.6M ≈ 20x per-expert size gap at tiny scale (98k vs 12k ≈ 8x, the
+# closest power-of-two analog that still trains).
+MIXTRAL_TINY = ModelConfig(
+    name="mixtral-tiny", n_experts=8, top_k=2, n_shared=0, d_ff=256,
+    renorm_topk=True, paper_model="Mixtral-8x7B (8 experts, top-2, exp-rate 0.25)",
+)
+PHI_TINY = ModelConfig(
+    name="phi-tiny", n_experts=16, top_k=2, n_shared=0, d_ff=128,
+    renorm_topk=True, paper_model="Phi-3.5-MoE (16 experts, top-2, exp-rate 0.125)",
+)
+DEEPSEEK_TINY = ModelConfig(
+    name="deepseek-tiny", n_experts=64, top_k=6, n_shared=2, d_ff=32,
+    renorm_topk=False, paper_model="DeepSeek-V2-Lite (64+2 experts, top-6+2)",
+)
+QWEN_TINY = ModelConfig(
+    name="qwen-tiny", n_experts=60, top_k=4, n_shared=4, d_ff=32,
+    renorm_topk=False, paper_model="Qwen1.5-MoE-A2.7B (60+4 experts, top-4+4)",
+)
+
+CONFIGS = {c.name: c for c in [MIXTRAL_TINY, PHI_TINY, DEEPSEEK_TINY, QWEN_TINY]}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in CONFIGS:
+        raise KeyError(f"unknown config {name!r}; have {sorted(CONFIGS)}")
+    return CONFIGS[name]

@@ -1,0 +1,257 @@
+"""Synthetic dataset generators (WikiText / MMLU / GSM8K analogs).
+
+Everything is produced from a seeded numpy Generator so the corpus, the
+training stream, and the Rust-side evaluation sets are all reproducible.
+
+Token space (vocab = 512):
+    0 PAD, 1 BOS, 2 EOS, 3 SEP,
+    4..13  digits 0-9,
+    14 '+', 15 '=', 16 '?', 17 ':',
+    18..21 option markers A-D,
+    24..511 corpus tokens, organised into DOMAIN overlapping vocab subsets.
+
+Three datasets:
+  * corpus   — multi-domain order-1 Markov text (WikiText analog). Each
+               document picks a domain; domains have distinct transition
+               structure, which is what gives a trained router
+               input-conditional (and temporally local) expert preferences.
+  * synthqa  — multiple-choice "which token follows this context" questions
+               (MMLU analog), scored by option logprob.
+  * synthmath— two-operand additions rendered in digit tokens (GSM8K analog),
+               scored by exact-match on the generated answer.
+"""
+
+import json
+import os
+
+import numpy as np
+
+PAD, BOS, EOS, SEP = 0, 1, 2, 3
+DIGIT0 = 4            # digits are DIGIT0 + d
+PLUS, EQUALS, QMARK, COLON = 14, 15, 16, 17
+OPT0 = 18             # option markers A..D
+CORPUS_START = 24
+VOCAB = 512
+N_DOMAINS = 8
+DOMAIN_VOCAB = 88     # tokens per domain subset (overlapping)
+
+
+def digits_of(n: int):
+    return [DIGIT0 + int(c) for c in str(n)]
+
+
+class DomainMarkov:
+    """Order-1 Markov chains, one per domain, over overlapping vocab subsets."""
+
+    def __init__(self, seed: int = 1234):
+        rng = np.random.default_rng(seed)
+        self.domains = []
+        corpus_tokens = np.arange(CORPUS_START, VOCAB)
+        for d in range(N_DOMAINS):
+            # Overlapping window of the corpus vocab.
+            start = (d * (len(corpus_tokens) - DOMAIN_VOCAB) // max(1, N_DOMAINS - 1))
+            toks = corpus_tokens[start:start + DOMAIN_VOCAB]
+            # Sparse transition table: each token has ~6 plausible successors,
+            # Dirichlet-weighted, plus epsilon mass on the full subset.
+            succ = rng.integers(0, len(toks), size=(len(toks), 6))
+            w = rng.dirichlet(np.ones(6) * 0.6, size=len(toks))
+            self.domains.append((toks, succ, w))
+
+    def sample_doc(self, rng: np.random.Generator, domain: int, length: int):
+        toks, succ, w = self.domains[domain]
+        out = np.empty(length, dtype=np.int64)
+        cur = rng.integers(0, len(toks))
+        for i in range(length):
+            out[i] = toks[cur]
+            if rng.random() < 0.92:
+                cur = succ[cur, rng.choice(6, p=w[cur])]
+            else:  # re-seed occasionally so chains do not trap in short cycles
+                cur = rng.integers(0, len(toks))
+        return out
+
+    def likely_next(self, domain: int, token: int) -> int:
+        """Most likely successor of `token` within `domain` (QA ground truth)."""
+        toks, succ, w = self.domains[domain]
+        idx = np.where(toks == token)[0]
+        if len(idx) == 0:
+            return int(toks[0])
+        j = succ[idx[0], np.argmax(w[idx[0]])]
+        return int(toks[j])
+
+
+def gen_corpus(markov: DomainMarkov, seed: int, n_tokens: int) -> np.ndarray:
+    """BOS doc EOS BOS doc EOS ... stream of about n_tokens tokens."""
+    rng = np.random.default_rng(seed)
+    chunks = []
+    total = 0
+    while total < n_tokens:
+        domain = int(rng.integers(0, N_DOMAINS))
+        length = int(rng.integers(64, 384))
+        doc = markov.sample_doc(rng, domain, length)
+        chunk = np.concatenate([[BOS], doc, [EOS]])
+        chunks.append(chunk)
+        total += len(chunk)
+    return np.concatenate(chunks)[:n_tokens]
+
+
+def gen_qa_items(markov: DomainMarkov, seed: int, n_items: int):
+    """SynthQA items: context from a domain chain, 4 candidate next tokens.
+
+    Rendered as:  ctx... QMARK COLON <answer-token>
+    The distractors are drawn from *other* domains' vocab so a model that has
+    learnt the domain statistics separates them cleanly.
+    """
+    rng = np.random.default_rng(seed)
+    items = []
+    while len(items) < n_items:
+        domain = int(rng.integers(0, N_DOMAINS))
+        ctx = markov.sample_doc(rng, domain, 16)
+        answer = markov.likely_next(domain, int(ctx[-1]))
+        toks, _, _ = markov.domains[domain]
+        distractors = []
+        while len(distractors) < 3:
+            other = int(rng.integers(0, N_DOMAINS))
+            if other == domain:
+                continue
+            otoks = markov.domains[other][0]
+            cand = int(otoks[rng.integers(0, len(otoks))])
+            if cand != answer and cand not in distractors and cand not in toks:
+                distractors.append(cand)
+        options = distractors + [answer]
+        rng.shuffle(options)
+        items.append({
+            "domain": domain,
+            "context": [int(t) for t in ctx],
+            "options": [int(o) for o in options],
+            "answer": options.index(answer),
+        })
+    return items
+
+
+def qa_item_tokens(item, answer_idx=None):
+    """Token rendering of one QA item (optionally with the answer appended)."""
+    toks = list(item["context"]) + [QMARK, COLON]
+    if answer_idx is not None:
+        toks.append(item["options"][answer_idx])
+    return toks
+
+
+def qa_fewshot_prompt(items, item, n_shots: int):
+    """n_shots solved examples + the query context, SEP-separated."""
+    toks = [BOS]
+    for shot in items[:n_shots]:
+        toks += qa_item_tokens(shot, shot["answer"]) + [SEP]
+    toks += qa_item_tokens(item)
+    return toks
+
+
+def gen_math_items(seed: int, n_items: int, max_operand: int = 49):
+    rng = np.random.default_rng(seed)
+    items = []
+    for _ in range(n_items):
+        a = int(rng.integers(0, max_operand + 1))
+        b = int(rng.integers(0, max_operand + 1))
+        items.append({"a": a, "b": b, "answer": a + b})
+    return items
+
+
+def math_item_tokens(item, with_answer: bool):
+    toks = digits_of(item["a"]) + [PLUS] + digits_of(item["b"]) + [EQUALS]
+    if with_answer:
+        toks += digits_of(item["answer"]) + [SEP]
+    return toks
+
+
+def math_fewshot_prompt(shots, item, n_shots: int):
+    toks = [BOS]
+    for s in shots[:n_shots]:
+        toks += math_item_tokens(s, True)
+    toks += math_item_tokens(item, False)
+    return toks
+
+
+def gen_training_stream(seed: int, n_tokens: int) -> np.ndarray:
+    """Mixed LM training stream: 70% corpus, 15% QA examples, 15% math."""
+    markov = DomainMarkov()
+    rng = np.random.default_rng(seed)
+    corpus = gen_corpus(markov, seed + 1, int(n_tokens * 0.7))
+    qa = gen_qa_items(markov, seed + 2, max(1, int(n_tokens * 0.15) // 20))
+    qa_toks = []
+    for it in qa:
+        qa_toks += qa_item_tokens(it, it["answer"]) + [SEP]
+    math = gen_math_items(seed + 3, max(1, int(n_tokens * 0.15) // 10))
+    math_toks = []
+    for it in math:
+        math_toks += math_item_tokens(it, True)
+    # Interleave the three sources in blocks so every training batch mixes
+    # corpus, QA and math tokens (a single concatenation would put all the
+    # math at the tail and the model would never see it in a short run).
+    qa_arr = np.array(qa_toks, dtype=np.int64)
+    math_arr = np.array(math_toks, dtype=np.int64)
+    block = 512
+    blocks = []
+    srcs = [corpus, qa_arr, math_arr]
+    offs = [0, 0, 0]
+    while any(offs[i] < len(srcs[i]) for i in range(3)):
+        i = int(rng.choice(3, p=[0.7, 0.15, 0.15]))
+        if offs[i] >= len(srcs[i]):
+            continue
+        blocks.append(srcs[i][offs[i]:offs[i] + block])
+        offs[i] += block
+    return np.concatenate(blocks)
+
+
+def write_token_bin(path: str, tokens: np.ndarray):
+    """u16 little-endian token stream, the format the Rust eval readers use."""
+    tokens = np.asarray(tokens)
+    assert tokens.max() < 65536 and tokens.min() >= 0
+    tokens.astype("<u2").tofile(path)
+
+
+def export_eval_data(out_dir: str, seed: int = 7):
+    """Write the Rust-side evaluation sets under artifacts/data/."""
+    os.makedirs(out_dir, exist_ok=True)
+    markov = DomainMarkov()
+    # Held-out perplexity stream (never seen in training: different seed).
+    write_token_bin(os.path.join(out_dir, "ppl_test.bin"),
+                    gen_corpus(markov, seed + 100, 40_000))
+    write_token_bin(os.path.join(out_dir, "ppl_val.bin"),
+                    gen_corpus(markov, seed + 200, 20_000))
+    qa_items = gen_qa_items(markov, seed + 300, 220)
+    shots, qa_eval = qa_items[:5], qa_items[5:]
+    qa_records = []
+    for it in qa_eval:
+        qa_records.append({
+            "prompt": qa_fewshot_prompt(shots, it, 5),
+            "options": it["options"],
+            "answer": it["answer"],
+        })
+    with open(os.path.join(out_dir, "qa_test.json"), "w") as f:
+        json.dump(qa_records, f)
+    math_items = gen_math_items(seed + 400, 170)
+    shots, math_eval = math_items[:8], math_items[8:]
+    math_records = []
+    for it in math_eval:
+        math_records.append({
+            "prompt": math_fewshot_prompt(shots, it, 8),
+            "answer_tokens": digits_of(it["answer"]) + [SEP],
+            "answer": it["answer"],
+        })
+    with open(os.path.join(out_dir, "math_test.json"), "w") as f:
+        json.dump(math_records, f)
+    # Short/long prompts for the throughput experiments (Fig. 8/18).
+    prompts = {"short": [], "long": []}
+    rng = np.random.default_rng(seed + 500)
+    for kind, lo, hi in [("short", 40, 60), ("long", 300, 400)]:
+        for _ in range(12):
+            d = int(rng.integers(0, N_DOMAINS))
+            n = int(rng.integers(lo, hi))
+            doc = markov.sample_doc(rng, d, n)
+            prompts[kind].append([BOS] + [int(t) for t in doc])
+    with open(os.path.join(out_dir, "prompts.json"), "w") as f:
+        json.dump(prompts, f)
+
+
+if __name__ == "__main__":
+    import sys
+    export_eval_data(sys.argv[1] if len(sys.argv) > 1 else "../artifacts/data")

@@ -1,0 +1,187 @@
+"""Flash-image exporter: the binary the Rust coordinator treats as "flash".
+
+Layout (all little-endian):
+
+    magic   b"MOEFLSH1"                      (8 bytes)
+    u32     header_len
+    header  JSON (utf-8)
+    pad     to 64-byte boundary
+    payload tensors, each 64-byte aligned
+
+Header JSON:
+    version: 1
+    config:  ModelConfig dict
+    quant:   "f32" | "int8" | "int4"   (expert tensors; static stays f32)
+    tensors: [ {name, dtype, shape, offset, bytes,
+                scales_offset, scales_bytes, kind, layer, expert, part} ]
+    expert_spans: [ {layer, expert, kind, offset, bytes} ]
+                 — the contiguous byte span (w1+w3+w2+scales) a cache miss
+                   reads in ONE flash transaction.
+
+Quantization: symmetric per-output-column (last axis) int8/int4.
+int4 packs two values per byte: low nibble = element 2i, high = 2i+1,
+each a two's-complement nibble in [-8, 7].
+
+Offsets are relative to the payload start. The Rust reader is
+rust/src/weights/; keep the two in lock-step (tests/parity.rs checks a
+round-trip through both).
+"""
+
+import json
+import os
+import pickle
+
+import numpy as np
+
+from .configs import ModelConfig
+
+MAGIC = b"MOEFLSH1"
+ALIGN = 64
+
+
+def quantize_sym(w: np.ndarray, bits: int):
+    """Symmetric per-output-column quantization.
+
+    w: [.., C] float32 -> (q int8 [.., C] in [-qmax, qmax], scales f32 [C]).
+    """
+    qmax = (1 << (bits - 1)) - 1
+    maxabs = np.abs(w).max(axis=tuple(range(w.ndim - 1)))
+    scales = np.where(maxabs > 0, maxabs / qmax, 1.0).astype(np.float32)
+    q = np.clip(np.round(w / scales), -qmax - 1, qmax).astype(np.int8)
+    return q, scales
+
+
+def dequantize_sym(q: np.ndarray, scales: np.ndarray):
+    return q.astype(np.float32) * scales
+
+
+def pack_int4(q: np.ndarray) -> np.ndarray:
+    """Flattened two's-complement nibbles, element 2i in the low nibble."""
+    flat = q.reshape(-1).astype(np.int8)
+    assert flat.size % 2 == 0
+    u = (flat & 0xF).astype(np.uint8)
+    return (u[0::2] | (u[1::2] << 4)).astype(np.uint8)
+
+
+def unpack_int4(packed: np.ndarray, n: int) -> np.ndarray:
+    lo = (packed & 0xF).astype(np.int8)
+    hi = ((packed >> 4) & 0xF).astype(np.int8)
+    lo = np.where(lo >= 8, lo - 16, lo)
+    hi = np.where(hi >= 8, hi - 16, hi)
+    out = np.empty(packed.size * 2, np.int8)
+    out[0::2] = lo
+    out[1::2] = hi
+    return out[:n]
+
+
+class _Writer:
+    def __init__(self):
+        self.buf = bytearray()
+        self.tensors = []
+        self.expert_spans = []
+
+    def _align(self):
+        pad = (-len(self.buf)) % ALIGN
+        self.buf.extend(b"\0" * pad)
+
+    def add(self, name, arr: np.ndarray, quant: str, kind, layer=-1,
+            expert=-1, part=""):
+        self._align()
+        entry = {"name": name, "shape": list(arr.shape), "kind": kind,
+                 "layer": layer, "expert": expert, "part": part,
+                 "scales_offset": -1, "scales_bytes": 0}
+        if quant == "f32" or kind == "static":
+            data = np.ascontiguousarray(arr, dtype="<f4").tobytes()
+            entry.update(dtype="f32", offset=len(self.buf), bytes=len(data))
+            self.buf.extend(data)
+        else:
+            bits = 8 if quant == "int8" else 4
+            q, scales = quantize_sym(np.asarray(arr, np.float32), bits)
+            data = (q.tobytes() if bits == 8 else pack_int4(q).tobytes())
+            entry.update(dtype="i8" if bits == 8 else "i4",
+                         offset=len(self.buf), bytes=len(data))
+            self.buf.extend(data)
+            sdata = scales.astype("<f4").tobytes()
+            entry["scales_offset"] = len(self.buf)
+            entry["scales_bytes"] = len(sdata)
+            self.buf.extend(sdata)
+        self.tensors.append(entry)
+        return entry
+
+
+def export_flash_image(cfg: ModelConfig, params, path: str, quant: str):
+    """Write the flash image for `params` with expert tensors in `quant`."""
+    w = _Writer()
+    # --- static (DRAM-resident) section -----------------------------------
+    w.add("embed", np.asarray(params["embed"]), "f32", "static")
+    w.add("pos_embed", np.asarray(params["pos_embed"]), "f32", "static")
+    w.add("lnf", np.asarray(params["lnf"]), "f32", "static")
+    w.add("head", np.asarray(params["head"]), "f32", "static")
+    for li, layer in enumerate(params["layers"]):
+        for part in ["ln1", "wq", "wk", "wv", "wo", "ln2", "router"]:
+            w.add(f"layers.{li}.{part}", np.asarray(layer[part]), "f32",
+                  "static", layer=li, part=part)
+    # --- expert section: contiguous (w1, w3, w2) span per expert ----------
+    for li, layer in enumerate(params["layers"]):
+        for e in range(cfg.n_experts):
+            w._align()
+            start = len(w.buf)
+            for part in ["w1", "w3", "w2"]:
+                w.add(f"layers.{li}.experts.{e}.{part}",
+                      np.asarray(layer[part][e]), quant, "expert",
+                      layer=li, expert=e, part=part)
+            w.expert_spans.append({"layer": li, "expert": e, "kind": "expert",
+                                   "offset": start,
+                                   "bytes": len(w.buf) - start})
+        for s in range(cfg.n_shared):
+            w._align()
+            start = len(w.buf)
+            for part in ["w1", "w3", "w2"]:
+                w.add(f"layers.{li}.shared.{s}.{part}",
+                      np.asarray(layer[f"s_{part}"][s]), quant, "shared",
+                      layer=li, expert=s, part=part)
+            w.expert_spans.append({"layer": li, "expert": s, "kind": "shared",
+                                   "offset": start,
+                                   "bytes": len(w.buf) - start})
+    header = {
+        "version": 1,
+        "config": cfg.to_dict(),
+        "quant": quant,
+        "tensors": w.tensors,
+        "expert_spans": w.expert_spans,
+    }
+    hjson = json.dumps(header).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(np.uint32(len(hjson)).tobytes())
+        f.write(hjson)
+        pad = (-(len(MAGIC) + 4 + len(hjson))) % ALIGN
+        f.write(b"\0" * pad)
+        f.write(bytes(w.buf))
+    return header
+
+
+def load_params(artifact_dir: str):
+    with open(os.path.join(artifact_dir, "params.pkl"), "rb") as f:
+        return pickle.load(f)
+
+
+def export_all(cfg: ModelConfig, artifact_dir: str,
+               quants=("int4", "int8", "f32")):
+    params = load_params(artifact_dir)
+    out = {}
+    for q in quants:
+        path = os.path.join(artifact_dir, f"weights_{q}.bin")
+        out[q] = export_flash_image(cfg, params, path, q)
+        print(f"[export] {cfg.name} {q}: "
+              f"{os.path.getsize(path) / 1e6:.2f} MB -> {path}")
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    from .configs import CONFIGS, get_config
+    names = sys.argv[1:] or sorted(CONFIGS)
+    base = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    for name in names:
+        export_all(get_config(name), os.path.join(base, name))

@@ -1,0 +1,105 @@
+"""L1 Pallas kernel: fused SwiGLU expert FFN (the paper's compute hot-spot).
+
+Two entry points:
+
+  * ``swiglu_expert``   — one expert applied to one token (batch-size-1
+    decode, exactly the paper's on-device regime).
+  * ``experts_combine`` — E experts applied to the same token with a weighted
+    combine, in a single kernel launch. This is what the Rust engine calls on
+    the hot path: one PJRT dispatch per MoE layer instead of K+S dispatches
+    (see EXPERIMENTS.md §Perf for the measured effect).
+
+Hardware adaptation (DESIGN.md §4): the paper's deployment is a CPU GEMV
+streamed from DRAM; the TPU-idiom formulation tiles the (D, F) weight
+matrices through VMEM via BlockSpec, fuses gate/up projections and the SiLU
+into a single pass, and accumulates the down-projection per expert into the
+output block. The grid iterates over experts — on a real TPU each grid step
+streams one cached expert HBM->VMEM, mirroring the DRAM-cache->compute
+streaming the Rust coordinator performs.
+
+interpret=True everywhere: CPU PJRT cannot execute Mosaic custom-calls; the
+interpret path lowers the kernel to plain HLO so the AOT artifact runs on the
+Rust CPU client (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _swiglu_kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref):
+    """Fused SwiGLU for one expert, one token.
+
+    x: [1, D]; w1, w3: [D, F]; w2: [F, D]; o: [1, D]
+    Single-block: tiny-model D/F fit VMEM comfortably (see DESIGN.md §6 for
+    the VMEM budget computation at paper scale).
+    """
+    x = x_ref[...]
+    gate = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    up = jnp.dot(x, w3_ref[...], preferred_element_type=jnp.float32)
+    act = gate * jax.lax.logistic(gate) * up       # silu(gate) * up, fused
+    o_ref[...] = jnp.dot(act, w2_ref[...],
+                         preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def swiglu_expert(x, w1, w3, w2):
+    """Pallas single-expert FFN. x: [1, D] -> [1, D]."""
+    d = x.shape[-1]
+    return pl.pallas_call(
+        _swiglu_kernel,
+        out_shape=jax.ShapeDtypeStruct((1, d), x.dtype),
+        interpret=True,
+    )(x, w1, w3, w2)
+
+
+def _experts_combine_kernel(x_ref, w1_ref, w3_ref, w2_ref, coef_ref, o_ref):
+    """Single-pass batched-contraction formulation (perf iteration 1).
+
+    The first version iterated a grid over experts and accumulated into the
+    output block; under interpret-mode lowering that serialises E grid steps
+    with full output copies between them (measured 253 us/dispatch on the
+    qwen-tiny shapes). This version expresses the whole combine as two
+    batched contractions + one reduction:
+
+        g, u = x·W1[e], x·W3[e]           (batched over e: [E, F])
+        act  = silu(g) * u * coef[:, None]
+        y    = Σ_e act[e] · W2[e]          ([D])
+
+    On a real TPU the contractions map onto the MXU with the E axis laid
+    out contiguously in VMEM; in interpret mode they lower to three XLA
+    dot_generals with no copy chain (measured ~5x faster end to end).
+    """
+    e, d, f = w1_ref.shape
+    x = x_ref[...]                                     # [1, D]
+    # Flatten the expert axis into plain 2-D GEMMs (perf iteration 3): the
+    # batched 'd,edf->ef' contraction lowered with per-call transposes of
+    # the stacked weights; reshaping [E,D,F]->[D,E*F] is free only when the
+    # caller stages the weights in that layout, so the kernel contracts
+    # against w1.transpose(1,0,2).reshape(D, E*F) — XLA folds this into the
+    # dot's dimension numbers (no materialised transpose; verified on the
+    # lowered HLO).
+    w1 = w1_ref[...].transpose(1, 0, 2).reshape(d, e * f)
+    w3 = w3_ref[...].transpose(1, 0, 2).reshape(d, e * f)
+    w2 = w2_ref[...].reshape(e * f, d)
+    gate = jnp.dot(x, w1, preferred_element_type=jnp.float32)   # [1, E*F]
+    up = jnp.dot(x, w3, preferred_element_type=jnp.float32)
+    coef = jnp.repeat(coef_ref[...], f)[None, :]
+    act = gate * jax.lax.logistic(gate) * up * coef
+    y = jnp.dot(act, w2, preferred_element_type=jnp.float32)    # [1, D]
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def experts_combine(x, w1s, w3s, w2s, coef):
+    """Weighted combine of E experts in one kernel launch.
+
+    x: [1, D]; w1s, w3s: [E, D, F]; w2s: [E, F, D]; coef: [E] -> [1, D]
+    """
+    _, d, _ = w1s.shape
+    return pl.pallas_call(
+        _experts_combine_kernel,
+        out_shape=jax.ShapeDtypeStruct((1, d), x.dtype),
+        interpret=True,
+    )(x, w1s, w3s, w2s, coef)

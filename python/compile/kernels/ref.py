@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy only. pytest (with hypothesis shape/dtype
+sweeps) asserts allclose between kernel and oracle.
+"""
+
+import jax.numpy as jnp
+import jax.nn
+
+
+def swiglu_expert_ref(x, w1, w3, w2):
+    """Single expert FFN: silu(x @ w1) * (x @ w3) @ w2.
+
+    x: [1, D]; w1, w3: [D, F]; w2: [F, D]  ->  [1, D]
+    """
+    gate = jax.nn.silu(x @ w1)
+    up = x @ w3
+    return (gate * up) @ w2
+
+
+def experts_combine_ref(x, w1s, w3s, w2s, coef):
+    """Weighted sum of E experts applied to the same input.
+
+    x: [1, D]; w1s, w3s: [E, D, F]; w2s: [E, F, D]; coef: [E]  ->  [1, D]
+    """
+    outs = jnp.stack([
+        swiglu_expert_ref(x, w1s[e], w3s[e], w2s[e])
+        for e in range(w1s.shape[0])
+    ])                                             # [E, 1, D]
+    return jnp.einsum("e,eod->od", coef, outs)
+
+
+def attention_decode_ref(q, k_cache, v_cache, pos):
+    """Single-token multi-head attention over a KV cache.
+
+    q: [H, hd]; k_cache, v_cache: [H, T, hd]; pos: scalar int (0-based index
+    of the current token; cache slots > pos are masked out).  ->  [H, hd]
+    """
+    H, T, hd = k_cache.shape
+    scores = jnp.einsum("hd,htd->ht", q, k_cache) / jnp.sqrt(
+        jnp.asarray(hd, q.dtype))
+    mask = jnp.arange(T)[None, :] <= pos
+    scores = jnp.where(mask, scores, jnp.asarray(-1e30, q.dtype))
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("ht,htd->hd", probs, v_cache)
+
+
+def rmsnorm_ref(x, g, eps=1e-5):
+    """RMSNorm: x * rsqrt(mean(x^2) + eps) * g."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g

@@ -1,0 +1,268 @@
+"""L2: the MoE transformer in JAX.
+
+Three views of the same model, all sharing one parameter pytree:
+
+  * **Component functions** (`embed_step`, `attn_step`, `router_step`,
+    `experts_step`, `lm_head_step`) — the units aot.py lowers to HLO text.
+    The Rust engine composes exactly these per token; expert weights are
+    runtime *arguments* so the Rust cache can own them.
+  * **`decode_step`** — a Python composition of the components (one token,
+    original top-K routing). Used to dump parity activations for the Rust
+    integration test and to cross-check the sequence forward.
+  * **`seq_forward`** — vectorised full-sequence forward used for training
+    (dense gate-masked MoE: every expert computed, gated by the sparse
+    top-K weights — numerically identical to sparse selection).
+
+Weight layout per layer:
+    ln1, wq, wk, wv, wo, ln2, router[D,N],
+    experts: w1/w3 [N, D, F], w2 [N, F, D],
+    shared (optional): w1/w3 [S, D, F], w2 [S, F, D]
+Global: embed [V, D], pos_embed [T, D], lnf [D], head [D, V].
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels.expert_ffn import experts_combine, swiglu_expert
+from .kernels.attention import attention_decode
+from .kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    ks = iter(jax.random.split(key, 16 + 16 * cfg.n_layers))
+
+    def dense(k, shape, scale=None):
+        fan_in = shape[0] if len(shape) == 2 else shape[1]
+        s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+        return jax.random.normal(k, shape, jnp.float32) * s
+
+    d, f, n, s_cnt = cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.n_shared
+    params = {
+        "embed": dense(next(ks), (cfg.vocab, d), 0.02),
+        "pos_embed": dense(next(ks), (cfg.max_seq, d), 0.02),
+        "lnf": jnp.ones((d,), jnp.float32),
+        "head": dense(next(ks), (d, cfg.vocab)),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        layer = {
+            "ln1": jnp.ones((d,), jnp.float32),
+            "wq": dense(next(ks), (d, d)),
+            "wk": dense(next(ks), (d, d)),
+            "wv": dense(next(ks), (d, d)),
+            "wo": dense(next(ks), (d, d)),
+            "ln2": jnp.ones((d,), jnp.float32),
+            "router": dense(next(ks), (d, n)),
+            "w1": dense(next(ks), (n, d, f)),
+            "w3": dense(next(ks), (n, d, f)),
+            "w2": dense(next(ks), (n, f, d)),
+        }
+        if s_cnt:
+            layer["s_w1"] = dense(next(ks), (s_cnt, d, f))
+            layer["s_w3"] = dense(next(ks), (s_cnt, d, f))
+            layer["s_w2"] = dense(next(ks), (s_cnt, f, d))
+        params["layers"].append(layer)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Component functions — the AOT units (one PJRT executable each)
+# ---------------------------------------------------------------------------
+
+def embed_step(embed_w, pos_w, token, pos):
+    """(V,D), (T,D), i32[], i32[] -> [1, D]."""
+    tok_e = jax.lax.dynamic_slice_in_dim(embed_w, token, 1, axis=0)
+    pos_e = jax.lax.dynamic_slice_in_dim(pos_w, pos, 1, axis=0)
+    return tok_e + pos_e
+
+
+def attn_step(cfg: ModelConfig, h, ln1, wq, wk, wv, wo, k_cache, v_cache, pos):
+    """Pre-norm attention block with residual.
+
+    h: [1,D]; caches: [H,T,hd] (state BEFORE this token); pos: i32[].
+    Returns (h1 [1,D], k_new [H,1,hd], v_new [H,1,hd]).
+
+    The *caller* owns the KV cache and writes (k_new, v_new) into slot
+    `pos` after the call — the PJRT boundary returns tuple outputs as one
+    buffer, so returning the full updated caches would force a 2x cache
+    copy per layer per token. Internally the updated cache is still used
+    for attention (the current token attends to itself).
+    """
+    hn = ref.rmsnorm_ref(h, ln1, cfg.rms_eps)
+    H, hd = cfg.n_heads, cfg.head_dim
+    q = (hn @ wq).reshape(H, hd)
+    k = (hn @ wk).reshape(H, 1, hd)
+    v = (hn @ wv).reshape(H, 1, hd)
+    kc = jax.lax.dynamic_update_slice(k_cache, k, (0, pos, 0))
+    vc = jax.lax.dynamic_update_slice(v_cache, v, (0, pos, 0))
+    ctx = attention_decode(q, kc, vc, pos)                 # Pallas kernel
+    out = ctx.reshape(1, H * hd) @ wo
+    return h + out, k, v
+
+
+def router_step(cfg: ModelConfig, h1, ln2, router_w):
+    """FFN pre-norm + router logits. h1: [1,D] -> (z [N], xn [1,D])."""
+    xn = ref.rmsnorm_ref(h1, ln2, cfg.rms_eps)
+    z = (xn @ router_w).reshape(-1)
+    return z, xn
+
+
+def experts_step(xn, w1s, w3s, w2s, coef):
+    """E gathered experts + weighted combine (Pallas kernel). -> [1, D]."""
+    return experts_combine(xn, w1s, w3s, w2s, coef)
+
+
+def expert_single_step(xn, w1, w3, w2):
+    """One expert (micro-bench / ablation artifact). -> [1, D]."""
+    return swiglu_expert(xn, w1, w3, w2)
+
+
+def layer_fused_step(cfg: ModelConfig, h, ln1, wq, wk, wv, wo, k_cache,
+                     v_cache, pos, ln2, router_w):
+    """Fused attention + router component (perf iteration 2).
+
+    One PJRT dispatch instead of two per layer, and the intermediate h1
+    never crosses the host boundary twice. Outputs stay small:
+    (h1 [1,D], k_new [H,1,hd], v_new [H,1,hd], z [N], xn [1,D]).
+    """
+    h1, k, v = attn_step(cfg, h, ln1, wq, wk, wv, wo, k_cache, v_cache, pos)
+    z, xn = router_step(cfg, h1, ln2, router_w)
+    return h1, k, v, z, xn
+
+
+def lm_head_step(cfg: ModelConfig, h, lnf, head_w):
+    """Final norm + output projection. h: [1,D] -> logits [V]."""
+    hn = ref.rmsnorm_ref(h, lnf, cfg.rms_eps)
+    return (hn @ head_w).reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# Gate math (must match rust/src/routing exactly)
+# ---------------------------------------------------------------------------
+
+def gate_weights(cfg: ModelConfig, z, selected):
+    """Combine coefficients for the selected experts, from *original* logits.
+
+    Softmax over all N, then (optionally) renormalised over the selected set.
+    Paper Eq. 1-3 + §3.3: modified logits are used only for ranking.
+    """
+    w = jax.nn.softmax(z)
+    sel = w[jnp.asarray(selected)]
+    if cfg.renorm_topk:
+        sel = sel / jnp.sum(sel)
+    return sel
+
+
+# ---------------------------------------------------------------------------
+# Decode-step composition (parity reference for the Rust engine)
+# ---------------------------------------------------------------------------
+
+def init_state(cfg: ModelConfig):
+    shape = (cfg.n_heads, cfg.max_seq, cfg.head_dim)
+    return [
+        (jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32))
+        for _ in range(cfg.n_layers)
+    ]
+
+
+def decode_step(cfg: ModelConfig, params, state, token, pos,
+                expert_override=None):
+    """One token through the model with original top-K routing.
+
+    expert_override: optional list (per layer) of routed-expert index lists —
+    lets tests emulate cache-aware reranking decisions.
+    Returns (logits [V], new_state, per-layer router logits).
+    """
+    h = embed_step(params["embed"], params["pos_embed"], token, pos)
+    new_state, router_zs = [], []
+    for li, layer in enumerate(params["layers"]):
+        kc, vc = state[li]
+        h, k_new, v_new = attn_step(cfg, h, layer["ln1"], layer["wq"],
+                                    layer["wk"], layer["wv"], layer["wo"],
+                                    kc, vc, pos)
+        kc = jax.lax.dynamic_update_slice(kc, k_new, (0, pos, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v_new, (0, pos, 0))
+        new_state.append((kc, vc))
+        z, xn = router_step(cfg, h, layer["ln2"], layer["router"])
+        router_zs.append(z)
+        if expert_override is not None:
+            sel = jnp.asarray(expert_override[li])
+        else:
+            sel = jax.lax.top_k(z, cfg.top_k)[1]
+        coef = gate_weights(cfg, z, sel)
+        w1s = layer["w1"][sel]
+        w3s = layer["w3"][sel]
+        w2s = layer["w2"][sel]
+        if cfg.n_shared:
+            w1s = jnp.concatenate([w1s, layer["s_w1"]])
+            w3s = jnp.concatenate([w3s, layer["s_w3"]])
+            w2s = jnp.concatenate([w2s, layer["s_w2"]])
+            coef = jnp.concatenate([coef, jnp.ones(cfg.n_shared, jnp.float32)])
+        y = experts_step(xn, w1s, w3s, w2s, coef)
+        h = h + y
+    logits = lm_head_step(cfg, h, params["lnf"], params["head"])
+    return logits, new_state, router_zs
+
+
+# ---------------------------------------------------------------------------
+# Sequence forward (training) — dense gate-masked MoE
+# ---------------------------------------------------------------------------
+
+def seq_forward(cfg: ModelConfig, params, tokens):
+    """tokens: i32 [B, S] -> (logits [B, S, V], aux dict with router stats).
+
+    Dense MoE: all experts computed, multiplied by the sparse top-K gate
+    weights. Identical math to sparse selection, differentiable w.r.t. the
+    router through the gate weights.
+    """
+    B, S = tokens.shape
+    h = params["embed"][tokens] + params["pos_embed"][:S][None, :, :]
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    aux_losses = []
+    for layer in params["layers"]:
+        hn = ref.rmsnorm_ref(h, layer["ln1"], cfg.rms_eps)
+        H, hd = cfg.n_heads, cfg.head_dim
+        q = (hn @ layer["wq"]).reshape(B, S, H, hd)
+        k = (hn @ layer["wk"]).reshape(B, S, H, hd)
+        v = (hn @ layer["wv"]).reshape(B, S, H, hd)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(B, S, H * hd)
+        h = h + ctx @ layer["wo"]
+
+        xn = ref.rmsnorm_ref(h, layer["ln2"], cfg.rms_eps)
+        z = xn @ layer["router"]                       # [B, S, N]
+        w = jax.nn.softmax(z, axis=-1)
+        _, topi = jax.lax.top_k(w, cfg.top_k)
+        onehot = jax.nn.one_hot(topi, cfg.n_experts, dtype=w.dtype)  # [B,S,K,N]
+        sel_mask = onehot.sum(-2)                      # [B, S, N] in {0,1}
+        gate = w * sel_mask
+        if cfg.renorm_topk:
+            gate = gate / (gate.sum(-1, keepdims=True) + 1e-9)
+        # Dense expert application: [B,S,N,F] activations.
+        g_act = jnp.einsum("bsd,ndf->bsnf", xn, layer["w1"])
+        u_act = jnp.einsum("bsd,ndf->bsnf", xn, layer["w3"])
+        act = jax.nn.silu(g_act) * u_act
+        y = jnp.einsum("bsnf,nfd->bsnd", act, layer["w2"])
+        h = h + jnp.einsum("bsn,bsnd->bsd", gate, y)
+        if cfg.n_shared:
+            sg = jnp.einsum("bsd,ndf->bsnf", xn, layer["s_w1"])
+            su = jnp.einsum("bsd,ndf->bsnf", xn, layer["s_w3"])
+            sy = jnp.einsum("bsnf,nfd->bsnd",
+                            jax.nn.silu(sg) * su, layer["s_w2"])
+            h = h + sy.sum(axis=2)
+        # Switch-style load-balance loss: N * sum_i f_i * P_i.
+        f_i = sel_mask.mean(axis=(0, 1)) / cfg.top_k
+        p_i = w.mean(axis=(0, 1))
+        aux_losses.append(cfg.n_experts * jnp.sum(f_i * p_i))
+    hn = ref.rmsnorm_ref(h, params["lnf"], cfg.rms_eps)
+    logits = hn @ params["head"]
+    return logits, {"load_balance": jnp.stack(aux_losses).mean()}

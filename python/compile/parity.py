@@ -1,0 +1,62 @@
+"""Dump reference activations for the Rust <-> JAX parity integration test.
+
+Runs `model.decode_step` (original top-K routing) for a fixed token sequence
+on the trained params and records, per step:
+    token, position, per-layer router logits, per-layer selected experts,
+    per-layer gate coefficients, final logits.
+
+The Rust test (rust/tests/parity.rs) replays the same tokens through the
+composed AOT executables + the Rust gate/softmax code and asserts max-abs
+error < 1e-3 (f32, different accumulation orders across the PJRT boundary).
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+from .configs import ModelConfig, CONFIGS, get_config
+from .data import DomainMarkov, gen_corpus
+from .export import load_params
+
+N_STEPS = 24
+
+
+def dump_parity(cfg: ModelConfig, artifact_dir: str):
+    params = load_params(artifact_dir)
+    tokens = gen_corpus(DomainMarkov(), 4242, N_STEPS + 1)[:N_STEPS]
+    state = model.init_state(cfg)
+    steps = []
+    for pos, tok in enumerate(tokens):
+        logits, state, zs = model.decode_step(cfg, params, state, int(tok),
+                                              pos)
+        layers = []
+        for z in zs:
+            sel = np.asarray(jax.lax.top_k(z, cfg.top_k)[1])
+            coef = np.asarray(model.gate_weights(cfg, z, sel))
+            layers.append({
+                "router_logits": [float(x) for x in np.asarray(z)],
+                "selected": [int(i) for i in sel],
+                "coef": [float(c) for c in coef],
+            })
+        steps.append({
+            "token": int(tok),
+            "pos": pos,
+            "layers": layers,
+            "logits": [float(x) for x in np.asarray(logits)],
+        })
+    out = os.path.join(artifact_dir, "parity.json")
+    with open(out, "w") as f:
+        json.dump({"config": cfg.name, "steps": steps}, f)
+    print(f"[parity] wrote {out} ({len(steps)} steps)")
+
+
+if __name__ == "__main__":
+    import sys
+    base = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    names = sys.argv[1:] or sorted(CONFIGS)
+    for name in names:
+        dump_parity(get_config(name), os.path.join(base, name))

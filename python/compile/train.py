@@ -1,0 +1,128 @@
+"""Build-time training: give each tiny MoE a *real* router.
+
+The paper's phenomena (temporal locality of expert selection, rank-k swap
+tolerance, granular-vs-coarse resilience) only exist for trained routers, so
+`make artifacts` briefly trains each config on the synthetic multi-domain
+stream (LM objective + switch-style load-balance loss) before exporting
+weights. Hand-rolled AdamW (optax is not available in the offline image).
+
+Steps are controlled with MOE_TRAIN_STEPS (default 220) so CI-style smoke
+runs can use e.g. 5.
+"""
+
+import json
+import os
+import pickle
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+from .configs import ModelConfig
+from .data import gen_training_stream, VOCAB
+
+
+def adamw_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, opt, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.01):
+    step = opt["step"] + 1
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        return p - lr * (mh / (jnp.sqrt(vh) + eps) + wd * p), m, v
+
+    flat_p, tree = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(opt["m"])
+    flat_v = jax.tree_util.tree_leaves(opt["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(tree, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tree, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tree, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+def train(cfg: ModelConfig, steps: int, seed: int = 0,
+          batch: int = 8, seq: int = 128, lr_max: float = 3e-3,
+          aux_coef: float = 0.01, log_every: int = 20):
+    """Train cfg for `steps` steps; returns (params, loss_log)."""
+    params = model.init_params(cfg, seed)
+    opt = adamw_init(params)
+    # 1.2x margin: the mixture generator only approximately hits its target
+    # token count (block-interleaved sources).
+    stream = gen_training_stream(
+        seed + 11, int(steps * batch * (seq + 1) * 1.2) + seq)
+    assert len(stream) >= steps * batch * (seq + 1), "stream too short"
+    assert stream.max() < VOCAB
+
+    def loss_fn(p, toks):
+        logits, aux = model.seq_forward(cfg, p, toks[:, :-1])
+        tgt = toks[:, 1:]
+        lp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(lp, tgt[..., None], -1).mean()
+        return nll + aux_coef * aux["load_balance"], (nll, aux["load_balance"])
+
+    @jax.jit
+    def step_fn(p, o, toks, lr):
+        (loss, (nll, lb)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(p, toks)
+        p, o = adamw_update(p, grads, o, lr)
+        return p, o, loss, nll, lb
+
+    tokens_per_step = batch * (seq + 1)
+    log = []
+    t0 = time.time()
+    for it in range(steps):
+        off = it * tokens_per_step
+        toks = stream[off:off + tokens_per_step].reshape(batch, seq + 1)
+        toks = jnp.asarray(toks, jnp.int32)
+        # Linear warmup (10%) + cosine decay.
+        warm = min(1.0, (it + 1) / max(1, steps // 10))
+        cos = 0.5 * (1 + np.cos(np.pi * it / max(1, steps)))
+        lr = lr_max * warm * cos
+        params, opt, loss, nll, lb = step_fn(params, opt, toks, lr)
+        if it % log_every == 0 or it == steps - 1:
+            entry = {"step": it, "loss": float(loss), "nll": float(nll),
+                     "load_balance": float(lb), "lr": float(lr),
+                     "elapsed_s": round(time.time() - t0, 1)}
+            log.append(entry)
+            print(f"[train {cfg.name}] {entry}", flush=True)
+    return params, log
+
+
+def train_and_save(cfg: ModelConfig, out_dir: str, steps: int, seed: int = 0):
+    os.makedirs(out_dir, exist_ok=True)
+    params, log = train(cfg, steps, seed)
+    params = jax.device_get(params)
+    with open(os.path.join(out_dir, "params.pkl"), "wb") as f:
+        pickle.dump(params, f)
+    with open(os.path.join(out_dir, "train_log.json"), "w") as f:
+        json.dump({"config": cfg.to_dict(), "steps": steps, "log": log}, f,
+                  indent=1)
+    return params
+
+
+if __name__ == "__main__":
+    import sys
+    from .configs import CONFIGS, get_config
+    steps = int(os.environ.get("MOE_TRAIN_STEPS", "220"))
+    names = sys.argv[1:] or sorted(CONFIGS)
+    for name in names:
+        cfg = get_config(name)
+        out = os.path.join(os.path.dirname(__file__), "..", "..",
+                           "artifacts", cfg.name)
+        if os.path.exists(os.path.join(out, "params.pkl")):
+            print(f"[train] {cfg.name}: params.pkl exists, skipping")
+            continue
+        train_and_save(cfg, out, steps)

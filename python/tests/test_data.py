@@ -1,0 +1,80 @@
+"""Synthetic dataset generator tests: determinism, ranges, task validity."""
+
+import numpy as np
+
+from compile import data
+
+
+def test_corpus_deterministic_and_in_range():
+    m = data.DomainMarkov()
+    a = data.gen_corpus(m, 1, 5000)
+    b = data.gen_corpus(m, 1, 5000)
+    np.testing.assert_array_equal(a, b)
+    assert a.min() >= 0 and a.max() < data.VOCAB
+    # Corpus body uses only corpus tokens + BOS/EOS framing.
+    body = a[(a != data.BOS) & (a != data.EOS)]
+    assert body.min() >= data.CORPUS_START
+
+
+def test_corpus_different_seeds_differ():
+    m = data.DomainMarkov()
+    a = data.gen_corpus(m, 1, 2000)
+    b = data.gen_corpus(m, 2, 2000)
+    assert not np.array_equal(a, b)
+
+
+def test_domains_have_distinct_statistics():
+    """Different domains must induce different token distributions — this is
+    what gives the trained router its input-conditional behaviour."""
+    m = data.DomainMarkov()
+    rng = np.random.default_rng(0)
+    d0 = m.sample_doc(rng, 0, 2000)
+    d7 = m.sample_doc(rng, N_DOMAINS - 1, 2000) if (N_DOMAINS := 8) else None
+    overlap = len(set(d0.tolist()) & set(d7.tolist()))
+    assert overlap < len(set(d0.tolist())) * 0.5
+
+
+def test_qa_items_answer_is_option_index():
+    m = data.DomainMarkov()
+    items = data.gen_qa_items(m, 3, 50)
+    for it in items:
+        assert 0 <= it["answer"] < 4
+        assert len(set(it["options"])) == 4
+        # The stored answer index points at the domain-consistent token.
+        ans_tok = it["options"][it["answer"]]
+        toks = m.domains[it["domain"]][0]
+        assert ans_tok in toks
+
+
+def test_qa_fewshot_prompt_shape():
+    m = data.DomainMarkov()
+    items = data.gen_qa_items(m, 4, 8)
+    p = data.qa_fewshot_prompt(items[:5], items[6], 5)
+    assert p[0] == data.BOS
+    assert p.count(data.SEP) == 5
+    assert p[-1] == data.COLON
+
+
+def test_math_items_and_tokens():
+    items = data.gen_math_items(5, 30)
+    for it in items:
+        assert it["answer"] == it["a"] + it["b"]
+    toks = data.math_item_tokens({"a": 12, "b": 7, "answer": 19}, True)
+    D = data.DIGIT0
+    assert toks == [D + 1, D + 2, data.PLUS, D + 7, data.EQUALS,
+                    D + 1, D + 9, data.SEP]
+
+
+def test_training_stream_mixes_sources():
+    stream = data.gen_training_stream(1, 30_000)
+    assert (stream == data.PLUS).sum() > 10          # math present
+    assert (stream == data.QMARK).sum() > 10         # QA present
+    assert (stream >= data.CORPUS_START).mean() > 0.5  # corpus dominates
+
+
+def test_write_token_bin_roundtrip(tmp_path):
+    toks = np.array([0, 1, 511, 65535], dtype=np.int64)
+    path = str(tmp_path / "t.bin")
+    data.write_token_bin(path, toks)
+    back = np.fromfile(path, "<u2")
+    np.testing.assert_array_equal(back, toks)

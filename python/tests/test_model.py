@@ -1,0 +1,132 @@
+"""L2 model consistency: decode path == training path, gate math, overrides."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.configs import ModelConfig
+
+# A deliberately small config so these tests run in seconds on one core.
+TEST_CFG = ModelConfig(name="test-tiny", vocab=64, d_model=32, n_layers=2,
+                       n_heads=2, head_dim=16, max_seq=32, n_experts=8,
+                       top_k=2, n_shared=0, d_ff=16, renorm_topk=True)
+TEST_CFG_SHARED = ModelConfig(name="test-shared", vocab=64, d_model=32,
+                              n_layers=2, n_heads=2, head_dim=16, max_seq=32,
+                              n_experts=8, top_k=2, n_shared=2, d_ff=16,
+                              renorm_topk=False)
+
+
+@pytest.fixture(scope="module", params=[TEST_CFG, TEST_CFG_SHARED],
+                ids=["plain", "shared"])
+def cfg_params(request):
+    cfg = request.param
+    return cfg, model.init_params(cfg, seed=3)
+
+
+def test_decode_matches_seq_forward(cfg_params):
+    """Sequential decode (the Rust engine's path) must equal the vectorised
+    training forward at every position."""
+    cfg, params = cfg_params
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab, size=(1, 12))
+    logits_seq, _ = model.seq_forward(cfg, params, jnp.asarray(toks))
+    state = model.init_state(cfg)
+    for pos in range(toks.shape[1]):
+        lg, state, _ = model.decode_step(cfg, params, state,
+                                         int(toks[0, pos]), pos)
+        np.testing.assert_allclose(np.asarray(lg),
+                                   np.asarray(logits_seq[0, pos]),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_gate_weights_renorm_sums_to_one():
+    z = jnp.asarray(np.random.default_rng(1).standard_normal(8), jnp.float32)
+    w = model.gate_weights(TEST_CFG, z, [3, 5])
+    assert abs(float(w.sum()) - 1.0) < 1e-6
+
+
+def test_gate_weights_no_renorm_matches_softmax():
+    z = jnp.asarray(np.random.default_rng(2).standard_normal(8), jnp.float32)
+    w_all = jax.nn.softmax(z)
+    w = model.gate_weights(TEST_CFG_SHARED, z, [0, 7])
+    np.testing.assert_allclose(np.asarray(w),
+                               np.asarray(w_all[jnp.asarray([0, 7])]),
+                               rtol=1e-6)
+
+
+def test_gate_weights_from_original_logits():
+    """Cache-aware ranking must not change coefficients: selecting the same
+    experts always yields the same weights regardless of how the ranking was
+    produced (paper §3.3: modified logits are used only for re-ranking)."""
+    z = jnp.asarray(np.random.default_rng(3).standard_normal(8), jnp.float32)
+    a = model.gate_weights(TEST_CFG, z, [1, 4])
+    b = model.gate_weights(TEST_CFG, z, [1, 4])  # e.g. chosen via cache-prior
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_expert_override_changes_output(cfg_params):
+    """Routing to different experts must change the logits (the experts are
+    real, distinct subnetworks) — this is what cache-aware routing trades."""
+    cfg, params = cfg_params
+    state = model.init_state(cfg)
+    lg_a, _, zs = model.decode_step(cfg, params, state, 5, 0)
+    top = np.asarray(jax.lax.top_k(zs[0], cfg.top_k)[1])
+    worst = np.argsort(np.asarray(zs[0]))[:cfg.top_k]
+    override = [list(worst)] * cfg.n_layers
+    lg_b, _, _ = model.decode_step(cfg, params, state, 5, 0,
+                                   expert_override=override)
+    assert np.abs(np.asarray(lg_a) - np.asarray(lg_b)).max() > 1e-4
+    # but overriding with the true top-K must be a no-op
+    override_same = [list(top)] * 1  # layer-0 only probe below
+    lg_c, _, _ = model.decode_step(
+        cfg, params, state, 5, 0,
+        expert_override=[list(np.asarray(jax.lax.top_k(z, cfg.top_k)[1]))
+                         for z in zs])
+    np.testing.assert_allclose(np.asarray(lg_a), np.asarray(lg_c),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_kv_cache_isolated_between_layers(cfg_params):
+    cfg, params = cfg_params
+    state = model.init_state(cfg)
+    _, state, _ = model.decode_step(cfg, params, state, 1, 0)
+    k0 = np.asarray(state[0][0])
+    k1 = np.asarray(state[1][0])
+    assert np.abs(k0[:, 0]).max() > 0 and np.abs(k1[:, 0]).max() > 0
+    assert np.abs(k0[:, 1:]).max() == 0  # only slot 0 written
+    assert not np.allclose(k0[:, 0], k1[:, 0])
+
+
+def test_layer_fused_matches_components(cfg_params):
+    """The fused attn+router AOT component (perf iteration 2) must equal the
+    two-component composition exactly."""
+    cfg, params = cfg_params
+    import jax.numpy as jnp
+    layer = params["layers"][0]
+    h = jnp.asarray(np.random.default_rng(5).standard_normal((1, cfg.d_model)),
+                    jnp.float32)
+    kc = jnp.zeros((cfg.n_heads, cfg.max_seq, cfg.head_dim), jnp.float32)
+    vc = jnp.zeros_like(kc)
+    h1a, ka, va = model.attn_step(cfg, h, layer["ln1"], layer["wq"],
+                                  layer["wk"], layer["wv"], layer["wo"],
+                                  kc, vc, 0)
+    za, xna = model.router_step(cfg, h1a, layer["ln2"], layer["router"])
+    h1b, kb, vb, zb, xnb = model.layer_fused_step(
+        cfg, h, layer["ln1"], layer["wq"], layer["wk"], layer["wv"],
+        layer["wo"], kc, vc, 0, layer["ln2"], layer["router"])
+    for a, b in [(h1a, h1b), (ka, kb), (va, vb), (za, zb), (xna, xnb)]:
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6,
+                                   atol=1e-7)
+
+
+def test_load_balance_loss_uniform_is_one():
+    """For perfectly uniform routing the switch loss N*sum(f_i*P_i) -> 1."""
+    cfg = TEST_CFG
+    params = model.init_params(cfg, seed=0)
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab, (4, 16)), jnp.int32)
+    _, aux = model.seq_forward(cfg, params, toks)
+    # Untrained random router: close to uniform, loss close to 1.
+    assert 0.8 < float(aux["load_balance"]) < 2.5

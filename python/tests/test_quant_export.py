@@ -1,0 +1,118 @@
+"""Quantization + flash-image format tests (python side of the contract
+that rust/src/quant and rust/src/weights implement)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.export import (quantize_sym, dequantize_sym, pack_int4,
+                            unpack_int4, export_flash_image, MAGIC, ALIGN)
+from compile.configs import ModelConfig
+from compile import model
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.integers(1, 64), cols=st.integers(1, 64),
+       bits=st.sampled_from([4, 8]), seed=st.integers(0, 2**31 - 1))
+def test_quant_roundtrip_error_bounded(rows, cols, bits, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((rows, cols)).astype(np.float32)
+    q, scales = quantize_sym(w, bits)
+    deq = dequantize_sym(q, scales)
+    # Error per element bounded by half a quantization step per column.
+    step = scales
+    assert np.all(np.abs(deq - w) <= step * 0.5 + 1e-6)
+
+
+def test_quant_preserves_zero_and_extremes():
+    w = np.array([[0.0, -1.0, 1.0, 0.5]], np.float32).T @ np.ones((1, 3),
+                                                                  np.float32)
+    q, s = quantize_sym(w, 8)
+    assert q[0, 0] == 0
+    deq = dequantize_sym(q, s)
+    np.testing.assert_allclose(deq[:, 0], w[:, 0], atol=1e-2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 256), seed=st.integers(0, 2**31 - 1))
+def test_int4_pack_unpack_exact(n, seed):
+    rng = np.random.default_rng(seed)
+    n_even = n * 2
+    q = rng.integers(-8, 8, size=n_even).astype(np.int8)
+    packed = pack_int4(q)
+    assert packed.size == n_even // 2
+    got = unpack_int4(packed, n_even)
+    np.testing.assert_array_equal(got, q)
+
+
+CFG = ModelConfig(name="export-test", vocab=64, d_model=16, n_layers=2,
+                  n_heads=2, head_dim=8, max_seq=16, n_experts=4, top_k=2,
+                  n_shared=1, d_ff=8, renorm_topk=False)
+
+
+@pytest.fixture(scope="module")
+def image(tmp_path_factory):
+    params = model.init_params(CFG, seed=1)
+    path = str(tmp_path_factory.mktemp("img") / "weights_int4.bin")
+    header = export_flash_image(CFG, params, path, "int4")
+    return path, header, params
+
+
+def test_image_magic_and_header(image):
+    path, header, _ = image
+    with open(path, "rb") as f:
+        assert f.read(8) == MAGIC
+        hlen = int(np.frombuffer(f.read(4), "<u4")[0])
+        parsed = json.loads(f.read(hlen).decode())
+    assert parsed["quant"] == "int4"
+    assert parsed["config"]["name"] == CFG.name
+    assert len(parsed["tensors"]) == len(header["tensors"])
+
+
+def test_image_tensor_alignment_and_no_overlap(image):
+    _, header, _ = image
+    spans = sorted((t["offset"], t["offset"] + t["bytes"] +
+                    t.get("scales_bytes", 0)) for t in header["tensors"])
+    for t in header["tensors"]:
+        assert t["offset"] % ALIGN == 0
+    for (s1, e1), (s2, _) in zip(spans, spans[1:]):
+        assert e1 <= s2 + ALIGN  # scales may pack inside the aligned span
+
+
+def test_expert_spans_cover_expert_tensors(image):
+    _, header, _ = image
+    spans = {(s["layer"], s["expert"], s["kind"]): s
+             for s in header["expert_spans"]}
+    assert len(spans) == CFG.n_layers * (CFG.n_experts + CFG.n_shared)
+    for t in header["tensors"]:
+        if t["kind"] in ("expert", "shared"):
+            s = spans[(t["layer"], t["expert"], t["kind"])]
+            end = t["offset"] + t["bytes"] + t.get("scales_bytes", 0)
+            assert s["offset"] <= t["offset"] and end <= s["offset"] + s["bytes"]
+
+
+def test_image_dequant_matches_params(image):
+    """Read an expert tensor back from the image and compare to params."""
+    path, header, params = image
+    with open(path, "rb") as f:
+        raw = f.read()
+    payload_start = len(raw) - max(t["offset"] + t["bytes"] +
+                                   t.get("scales_bytes", 0)
+                                   for t in header["tensors"])
+    # Payload start == first aligned offset after the header.
+    hlen = int(np.frombuffer(raw[8:12], "<u4")[0])
+    payload_start = 8 + 4 + hlen
+    payload_start += (-payload_start) % ALIGN
+    t = next(t for t in header["tensors"]
+             if t["name"] == "layers.0.experts.1.w1")
+    q = unpack_int4(np.frombuffer(
+        raw, np.uint8, count=t["bytes"],
+        offset=payload_start + t["offset"]), int(np.prod(t["shape"])))
+    scales = np.frombuffer(raw, "<f4", count=t["shape"][-1],
+                           offset=payload_start + t["scales_offset"])
+    deq = dequantize_sym(q.reshape(t["shape"]), scales)
+    w = np.asarray(params["layers"][0]["w1"][1])
+    assert np.abs(deq - w).max() <= np.abs(w).max() / 7 + 1e-6

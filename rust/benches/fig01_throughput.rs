@@ -1,0 +1,116 @@
+//! Fig. 1 (right): on-device token-generation throughput, LRU baseline vs
+//! Cache-Aware routing, on the two device settings:
+//!   12 GB device / int4 model / cache 30 of 60 experts
+//!   16 GB device / int8 model / cache 45 of 60 experts
+//!
+//! Box stats over repeated runs with different sampling seeds (the paper
+//! uses 10 runs; MOE_BENCH=full matches that, default uses 5).
+//!
+//! Run: `cargo bench --offline --bench fig01_throughput`
+
+use moe_cache::cache::Policy;
+use moe_cache::config::{DeviceProfile, Quant};
+use moe_cache::eval::EvalData;
+use moe_cache::model::{Engine, EngineOptions, Sampler};
+use moe_cache::report::{results_dir, Table};
+use moe_cache::routing::{DeltaMode, Strategy};
+use moe_cache::util::stats::{mean, percentile};
+
+fn runs() -> usize {
+    match std::env::var("MOE_BENCH").as_deref() {
+        Ok("smoke") => 2,
+        Ok("full") => 10,
+        _ => 5,
+    }
+}
+
+fn measure(
+    device: DeviceProfile,
+    quant: Quant,
+    cache: usize,
+    strategy: Strategy,
+    prompts: &[Vec<u32>],
+    seed: u64,
+) -> anyhow::Result<(f64, f64)> {
+    let arts = moe_cache::artifacts_dir();
+    let mut engine = Engine::load(
+        &arts,
+        "qwen-tiny",
+        EngineOptions {
+            quant,
+            cache_capacity: cache,
+            policy: Policy::Lru,
+            strategy,
+            device,
+            seed,
+            record_trace: false,
+            record_logits: false,
+        },
+    )?;
+    let mut sampler = Sampler::new(0.8, 40, seed);
+    for p in prompts {
+        engine.generate(p, 40, &mut sampler, None)?;
+    }
+    let (_, _, miss) = engine.cache_totals();
+    Ok((engine.flash.throughput(), miss))
+}
+
+fn main() -> anyhow::Result<()> {
+    let arts = moe_cache::artifacts_dir();
+    let data = EvalData::load(&arts.join("data"))?;
+    // Mixed-domain few-shot prompts (the paper uses an MMLU subset §4.5) —
+    // domain switching is what stresses the expert cache.
+    let prompts: Vec<Vec<u32>> = data.qa.iter().take(3).map(|q| q.prompt.clone()).collect();
+    let n_runs = runs();
+    let mut t = Table::new(
+        "fig01_throughput",
+        &["setting", "routing", "tps_median", "tps_min", "tps_max", "rel_median", "miss_rate"],
+    );
+    for (label, device, quant, cache) in [
+        ("12GB/int4/cache30", DeviceProfile::device_12gb(), Quant::Int4, 30usize),
+        ("16GB/int8/cache45", DeviceProfile::device_16gb(), Quant::Int8, 45usize),
+    ] {
+        let mut base_med = 0.0;
+        for (routing, strategy) in [
+            ("LRU", Strategy::Original),
+            (
+                "Cache-Aware λ=0.5",
+                Strategy::CachePrior { lambda: 0.5, j: 2, delta: DeltaMode::RunningAvg },
+            ),
+        ] {
+            let mut tps = Vec::new();
+            let mut miss = Vec::new();
+            for run in 0..n_runs {
+                let (tp, ms) = measure(
+                    device.clone(), quant, cache, strategy.clone(), &prompts, 100 + run as u64,
+                )?;
+                tps.push(tp);
+                miss.push(ms);
+            }
+            let med = percentile(&tps, 50.0);
+            if routing == "LRU" {
+                base_med = med;
+            }
+            println!(
+                "{label:<20} {routing:<18} tps {med:.2} (min {:.2} max {:.2}) rel {:.2}x miss {:.3}",
+                percentile(&tps, 0.0),
+                percentile(&tps, 100.0),
+                med / base_med,
+                mean(&miss)
+            );
+            t.row(vec![
+                label.into(),
+                routing.into(),
+                format!("{med:.3}"),
+                format!("{:.3}", percentile(&tps, 0.0)),
+                format!("{:.3}", percentile(&tps, 100.0)),
+                format!("{:.2}", med / base_med),
+                format!("{:.4}", mean(&miss)),
+            ]);
+        }
+    }
+    t.print();
+    t.write_csv(&results_dir())?;
+    println!("paper claim (Fig. 1 right): Cache-Aware >= 2x LRU on both settings");
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Fig. 2: expert-selection sensitivity.
+//!
+//! Left: drop all experts ranked >= h (Pruning) — perplexity vs h.
+//! Right: replace the rank-k expert with a random one (SwapAtRank) —
+//! perplexity vs k. The paper's findings to reproduce: the top-1 expert is
+//! critical for every model; granular MoEs (qwen/deepseek) recover much
+//! faster with rank than coarse ones (mixtral/phi).
+//!
+//! Run: `cargo bench --offline --bench fig02_sensitivity`
+
+use moe_cache::config::{Quant, CONFIG_NAMES};
+use moe_cache::eval::sweep::{run_point, EvalBudget, Task};
+use moe_cache::eval::EvalData;
+use moe_cache::report::{results_dir, Table};
+use moe_cache::routing::Strategy;
+use moe_cache::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let arts = moe_cache::artifacts_dir();
+    let data = EvalData::load(&arts.join("data"))?;
+    let budget = EvalBudget::from_env();
+    let mut t = Table::new(
+        "fig02_sensitivity",
+        &["model", "probe", "rank", "ppl", "baseline_ppl"],
+    );
+    for model in CONFIG_NAMES {
+        let cfg = Runtime::load(&arts.join(model))?.config.clone();
+        let cache = cfg.n_experts; // full cache: isolate routing effects
+        let base = run_point(
+            &arts, model, Strategy::Original, cache, Quant::Int4, Task::Ppl, &data, &budget,
+        )?;
+        println!("{model}: baseline ppl {:.3}", base.result.metric);
+        // Left plot: keep only top-h (drop ranked >= h).
+        for keep in 1..cfg.top_k {
+            let p = run_point(
+                &arts, model, Strategy::Pruning { keep }, cache, Quant::Int4,
+                Task::Ppl, &data, &budget,
+            )?;
+            t.row(vec![
+                model.into(), "drop_at".into(), keep.to_string(),
+                format!("{:.4}", p.result.metric),
+                format!("{:.4}", base.result.metric),
+            ]);
+            println!("  drop ranked>={keep}: ppl {:.3}", p.result.metric);
+        }
+        // Right plot: swap the rank-k expert with a random one.
+        for rank in 0..cfg.top_k.min(4) {
+            let p = run_point(
+                &arts, model, Strategy::SwapAtRank { rank }, cache, Quant::Int4,
+                Task::Ppl, &data, &budget,
+            )?;
+            t.row(vec![
+                model.into(), "swap_at".into(), rank.to_string(),
+                format!("{:.4}", p.result.metric),
+                format!("{:.4}", base.result.metric),
+            ]);
+            println!("  swap rank {rank}: ppl {:.3}", p.result.metric);
+        }
+    }
+    t.print();
+    t.write_csv(&results_dir())?;
+    println!("paper shape: swapping rank-0 is catastrophic; granular models tolerate rank>=2 swaps");
+    Ok(())
+}

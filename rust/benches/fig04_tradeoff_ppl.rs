@@ -1,0 +1,75 @@
+//! Fig. 4: perplexity vs cache miss rate, four models x four methods,
+//! cache = N/2 experts per layer.
+//!
+//! The paper's shape to reproduce: Pruning worst, Max-Rank > Pruning,
+//! Cumsum > Max-Rank, Cache-Prior Pareto-dominates everything.
+//!
+//! Run: `cargo bench --offline --bench fig04_tradeoff_ppl`
+//! (MOE_BENCH=smoke for a quick pass, =full for paper-scale token counts)
+
+use moe_cache::config::{Quant, CONFIG_NAMES};
+use moe_cache::eval::sweep::{strategy_family, sweep_points, EvalBudget, Task};
+use moe_cache::eval::EvalData;
+use moe_cache::report::{results_dir, Table};
+use moe_cache::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let arts = moe_cache::artifacts_dir();
+    let data = EvalData::load(&arts.join("data"))?;
+    let budget = EvalBudget::from_env();
+    let mut t = Table::new(
+        "fig04_tradeoff_ppl",
+        &["model", "family", "strategy", "param", "ppl", "miss_rate", "flash_mb"],
+    );
+    for model in CONFIG_NAMES {
+        let cfg = Runtime::load(&arts.join(model))?.config.clone();
+        let cache = cfg.n_experts / 2;
+        println!("== {model} (cache {cache}/{}) ==", cfg.n_experts);
+        let points = sweep_points(
+            &arts, model, cache, Quant::Int4, Task::Ppl, &data, &budget,
+            cfg.default_top_j(), cfg.n_experts, cfg.top_k,
+        )?;
+        for p in &points {
+            let strategy = moe_cache::routing::Strategy::parse(&p.strategy)?;
+            println!(
+                "  {:<20} ppl {:8.3} miss {:.4}",
+                p.strategy, p.result.metric, p.result.miss_rate
+            );
+            t.row(vec![
+                model.into(),
+                strategy_family(&strategy).into(),
+                p.strategy.clone(),
+                format!("{:.3}", p.param),
+                format!("{:.4}", p.result.metric),
+                format!("{:.4}", p.result.miss_rate),
+                format!("{:.2}", p.result.flash_bytes as f64 / 1e6),
+            ]);
+        }
+        // Pareto sanity: best cache-prior miss-rate at <=3% ppl increase
+        // must beat best cumsum at the same constraint (the paper's
+        // dominance claim).
+        let base = points
+            .iter()
+            .find(|p| p.strategy == "original")
+            .map(|p| p.result.metric)
+            .unwrap_or(0.0);
+        let best = |fam: &str| {
+            points
+                .iter()
+                .filter(|p| {
+                    p.strategy.starts_with(fam) && p.result.metric <= base * 1.03
+                })
+                .map(|p| p.result.miss_rate)
+                .fold(f64::INFINITY, f64::min)
+        };
+        println!(
+            "  best miss@<=3%ppl: cache-prior {:.4} cumsum {:.4} max-rank {:.4}",
+            best("cache-prior"),
+            best("cumsum"),
+            best("max-rank")
+        );
+    }
+    t.print();
+    t.write_csv(&results_dir())?;
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Fig. 5: SynthQA (MMLU-analog) accuracy vs cache miss rate Pareto fronts.
+//!
+//! Run: `cargo bench --offline --bench fig05_tradeoff_qa`
+
+use moe_cache::config::{Quant, CONFIG_NAMES};
+use moe_cache::eval::sweep::{run_point, strategy_family, EvalBudget, Task};
+use moe_cache::eval::EvalData;
+use moe_cache::report::{results_dir, Table};
+use moe_cache::routing::{DeltaMode, Strategy};
+use moe_cache::runtime::Runtime;
+
+/// Thinner grid than Fig. 4: QA items are ~100-token prompts, so each point
+/// is expensive on one core.
+fn grid(top_k: usize, n: usize, j: usize) -> Vec<Strategy> {
+    let mut g = vec![Strategy::Original, Strategy::Pruning { keep: 1.max(top_k / 2) }];
+    for m in [top_k + 1, n / 2, n] {
+        g.push(Strategy::MaxRank { m, j });
+    }
+    for p in [0.5, 0.9] {
+        g.push(Strategy::CumsumThreshold { p, j });
+    }
+    for l in [0.2, 0.5, 0.8] {
+        g.push(Strategy::CachePrior { lambda: l, j, delta: DeltaMode::RunningAvg });
+    }
+    g
+}
+
+fn main() -> anyhow::Result<()> {
+    let arts = moe_cache::artifacts_dir();
+    let data = EvalData::load(&arts.join("data"))?;
+    let budget = EvalBudget::from_env();
+    let mut t = Table::new(
+        "fig05_tradeoff_qa",
+        &["model", "family", "strategy", "accuracy", "miss_rate"],
+    );
+    for model in CONFIG_NAMES {
+        let cfg = Runtime::load(&arts.join(model))?.config.clone();
+        let cache = cfg.n_experts / 2;
+        println!("== {model} ==");
+        for strategy in grid(cfg.top_k, cfg.n_experts, cfg.default_top_j()) {
+            let p = run_point(
+                &arts, model, strategy.clone(), cache, Quant::Int4, Task::Qa, &data, &budget,
+            )?;
+            println!(
+                "  {:<20} acc {:.3} miss {:.4}",
+                p.strategy, p.result.metric, p.result.miss_rate
+            );
+            t.row(vec![
+                model.into(),
+                strategy_family(&strategy).into(),
+                p.strategy.clone(),
+                format!("{:.4}", p.result.metric),
+                format!("{:.4}", p.result.miss_rate),
+            ]);
+        }
+    }
+    t.print();
+    t.write_csv(&results_dir())?;
+    println!("paper shape: cache-prior cuts miss rate with ~no accuracy loss vs original");
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Fig. 6: SynthMath (GSM8K-analog) accuracy vs cache miss rate.
+//!
+//! Generative task; the routing strategy applies only during autoregressive
+//! generation (the paper's protocol). Accuracy is noisier than QA — also a
+//! paper observation.
+//!
+//! Run: `cargo bench --offline --bench fig06_tradeoff_gen`
+
+use moe_cache::config::{Quant, CONFIG_NAMES};
+use moe_cache::eval::sweep::{run_point, strategy_family, EvalBudget, Task};
+use moe_cache::eval::EvalData;
+use moe_cache::report::{results_dir, Table};
+use moe_cache::routing::{DeltaMode, Strategy};
+use moe_cache::runtime::Runtime;
+
+fn grid(top_k: usize, n: usize, j: usize) -> Vec<Strategy> {
+    let mut g = vec![Strategy::Original];
+    g.push(Strategy::MaxRank { m: n / 2, j });
+    g.push(Strategy::CumsumThreshold { p: 0.7, j });
+    for l in [0.3, 0.6, 0.9] {
+        g.push(Strategy::CachePrior { lambda: l, j, delta: DeltaMode::RunningAvg });
+    }
+    let _ = top_k;
+    g
+}
+
+fn main() -> anyhow::Result<()> {
+    let arts = moe_cache::artifacts_dir();
+    let data = EvalData::load(&arts.join("data"))?;
+    let budget = EvalBudget::from_env();
+    let mut t = Table::new(
+        "fig06_tradeoff_gen",
+        &["model", "family", "strategy", "accuracy", "miss_rate"],
+    );
+    for model in CONFIG_NAMES {
+        let cfg = Runtime::load(&arts.join(model))?.config.clone();
+        let cache = cfg.n_experts / 2;
+        println!("== {model} ==");
+        for strategy in grid(cfg.top_k, cfg.n_experts, cfg.default_top_j()) {
+            let p = run_point(
+                &arts, model, strategy.clone(), cache, Quant::Int4, Task::Math, &data, &budget,
+            )?;
+            println!(
+                "  {:<20} acc {:.3} miss {:.4}",
+                p.strategy, p.result.metric, p.result.miss_rate
+            );
+            t.row(vec![
+                model.into(),
+                strategy_family(&strategy).into(),
+                p.strategy.clone(),
+                format!("{:.4}", p.result.metric),
+                format!("{:.4}", p.result.miss_rate),
+            ]);
+        }
+    }
+    t.print();
+    t.write_csv(&results_dir())?;
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Fig. 14 (Appendix C): LRU throughput vs cache size — the memory-pressure
+//! collapse.
+//!
+//! Growing the cache first helps (fewer misses) then hurts: beyond the
+//! device budget the OS starts evicting KV-cache/activations to flash every
+//! token. The paper picked cache 30 (12 GB/int4) and 45 (16 GB/int8) from
+//! exactly this curve.
+//!
+//! Run: `cargo bench --offline --bench fig14_lru_cache_size`
+
+use moe_cache::cache::Policy;
+use moe_cache::config::{DeviceProfile, Quant};
+use moe_cache::eval::EvalData;
+use moe_cache::model::{Engine, EngineOptions, Sampler};
+use moe_cache::report::{results_dir, Table};
+use moe_cache::routing::Strategy;
+
+fn main() -> anyhow::Result<()> {
+    let arts = moe_cache::artifacts_dir();
+    let data = EvalData::load(&arts.join("data"))?;
+    let prompts: Vec<Vec<u32>> = data.prompts_short.iter().take(2).cloned().collect();
+    let mut t = Table::new(
+        "fig14_lru_cache_size",
+        &["setting", "cache", "tps", "rel_to_best", "pressure_s"],
+    );
+    for (label, device, quant) in [
+        ("12GB/int4", DeviceProfile::device_12gb(), Quant::Int4),
+        ("16GB/int8", DeviceProfile::device_16gb(), Quant::Int8),
+    ] {
+        let mut rows = Vec::new();
+        let mut best = 0.0f64;
+        for cache in [5usize, 15, 30, 45, 60] {
+            let mut engine = Engine::load(
+                &arts,
+                "qwen-tiny",
+                EngineOptions {
+                    quant,
+                    cache_capacity: cache,
+                    policy: Policy::Lru,
+                    strategy: Strategy::Original,
+                    device: device.clone(),
+                    seed: 9,
+                    record_trace: false,
+                    record_logits: false,
+                },
+            )?;
+            let mut s = Sampler::new(0.8, 40, 9);
+            for p in &prompts {
+                engine.generate(p, 32, &mut s, None)?;
+            }
+            let tps = engine.flash.throughput();
+            best = best.max(tps);
+            rows.push((cache, tps, engine.flash.pressure_s));
+        }
+        for (cache, tps, pressure) in rows {
+            println!(
+                "{label} cache {cache:>2}: {tps:.2} tok/s (rel {:.2}) pressure {pressure:.2}s",
+                tps / best
+            );
+            t.row(vec![
+                label.into(),
+                cache.to_string(),
+                format!("{tps:.3}"),
+                format!("{:.3}", tps / best),
+                format!("{pressure:.3}"),
+            ]);
+        }
+    }
+    t.print();
+    t.write_csv(&results_dir())?;
+    println!("paper shape: throughput peaks at 30 (12GB/int4) / 45 (16GB/int8), collapses beyond");
+    Ok(())
+}

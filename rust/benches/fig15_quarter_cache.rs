@@ -1,0 +1,47 @@
+//! Fig. 15 (Appendix D): perplexity trade-off with cache = N/4 — the method
+//! keeps working unchanged at smaller cache sizes.
+//!
+//! Run: `cargo bench --offline --bench fig15_quarter_cache`
+
+use moe_cache::config::{Quant, CONFIG_NAMES};
+use moe_cache::eval::sweep::{strategy_family, sweep_points, EvalBudget, Task};
+use moe_cache::eval::EvalData;
+use moe_cache::report::{results_dir, Table};
+use moe_cache::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let arts = moe_cache::artifacts_dir();
+    let data = EvalData::load(&arts.join("data"))?;
+    let budget = EvalBudget::from_env();
+    let mut t = Table::new(
+        "fig15_quarter_cache",
+        &["model", "family", "strategy", "ppl", "miss_rate"],
+    );
+    let models: Vec<&str> = match std::env::var("MOE_BENCH").as_deref() {
+        Ok("smoke") => vec!["phi-tiny"],
+        _ => CONFIG_NAMES.to_vec(),
+    };
+    for model in models {
+        let cfg = Runtime::load(&arts.join(model))?.config.clone();
+        let cache = (cfg.n_experts / 4).max(1);
+        println!("== {model} (cache {cache}/{}) ==", cfg.n_experts);
+        let points = sweep_points(
+            &arts, model, cache, Quant::Int4, Task::Ppl, &data, &budget,
+            cfg.default_top_j(), cfg.n_experts, cfg.top_k,
+        )?;
+        for p in &points {
+            let s = moe_cache::routing::Strategy::parse(&p.strategy)?;
+            println!("  {:<20} ppl {:8.3} miss {:.4}", p.strategy, p.result.metric, p.result.miss_rate);
+            t.row(vec![
+                model.into(),
+                strategy_family(&s).into(),
+                p.strategy.clone(),
+                format!("{:.4}", p.result.metric),
+                format!("{:.4}", p.result.miss_rate),
+            ]);
+        }
+    }
+    t.print();
+    t.write_csv(&results_dir())?;
+    Ok(())
+}

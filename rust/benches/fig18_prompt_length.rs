@@ -1,0 +1,68 @@
+//! Fig. 18 (Appendix F): prompt-length influence on relative throughput at
+//! cache = 30 (the companion of Fig. 8 right, which uses cache 45).
+//!
+//! Run: `cargo bench --offline --bench fig18_prompt_length`
+
+use moe_cache::cache::Policy;
+use moe_cache::config::{DeviceProfile, Quant};
+use moe_cache::eval::EvalData;
+use moe_cache::model::{Engine, EngineOptions, Sampler};
+use moe_cache::report::{results_dir, Table};
+use moe_cache::routing::{DeltaMode, Strategy};
+
+fn run(cache: usize, lambda: f32, prompts: &[Vec<u32>]) -> anyhow::Result<f64> {
+    let arts = moe_cache::artifacts_dir();
+    let strategy = if lambda == 0.0 {
+        Strategy::Original
+    } else {
+        Strategy::CachePrior { lambda, j: 2, delta: DeltaMode::RunningAvg }
+    };
+    let mut engine = Engine::load(
+        &arts,
+        "qwen-tiny",
+        EngineOptions {
+            quant: Quant::Int4,
+            cache_capacity: cache,
+            policy: Policy::Lru,
+            strategy,
+            device: DeviceProfile::device_16gb(),
+            seed: 12,
+            record_trace: false,
+            record_logits: false,
+        },
+    )?;
+    let mut s = Sampler::new(0.8, 40, 12);
+    for p in prompts {
+        engine.generate(p, 40, &mut s, None)?;
+    }
+    Ok(engine.flash.throughput())
+}
+
+fn main() -> anyhow::Result<()> {
+    let arts = moe_cache::artifacts_dir();
+    let data = EvalData::load(&arts.join("data"))?;
+    let mut t = Table::new(
+        "fig18_prompt_length",
+        &["prompt_kind", "lambda", "rel_throughput"],
+    );
+    for (kind, prompts) in [
+        ("short(40-60)", &data.prompts_short),
+        ("long(300-400)", &data.prompts_long),
+    ] {
+        let ps: Vec<Vec<u32>> = prompts.iter().take(2).cloned().collect();
+        let base = run(30, 0.0, &ps)?;
+        for lambda in [0.1f32, 0.3, 0.5, 0.7, 0.9] {
+            let tps = run(30, lambda, &ps)?;
+            println!("{kind} λ={lambda}: rel {:.3}", tps / base);
+            t.row(vec![
+                kind.into(),
+                format!("{lambda}"),
+                format!("{:.4}", tps / base),
+            ]);
+        }
+    }
+    t.print();
+    t.write_csv(&results_dir())?;
+    println!("paper shape: longer prompts yield higher relative throughput at (nearly) all λ");
+    Ok(())
+}

@@ -1,0 +1,135 @@
+//! Micro-benchmarks of the L3 hot path (perf-pass instrumentation).
+//!
+//! Measures each engine sub-operation in isolation: PJRT dispatch per
+//! component, KV upload, expert staging memcpy, cache ops, rerank, flash
+//! fetch+dequant. This is the profile that drives EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo bench --offline --bench micro_hotpath`
+
+use moe_cache::cache::{ExpertCache, Policy};
+use moe_cache::config::{DeviceProfile, Quant};
+use moe_cache::model::{Engine, EngineOptions};
+use moe_cache::routing::{self, DeltaMode, RouterState, Strategy};
+use moe_cache::util::bench::{bench, bench_batched, black_box};
+use moe_cache::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let arts = moe_cache::artifacts_dir();
+    let model = std::env::var("MOE_MODEL").unwrap_or_else(|_| "qwen-tiny".into());
+    let opts = EngineOptions {
+        quant: Quant::Int4,
+        cache_capacity: 30,
+        policy: Policy::Lru,
+        strategy: Strategy::CachePrior { lambda: 0.5, j: 2, delta: DeltaMode::RunningAvg },
+        device: DeviceProfile::device_16gb(),
+        seed: 1,
+        record_trace: false,
+        record_logits: false,
+    };
+    let mut engine = Engine::load(&arts, &model, opts)?;
+    println!("== micro_hotpath ({model}) ==\n");
+
+    // ---- end-to-end step ----
+    let mut tok = 24u32;
+    bench("engine.step (end-to-end, 1 token)", 5, 40, || {
+        if engine.pos() + 1 >= engine.cfg.max_seq {
+            engine.reset_sequence();
+        }
+        let l = engine.step(tok).unwrap();
+        tok = 24 + (black_box(l[24] > 0.0) as u32);
+    })
+    .print();
+
+    // ---- component dispatches ----
+    let rt = &engine.rt;
+    let cfg = engine.cfg.clone();
+    let d = cfg.d_model;
+    let h = rt.buf_f32(&vec![0.1; d], &[1, d])?;
+    let ln = rt.buf_f32(&vec![1.0; d], &[d])?;
+    let w_dd = rt.buf_f32(&vec![0.01; d * d], &[d, d])?;
+    let kvshape = [cfg.n_heads, cfg.max_seq, cfg.head_dim];
+    let kvn = kvshape.iter().product::<usize>();
+    let kc = rt.buf_f32(&vec![0.0; kvn], &kvshape)?;
+    let vc = rt.buf_f32(&vec![0.0; kvn], &kvshape)?;
+    let pos = rt.buf_i32_scalar(5)?;
+    bench("attn dispatch (KV resident)", 5, 50, || {
+        black_box(
+            rt.run("attn", &[&h, &ln, &w_dd, &w_dd, &w_dd, &w_dd, &kc, &vc, &pos])
+                .unwrap(),
+        );
+    })
+    .print();
+
+    let kv_host = vec![0f32; kvn];
+    bench("KV upload (one layer, K+V)", 5, 50, || {
+        black_box(rt.buf_f32(&kv_host, &kvshape).unwrap());
+        black_box(rt.buf_f32(&kv_host, &kvshape).unwrap());
+    })
+    .print();
+
+    let wr = rt.buf_f32(&vec![0.01; d * cfg.n_experts], &[d, cfg.n_experts])?;
+    bench("router dispatch", 5, 50, || {
+        black_box(rt.run("router", &[&h, &ln, &wr]).unwrap());
+    })
+    .print();
+
+    let e = cfg.n_ffn_calls();
+    let f = cfg.d_ff;
+    let w1 = rt.buf_f32(&vec![0.01; e * d * f], &[e, d, f])?;
+    let w2 = rt.buf_f32(&vec![0.01; e * f * d], &[e, f, d])?;
+    let coef = rt.buf_f32(&vec![0.2; e], &[e])?;
+    bench("experts dispatch (weights resident)", 5, 50, || {
+        black_box(rt.run("experts", &[&h, &w1, &w1, &w2, &coef]).unwrap());
+    })
+    .print();
+
+    let stage = vec![0f32; e * d * f];
+    bench("experts weight upload (3 stacks)", 5, 50, || {
+        black_box(rt.buf_f32(&stage, &[e, d, f]).unwrap());
+        black_box(rt.buf_f32(&stage, &[e, d, f]).unwrap());
+        black_box(rt.buf_f32(&stage, &[e, f, d]).unwrap());
+    })
+    .print();
+
+    let head_w = rt.buf_f32(&vec![0.01; d * cfg.vocab], &[d, cfg.vocab])?;
+    bench("lm_head dispatch", 5, 50, || {
+        black_box(rt.run("lm_head", &[&h, &ln, &head_w]).unwrap());
+    })
+    .print();
+
+    // ---- flash fetch + dequant ----
+    let img = &engine.image;
+    let mut e_idx = 0usize;
+    bench("flash fetch_expert + dequant (int4)", 5, 100, || {
+        e_idx = (e_idx + 1) % cfg.n_experts;
+        black_box(img.fetch_expert(0, e_idx, false).unwrap());
+    })
+    .print();
+
+    // ---- pure L3 ops ----
+    let mut rng = Rng::new(3);
+    let z: Vec<f32> = (0..cfg.n_experts).map(|_| rng.normal() as f32).collect();
+    let mask: Vec<bool> = (0..cfg.n_experts).map(|_| rng.chance(0.5)).collect();
+    let mut st = RouterState::new(cfg.n_layers, 1);
+    let strat = Strategy::CachePrior { lambda: 0.5, j: 2, delta: DeltaMode::RunningAvg };
+    bench_batched("routing::select (cache-prior)", 3, 30, 1000, || {
+        black_box(routing::select(&strat, &z, &mask, 0, cfg.top_k, &mut st));
+    })
+    .print();
+
+    let mut cache = ExpertCache::new(30, Policy::Lru);
+    let mut t_ctr = 0u64;
+    bench_batched("cache.access (top-4)", 3, 30, 1000, || {
+        t_ctr += 1;
+        let sel = [
+            (t_ctr % 60) as u32,
+            ((t_ctr + 13) % 60) as u32,
+            ((t_ctr + 29) % 60) as u32,
+            ((t_ctr + 41) % 60) as u32,
+        ];
+        black_box(cache.access(&sel, t_ctr, None));
+    })
+    .print();
+
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Table 1: architectures + memory footprints.
+//!
+//! Reproduces the paper's table shape at tiny scale: per-expert parameter
+//! counts, expansion rates, and the int4 footprint range [static + K
+//! experts cached, static + all experts cached].
+//!
+//! Run: `cargo bench --offline --bench table1_footprint`
+
+use moe_cache::config::{Quant, CONFIG_NAMES};
+use moe_cache::report::{results_dir, Table};
+use moe_cache::runtime::Runtime;
+use moe_cache::weights::FlashImage;
+
+fn main() -> anyhow::Result<()> {
+    let arts = moe_cache::artifacts_dir();
+    let mut t = Table::new(
+        "table1_footprint",
+        &[
+            "model", "paper analog", "experts", "shared", "top-k", "exp-rate",
+            "expert params", "footprint int4 min (KB)", "footprint int4 max (KB)",
+        ],
+    );
+    for name in CONFIG_NAMES {
+        let rt = Runtime::load(&arts.join(name))?;
+        let cfg = rt.config.clone();
+        drop(rt);
+        let img = FlashImage::open_artifact(&arts, name, Quant::Int4)?;
+        let per = img.bytes_per_expert();
+        let stat = img.static_bytes();
+        let min = stat + (cfg.top_k * cfg.n_layers) as u64 * per;
+        let max = stat + (cfg.n_experts * cfg.n_layers) as u64 * per;
+        t.row(vec![
+            name.into(),
+            cfg.paper_model.clone(),
+            cfg.n_experts.to_string(),
+            cfg.n_shared.to_string(),
+            cfg.top_k.to_string(),
+            format!("{:.3}", cfg.expansion_rate()),
+            cfg.expert_params().to_string(),
+            format!("{:.1}", min as f64 / 1e3),
+            format!("{:.1}", max as f64 / 1e3),
+        ]);
+    }
+    t.print();
+    t.write_csv(&results_dir())?;
+    println!("paper shape check: Mixtral-like expert >> granular experts; exp-rate 0.25 vs 0.125");
+    Ok(())
+}

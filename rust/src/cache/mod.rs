@@ -1,0 +1,485 @@
+//! Per-layer expert DRAM cache (paper §2.2).
+//!
+//! One `ExpertCache` instance per MoE layer holds up to `capacity` routed
+//! experts. Policies:
+//!
+//! * **LRU** — the paper's default. The paper's eviction-order rule for
+//!   parallel top-K selection ("removing experts with higher router weights
+//!   first", §4.2) is implemented by stamping a step's selection in reverse
+//!   weight order: within one token the highest-weight expert gets the
+//!   *oldest* stamp, so it is the first of the step to be evicted.
+//! * **LFU** — frequency-based (related-work ablation).
+//! * **Belady** — the clairvoyant oracle (§4.8, Fig. 10/11): evicts the
+//!   expert whose next use is farthest in the future. Requires a next-use
+//!   oracle, i.e. a recorded trace (see [`crate::tracesim`]).
+//!
+//! Statistics track exactly the paper's reporting: hit/miss counts
+//! (Eq. 4) and cache lifetimes in tokens (Table 9).
+
+use std::collections::HashMap;
+
+use crate::util::stats::Welford;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    Lru,
+    Lfu,
+    Belady,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> anyhow::Result<Policy> {
+        match s {
+            "lru" => Ok(Policy::Lru),
+            "lfu" => Ok(Policy::Lfu),
+            "belady" | "optimal" => Ok(Policy::Belady),
+            _ => anyhow::bail!("unknown cache policy {s:?}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    stamp: u64,
+    freq: u64,
+    inserted_token: u64,
+}
+
+/// Result of one token-layer access.
+#[derive(Debug, Clone, Default)]
+pub struct Access {
+    pub hits: u32,
+    /// Experts that were not cached, in selection (weight-desc) order.
+    pub missed: Vec<u32>,
+    /// Experts evicted during this access.
+    pub evicted: Vec<u32>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub lifetimes: Welford,
+}
+
+impl CacheStats {
+    pub fn miss_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.misses as f64 / total as f64
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ExpertCache {
+    capacity: usize,
+    policy: Policy,
+    entries: HashMap<u32, Entry>,
+    clock: u64,
+    pub stats: CacheStats,
+}
+
+impl ExpertCache {
+    pub fn new(capacity: usize, policy: Policy) -> Self {
+        assert!(capacity > 0, "cache capacity must be >= 1");
+        ExpertCache {
+            capacity,
+            policy,
+            entries: HashMap::new(),
+            clock: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, expert: u32) -> bool {
+        self.entries.contains_key(&expert)
+    }
+
+    /// Bitmask m_t over `n` experts (paper §3.3): true = in cache.
+    pub fn mask(&self, n: usize) -> Vec<bool> {
+        let mut m = vec![false; n];
+        for &e in self.entries.keys() {
+            if (e as usize) < n {
+                m[e as usize] = true;
+            }
+        }
+        m
+    }
+
+    pub fn resident(&self) -> Vec<u32> {
+        let mut v: Vec<u32> = self.entries.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Pre-fill with a specific set (initial-cache-state ablation, Fig. 19).
+    /// Does not count as hits/misses.
+    pub fn warm(&mut self, experts: &[u32], now_token: u64) {
+        for &e in experts.iter().take(self.capacity) {
+            self.clock += 1;
+            self.entries.insert(
+                e,
+                Entry { stamp: self.clock, freq: 0, inserted_token: now_token },
+            );
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    /// Access one token-layer selection, `selected` ordered by router weight
+    /// descending. `next_use`: Belady oracle (next use strictly after now;
+    /// `u64::MAX` = never). Required iff policy == Belady.
+    pub fn access(
+        &mut self,
+        selected: &[u32],
+        now_token: u64,
+        next_use: Option<&dyn Fn(u32) -> u64>,
+    ) -> Access {
+        debug_assert!(
+            selected.windows(2).all(|w| w[0] != w[1]),
+            "selection must be distinct"
+        );
+        let mut out = Access::default();
+        let n = selected.len() as u64;
+        let base = self.clock;
+        self.clock += n;
+        // Stamp: highest-weight (index 0) gets the OLDEST stamp of the step
+        // (the paper's parallel-selection eviction order).
+        for (i, &e) in selected.iter().enumerate() {
+            let stamp = base + i as u64 + 1;
+            if let Some(entry) = self.entries.get_mut(&e) {
+                entry.stamp = stamp;
+                entry.freq += 1;
+                out.hits += 1;
+                self.stats.hits += 1;
+            } else {
+                out.missed.push(e);
+                self.stats.misses += 1;
+            }
+        }
+        // Insert misses in weight-desc order.
+        for (i, &e) in selected.iter().enumerate() {
+            if !out.missed.contains(&e) {
+                continue;
+            }
+            let stamp = base + i as u64 + 1;
+            if self.entries.len() >= self.capacity {
+                if let Some(victim) = self.choose_victim(next_use, now_token) {
+                    let entry = self.entries.remove(&victim).unwrap();
+                    self.stats.evictions += 1;
+                    self.stats
+                        .lifetimes
+                        .push((now_token - entry.inserted_token) as f64);
+                    out.evicted.push(victim);
+                } else {
+                    // Nothing evictable (degenerate tiny cache): stream the
+                    // expert without retaining it.
+                    continue;
+                }
+            }
+            self.entries.insert(
+                e,
+                Entry { stamp, freq: 1, inserted_token: now_token },
+            );
+        }
+        out
+    }
+
+    fn choose_victim(
+        &self,
+        next_use: Option<&dyn Fn(u32) -> u64>,
+        _now_token: u64,
+    ) -> Option<u32> {
+        match self.policy {
+            Policy::Lru => self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(&k, _)| k),
+            Policy::Lfu => self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| (e.freq, e.stamp))
+                .map(|(&k, _)| k),
+            Policy::Belady => {
+                let f = next_use.expect("Belady policy requires a next-use oracle");
+                // Farthest next use; ties broken by LRU stamp.
+                self.entries
+                    .iter()
+                    .max_by_key(|(&k, e)| (f(k), u64::MAX - e.stamp))
+                    .map(|(&k, _)| k)
+            }
+        }
+    }
+
+    /// Account still-resident experts as living until `now_token` (called at
+    /// end-of-sequence so Table 9 lifetimes include residents).
+    pub fn flush_lifetimes(&mut self, now_token: u64) {
+        for entry in self.entries.values() {
+            self.stats
+                .lifetimes
+                .push((now_token.saturating_sub(entry.inserted_token)) as f64);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    fn lru(cap: usize) -> ExpertCache {
+        ExpertCache::new(cap, Policy::Lru)
+    }
+
+    #[test]
+    fn basic_hit_miss() {
+        let mut c = lru(2);
+        let a = c.access(&[1, 2], 0, None);
+        assert_eq!(a.hits, 0);
+        assert_eq!(a.missed, vec![1, 2]);
+        let a = c.access(&[1, 2], 1, None);
+        assert_eq!(a.hits, 2);
+        assert!(a.missed.is_empty());
+        assert_eq!(c.stats.hits, 2);
+        assert_eq!(c.stats.misses, 2);
+        assert!((c.stats.miss_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut c = lru(2);
+        c.access(&[1], 0, None);
+        c.access(&[2], 1, None);
+        c.access(&[3], 2, None); // evicts 1
+        assert!(!c.contains(1));
+        assert!(c.contains(2) && c.contains(3));
+    }
+
+    #[test]
+    fn paper_eviction_order_within_step() {
+        // Capacity 3, selection [10, 11] (10 has the higher weight). After
+        // inserting both plus one more, 10 (higher weight, older stamp)
+        // must be evicted before 11.
+        let mut c = lru(2);
+        c.access(&[10, 11], 0, None);
+        let a = c.access(&[12], 1, None);
+        assert_eq!(a.evicted, vec![10]);
+        assert!(c.contains(11) && c.contains(12));
+    }
+
+    #[test]
+    fn hits_refresh_recency() {
+        let mut c = lru(2);
+        c.access(&[1], 0, None);
+        c.access(&[2], 1, None);
+        c.access(&[1], 2, None); // refresh 1
+        c.access(&[3], 3, None); // evicts 2, not 1
+        assert!(c.contains(1) && c.contains(3) && !c.contains(2));
+    }
+
+    #[test]
+    fn capacity_smaller_than_selection_streams_tail() {
+        // cache size 1 with K=2 (paper Fig. 11 extreme): one expert is
+        // retained, the rest streamed.
+        let mut c = lru(1);
+        let a = c.access(&[5, 6], 0, None);
+        assert_eq!(a.missed, vec![5, 6]);
+        assert_eq!(c.len(), 1);
+        // Higher-weight (5) evicted first per the paper rule, so 6 remains.
+        assert!(c.contains(6));
+    }
+
+    #[test]
+    fn lfu_prefers_frequency() {
+        let mut c = ExpertCache::new(2, Policy::Lfu);
+        c.access(&[1], 0, None);
+        c.access(&[1], 1, None);
+        c.access(&[2], 2, None);
+        c.access(&[3], 3, None); // evicts 2 (freq 1) not 1 (freq 2)
+        assert!(c.contains(1) && c.contains(3) && !c.contains(2));
+    }
+
+    #[test]
+    fn belady_uses_oracle() {
+        let mut c = ExpertCache::new(2, Policy::Belady);
+        let next: HashMap<u32, u64> =
+            [(1u32, 10u64), (2, 3), (3, 5)].into_iter().collect();
+        let f = |e: u32| *next.get(&e).unwrap_or(&u64::MAX);
+        c.access(&[1], 0, Some(&f));
+        c.access(&[2], 1, Some(&f));
+        // Insert 3: Belady evicts 1 (next use 10 > 3).
+        c.access(&[3], 2, Some(&f));
+        assert!(!c.contains(1));
+        assert!(c.contains(2) && c.contains(3));
+    }
+
+    #[test]
+    fn lifetimes_recorded_on_eviction() {
+        let mut c = lru(1);
+        c.access(&[1], 0, None);
+        c.access(&[2], 7, None); // 1 evicted after 7 tokens
+        assert_eq!(c.stats.evictions, 1);
+        assert!((c.stats.lifetimes.mean() - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn warm_does_not_count_stats() {
+        let mut c = lru(4);
+        c.warm(&[1, 2, 3], 0);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.stats.hits + c.stats.misses, 0);
+        let a = c.access(&[1], 0, None);
+        assert_eq!(a.hits, 1);
+    }
+
+    #[test]
+    fn mask_matches_contents() {
+        let mut c = lru(4);
+        c.access(&[0, 3], 0, None);
+        let m = c.mask(5);
+        assert_eq!(m, vec![true, false, false, true, false]);
+    }
+
+    // ---------------- property tests (coordinator invariants) -------------
+
+    #[test]
+    fn prop_never_exceeds_capacity() {
+        prop_check("cache <= capacity", 200, |g| {
+            let n = g.range(4, 32);
+            let cap = g.range(1, n);
+            let k = g.range(1, (n / 2).max(2));
+            let mut c = ExpertCache::new(cap, if g.bool() { Policy::Lru } else { Policy::Lfu });
+            for t in 0..60u64 {
+                let sel = g.distinct(k.min(n), n);
+                c.access(&sel, t, None);
+                if c.len() > cap {
+                    return Err(format!("len {} > cap {}", c.len(), cap));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_hits_plus_misses_equals_accesses() {
+        prop_check("hits+misses == K*steps", 200, |g| {
+            let n = g.range(4, 64);
+            let cap = g.range(1, n);
+            let k = g.range(1, 8.min(n));
+            let mut c = ExpertCache::new(cap, Policy::Lru);
+            let steps = g.range(1, 100);
+            for t in 0..steps as u64 {
+                let sel = g.distinct(k, n);
+                c.access(&sel, t, None);
+            }
+            let expect = (k * steps) as u64;
+            if c.stats.hits + c.stats.misses == expect {
+                Ok(())
+            } else {
+                Err(format!(
+                    "{} + {} != {expect}",
+                    c.stats.hits, c.stats.misses
+                ))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_repeat_access_all_hits_when_fits() {
+        prop_check("second access hits if selection fits", 200, |g| {
+            let n = g.range(4, 32);
+            let k = g.range(1, n.min(8));
+            let cap = g.range(k, n + 1); // capacity >= k
+            let mut c = ExpertCache::new(cap, Policy::Lru);
+            let sel = g.distinct(k, n);
+            c.access(&sel, 0, None);
+            let a = c.access(&sel, 1, None);
+            if a.hits as usize == k {
+                Ok(())
+            } else {
+                Err(format!("hits {} != {k}", a.hits))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_belady_not_worse_than_lru() {
+        // On identical random traces Belady's hit count >= LRU's. This is
+        // the classic optimality sanity check (paper Fig. 10's bound).
+        prop_check("belady >= lru", 60, |g| {
+            let n = g.range(6, 24);
+            let k = g.range(1, 4);
+            let cap = g.range(k.max(2), n);
+            let steps = 80usize;
+            let trace: Vec<Vec<u32>> =
+                (0..steps).map(|_| g.distinct(k, n)).collect();
+            // Next-use oracle.
+            let next_use = |t: usize, e: u32| -> u64 {
+                trace[t + 1..]
+                    .iter()
+                    .position(|s| s.contains(&e))
+                    .map(|d| (t + 1 + d) as u64)
+                    .unwrap_or(u64::MAX)
+            };
+            let mut lru_c = ExpertCache::new(cap, Policy::Lru);
+            let mut bel_c = ExpertCache::new(cap, Policy::Belady);
+            for (t, sel) in trace.iter().enumerate() {
+                lru_c.access(sel, t as u64, None);
+                let f = |e: u32| next_use(t, e);
+                bel_c.access(sel, t as u64, Some(&f));
+            }
+            if bel_c.stats.hits >= lru_c.stats.hits {
+                Ok(())
+            } else {
+                Err(format!(
+                    "belady {} < lru {}",
+                    bel_c.stats.hits, lru_c.stats.hits
+                ))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_lifetime_count_matches_evictions_plus_flush() {
+        prop_check("lifetime accounting", 100, |g| {
+            let n = g.range(4, 20);
+            let cap = g.range(1, n);
+            let k = g.range(1, 4.min(n));
+            let mut c = ExpertCache::new(cap, Policy::Lru);
+            let steps = g.range(1, 60);
+            for t in 0..steps as u64 {
+                c.access(&g.distinct(k, n), t, None);
+            }
+            let resident = c.len() as u64;
+            c.flush_lifetimes(steps as u64);
+            if c.stats.lifetimes.count() == c.stats.evictions + resident {
+                Ok(())
+            } else {
+                Err(format!(
+                    "lifetimes {} != evictions {} + resident {resident}",
+                    c.stats.lifetimes.count(),
+                    c.stats.evictions
+                ))
+            }
+        });
+    }
+}

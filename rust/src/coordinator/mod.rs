@@ -1,0 +1,14 @@
+//! The serving coordinator (L3): request queue, sessions, prefill/decode
+//! scheduling and per-request metrics.
+//!
+//! The paper's deployment regime is strictly batch-size-1 decode (§1), so
+//! the coordinator's job is *scheduling*, not batching: it admits requests
+//! FCFS, runs prompt prefill at full speed with original routing or
+//! cache-aware routing per config, then interleaves decode across active
+//! sessions round-robin (fair token-level scheduling, the same policy
+//! llama-cpp's server uses for sequential sampling). Metrics per request:
+//! TTFT, decode tok/s, cache hit rate.
+
+pub mod server;
+
+pub use server::{Coordinator, Request, RequestResult, ServerConfig, ServerMetrics};

@@ -1,0 +1,251 @@
+//! Thread-based serving loop.
+//!
+//! One engine thread owns the `Engine` (PJRT executables are not Sync) and
+//! consumes a channel of requests; callers submit via [`Coordinator::submit`]
+//! and receive results over a per-request channel. This mirrors the
+//! single-device mobile deployment: one model, sequential token generation,
+//! concurrent callers queueing.
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::model::{Engine, Sampler};
+use crate::util::stats::{mean, percentile};
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub temperature: f32,
+    pub stop_token: Option<u32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct RequestResult {
+    pub id: u64,
+    pub generated: Vec<u32>,
+    /// Time to first generated token (s, wall clock).
+    pub ttft_s: f64,
+    /// Decode throughput (tokens / s, wall clock).
+    pub decode_tps: f64,
+    /// Virtual-device throughput for the decode phase (tokens / s).
+    pub device_tps: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Max queued requests before submit blocks the caller.
+    pub queue_depth: usize,
+    /// Apply the cache-aware strategy during prefill too (WikiText/MMLU
+    /// mode) or only during decode (GSM8K mode).
+    pub strategy_during_prefill: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { queue_depth: 64, strategy_during_prefill: true }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ServerMetrics {
+    pub completed: u64,
+    pub ttft_s: Vec<f64>,
+    pub decode_tps: Vec<f64>,
+}
+
+impl ServerMetrics {
+    pub fn summary(&self) -> String {
+        format!(
+            "completed={} ttft_mean={:.3}s ttft_p90={:.3}s tps_mean={:.2} tps_p10={:.2}",
+            self.completed,
+            mean(&self.ttft_s),
+            percentile(&self.ttft_s, 90.0),
+            mean(&self.decode_tps),
+            percentile(&self.decode_tps, 10.0),
+        )
+    }
+}
+
+enum Msg {
+    Run(Request, Sender<Result<RequestResult, String>>),
+    Shutdown,
+}
+
+pub struct Coordinator {
+    tx: Sender<Msg>,
+    handle: Option<JoinHandle<ServerMetrics>>,
+}
+
+impl Coordinator {
+    /// Spawn the engine thread. PJRT handles are not `Send`, so the engine
+    /// is *constructed inside* its owning thread from a `Send` factory
+    /// (artifact paths + options); requests and results cross the channel.
+    pub fn spawn<F>(factory: F, cfg: ServerConfig) -> Result<Self>
+    where
+        F: FnOnce() -> Result<Engine> + Send + 'static,
+    {
+        let (tx, rx): (Sender<Msg>, Receiver<Msg>) = mpsc::channel();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let handle = std::thread::spawn(move || {
+            let mut engine = match factory() {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                    return ServerMetrics::default();
+                }
+            };
+            let mut metrics = ServerMetrics::default();
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    Msg::Shutdown => break,
+                    Msg::Run(req, reply) => {
+                        let out = serve_one(&mut engine, &req, &cfg);
+                        if let Ok(r) = &out {
+                            metrics.completed += 1;
+                            metrics.ttft_s.push(r.ttft_s);
+                            metrics.decode_tps.push(r.decode_tps);
+                        }
+                        let _ = reply.send(out.map_err(|e| format!("{e:#}")));
+                    }
+                }
+            }
+            metrics
+        });
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(Coordinator { tx, handle: Some(handle) }),
+            Ok(Err(e)) => {
+                let _ = handle.join();
+                anyhow::bail!("engine construction failed: {e}")
+            }
+            Err(_) => anyhow::bail!("engine thread died during construction"),
+        }
+    }
+
+    /// Submit a request and wait for its completion (the engine processes
+    /// requests FCFS; concurrent callers queue on the channel).
+    pub fn submit(&self, req: Request) -> Result<RequestResult> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Run(req, reply_tx))
+            .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("coordinator dropped reply"))?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Stop the engine thread and collect server metrics.
+    pub fn shutdown(mut self) -> ServerMetrics {
+        let _ = self.tx.send(Msg::Shutdown);
+        self.handle
+            .take()
+            .map(|h| h.join().unwrap_or_default())
+            .unwrap_or_default()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_one(engine: &mut Engine, req: &Request, cfg: &ServerConfig) -> Result<RequestResult> {
+    let hits0 = engine.cache_totals().0;
+    let misses0 = engine.cache_totals().1;
+    let vtime0 = engine.flash.time_s;
+    let vtok0 = engine.flash.tokens;
+
+    engine.reset_sequence();
+    engine.strategy_active = cfg.strategy_during_prefill;
+    let t0 = Instant::now();
+    let mut logits = vec![];
+    let prompt = clamp_prompt(&req.prompt, engine.cfg.max_seq, req.max_new);
+    for &t in &prompt {
+        logits = engine.step(t)?;
+    }
+    engine.strategy_active = true;
+    let mut sampler = Sampler::new(req.temperature, 40, req.id ^ 0x5eed);
+    let mut generated = Vec::new();
+    let mut ttft = 0.0;
+    let t_decode = Instant::now();
+    for i in 0..req.max_new {
+        if engine.pos() >= engine.cfg.max_seq {
+            break;
+        }
+        let next = sampler.sample(&logits);
+        if i == 0 {
+            ttft = t0.elapsed().as_secs_f64();
+        }
+        if Some(next) == req.stop_token {
+            break;
+        }
+        generated.push(next);
+        logits = engine.step(next)?;
+    }
+    let decode_s = t_decode.elapsed().as_secs_f64();
+    let (hits1, misses1, _) = engine.cache_totals();
+    let dev_tokens = (engine.flash.tokens - vtok0) as f64;
+    let dev_time = engine.flash.time_s - vtime0;
+    Ok(RequestResult {
+        id: req.id,
+        decode_tps: if decode_s > 0.0 {
+            generated.len() as f64 / decode_s
+        } else {
+            0.0
+        },
+        device_tps: if dev_time > 0.0 { dev_tokens / dev_time } else { 0.0 },
+        ttft_s: ttft,
+        generated,
+        cache_hits: hits1 - hits0,
+        cache_misses: misses1 - misses0,
+    })
+}
+
+/// Keep the prompt tail if prompt+generation would overflow max_seq.
+fn clamp_prompt(prompt: &[u32], max_seq: usize, max_new: usize) -> Vec<u32> {
+    let budget = max_seq.saturating_sub(max_new).max(1);
+    if prompt.len() <= budget {
+        prompt.to_vec()
+    } else {
+        prompt[prompt.len() - budget..].to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clamp_keeps_tail() {
+        let p: Vec<u32> = (0..100).collect();
+        let c = clamp_prompt(&p, 64, 16);
+        assert_eq!(c.len(), 48);
+        assert_eq!(*c.last().unwrap(), 99);
+        assert_eq!(clamp_prompt(&p, 512, 16), p);
+    }
+
+    #[test]
+    fn metrics_summary_format() {
+        let m = ServerMetrics {
+            completed: 2,
+            ttft_s: vec![0.1, 0.2],
+            decode_tps: vec![10.0, 20.0],
+        };
+        let s = m.summary();
+        assert!(s.contains("completed=2"));
+    }
+}

@@ -1,0 +1,136 @@
+//! Readers for the Rust-side evaluation sets written by
+//! `python/compile/data.py` into `artifacts/data/`.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+#[derive(Debug, Clone)]
+pub struct QaItem {
+    pub prompt: Vec<u32>,
+    pub options: Vec<u32>,
+    pub answer: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct MathItem {
+    pub prompt: Vec<u32>,
+    pub answer_tokens: Vec<u32>,
+    pub answer: i64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct EvalData {
+    /// Held-out LM token stream (u16 file), chunked by the harness.
+    pub ppl_test: Vec<u32>,
+    pub ppl_val: Vec<u32>,
+    pub qa: Vec<QaItem>,
+    pub math: Vec<MathItem>,
+    pub prompts_short: Vec<Vec<u32>>,
+    pub prompts_long: Vec<Vec<u32>>,
+}
+
+fn read_tokens_u16(path: &Path) -> Result<Vec<u32>> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+    anyhow::ensure!(bytes.len() % 2 == 0, "odd token file length");
+    Ok(bytes
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes([c[0], c[1]]) as u32)
+        .collect())
+}
+
+fn tok_array(j: &Json) -> Vec<u32> {
+    j.as_array()
+        .unwrap_or(&[])
+        .iter()
+        .map(|v| v.as_usize().unwrap_or(0) as u32)
+        .collect()
+}
+
+impl EvalData {
+    pub fn load(data_dir: &Path) -> Result<Self> {
+        let ppl_test = read_tokens_u16(&data_dir.join("ppl_test.bin"))?;
+        let ppl_val = read_tokens_u16(&data_dir.join("ppl_val.bin"))?;
+
+        let qa_text = std::fs::read_to_string(data_dir.join("qa_test.json"))?;
+        let qa_json =
+            json::parse(&qa_text).map_err(|e| anyhow::anyhow!("qa_test.json: {e}"))?;
+        let mut qa = Vec::new();
+        for item in qa_json.as_array().context("qa array")? {
+            qa.push(QaItem {
+                prompt: tok_array(item.req("prompt")?),
+                options: tok_array(item.req("options")?),
+                answer: item.req("answer")?.as_usize().context("answer")?,
+            });
+        }
+
+        let math_text = std::fs::read_to_string(data_dir.join("math_test.json"))?;
+        let math_json =
+            json::parse(&math_text).map_err(|e| anyhow::anyhow!("math_test.json: {e}"))?;
+        let mut math = Vec::new();
+        for item in math_json.as_array().context("math array")? {
+            math.push(MathItem {
+                prompt: tok_array(item.req("prompt")?),
+                answer_tokens: tok_array(item.req("answer_tokens")?),
+                answer: item.req("answer")?.as_i64().context("answer")?,
+            });
+        }
+
+        let pr_text = std::fs::read_to_string(data_dir.join("prompts.json"))?;
+        let pr_json =
+            json::parse(&pr_text).map_err(|e| anyhow::anyhow!("prompts.json: {e}"))?;
+        let read_prompts = |key: &str| -> Vec<Vec<u32>> {
+            pr_json
+                .get(key)
+                .and_then(|v| v.as_array())
+                .unwrap_or(&[])
+                .iter()
+                .map(tok_array)
+                .collect()
+        };
+        Ok(EvalData {
+            ppl_test,
+            ppl_val,
+            qa,
+            math,
+            prompts_short: read_prompts("short"),
+            prompts_long: read_prompts("long"),
+        })
+    }
+
+    /// Chunk a token stream into scoring sequences of length `chunk`.
+    pub fn chunks(tokens: &[u32], chunk: usize, max_chunks: usize) -> Vec<&[u32]> {
+        tokens
+            .chunks_exact(chunk)
+            .take(max_chunks)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunking() {
+        let toks: Vec<u32> = (0..100).collect();
+        let ch = EvalData::chunks(&toks, 30, 10);
+        assert_eq!(ch.len(), 3);
+        assert_eq!(ch[0].len(), 30);
+        let limited = EvalData::chunks(&toks, 30, 2);
+        assert_eq!(limited.len(), 2);
+    }
+
+    #[test]
+    fn u16_reader(){
+        let dir = std::env::temp_dir();
+        let p = dir.join("moe_test_tokens.bin");
+        std::fs::write(&p, [1u8, 0, 255, 1]).unwrap();
+        let t = read_tokens_u16(&p).unwrap();
+        assert_eq!(t, vec![1, 511]);
+        std::fs::remove_file(&p).ok();
+    }
+}

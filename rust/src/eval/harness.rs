@@ -1,0 +1,143 @@
+//! Task harnesses. All three return an [`EvalResult`] with the paper's
+//! reporting quantities: quality metric, cache miss rate (normalized by
+//! K·layers·tokens, §4.2), flash traffic and virtual-time throughput.
+
+use anyhow::Result;
+
+use crate::model::sampler::{log_prob, Sampler};
+use crate::model::Engine;
+
+use super::datasets::{MathItem, QaItem};
+
+#[derive(Debug, Clone, Default)]
+pub struct EvalResult {
+    /// Perplexity (LM) or accuracy (QA / math), depending on the harness.
+    pub metric: f64,
+    pub miss_rate: f64,
+    pub hits: u64,
+    pub misses: u64,
+    pub flash_bytes: u64,
+    pub tokens: u64,
+    pub virtual_time_s: f64,
+    pub throughput_tps: f64,
+    /// Mean / std of cache lifetimes (tokens), pooled over layers.
+    pub lifetime_mean: f64,
+    pub lifetime_std: f64,
+}
+
+/// The paper normalizes miss rate by K even when a strategy (pruning)
+/// selects fewer experts (§4.2) — compute misses / (K · layers · tokens).
+fn finish(engine: &mut Engine, metric: f64, tokens: u64) -> EvalResult {
+    let (hits, misses, _) = engine.cache_totals();
+    let expected = engine.cfg.top_k as u64 * engine.cfg.n_layers as u64 * tokens;
+    let miss_rate = if expected == 0 {
+        0.0
+    } else {
+        misses as f64 / expected as f64
+    };
+    let now = engine.tokens_processed();
+    for c in &mut engine.caches {
+        c.flush_lifetimes(now);
+    }
+    let mut means = Vec::new();
+    let mut stds = Vec::new();
+    for c in &engine.caches {
+        means.push(c.stats.lifetimes.mean());
+        stds.push(c.stats.lifetimes.std());
+    }
+    EvalResult {
+        metric,
+        miss_rate,
+        hits,
+        misses,
+        flash_bytes: engine.flash.flash_bytes,
+        tokens,
+        virtual_time_s: engine.flash.time_s,
+        throughput_tps: engine.flash.throughput(),
+        lifetime_mean: crate::util::stats::mean(&means),
+        lifetime_std: crate::util::stats::mean(&stds),
+    }
+}
+
+/// Perplexity over `chunks` of a held-out stream (teacher forced; the
+/// routing strategy applies to the whole sequence, like WikiText in §4.2).
+pub fn eval_ppl(engine: &mut Engine, chunks: &[&[u32]]) -> Result<EvalResult> {
+    engine.reset_all();
+    let mut nll = 0.0;
+    let mut count = 0usize;
+    for chunk in chunks {
+        let (s, n) = engine.score_sequence(chunk)?;
+        nll += s;
+        count += n;
+    }
+    let ppl = (nll / count.max(1) as f64).exp();
+    let tokens = engine.tokens_processed();
+    Ok(finish(engine, ppl, tokens))
+}
+
+/// SynthQA accuracy: score each option token's logprob after the prompt
+/// (strategy applies to the whole sequence, like MMLU in §4.2).
+pub fn eval_qa(engine: &mut Engine, items: &[QaItem]) -> Result<EvalResult> {
+    engine.reset_all();
+    let mut correct = 0usize;
+    for item in items {
+        engine.reset_sequence();
+        let mut logits = vec![];
+        for &t in &item.prompt {
+            logits = engine.step(t)?;
+        }
+        let mut best = 0usize;
+        let mut best_lp = f64::NEG_INFINITY;
+        for (i, &opt) in item.options.iter().enumerate() {
+            let lp = log_prob(&logits, opt);
+            if lp > best_lp {
+                best_lp = lp;
+                best = i;
+            }
+        }
+        if best == item.answer {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / items.len().max(1) as f64;
+    let tokens = engine.tokens_processed();
+    Ok(finish(engine, acc, tokens))
+}
+
+/// SynthMath exact-match accuracy (greedy generation; the routing strategy
+/// is applied ONLY during generation, per the paper's GSM8K protocol).
+pub fn eval_math(engine: &mut Engine, items: &[MathItem], max_new: usize) -> Result<EvalResult> {
+    engine.reset_all();
+    let sep = 3u32; // data.py SEP token terminates an answer
+    let mut correct = 0usize;
+    for item in items {
+        engine.strategy_active = false; // prompt: original routing
+        engine.reset_sequence();
+        let mut logits = vec![];
+        for &t in &item.prompt {
+            logits = engine.step(t)?;
+        }
+        engine.strategy_active = true; // generation: cache-aware routing
+        let mut sampler = Sampler::greedy();
+        let mut generated = Vec::new();
+        for _ in 0..max_new {
+            if engine.pos() >= engine.cfg.max_seq {
+                break;
+            }
+            let next = sampler.sample(&logits);
+            generated.push(next);
+            if next == sep {
+                break;
+            }
+            logits = engine.step(next)?;
+        }
+        let want: Vec<u32> = item.answer_tokens.clone();
+        if generated == want {
+            correct += 1;
+        }
+    }
+    engine.strategy_active = true;
+    let acc = correct as f64 / items.len().max(1) as f64;
+    let tokens = engine.tokens_processed();
+    Ok(finish(engine, acc, tokens))
+}

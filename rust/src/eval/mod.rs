@@ -1,0 +1,11 @@
+//! Evaluation harnesses: perplexity (WikiText analog), SynthQA (MMLU
+//! analog), SynthMath (GSM8K analog), plus the hyperparameter sweep driver
+//! that produces the paper's Pareto fronts.
+
+pub mod datasets;
+pub mod harness;
+pub mod sweep;
+
+pub use datasets::{EvalData, MathItem, QaItem};
+pub use harness::{eval_math, eval_ppl, eval_qa, EvalResult};
+pub use sweep::{sweep_points, SweepPoint};

@@ -1,0 +1,235 @@
+//! Hyperparameter sweep driver: produce the paper's trade-off curves
+//! (Figs. 4/5/6/15). One [`SweepPoint`] per (strategy, hyperparameter).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::cache::Policy;
+use crate::config::{DeviceProfile, Quant};
+use crate::model::{Engine, EngineOptions};
+use crate::routing::Strategy;
+
+use super::harness::{eval_math, eval_ppl, eval_qa, EvalResult};
+use super::EvalData;
+
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub model: String,
+    pub strategy: String,
+    pub param: f64,
+    pub result: EvalResult,
+}
+
+/// The paper's hyperparameter grids (§4.2), thinned for single-core run
+/// time: Pruning/Max-Rank sweep integers, Cumsum/Cache-Prior sweep [0, 1].
+pub fn strategy_grid(top_k: usize, n_experts: usize, j: usize, dense: bool) -> Vec<Strategy> {
+    let mut out = vec![Strategy::Original];
+    for keep in 1..=top_k.saturating_sub(1).max(1) {
+        out.push(Strategy::Pruning { keep });
+    }
+    // Max-rank window sizes between K and N.
+    let m_grid: Vec<usize> = if dense {
+        (top_k..=n_experts).collect()
+    } else {
+        let mut g = vec![top_k, top_k + 1, top_k + 2];
+        for frac in [0.2, 0.35, 0.5, 0.75, 1.0] {
+            g.push(((n_experts as f64 * frac) as usize).max(top_k));
+        }
+        g.sort_unstable();
+        g.dedup();
+        g
+    };
+    for m in m_grid {
+        out.push(Strategy::MaxRank { m, j });
+    }
+    let p_grid: &[f32] = if dense {
+        &[0.05, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 0.95, 0.99]
+    } else {
+        &[0.3, 0.5, 0.7, 0.8, 0.9, 0.97]
+    };
+    for &p in p_grid {
+        out.push(Strategy::CumsumThreshold { p, j });
+    }
+    let l_grid: &[f32] = if dense {
+        &[0.05, 0.1, 0.15, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0]
+    } else {
+        &[0.1, 0.2, 0.35, 0.5, 0.7, 0.9]
+    };
+    for &lambda in l_grid {
+        out.push(Strategy::CachePrior {
+            lambda,
+            j,
+            delta: crate::routing::DeltaMode::RunningAvg,
+        });
+    }
+    out
+}
+
+/// The numeric hyperparameter of a strategy (x-axis bookkeeping).
+pub fn strategy_param(s: &Strategy) -> f64 {
+    match s {
+        Strategy::Original => 0.0,
+        Strategy::Pruning { keep } => *keep as f64,
+        Strategy::SwapAtRank { rank } => *rank as f64,
+        Strategy::MaxRank { m, .. } => *m as f64,
+        Strategy::CumsumThreshold { p, .. } => *p as f64,
+        Strategy::CachePrior { lambda, .. } => *lambda as f64,
+    }
+}
+
+/// Base family name ("pruning", "max-rank", ...) for grouping curves.
+pub fn strategy_family(s: &Strategy) -> &'static str {
+    match s {
+        Strategy::Original => "original",
+        Strategy::Pruning { .. } => "pruning",
+        Strategy::SwapAtRank { .. } => "swap",
+        Strategy::MaxRank { .. } => "max-rank",
+        Strategy::CumsumThreshold { .. } => "cumsum",
+        Strategy::CachePrior { .. } => "cache-prior",
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    Ppl,
+    Qa,
+    Math,
+}
+
+/// Run one evaluation point. A fresh engine is built per point so every
+/// point is an independent deterministic measurement (paper §4.1).
+#[allow(clippy::too_many_arguments)]
+pub fn run_point(
+    artifacts: &Path,
+    model: &str,
+    strategy: Strategy,
+    cache_capacity: usize,
+    quant: Quant,
+    task: Task,
+    data: &EvalData,
+    budget: &EvalBudget,
+) -> Result<SweepPoint> {
+    let opts = EngineOptions {
+        quant,
+        cache_capacity,
+        policy: Policy::Lru,
+        strategy: strategy.clone(),
+        device: DeviceProfile::device_16gb(),
+        seed: 7,
+        record_trace: false,
+        record_logits: false,
+    };
+    let mut engine = Engine::load(artifacts, model, opts)?;
+    let result = match task {
+        Task::Ppl => {
+            let chunks =
+                EvalData::chunks(&data.ppl_test, budget.chunk_len, budget.max_chunks);
+            eval_ppl(&mut engine, &chunks)?
+        }
+        Task::Qa => eval_qa(&mut engine, &data.qa[..budget.max_items.min(data.qa.len())])?,
+        Task::Math => eval_math(
+            &mut engine,
+            &data.math[..budget.max_items.min(data.math.len())],
+            budget.gen_tokens,
+        )?,
+    };
+    Ok(SweepPoint {
+        model: model.to_string(),
+        strategy: strategy.label(),
+        param: strategy_param(&strategy),
+        result,
+    })
+}
+
+/// Evaluation budget knobs (single-core run time control).
+#[derive(Debug, Clone)]
+pub struct EvalBudget {
+    pub chunk_len: usize,
+    pub max_chunks: usize,
+    pub max_items: usize,
+    pub gen_tokens: usize,
+}
+
+impl EvalBudget {
+    /// Default budget used by the benches (see EXPERIMENTS.md for the
+    /// resulting run times).
+    pub fn default_bench() -> Self {
+        EvalBudget { chunk_len: 192, max_chunks: 6, max_items: 48, gen_tokens: 8 }
+    }
+
+    /// Smoke-test budget.
+    pub fn smoke() -> Self {
+        EvalBudget { chunk_len: 48, max_chunks: 1, max_items: 4, gen_tokens: 4 }
+    }
+
+    /// Budget from `MOE_BENCH` env: "smoke" | "default" | "full".
+    pub fn from_env() -> Self {
+        match std::env::var("MOE_BENCH").as_deref() {
+            Ok("smoke") => Self::smoke(),
+            Ok("full") => {
+                EvalBudget { chunk_len: 256, max_chunks: 12, max_items: 120, gen_tokens: 8 }
+            }
+            _ => Self::default_bench(),
+        }
+    }
+}
+
+/// Sweep every strategy point for one model+task.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_points(
+    artifacts: &Path,
+    model: &str,
+    cache_capacity: usize,
+    quant: Quant,
+    task: Task,
+    data: &EvalData,
+    budget: &EvalBudget,
+    j: usize,
+    n_experts: usize,
+    top_k: usize,
+) -> Result<Vec<SweepPoint>> {
+    let mut out = Vec::new();
+    for strategy in strategy_grid(top_k, n_experts, j, false) {
+        out.push(run_point(
+            artifacts,
+            model,
+            strategy,
+            cache_capacity,
+            quant,
+            task,
+            data,
+            budget,
+        )?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_contains_all_families() {
+        let g = strategy_grid(4, 60, 2, false);
+        let fams: std::collections::HashSet<&str> =
+            g.iter().map(strategy_family).collect();
+        for f in ["original", "pruning", "max-rank", "cumsum", "cache-prior"] {
+            assert!(fams.contains(f), "missing {f}");
+        }
+    }
+
+    #[test]
+    fn dense_grid_is_larger() {
+        assert!(strategy_grid(2, 8, 1, true).len() > strategy_grid(2, 8, 1, false).len());
+    }
+
+    #[test]
+    fn params_extracted() {
+        assert_eq!(strategy_param(&Strategy::Pruning { keep: 2 }), 2.0);
+        assert_eq!(
+            strategy_param(&Strategy::CumsumThreshold { p: 0.5, j: 1 }),
+            0.5
+        );
+    }
+}

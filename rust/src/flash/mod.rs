@@ -1,0 +1,150 @@
+//! Flash/DRAM device simulator (virtual clock).
+//!
+//! Substitution for the paper's Snapdragon phones (DESIGN.md §1): we charge
+//! virtual time for every byte moved, using a [`crate::config::DeviceProfile`].
+//! Token generation in the paper's regime is flash-read bound, so modelling
+//! time as
+//!
+//!   t_token = compute + Σ_miss (flash_latency + bytes/flash_bw)
+//!             + Σ_hit  (bytes/dram_bw)
+//!             + pressure_penalty(resident_bytes − budget)
+//!
+//! preserves the paper's *relative* throughput behaviour: the near-linear
+//! hit-rate↔throughput relation (Fig. 8), the LRU-vs-Cache-Prior speedup
+//! (Fig. 1 right), and the memory-pressure collapse when the cache is
+//! oversized (Fig. 14).
+
+use crate::config::DeviceProfile;
+
+#[derive(Debug, Clone)]
+pub struct FlashSim {
+    pub profile: DeviceProfile,
+    /// Virtual time elapsed (seconds).
+    pub time_s: f64,
+    /// Totals for reporting.
+    pub flash_bytes: u64,
+    pub flash_reads: u64,
+    pub dram_bytes: u64,
+    pub tokens: u64,
+    pub pressure_s: f64,
+}
+
+impl FlashSim {
+    pub fn new(profile: DeviceProfile) -> Self {
+        FlashSim {
+            profile,
+            time_s: 0.0,
+            flash_bytes: 0,
+            flash_reads: 0,
+            dram_bytes: 0,
+            tokens: 0,
+            pressure_s: 0.0,
+        }
+    }
+
+    /// Charge one flash read of `bytes` (a cache miss fetching an expert).
+    pub fn read_flash(&mut self, bytes: u64) {
+        self.flash_reads += 1;
+        self.flash_bytes += bytes;
+        self.time_s +=
+            self.profile.flash_latency_s + bytes as f64 / self.profile.flash_bw_bytes_per_s;
+    }
+
+    /// Charge a DRAM stream of `bytes` (cache hit: weights flow DRAM->CPU).
+    pub fn read_dram(&mut self, bytes: u64) {
+        self.dram_bytes += bytes;
+        self.time_s += bytes as f64 / self.profile.dram_bw_bytes_per_s;
+    }
+
+    /// Charge the fixed per-token compute plus the OS memory-pressure
+    /// penalty for a resident set of `resident_bytes` (Fig. 14: exceeding
+    /// the budget forces the OS to re-read evicted KV/activations from
+    /// flash every token).
+    pub fn end_token(&mut self, resident_bytes: u64) {
+        self.tokens += 1;
+        self.time_s += self.profile.compute_per_token_s;
+        let over = resident_bytes.saturating_sub(self.profile.mem_budget_bytes as u64);
+        if over > 0 {
+            let pen = over as f64 * self.profile.pressure_s_per_byte;
+            self.pressure_s += pen;
+            self.time_s += pen;
+        }
+    }
+
+    /// Tokens per second of virtual time so far.
+    pub fn throughput(&self) -> f64 {
+        if self.time_s == 0.0 {
+            0.0
+        } else {
+            self.tokens as f64 / self.time_s
+        }
+    }
+
+    pub fn reset(&mut self) {
+        let profile = self.profile.clone();
+        *self = FlashSim::new(profile);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceProfile;
+
+    fn sim() -> FlashSim {
+        FlashSim::new(DeviceProfile::device_12gb())
+    }
+
+    #[test]
+    fn flash_read_charges_latency_plus_bandwidth() {
+        let mut s = sim();
+        let bw = s.profile.flash_bw_bytes_per_s;
+        let lat = s.profile.flash_latency_s;
+        s.read_flash(1000);
+        assert!((s.time_s - (lat + 1000.0 / bw)).abs() < 1e-12);
+        assert_eq!(s.flash_bytes, 1000);
+        assert_eq!(s.flash_reads, 1);
+    }
+
+    #[test]
+    fn dram_is_much_faster_than_flash() {
+        let mut a = sim();
+        let mut b = sim();
+        a.read_flash(100_000);
+        b.read_dram(100_000);
+        assert!(a.time_s > 10.0 * b.time_s);
+    }
+
+    #[test]
+    fn pressure_only_above_budget() {
+        let mut s = sim();
+        let budget = s.profile.mem_budget_bytes as u64;
+        s.end_token(budget);
+        assert_eq!(s.pressure_s, 0.0);
+        let t0 = s.time_s;
+        s.end_token(budget + 10_000_000);
+        assert!(s.pressure_s > 0.0);
+        assert!(s.time_s > t0 + s.profile.compute_per_token_s);
+    }
+
+    #[test]
+    fn throughput_counts_tokens() {
+        let mut s = sim();
+        for _ in 0..10 {
+            s.end_token(0);
+        }
+        let expect = 10.0 / (10.0 * s.profile.compute_per_token_s);
+        assert!((s.throughput() - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reset_clears_counters() {
+        let mut s = sim();
+        s.read_flash(10);
+        s.end_token(0);
+        s.reset();
+        assert_eq!(s.time_s, 0.0);
+        assert_eq!(s.tokens, 0);
+        assert_eq!(s.flash_bytes, 0);
+    }
+}

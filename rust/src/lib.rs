@@ -1,0 +1,61 @@
+//! # moe-cache
+//!
+//! Reproduction of *"Mixture of Cache-Conditional Experts for Efficient
+//! Mobile Device Inference"* as a three-layer Rust + JAX + Pallas stack.
+//!
+//! This crate is **Layer 3**: the serving coordinator that owns the
+//! request loop, the per-layer expert DRAM cache backed by a (simulated)
+//! flash device, and the paper's cache-aware routing strategies. The model
+//! compute (Layers 1/2) lives in AOT-compiled HLO artifacts produced by
+//! `python/compile` and executed through the PJRT CPU client — Python is
+//! never on the request path.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`util`] — offline-image substrates: JSON, RNG, stats, property tests
+//! * [`config`] — model topologies + device profiles
+//! * [`quant`] — int4/int8 symmetric per-channel dequantization
+//! * [`weights`] — the flash-image binary format reader
+//! * [`flash`] — virtual-clock flash/DRAM device simulator
+//! * [`cache`] — per-layer expert caches (LRU / LFU / Belady oracle)
+//! * [`routing`] — the paper's contribution: Max-Rank, Cumsum-Threshold,
+//!   and Cache-Prior re-ranking (§3), plus sensitivity probes (§2.3)
+//! * [`runtime`] — PJRT executable registry (HLO-text artifacts)
+//! * [`model`] — the token-generation engine composing the AOT components
+//! * [`tracesim`] — trace-driven cache simulation (Belady bound, Fig. 10/11)
+//! * [`eval`] — perplexity / SynthQA / SynthMath harnesses + sweeps
+//! * [`coordinator`] — the serving loop (sessions, scheduling, metrics)
+//! * [`report`] — CSV/markdown emitters shared by the benches
+
+pub mod cache;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod flash;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod routing;
+pub mod runtime;
+pub mod tracesim;
+pub mod util;
+pub mod weights;
+
+/// Repo-relative artifacts directory (overridable with `MOE_ARTIFACTS`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("MOE_ARTIFACTS") {
+        return p.into();
+    }
+    // Walk up from the current dir until we find `artifacts/`.
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

@@ -1,0 +1,361 @@
+//! moe-cache CLI: the L3 coordinator entrypoint.
+//!
+//! Subcommands:
+//!   info                         — list models + artifact status
+//!   serve                        — run the serving loop on stdin prompts
+//!   eval-ppl | eval-qa | eval-math — task harnesses
+//!   sweep                        — strategy x hyperparameter Pareto sweep
+//!   device-sim                   — on-device throughput simulation (Fig. 1)
+//!   trace                        — record a router trace + policy replay
+//!   footprint                    — Table 1 memory footprints
+
+use anyhow::{Context, Result};
+use moe_cache::cache::Policy;
+use moe_cache::cli::Args;
+use moe_cache::config::{DeviceProfile, Quant, CONFIG_NAMES};
+use moe_cache::coordinator::{Coordinator, Request, ServerConfig};
+use moe_cache::eval::sweep::{run_point, EvalBudget, Task};
+use moe_cache::eval::{eval_math, eval_ppl, eval_qa, EvalData};
+use moe_cache::model::{Engine, EngineOptions};
+use moe_cache::report::Table;
+use moe_cache::routing::Strategy;
+use moe_cache::tracesim;
+use moe_cache::weights::FlashImage;
+use moe_cache::{artifacts_dir, eval::datasets};
+
+const USAGE: &str = "\
+moe-cache — cache-conditional expert routing for on-device MoE inference
+
+USAGE: moe-cache <command> [--flags]
+
+COMMANDS:
+  info                              artifact + model inventory
+  serve      --model M [--cache C --strategy S --prompts N --max-new T]
+  eval-ppl   --model M [--cache C --strategy S --chunks N --chunk-len L]
+  eval-qa    --model M [--cache C --strategy S --items N]
+  eval-math  --model M [--cache C --strategy S --items N]
+  sweep      --model M --task ppl|qa|math [--cache C]
+  device-sim --model M [--device device-12gb|device-16gb --quant int4|int8]
+  trace      --model M [--cache C --tokens N]  (replays LRU/LFU/Belady)
+  footprint                          Table-1 style memory accounting
+
+STRATEGIES: original | pruning:H | max-rank:M:J | cumsum:P:J |
+            cache-prior:LAMBDA:J | swap:RANK
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn engine_from_args(args: &Args) -> Result<Engine> {
+    let model = args.get("model").context("--model required")?;
+    let arts = artifacts_dir();
+    let quant = Quant::parse(args.get_or("quant", "int4"))?;
+    // Default cache: half the experts (the paper's default setting).
+    let manifest = moe_cache::runtime::Runtime::load(&arts.join(model))?;
+    let n = manifest.config.n_experts;
+    let j = manifest.config.default_top_j();
+    let cache = args.usize_or("cache", n / 2)?;
+    let strategy = Strategy::parse(args.get_or(
+        "strategy",
+        &format!("cache-prior:0.5:{j}"),
+    ))?;
+    let opts = EngineOptions {
+        quant,
+        cache_capacity: cache,
+        policy: Policy::parse(args.get_or("policy", "lru"))?,
+        strategy,
+        device: DeviceProfile::by_name(args.get_or("device", "device-16gb"))?,
+        seed: args.usize_or("seed", 7)? as u64,
+        record_trace: args.bool("record-trace"),
+        record_logits: false,
+    };
+    Engine::from_runtime(manifest, &arts, model, opts)
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => info(),
+        "serve" => serve(&args),
+        "eval-ppl" => eval_ppl_cmd(&args),
+        "eval-qa" => eval_qa_cmd(&args),
+        "eval-math" => eval_math_cmd(&args),
+        "sweep" => sweep_cmd(&args),
+        "device-sim" => device_sim(&args),
+        "trace" => trace_cmd(&args),
+        "footprint" => footprint(),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn info() -> Result<()> {
+    let arts = artifacts_dir();
+    let mut t = Table::new(
+        "models",
+        &["model", "paper analog", "experts", "top-k", "shared", "d_ff", "artifacts"],
+    );
+    for name in CONFIG_NAMES {
+        let dir = arts.join(name);
+        let ok = dir.join("manifest.json").exists() && dir.join("weights_int4.bin").exists();
+        if !ok {
+            t.row(vec![name.into(), "-".into(), "-".into(), "-".into(), "-".into(), "-".into(), "MISSING (run `make artifacts`)".into()]);
+            continue;
+        }
+        let rt = moe_cache::runtime::Runtime::load(&dir)?;
+        let c = rt.config;
+        t.row(vec![
+            name.into(),
+            c.paper_model.clone(),
+            c.n_experts.to_string(),
+            c.top_k.to_string(),
+            c.n_shared.to_string(),
+            c.d_ff.to_string(),
+            "ok".into(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let data = EvalData::load(&artifacts_dir().join("data"))?;
+    let n_req = args.usize_or("prompts", 4)?;
+    let max_new = args.usize_or("max-new", 48)?;
+    let args2 = args.clone();
+    let coord = Coordinator::spawn(
+        move || engine_from_args(&args2),
+        ServerConfig::default(),
+    )?;
+    let max_seq = 512;
+    println!("serving {n_req} requests (max_seq={max_seq})");
+    for (i, prompt) in data
+        .prompts_short
+        .iter()
+        .chain(data.prompts_long.iter())
+        .take(n_req)
+        .enumerate()
+    {
+        let res = coord.submit(Request {
+            id: i as u64,
+            prompt: prompt.clone(),
+            max_new,
+            temperature: args.f64_or("temperature", 0.8)? as f32,
+            stop_token: Some(2), // EOS
+        })?;
+        println!(
+            "req {}: prompt={} gen={} ttft={:.3}s wall_tps={:.1} device_tps={:.2} hit_rate={:.3}",
+            res.id,
+            prompt.len(),
+            res.generated.len(),
+            res.ttft_s,
+            res.decode_tps,
+            res.device_tps,
+            res.cache_hits as f64 / (res.cache_hits + res.cache_misses).max(1) as f64,
+        );
+    }
+    let m = coord.shutdown();
+    println!("{}", m.summary());
+    Ok(())
+}
+
+fn eval_ppl_cmd(args: &Args) -> Result<()> {
+    let mut engine = engine_from_args(args)?;
+    let data = EvalData::load(&artifacts_dir().join("data"))?;
+    let chunk_len = args.usize_or("chunk-len", 192)?;
+    let max_chunks = args.usize_or("chunks", 6)?;
+    let chunks = EvalData::chunks(&data.ppl_test, chunk_len, max_chunks);
+    let r = eval_ppl(&mut engine, &chunks)?;
+    println!(
+        "model={} strategy={} ppl={:.4} miss_rate={:.4} flash_mb={:.2} device_tps={:.2}",
+        engine.cfg.name,
+        engine.opts.strategy.label(),
+        r.metric,
+        r.miss_rate,
+        r.flash_bytes as f64 / 1e6,
+        r.throughput_tps,
+    );
+    Ok(())
+}
+
+fn eval_qa_cmd(args: &Args) -> Result<()> {
+    let mut engine = engine_from_args(args)?;
+    let data = EvalData::load(&artifacts_dir().join("data"))?;
+    let n = args.usize_or("items", 48)?.min(data.qa.len());
+    let r = eval_qa(&mut engine, &data.qa[..n])?;
+    println!(
+        "model={} strategy={} accuracy={:.4} miss_rate={:.4}",
+        engine.cfg.name,
+        engine.opts.strategy.label(),
+        r.metric,
+        r.miss_rate
+    );
+    Ok(())
+}
+
+fn eval_math_cmd(args: &Args) -> Result<()> {
+    let mut engine = engine_from_args(args)?;
+    let data = EvalData::load(&artifacts_dir().join("data"))?;
+    let n = args.usize_or("items", 48)?.min(data.math.len());
+    let r = eval_math(&mut engine, &data.math[..n], args.usize_or("gen-tokens", 8)?)?;
+    println!(
+        "model={} strategy={} accuracy={:.4} miss_rate={:.4}",
+        engine.cfg.name,
+        engine.opts.strategy.label(),
+        r.metric,
+        r.miss_rate
+    );
+    Ok(())
+}
+
+fn sweep_cmd(args: &Args) -> Result<()> {
+    let model = args.get("model").context("--model required")?;
+    let arts = artifacts_dir();
+    let rt = moe_cache::runtime::Runtime::load(&arts.join(model))?;
+    let cfg = rt.config.clone();
+    drop(rt);
+    let task = match args.get_or("task", "ppl") {
+        "qa" => Task::Qa,
+        "math" => Task::Math,
+        _ => Task::Ppl,
+    };
+    let cache = args.usize_or("cache", cfg.n_experts / 2)?;
+    let data = EvalData::load(&arts.join("data"))?;
+    let budget = EvalBudget::default_bench();
+    let mut t = Table::new(
+        &format!("sweep_{model}"),
+        &["strategy", "param", "metric", "miss_rate", "flash_mb"],
+    );
+    for strategy in moe_cache::eval::sweep::strategy_grid(
+        cfg.top_k,
+        cfg.n_experts,
+        cfg.default_top_j(),
+        false,
+    ) {
+        let p = run_point(
+            &arts,
+            model,
+            strategy,
+            cache,
+            Quant::Int4,
+            task,
+            &data,
+            &budget,
+        )?;
+        t.row(vec![
+            p.strategy.clone(),
+            format!("{:.3}", p.param),
+            format!("{:.4}", p.result.metric),
+            format!("{:.4}", p.result.miss_rate),
+            format!("{:.2}", p.result.flash_bytes as f64 / 1e6),
+        ]);
+    }
+    t.print();
+    t.write_csv(&moe_cache::report::results_dir())?;
+    Ok(())
+}
+
+fn device_sim(args: &Args) -> Result<()> {
+    let mut engine = engine_from_args(args)?;
+    let data = EvalData::load(&artifacts_dir().join("data"))?;
+    let max_new = args.usize_or("max-new", 64)?;
+    let mut sampler = moe_cache::model::Sampler::new(0.8, 40, 11);
+    let mut total_gen = 0usize;
+    for prompt in data.prompts_short.iter().take(args.usize_or("prompts", 3)?) {
+        let out = engine.generate(prompt, max_new, &mut sampler, Some(2))?;
+        total_gen += out.len();
+    }
+    let (_, _, miss) = engine.cache_totals();
+    println!(
+        "model={} device={} quant={:?} strategy={} tokens={} device_tps={:.2} miss_rate={:.3} flash_mb={:.2}",
+        engine.cfg.name,
+        engine.opts.device.name,
+        engine.opts.quant,
+        engine.opts.strategy.label(),
+        total_gen,
+        engine.flash.throughput(),
+        miss,
+        engine.flash.flash_bytes as f64 / 1e6,
+    );
+    Ok(())
+}
+
+fn trace_cmd(args: &Args) -> Result<()> {
+    let model = args.get("model").context("--model required")?;
+    let arts = artifacts_dir();
+    let rt = moe_cache::runtime::Runtime::load(&arts.join(model))?;
+    let cfg = rt.config.clone();
+    let cache = args.usize_or("cache", cfg.n_experts / 2)?;
+    let opts = EngineOptions {
+        record_trace: true,
+        strategy: Strategy::Original,
+        ..EngineOptions::defaults(cache)
+    };
+    let mut engine = Engine::from_runtime(rt, &arts, model, opts)?;
+    let data = EvalData::load(&arts.join("data"))?;
+    let n_tokens = args.usize_or("tokens", 256)?;
+    let chunk: Vec<u32> = data.ppl_test[..n_tokens.min(cfg.max_seq)].to_vec();
+    engine.score_sequence(&chunk)?;
+    let trace = engine.trace.clone();
+    let mut t = Table::new(
+        &format!("trace_{model}"),
+        &["policy", "hits", "misses", "miss_rate"],
+    );
+    for (name, policy) in [("lru", Policy::Lru), ("lfu", Policy::Lfu), ("belady", Policy::Belady)] {
+        let r = tracesim::simulate(&trace, cache, policy);
+        t.row(vec![
+            name.into(),
+            r.hits.to_string(),
+            r.misses.to_string(),
+            format!("{:.4}", r.miss_rate()),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn footprint() -> Result<()> {
+    let arts = artifacts_dir();
+    let mut t = Table::new(
+        "footprint",
+        &["model", "quant", "file_mb", "static_kb", "per_expert_kb", "cache_min_kb", "cache_max_kb"],
+    );
+    for name in CONFIG_NAMES {
+        for quant in [Quant::Int4, Quant::Int8] {
+            let img = match FlashImage::open_artifact(&arts, name, quant) {
+                Ok(i) => i,
+                Err(_) => continue,
+            };
+            let per = img.bytes_per_expert();
+            let k = img.config.top_k as u64;
+            let n = img.config.n_experts as u64;
+            let layers = img.config.n_layers as u64;
+            t.row(vec![
+                name.into(),
+                quant.file_tag().into(),
+                format!("{:.2}", img.file_bytes as f64 / 1e6),
+                format!("{:.1}", img.static_bytes() as f64 / 1e3),
+                format!("{:.2}", per as f64 / 1e3),
+                format!("{:.1}", (k * layers * per) as f64 / 1e3),
+                format!("{:.1}", (n * layers * per) as f64 / 1e3),
+            ]);
+        }
+    }
+    t.print();
+    let _ = datasets::EvalData::load(&arts.join("data")).map(|d| {
+        println!(
+            "eval data: ppl_test={} tokens, qa={} items, math={} items",
+            d.ppl_test.len(),
+            d.qa.len(),
+            d.math.len()
+        )
+    });
+    Ok(())
+}

@@ -1,0 +1,546 @@
+//! The token-generation engine (the request-path hot loop).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::Result;
+use xla::PjRtBuffer;
+
+use crate::cache::{ExpertCache, Policy};
+use crate::config::{DeviceProfile, ModelConfig, Quant};
+use crate::flash::FlashSim;
+use crate::model::sampler::{log_prob, Sampler};
+use crate::routing::{self, RouterState, Strategy};
+use crate::runtime::Runtime;
+use crate::tracesim::Trace;
+use crate::weights::FlashImage;
+
+/// Host-resident dequantized expert weights (the DRAM cache payload).
+#[derive(Debug, Clone, Default)]
+pub struct ExpertHost {
+    pub w1: Vec<f32>,
+    pub w3: Vec<f32>,
+    pub w2: Vec<f32>,
+}
+
+struct LayerStatic {
+    ln1: PjRtBuffer,
+    wq: PjRtBuffer,
+    wk: PjRtBuffer,
+    wv: PjRtBuffer,
+    wo: PjRtBuffer,
+    ln2: PjRtBuffer,
+    router: PjRtBuffer,
+}
+
+struct StaticWeights {
+    embed: PjRtBuffer,
+    pos_embed: PjRtBuffer,
+    lnf: PjRtBuffer,
+    head: PjRtBuffer,
+    layers: Vec<LayerStatic>,
+}
+
+#[derive(Debug, Clone)]
+pub struct EngineOptions {
+    pub quant: Quant,
+    /// Experts cached per layer (out of n_experts).
+    pub cache_capacity: usize,
+    pub policy: Policy,
+    pub strategy: Strategy,
+    pub device: DeviceProfile,
+    pub seed: u64,
+    /// Record the per-token router selections (for tracesim / Belady).
+    pub record_trace: bool,
+    /// Record raw router logits into the trace as well.
+    pub record_logits: bool,
+}
+
+impl EngineOptions {
+    pub fn defaults(cache_capacity: usize) -> Self {
+        EngineOptions {
+            quant: Quant::Int4,
+            cache_capacity,
+            policy: Policy::Lru,
+            strategy: Strategy::Original,
+            device: DeviceProfile::device_16gb(),
+            seed: 0,
+            record_trace: false,
+            record_logits: false,
+        }
+    }
+}
+
+/// Per-step statistics (one generated/scored token).
+#[derive(Debug, Clone, Default)]
+pub struct StepStats {
+    pub hits: u32,
+    pub misses: u32,
+    pub flash_bytes: u64,
+}
+
+/// Snapshot of mutable session state (Fig. 12 oracle search needs
+/// checkpoint/restore around counterfactual expert substitutions).
+pub struct EngineSnapshot {
+    kv_k: Vec<Vec<f32>>,
+    kv_v: Vec<Vec<f32>>,
+    pos: usize,
+    token_counter: u64,
+    caches: Vec<ExpertCache>,
+    store: Vec<HashMap<u32, ExpertHost>>,
+    router_state: RouterState,
+}
+
+pub struct Engine {
+    pub rt: Runtime,
+    pub cfg: ModelConfig,
+    pub image: FlashImage,
+    pub opts: EngineOptions,
+    statics: StaticWeights,
+    /// Always-resident shared experts, staged per layer.
+    shared: Vec<Vec<ExpertHost>>,
+    /// Per-layer routed-expert cache metadata.
+    pub caches: Vec<ExpertCache>,
+    /// Host payloads of cached experts (parallel to `caches`).
+    store: Vec<HashMap<u32, ExpertHost>>,
+    pub router_state: RouterState,
+    pub flash: FlashSim,
+    /// When false, routing falls back to Original but the cache still
+    /// updates — the paper's GSM8K mode (§4.2: method applied only during
+    /// autoregressive generation).
+    pub strategy_active: bool,
+    // KV caches, host-resident, [H*T*hd] per layer.
+    kv_k: Vec<Vec<f32>>,
+    kv_v: Vec<Vec<f32>>,
+    pos: usize,
+    token_counter: u64,
+    // Staging buffers for the stacked experts call (reused across steps).
+    stage_w1: Vec<f32>,
+    stage_w3: Vec<f32>,
+    stage_w2: Vec<f32>,
+    stage_coef: Vec<f32>,
+    pub trace: Trace,
+    /// Expert override for counterfactual probes: per layer replacement of
+    /// the routed selection (Fig. 12). Cleared after each step.
+    pub override_selection: Option<Vec<Vec<u32>>>,
+    pub last_step: StepStats,
+}
+
+impl Engine {
+    /// Load artifacts + flash image for `cfg_name` under `artifacts/`.
+    pub fn load(artifacts: &Path, cfg_name: &str, opts: EngineOptions) -> Result<Self> {
+        let rt = Runtime::load(&artifacts.join(cfg_name))?;
+        Self::from_runtime(rt, artifacts, cfg_name, opts)
+    }
+
+    pub fn from_runtime(
+        rt: Runtime,
+        artifacts: &Path,
+        cfg_name: &str,
+        opts: EngineOptions,
+    ) -> Result<Self> {
+        let image = FlashImage::open_artifact(artifacts, cfg_name, opts.quant)?;
+        let cfg = rt.config.clone();
+        anyhow::ensure!(image.config == cfg, "flash image / manifest config mismatch");
+
+        // Upload static weights once (DRAM-resident per the paper §2.2).
+        let d = cfg.d_model;
+        let up2 = |name: &str, r: usize, c: usize| -> Result<PjRtBuffer> {
+            let v = image.read_f32(name)?;
+            anyhow::ensure!(v.len() == r * c, "{name}: bad size");
+            rt.buf_f32(&v, &[r, c])
+        };
+        let up1 = |name: &str, n: usize| -> Result<PjRtBuffer> {
+            let v = image.read_f32(name)?;
+            anyhow::ensure!(v.len() == n, "{name}: bad size");
+            rt.buf_f32(&v, &[n])
+        };
+        let mut layers = Vec::new();
+        for l in 0..cfg.n_layers {
+            layers.push(LayerStatic {
+                ln1: up1(&format!("layers.{l}.ln1"), d)?,
+                wq: up2(&format!("layers.{l}.wq"), d, d)?,
+                wk: up2(&format!("layers.{l}.wk"), d, d)?,
+                wv: up2(&format!("layers.{l}.wv"), d, d)?,
+                wo: up2(&format!("layers.{l}.wo"), d, d)?,
+                ln2: up1(&format!("layers.{l}.ln2"), d)?,
+                router: up2(&format!("layers.{l}.router"), d, cfg.n_experts)?,
+            });
+        }
+        let statics = StaticWeights {
+            embed: up2("embed", cfg.vocab, d)?,
+            pos_embed: up2("pos_embed", cfg.max_seq, d)?,
+            lnf: up1("lnf", d)?,
+            head: up2("head", d, cfg.vocab)?,
+            layers,
+        };
+
+        // Shared experts: always resident (loaded once; not cached).
+        let mut shared = Vec::new();
+        for l in 0..cfg.n_layers {
+            let mut per_layer = Vec::new();
+            for s in 0..cfg.n_shared {
+                let e = image.fetch_expert(l, s, true)?;
+                per_layer.push(ExpertHost { w1: e.w1, w3: e.w3, w2: e.w2 });
+            }
+            shared.push(per_layer);
+        }
+
+        let caches = (0..cfg.n_layers)
+            .map(|_| ExpertCache::new(opts.cache_capacity, opts.policy))
+            .collect();
+        let store = (0..cfg.n_layers).map(|_| HashMap::new()).collect();
+        let kv_len = cfg.n_heads * cfg.max_seq * cfg.head_dim;
+        let e_stack = cfg.n_ffn_calls() * cfg.d_model * cfg.d_ff;
+        let trace = Trace::new(cfg.n_experts, cfg.n_layers);
+        Ok(Engine {
+            router_state: RouterState::new(cfg.n_layers, opts.seed),
+            flash: FlashSim::new(opts.device.clone()),
+            strategy_active: true,
+            kv_k: vec![vec![0f32; kv_len]; cfg.n_layers],
+            kv_v: vec![vec![0f32; kv_len]; cfg.n_layers],
+            pos: 0,
+            token_counter: 0,
+            stage_w1: vec![0f32; e_stack],
+            stage_w3: vec![0f32; e_stack],
+            stage_w2: vec![0f32; e_stack],
+            stage_coef: vec![0f32; cfg.n_ffn_calls()],
+            trace,
+            override_selection: None,
+            last_step: StepStats::default(),
+            rt,
+            cfg,
+            image,
+            opts,
+            statics,
+            shared,
+            caches,
+            store,
+        })
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn tokens_processed(&self) -> u64 {
+        self.token_counter
+    }
+
+    /// Reset the sequence state (KV caches + position). The expert cache
+    /// persists across sequences, like a real deployment.
+    pub fn reset_sequence(&mut self) {
+        for v in self.kv_k.iter_mut().chain(self.kv_v.iter_mut()) {
+            v.iter_mut().for_each(|x| *x = 0.0);
+        }
+        self.pos = 0;
+    }
+
+    /// Full reset: sequence + expert caches + stats + trace.
+    pub fn reset_all(&mut self) {
+        self.reset_sequence();
+        for c in &mut self.caches {
+            *c = ExpertCache::new(self.opts.cache_capacity, self.opts.policy);
+        }
+        for s in &mut self.store {
+            s.clear();
+        }
+        self.flash.reset();
+        self.token_counter = 0;
+        self.router_state = RouterState::new(self.cfg.n_layers, self.opts.seed);
+        self.trace = Trace::new(self.cfg.n_experts, self.cfg.n_layers);
+    }
+
+    /// Pre-fill every layer cache with a random expert set (Fig. 19).
+    pub fn warm_caches_random(&mut self, seed: u64) {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        for l in 0..self.cfg.n_layers {
+            let mut all: Vec<u32> = (0..self.cfg.n_experts as u32).collect();
+            rng.shuffle(&mut all);
+            all.truncate(self.opts.cache_capacity);
+            self.caches[l].warm(&all, self.token_counter);
+            for &e in &all {
+                let w = self.fetch_routed(l, e, true).expect("warm fetch");
+                self.store[l].insert(e, w);
+            }
+        }
+    }
+
+    fn fetch_routed(&mut self, layer: usize, expert: u32, charge: bool) -> Result<ExpertHost> {
+        let e = self.image.fetch_expert(layer, expert as usize, false)?;
+        if charge {
+            self.flash.read_flash(e.flash_bytes);
+        }
+        Ok(ExpertHost { w1: e.w1, w3: e.w3, w2: e.w2 })
+    }
+
+    /// Memory the device must keep resident: static weights + shared experts
+    /// + allocated expert-cache slots + KV caches (drives Fig. 14 pressure).
+    pub fn resident_bytes(&self) -> u64 {
+        let kv = (2 * self.cfg.n_layers * self.cfg.n_heads * self.cfg.max_seq
+            * self.cfg.head_dim
+            * 4) as u64;
+        let cache = (self.cfg.n_layers * self.opts.cache_capacity) as u64
+            * self.image.bytes_per_expert();
+        self.image.static_bytes() + cache + kv
+    }
+
+    /// One decode step: feed `token` at the current position, return the
+    /// next-token logits.
+    pub fn step(&mut self, token: u32) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            self.pos < self.cfg.max_seq,
+            "sequence overflow: pos {} >= max_seq {}",
+            self.pos,
+            self.cfg.max_seq
+        );
+        let cfg = self.cfg.clone();
+        let (d, hn, hd, t) = (cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.max_seq);
+        let mut step_stats = StepStats::default();
+
+        let tok_buf = self.rt.buf_i32_scalar(token as i32)?;
+        let pos_buf = self.rt.buf_i32_scalar(self.pos as i32)?;
+        let outs = self.rt.run(
+            "embed",
+            &[&self.statics.embed, &self.statics.pos_embed, &tok_buf, &pos_buf],
+        )?;
+        let mut h: Vec<f32> = Runtime::lit_f32(&outs[0])?;
+
+        let overrides = self.override_selection.take();
+        let mut trace_sel: Vec<Vec<u32>> = Vec::with_capacity(cfg.n_layers);
+        let mut trace_logits: Vec<Vec<f32>> = Vec::new();
+
+        for l in 0..cfg.n_layers {
+            // ---- fused attention + router (one dispatch per layer) ----
+            let h_buf = self.rt.buf_f32(&h, &[1, d])?;
+            let kc_buf = self.rt.buf_f32(&self.kv_k[l], &[hn, t, hd])?;
+            let vc_buf = self.rt.buf_f32(&self.kv_v[l], &[hn, t, hd])?;
+            let ls = &self.statics.layers[l];
+            let outs = self.rt.run(
+                "layer",
+                &[&h_buf, &ls.ln1, &ls.wq, &ls.wk, &ls.wv, &ls.wo, &kc_buf, &vc_buf, &pos_buf, &ls.ln2, &ls.router],
+            )?;
+            let h1: Vec<f32> = Runtime::lit_f32(&outs[0])?;
+            let k_new: Vec<f32> = Runtime::lit_f32(&outs[1])?;
+            let v_new: Vec<f32> = Runtime::lit_f32(&outs[2])?;
+            let z: Vec<f32> = Runtime::lit_f32(&outs[3])?;
+            let xn: Vec<f32> = Runtime::lit_f32(&outs[4])?;
+            // Write the [H,1,hd] slices into the host KV cache at `pos`.
+            for head in 0..hn {
+                let dst = (head * t + self.pos) * hd;
+                self.kv_k[l][dst..dst + hd]
+                    .copy_from_slice(&k_new[head * hd..(head + 1) * hd]);
+                self.kv_v[l][dst..dst + hd]
+                    .copy_from_slice(&v_new[head * hd..(head + 1) * hd]);
+            }
+
+            // ---- cache-aware selection ----
+            let mask = self.caches[l].mask(cfg.n_experts);
+            let strategy = if self.strategy_active {
+                self.opts.strategy.clone()
+            } else {
+                Strategy::Original
+            };
+            let mut sel =
+                routing::select(&strategy, &z, &mask, l, cfg.top_k, &mut self.router_state);
+            if let Some(ov) = overrides.as_ref().and_then(|o| o.get(l)) {
+                if !ov.is_empty() {
+                    sel.experts = ov.clone();
+                    // keep weight-desc order for gating/eviction
+                    let w = sel.weights.clone();
+                    sel.experts.sort_by(|&a, &b| {
+                        w[b as usize].partial_cmp(&w[a as usize]).unwrap().then(a.cmp(&b))
+                    });
+                }
+            }
+
+            // ---- cache access + flash fetches ----
+            let access = self.caches[l].access(&sel.experts, self.token_counter, None);
+            step_stats.hits += access.hits;
+            step_stats.misses += access.missed.len() as u32;
+            let bytes_per = self.image.bytes_per_expert();
+            for &e in &access.missed {
+                let w = self.fetch_routed(l, e, true)?;
+                step_stats.flash_bytes += bytes_per;
+                // Streamed-but-not-retained experts (cache smaller than K)
+                // still pass through DRAM; keep them for this step only.
+                self.store[l].insert(e, w);
+            }
+            // Hits stream from DRAM.
+            self.flash.read_dram(access.hits as u64 * bytes_per);
+
+            // ---- stacked experts call ----
+            let coef = routing::gate_coefficients(&sel.weights, &sel.experts, cfg.renorm_topk);
+            self.stage_experts(l, &sel.experts, &coef);
+            let e_cnt = cfg.n_ffn_calls();
+            let (df, fd) = (d * cfg.d_ff, cfg.d_ff * d);
+            let xn_buf = self.rt.buf_f32(&xn, &[1, d])?;
+            let w1_buf = self.rt.buf_f32(&self.stage_w1, &[e_cnt, d, cfg.d_ff])?;
+            let w3_buf = self.rt.buf_f32(&self.stage_w3, &[e_cnt, d, cfg.d_ff])?;
+            let w2_buf = self.rt.buf_f32(&self.stage_w2, &[e_cnt, cfg.d_ff, d])?;
+            let coef_buf = self.rt.buf_f32(&self.stage_coef, &[e_cnt])?;
+            let _ = (df, fd);
+            let outs = self
+                .rt
+                .run("experts", &[&xn_buf, &w1_buf, &w3_buf, &w2_buf, &coef_buf])?;
+            let y: Vec<f32> = Runtime::lit_f32(&outs[0])?;
+
+            // Drop evicted / streamed-but-not-retained experts from the
+            // host store. This must happen AFTER staging: with a cache
+            // smaller than K, a same-step hit can be evicted by a later
+            // same-step insert while its weights are still needed for the
+            // experts call.
+            for &e in access.evicted.iter().chain(&access.missed) {
+                if !self.caches[l].contains(e) {
+                    self.store[l].remove(&e);
+                }
+            }
+
+            // ---- residual ----
+            for i in 0..d {
+                h[i] = h1[i] + y[i];
+            }
+
+            if self.opts.record_trace {
+                trace_sel.push(sel.experts.clone());
+                if self.opts.record_logits {
+                    trace_logits.push(z.clone());
+                }
+            }
+        }
+
+        // ---- head ----
+        let h_buf = self.rt.buf_f32(&h, &[1, d])?;
+        let outs = self
+            .rt
+            .run("lm_head", &[&h_buf, &self.statics.lnf, &self.statics.head])?;
+        let logits: Vec<f32> = Runtime::lit_f32(&outs[0])?;
+
+        if self.opts.record_trace {
+            let lg = if self.opts.record_logits { Some(trace_logits) } else { None };
+            self.trace.push_token(trace_sel, lg);
+        }
+        self.pos += 1;
+        self.token_counter += 1;
+        self.flash.end_token(self.resident_bytes());
+        self.last_step = step_stats;
+        Ok(logits)
+    }
+
+    /// Copy selected + shared expert weights into the stacked staging
+    /// arrays. Selections shorter than K (pruning) are padded with the
+    /// first expert's weights at coefficient 0 (exactly zero contribution).
+    fn stage_experts(&mut self, layer: usize, selected: &[u32], coef: &[f32]) {
+        let cfg = &self.cfg;
+        let (df, fd) = (cfg.d_model * cfg.d_ff, cfg.d_ff * cfg.d_model);
+        let k = cfg.top_k;
+        for slot in 0..k {
+            let (src, c): (&ExpertHost, f32) = if slot < selected.len() {
+                (
+                    self.store[layer]
+                        .get(&selected[slot])
+                        .expect("selected expert must be staged"),
+                    coef[slot],
+                )
+            } else {
+                // Padding slot: reuse slot 0's weights with coef 0.
+                (
+                    self.store[layer]
+                        .get(&selected[0])
+                        .expect("padding needs at least one expert"),
+                    0.0,
+                )
+            };
+            self.stage_w1[slot * df..(slot + 1) * df].copy_from_slice(&src.w1);
+            self.stage_w3[slot * df..(slot + 1) * df].copy_from_slice(&src.w3);
+            self.stage_w2[slot * fd..(slot + 1) * fd].copy_from_slice(&src.w2);
+            self.stage_coef[slot] = c;
+        }
+        for s in 0..cfg.n_shared {
+            let slot = k + s;
+            let src = &self.shared[layer][s];
+            self.stage_w1[slot * df..(slot + 1) * df].copy_from_slice(&src.w1);
+            self.stage_w3[slot * df..(slot + 1) * df].copy_from_slice(&src.w3);
+            self.stage_w2[slot * fd..(slot + 1) * fd].copy_from_slice(&src.w2);
+            self.stage_coef[slot] = 1.0;
+        }
+    }
+
+    /// Teacher-forced scoring: returns (sum of -log p(next), token count).
+    pub fn score_sequence(&mut self, tokens: &[u32]) -> Result<(f64, usize)> {
+        self.reset_sequence();
+        let mut nll = 0.0;
+        let mut n = 0;
+        for i in 0..tokens.len() - 1 {
+            let logits = self.step(tokens[i])?;
+            nll -= log_prob(&logits, tokens[i + 1]);
+            n += 1;
+        }
+        Ok((nll, n))
+    }
+
+    /// Feed `prompt` then sample `max_new` tokens (stops at `stop_token`).
+    pub fn generate(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        sampler: &mut Sampler,
+        stop_token: Option<u32>,
+    ) -> Result<Vec<u32>> {
+        self.reset_sequence();
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        let mut logits = vec![];
+        for &t in prompt {
+            logits = self.step(t)?;
+        }
+        let mut out = Vec::new();
+        for _ in 0..max_new {
+            if self.pos >= self.cfg.max_seq {
+                break;
+            }
+            let next = sampler.sample(&logits);
+            if Some(next) == stop_token {
+                break;
+            }
+            out.push(next);
+            logits = self.step(next)?;
+        }
+        Ok(out)
+    }
+
+    // ---------------- snapshot / restore (Fig. 12 oracle search) ----------
+
+    pub fn snapshot(&self) -> EngineSnapshot {
+        EngineSnapshot {
+            kv_k: self.kv_k.clone(),
+            kv_v: self.kv_v.clone(),
+            pos: self.pos,
+            token_counter: self.token_counter,
+            caches: self.caches.clone(),
+            store: self.store.clone(),
+            router_state: self.router_state.clone(),
+        }
+    }
+
+    pub fn restore(&mut self, snap: &EngineSnapshot) {
+        self.kv_k = snap.kv_k.clone();
+        self.kv_v = snap.kv_v.clone();
+        self.pos = snap.pos;
+        self.token_counter = snap.token_counter;
+        self.caches = snap.caches.clone();
+        self.store = snap.store.clone();
+        self.router_state = snap.router_state.clone();
+    }
+
+    /// Aggregate cache stats over all layers: (hits, misses, miss_rate).
+    pub fn cache_totals(&self) -> (u64, u64, f64) {
+        let hits: u64 = self.caches.iter().map(|c| c.stats.hits).sum();
+        let misses: u64 = self.caches.iter().map(|c| c.stats.misses).sum();
+        let rate = if hits + misses == 0 {
+            0.0
+        } else {
+            misses as f64 / (hits + misses) as f64
+        };
+        (hits, misses, rate)
+    }
+}

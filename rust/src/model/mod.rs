@@ -1,0 +1,15 @@
+//! The inference engine: per-token decode loop over the AOT components.
+//!
+//! One token = `embed` → per layer (`attn` → `router` → **cache-aware
+//! re-rank** → expert fetch through the DRAM cache → `experts`) → `lm_head`.
+//! Expert weights are runtime arguments to the `experts` executable, so the
+//! Rust cache genuinely owns them: a miss reads quantized bytes from the
+//! flash image (charging the flash simulator), dequantizes, and stages them.
+//!
+//! See [`engine::Engine`] for the main type; [`sampler`] for generation.
+
+pub mod engine;
+pub mod sampler;
+
+pub use engine::{Engine, EngineOptions, EngineSnapshot, StepStats};
+pub use sampler::Sampler;

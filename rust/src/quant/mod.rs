@@ -1,0 +1,135 @@
+//! Symmetric per-output-column dequantization — the Rust half of the
+//! contract defined by `python/compile/export.py`.
+//!
+//! int4 packing: two two's-complement nibbles per byte, element `2i` in the
+//! low nibble. Scales are per last-axis column; for a row-major tensor
+//! `[.., C]`, element index `i` belongs to column `i % C`.
+
+/// Dequantize int8 (one byte per element) with per-column scales.
+pub fn dequant_i8(data: &[u8], scales: &[f32], out: &mut Vec<f32>) {
+    let c = scales.len();
+    out.clear();
+    out.reserve(data.len());
+    for (i, &b) in data.iter().enumerate() {
+        let q = b as i8;
+        out.push(q as f32 * scales[i % c]);
+    }
+}
+
+/// Unpack + dequantize int4; `n` is the logical element count.
+pub fn dequant_i4(data: &[u8], n: usize, scales: &[f32], out: &mut Vec<f32>) {
+    let c = scales.len();
+    out.clear();
+    out.reserve(n);
+    for i in 0..n {
+        let byte = data[i / 2];
+        let nib = if i % 2 == 0 { byte & 0xF } else { byte >> 4 };
+        let q = ((nib as i8) << 4) >> 4; // sign-extend the nibble
+        out.push(q as f32 * scales[i % c]);
+    }
+}
+
+/// Quantize (test + image-writer support; mirrors export.quantize_sym).
+pub fn quant_sym(w: &[f32], cols: usize, bits: u32) -> (Vec<i8>, Vec<f32>) {
+    assert!(bits == 4 || bits == 8);
+    assert_eq!(w.len() % cols, 0);
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let mut scales = vec![0f32; cols];
+    for (i, &x) in w.iter().enumerate() {
+        let c = i % cols;
+        scales[c] = scales[c].max(x.abs());
+    }
+    for s in &mut scales {
+        *s = if *s > 0.0 { *s / qmax } else { 1.0 };
+    }
+    let q = w
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| {
+            let v = (x / scales[i % cols]).round();
+            v.clamp(-qmax - 1.0, qmax) as i8
+        })
+        .collect();
+    (q, scales)
+}
+
+/// Pack int8 values (must be in [-8, 7]) into int4 nibbles.
+pub fn pack_i4(q: &[i8]) -> Vec<u8> {
+    assert_eq!(q.len() % 2, 0);
+    q.chunks_exact(2)
+        .map(|p| ((p[0] as u8) & 0xF) | (((p[1] as u8) & 0xF) << 4))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn i8_roundtrip_error_bounded() {
+        prop_check("i8 quant roundtrip", 100, |g| {
+            let cols = g.range(1, 16);
+            let rows = g.range(1, 16);
+            let w = g.vec_f32(rows * cols, 1.0);
+            let (q, scales) = quant_sym(&w, cols, 8);
+            let bytes: Vec<u8> = q.iter().map(|&x| x as u8).collect();
+            let mut out = Vec::new();
+            dequant_i8(&bytes, &scales, &mut out);
+            for (i, (&a, &b)) in w.iter().zip(&out).enumerate() {
+                let step = scales[i % cols];
+                if (a - b).abs() > step * 0.5 + 1e-6 {
+                    return Err(format!("elem {i}: {a} vs {b} (step {step})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn i4_roundtrip_error_bounded() {
+        prop_check("i4 quant roundtrip", 100, |g| {
+            let cols = g.range(1, 12);
+            let rows = g.range(1, 12) * 2; // even element count
+            let w = g.vec_f32(rows * cols, 1.0);
+            let (q, scales) = quant_sym(&w, cols, 4);
+            let packed = pack_i4(&q);
+            let mut out = Vec::new();
+            dequant_i4(&packed, w.len(), &scales, &mut out);
+            for (i, (&a, &b)) in w.iter().zip(&out).enumerate() {
+                let step = scales[i % cols];
+                if (a - b).abs() > step * 0.5 + 1e-6 {
+                    return Err(format!("elem {i}: {a} vs {b} (step {step})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn i4_sign_extension() {
+        // -8..7 nibble values must round-trip exactly with scale 1.
+        let q: Vec<i8> = (-8..8).collect();
+        let packed = pack_i4(&q);
+        let scales = vec![1.0f32];
+        let mut out = Vec::new();
+        dequant_i4(&packed, q.len(), &scales, &mut out);
+        let want: Vec<f32> = q.iter().map(|&x| x as f32).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn zero_tensor_has_unit_scale() {
+        let (q, s) = quant_sym(&[0.0; 8], 2, 8);
+        assert!(q.iter().all(|&x| x == 0));
+        assert!(s.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn python_packing_convention() {
+        // Matches export.pack_int4: low nibble first.
+        let q: Vec<i8> = vec![1, -1];
+        let packed = pack_i4(&q);
+        assert_eq!(packed, vec![0b1111_0001]);
+    }
+}

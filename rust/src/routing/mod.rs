@@ -1,0 +1,591 @@
+//! Cache-aware expert routing (paper §3) — the system contribution.
+//!
+//! All strategies are *training-free* transformations of the router's
+//! ranking vector `r = argsort(softmax(z))`:
+//!
+//! * [`Strategy::Original`] — plain top-K (Eq. 1–3).
+//! * [`Strategy::Pruning`] — drop experts ranked ≥ h (§4.2 baseline; also
+//!   the Fig. 2-left sensitivity probe).
+//! * [`Strategy::SwapAtRank`] — replace the rank-k expert with a random one
+//!   (Fig. 2-right sensitivity probe).
+//! * [`Strategy::MaxRank`] — promote cached experts within the top-M window
+//!   (§3.1, Algorithm 1).
+//! * [`Strategy::CumsumThreshold`] — Max-Rank with M chosen per token from
+//!   the cumulative probability mass p (§3.2, Algorithm 2).
+//! * [`Strategy::CachePrior`] — the paper's method (§3.3, Eq. 9/10):
+//!   `z' = z + λ · Δ_avg · m̃_t`, used ONLY for re-ranking; gate weights
+//!   always come from the unmodified logits.
+//!
+//! The selection returned is ordered by *original* router weight descending
+//! — the order the gate computation and the cache's eviction rule consume.
+
+use crate::util::rng::Rng;
+use crate::util::stats::RunningAvg;
+
+// ---------------------------------------------------------------------
+// Primitive ops
+// ---------------------------------------------------------------------
+
+/// Numerically-stable softmax (must match jax.nn.softmax for parity).
+pub fn softmax(z: &[f32]) -> Vec<f32> {
+    let m = z.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = z.iter().map(|&x| (x - m).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / sum).collect()
+}
+
+/// Ranking vector r: expert ids sorted by weight descending (Eq. 2).
+/// Ties broken by lower expert id (matches jax.lax.top_k).
+pub fn ranking(w: &[f32]) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..w.len() as u32).collect();
+    idx.sort_by(|&a, &b| {
+        w[b as usize]
+            .partial_cmp(&w[a as usize])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    idx
+}
+
+/// The paper's promote() (Eq. 5): subset ⊕ (all \ subset), both ordered.
+pub fn promote(subset: &[u32], all: &[u32]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(all.len());
+    out.extend_from_slice(subset);
+    for &e in all {
+        if !subset.contains(&e) {
+            out.push(e);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Strategies
+// ---------------------------------------------------------------------
+
+/// How Δ (the logit-range bias magnitude, Eq. 10) is estimated — Fig. 16.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DeltaMode {
+    /// Running average over sequences and tokens (the paper's default).
+    RunningAvg,
+    /// Fixed per-layer values from a calibration pass.
+    Calibrated(Vec<f32>),
+    /// The current token's own range max(z) − min(z).
+    PerToken,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Strategy {
+    Original,
+    /// Select only the top-`keep` experts (keep ≤ K); the rest are dropped.
+    Pruning { keep: usize },
+    /// Replace the expert at 0-based rank `rank` with a uniformly random
+    /// non-selected expert (sensitivity probe, Fig. 2 right).
+    SwapAtRank { rank: usize },
+    MaxRank { m: usize, j: usize },
+    CumsumThreshold { p: f32, j: usize },
+    CachePrior { lambda: f32, j: usize, delta: DeltaMode },
+}
+
+impl Strategy {
+    /// Parse e.g. "original", "pruning:1", "max-rank:6:1",
+    /// "cumsum:0.7:1", "cache-prior:0.5:2", "swap:2".
+    pub fn parse(s: &str) -> anyhow::Result<Strategy> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let num =
+            |i: usize| -> anyhow::Result<f32> { Ok(parts.get(i).unwrap_or(&"").parse()?) };
+        match parts[0] {
+            "original" => Ok(Strategy::Original),
+            "pruning" => Ok(Strategy::Pruning { keep: num(1)? as usize }),
+            "swap" => Ok(Strategy::SwapAtRank { rank: num(1)? as usize }),
+            "max-rank" => Ok(Strategy::MaxRank {
+                m: num(1)? as usize,
+                j: num(2).unwrap_or(1.0) as usize,
+            }),
+            "cumsum" => Ok(Strategy::CumsumThreshold {
+                p: num(1)?,
+                j: num(2).unwrap_or(1.0) as usize,
+            }),
+            "cache-prior" => Ok(Strategy::CachePrior {
+                lambda: num(1)?,
+                j: num(2).unwrap_or(1.0) as usize,
+                delta: DeltaMode::RunningAvg,
+            }),
+            _ => anyhow::bail!("unknown strategy {s:?}"),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Strategy::Original => "original".into(),
+            Strategy::Pruning { keep } => format!("pruning:{keep}"),
+            Strategy::SwapAtRank { rank } => format!("swap:{rank}"),
+            Strategy::MaxRank { m, j } => format!("max-rank:{m}:{j}"),
+            Strategy::CumsumThreshold { p, j } => format!("cumsum:{p}:{j}"),
+            Strategy::CachePrior { lambda, j, .. } => {
+                format!("cache-prior:{lambda}:{j}")
+            }
+        }
+    }
+
+    /// Whether the strategy consults the cache state (i.e. is cache-aware).
+    pub fn cache_aware(&self) -> bool {
+        matches!(
+            self,
+            Strategy::MaxRank { .. }
+                | Strategy::CumsumThreshold { .. }
+                | Strategy::CachePrior { .. }
+        )
+    }
+}
+
+/// Per-model mutable routing state: Δ_avg running estimate per layer + the
+/// RNG for the swap probe.
+#[derive(Debug, Clone)]
+pub struct RouterState {
+    pub delta_avg: Vec<RunningAvg>,
+    pub rng: Rng,
+}
+
+impl RouterState {
+    pub fn new(n_layers: usize, seed: u64) -> Self {
+        RouterState {
+            delta_avg: vec![RunningAvg::new(); n_layers],
+            rng: Rng::new(seed),
+        }
+    }
+}
+
+/// Output of one routing decision.
+#[derive(Debug, Clone)]
+pub struct Selection {
+    /// Selected routed experts, ordered by original weight descending.
+    pub experts: Vec<u32>,
+    /// softmax(z) over all N experts (original logits).
+    pub weights: Vec<f32>,
+}
+
+/// The routing decision for one token at one layer.
+///
+/// `z`: original router logits; `cache_mask[i]`: expert i resident in DRAM;
+/// `k`: the model's top-K.
+pub fn select(
+    strategy: &Strategy,
+    z: &[f32],
+    cache_mask: &[bool],
+    layer: usize,
+    k: usize,
+    state: &mut RouterState,
+) -> Selection {
+    let n = z.len();
+    let w = softmax(z);
+    let r = ranking(&w);
+    let chosen: Vec<u32> = match strategy {
+        Strategy::Original => r[..k.min(n)].to_vec(),
+        Strategy::Pruning { keep } => r[..(*keep).clamp(1, k.min(n))].to_vec(),
+        Strategy::SwapAtRank { rank } => {
+            let mut sel = r[..k.min(n)].to_vec();
+            if *rank < sel.len() && n > k {
+                loop {
+                    let cand = state.rng.below(n) as u32;
+                    if !sel.contains(&cand) {
+                        sel[*rank] = cand;
+                        break;
+                    }
+                }
+            }
+            sel
+        }
+        Strategy::MaxRank { m, j } => {
+            max_rank_select(&r, cache_mask, (*m).max(k), *j, k)
+        }
+        Strategy::CumsumThreshold { p, j } => {
+            // Algorithm 2: M = min i s.t. Σ_{j=1..i} w[r_j] >= p.
+            let mut m = 0usize;
+            let mut pcum = 0f32;
+            while pcum < *p && m < n {
+                pcum += w[r[m] as usize];
+                m += 1;
+            }
+            max_rank_select(&r, cache_mask, m.max(k), *j, k)
+        }
+        Strategy::CachePrior { lambda, j, delta } => {
+            let range = z.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+                - z.iter().copied().fold(f32::INFINITY, f32::min);
+            let d = match delta {
+                DeltaMode::RunningAvg => {
+                    state.delta_avg[layer].push(range as f64);
+                    state.delta_avg[layer].get() as f32
+                }
+                DeltaMode::Calibrated(per_layer) => per_layer[layer],
+                DeltaMode::PerToken => range,
+            };
+            // m̃_t: cache mask plus the guaranteed top-J (Eq. 9 setup).
+            let mut mask = cache_mask.to_vec();
+            for &e in r.iter().take(*j) {
+                mask[e as usize] = true;
+            }
+            let zp: Vec<f32> = z
+                .iter()
+                .enumerate()
+                .map(|(i, &x)| if mask[i] { x + lambda * d } else { x })
+                .collect();
+            let rp = ranking(&zp);
+            rp[..k.min(n)].to_vec()
+        }
+    };
+    // Order the final selection by original weight descending (gate +
+    // eviction order both consume this).
+    let mut experts = chosen;
+    experts.sort_by(|&a, &b| {
+        w[b as usize]
+            .partial_cmp(&w[a as usize])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    Selection { experts, weights: w }
+}
+
+/// Max-Rank (§3.1, Algorithm 1): promote cached experts within the top-M
+/// window, then force the top-J, then take the first K.
+fn max_rank_select(
+    r: &[u32],
+    cache_mask: &[bool],
+    m: usize,
+    j: usize,
+    k: usize,
+) -> Vec<u32> {
+    let window: Vec<u32> = r
+        .iter()
+        .take(m.min(r.len()))
+        .copied()
+        .filter(|&e| cache_mask[e as usize])
+        .collect();
+    let r1 = promote(&window, r);
+    let top_j: Vec<u32> = r.iter().take(j).copied().collect();
+    let r2 = promote(&top_j, &r1);
+    r2[..k.min(r2.len())].to_vec()
+}
+
+/// Gate coefficients for a selection (Eq. 1): original softmax weights,
+/// optionally renormalized over the selected set. NEVER uses modified logits.
+pub fn gate_coefficients(weights: &[f32], selected: &[u32], renorm: bool) -> Vec<f32> {
+    let mut coef: Vec<f32> = selected.iter().map(|&e| weights[e as usize]).collect();
+    if renorm {
+        let s: f32 = coef.iter().sum();
+        if s > 0.0 {
+            for c in &mut coef {
+                *c /= s;
+            }
+        }
+    }
+    coef
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    fn mask(n: usize, cached: &[u32]) -> Vec<bool> {
+        let mut m = vec![false; n];
+        for &e in cached {
+            m[e as usize] = true;
+        }
+        m
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let w = softmax(&[1.0, 2.0, 3.0]);
+        assert!((w.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(w[2] > w[1] && w[1] > w[0]);
+    }
+
+    #[test]
+    fn ranking_descending() {
+        assert_eq!(ranking(&[0.1, 0.5, 0.3]), vec![1, 2, 0]);
+        // ties: lower id first (jax.top_k convention)
+        assert_eq!(ranking(&[0.5, 0.5, 0.1]), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn promote_paper_example() {
+        // Appendix B: r = [E1..E6] as ids [0..5], C = {E3,E4,E6} = {2,3,5},
+        // M=4, K=2, J=1.
+        let r: Vec<u32> = vec![0, 1, 2, 3, 4, 5];
+        let window: Vec<u32> = vec![2, 3]; // top-4 ∩ C, ordered
+        let r1 = promote(&window, &r);
+        assert_eq!(r1, vec![2, 3, 0, 1, 4, 5]);
+        let r2 = promote(&[0], &r1);
+        assert_eq!(r2, vec![0, 2, 3, 1, 4, 5]);
+        // top-2 = {E1, E3} = ids {0, 2} — exactly the paper's example.
+        assert_eq!(&r2[..2], &[0, 2]);
+    }
+
+    #[test]
+    fn promote_is_permutation() {
+        prop_check("promote permutation", 200, |g| {
+            let n = g.range(1, 32);
+            let all: Vec<u32> = ranking(&g.vec_f32(n, 1.0));
+            let k = g.range(0, n + 1);
+            let subset: Vec<u32> = all.iter().take(k).copied().collect();
+            let out = promote(&subset, &all);
+            let mut sorted = out.clone();
+            sorted.sort_unstable();
+            let mut want: Vec<u32> = (0..n as u32).collect();
+            want.sort_unstable();
+            if sorted == want {
+                Ok(())
+            } else {
+                Err(format!("{out:?}"))
+            }
+        });
+    }
+
+    fn run(strategy: &Strategy, z: &[f32], cached: &[u32], k: usize) -> Selection {
+        let mut st = RouterState::new(4, 7);
+        select(strategy, z, &mask(z.len(), cached), 0, k, &mut st)
+    }
+
+    #[test]
+    fn original_is_topk() {
+        let z = [0.0, 3.0, 1.0, 2.0];
+        let s = run(&Strategy::Original, &z, &[], 2);
+        assert_eq!(s.experts, vec![1, 3]);
+    }
+
+    #[test]
+    fn pruning_selects_fewer() {
+        let z = [0.0, 3.0, 1.0, 2.0];
+        let s = run(&Strategy::Pruning { keep: 1 }, &z, &[], 2);
+        assert_eq!(s.experts, vec![1]);
+    }
+
+    #[test]
+    fn max_rank_promotes_cached_within_window() {
+        // z ranking: [1, 3, 2, 0]; cache = {2}; M=3, J=1, K=2.
+        // Window top-3 = [1,3,2]; cached ∩ = [2]; promote -> [2,1,3,0];
+        // top-J [1] -> [1,2,3,0]; select [1,2].
+        let z = [0.0, 3.0, 1.0, 2.0];
+        let s = run(&Strategy::MaxRank { m: 3, j: 1 }, &z, &[2], 2);
+        assert_eq!(s.experts, vec![1, 2]);
+    }
+
+    #[test]
+    fn max_rank_ignores_cached_outside_window() {
+        // cache = {0} (lowest weight), M = 2: expert 0 is outside the top-2
+        // window so must NOT be promoted.
+        let z = [0.0, 3.0, 1.0, 2.0];
+        let s = run(&Strategy::MaxRank { m: 2, j: 1 }, &z, &[0], 2);
+        assert_eq!(s.experts, vec![1, 3]); // untouched top-2
+    }
+
+    #[test]
+    fn cumsum_peaky_acts_original() {
+        // Peaky distribution: top-1 has ~all the mass, so M=1 <= K and the
+        // cached low-rank expert is not promoted.
+        let z = [10.0, 0.0, 0.0, 0.0];
+        let s = run(
+            &Strategy::CumsumThreshold { p: 0.9, j: 1 },
+            &z,
+            &[3],
+            2,
+        );
+        assert_eq!(s.experts, vec![0, 1]);
+    }
+
+    #[test]
+    fn cumsum_flat_promotes_cached() {
+        // Flat distribution: M grows to cover p, window includes cached 3.
+        let z = [0.4, 0.3, 0.2, 0.1];
+        let s = run(
+            &Strategy::CumsumThreshold { p: 0.9, j: 1 },
+            &z,
+            &[3],
+            2,
+        );
+        assert!(s.experts.contains(&0), "top-J guaranteed");
+        assert!(s.experts.contains(&3), "cached promoted");
+    }
+
+    #[test]
+    fn cache_prior_lambda_zero_is_original() {
+        prop_check("cache-prior λ=0 == original", 100, |g| {
+            let n = g.range(4, 64);
+            let k = g.range(1, 4.min(n));
+            let z = g.vec_f32(n, 2.0);
+            let m_cached = g.range(0, n);
+            let cached = g.distinct(m_cached, n);
+            let mut st = RouterState::new(1, 1);
+            let a = select(
+                &Strategy::CachePrior {
+                    lambda: 0.0,
+                    j: 1,
+                    delta: DeltaMode::RunningAvg,
+                },
+                &z,
+                &mask(n, &cached),
+                0,
+                k,
+                &mut st,
+            );
+            let mut st2 = RouterState::new(1, 1);
+            let b = select(&Strategy::Original, &z, &mask(n, &cached), 0, k, &mut st2);
+            if a.experts == b.experts {
+                Ok(())
+            } else {
+                Err(format!("{:?} vs {:?}", a.experts, b.experts))
+            }
+        });
+    }
+
+    #[test]
+    fn cache_prior_lambda_one_selects_cached() {
+        // λ=1 with a full-range boost pulls any cached expert above
+        // non-cached ones whose logit gap is below Δ.
+        let z = [1.0, 0.9, 0.8, -1.0];
+        let s = run(
+            &Strategy::CachePrior { lambda: 1.0, j: 1, delta: DeltaMode::PerToken },
+            &z,
+            &[3],
+            2,
+        );
+        // Expert 3 (cached, boosted by 2.0 -> 1.0) ties top region; expert 0
+        // stays via top-J.
+        assert!(s.experts.contains(&0));
+        assert!(s.experts.contains(&3));
+    }
+
+    #[test]
+    fn cache_prior_running_avg_updates() {
+        let mut st = RouterState::new(1, 1);
+        let z = [2.0f32, -2.0, 0.0, 0.0];
+        let strat = Strategy::CachePrior {
+            lambda: 0.5,
+            j: 1,
+            delta: DeltaMode::RunningAvg,
+        };
+        select(&strat, &z, &mask(4, &[]), 0, 2, &mut st);
+        assert!((st.delta_avg[0].get() - 4.0).abs() < 1e-6);
+        assert_eq!(st.delta_avg[0].count(), 1);
+    }
+
+    #[test]
+    fn swap_at_rank_replaces_one() {
+        let z = [0.0, 3.0, 1.0, 2.0];
+        let mut st = RouterState::new(1, 9);
+        let s = select(
+            &Strategy::SwapAtRank { rank: 1 },
+            &z,
+            &mask(4, &[]),
+            0,
+            2,
+            &mut st,
+        );
+        assert_eq!(s.experts.len(), 2);
+        assert!(s.experts.contains(&1), "top-1 kept");
+        assert!(!s.experts.contains(&3) || s.experts.contains(&3));
+        // rank-1 (expert 3) replaced by some non-top-2 expert
+        let replaced = s.experts.iter().any(|&e| e == 0 || e == 2);
+        assert!(replaced, "{:?}", s.experts);
+    }
+
+    #[test]
+    fn selection_always_distinct_and_ordered() {
+        prop_check("selection distinct + weight-ordered", 200, |g| {
+            let n = g.range(4, 64);
+            let k = g.range(1, 8.min(n));
+            let z = g.vec_f32(n, 2.0);
+            let m_cached = g.range(0, n);
+            let cached = g.distinct(m_cached, n);
+            let lambda = g.f32();
+            let strat = match g.range(0, 4) {
+                0 => Strategy::Original,
+                1 => Strategy::MaxRank { m: g.range(k, n + 1), j: 1 },
+                2 => Strategy::CumsumThreshold { p: g.f32(), j: 1 },
+                _ => Strategy::CachePrior {
+                    lambda,
+                    j: 1,
+                    delta: DeltaMode::RunningAvg,
+                },
+            };
+            let mut st = RouterState::new(1, g.seed);
+            let s = select(&strat, &z, &mask(n, &cached), 0, k, &mut st);
+            if s.experts.len() != k {
+                return Err(format!("len {} != {k}", s.experts.len()));
+            }
+            let mut d = s.experts.clone();
+            d.sort_unstable();
+            d.dedup();
+            if d.len() != k {
+                return Err("duplicates".into());
+            }
+            for w in s.experts.windows(2) {
+                if s.weights[w[0] as usize] < s.weights[w[1] as usize] {
+                    return Err("not weight-ordered".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn top_j_always_selected() {
+        prop_check("top-J guarantee", 200, |g| {
+            let n = g.range(4, 64);
+            let k = g.range(2, 8.min(n));
+            let j = g.range(1, k);
+            let z = g.vec_f32(n, 2.0);
+            let m_cached = g.range(0, n);
+            let cached = g.distinct(m_cached, n);
+            let strat = match g.range(0, 3) {
+                0 => Strategy::MaxRank { m: g.range(k, n + 1), j },
+                1 => Strategy::CumsumThreshold { p: g.f32(), j },
+                _ => Strategy::CachePrior {
+                    lambda: g.f32(),
+                    j,
+                    delta: DeltaMode::PerToken,
+                },
+            };
+            let mut st = RouterState::new(1, g.seed);
+            let s = select(&strat, &z, &mask(n, &cached), 0, k, &mut st);
+            let r = ranking(&s.weights);
+            for &e in r.iter().take(j) {
+                if !s.experts.contains(&e) {
+                    return Err(format!(
+                        "top-J expert {e} missing from {:?}",
+                        s.experts
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gate_coefficients_renorm() {
+        let w = vec![0.1f32, 0.2, 0.3, 0.4];
+        let c = gate_coefficients(&w, &[3, 1], true);
+        assert!((c.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!((c[0] / c[1] - 2.0).abs() < 1e-5);
+        let c2 = gate_coefficients(&w, &[3, 1], false);
+        assert_eq!(c2, vec![0.4, 0.2]);
+    }
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for s in [
+            "original",
+            "pruning:1",
+            "swap:2",
+            "max-rank:6:1",
+            "cumsum:0.7:2",
+            "cache-prior:0.5:1",
+        ] {
+            let st = Strategy::parse(s).unwrap();
+            assert_eq!(Strategy::parse(&st.label()).unwrap(), st);
+        }
+        assert!(Strategy::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,194 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, PJRT C API, CPU client):
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute_b`. Executables are compiled once at load;
+//! all hot-path state (KV caches, expert weights) stays device-resident as
+//! `PjRtBuffer`s — the host only sees small vectors (router logits, final
+//! logits).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use crate::config::ModelConfig;
+use crate::util::json::{self, Json};
+
+/// Shape+dtype of one component argument/output (from manifest.json).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Spec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl Spec {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Spec {
+            shape: j
+                .req("shape")?
+                .as_array()
+                .context("shape")?
+                .iter()
+                .map(|v| v.as_usize().unwrap_or(0))
+                .collect(),
+            dtype: j.req("dtype")?.as_str().context("dtype")?.to_string(),
+        })
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+pub struct Component {
+    pub name: String,
+    pub exe: PjRtLoadedExecutable,
+    pub args: Vec<Spec>,
+    pub outputs: Vec<Spec>,
+}
+
+/// A loaded model runtime: one compiled executable per AOT component.
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub config: ModelConfig,
+    pub components: HashMap<String, Component>,
+    pub artifact_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load `artifacts/<cfg>/manifest.json` and compile every component.
+    pub fn load(artifact_dir: &Path) -> Result<Self> {
+        let client = PjRtClient::cpu().map_err(to_anyhow)?;
+        Self::load_with_client(client, artifact_dir)
+    }
+
+    pub fn load_with_client(client: PjRtClient, artifact_dir: &Path) -> Result<Self> {
+        let manifest_path = artifact_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {}", manifest_path.display()))?;
+        let manifest = json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let config = ModelConfig::from_json(manifest.req("config")?)?;
+        let mut components = HashMap::new();
+        for (name, comp) in manifest
+            .req("components")?
+            .as_object()
+            .context("components")?
+        {
+            let file = comp.req("file")?.as_str().context("file")?;
+            let hlo_path = artifact_dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                hlo_path.to_str().context("path utf8")?,
+            )
+            .map_err(to_anyhow)
+            .with_context(|| format!("parse {}", hlo_path.display()))?;
+            let computation = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&computation).map_err(to_anyhow)?;
+            let args = comp
+                .req("args")?
+                .as_array()
+                .context("args")?
+                .iter()
+                .map(Spec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = comp
+                .req("outputs")?
+                .as_array()
+                .context("outputs")?
+                .iter()
+                .map(Spec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            components.insert(
+                name.clone(),
+                Component { name: name.clone(), exe, args, outputs },
+            );
+        }
+        Ok(Runtime {
+            client,
+            config,
+            components,
+            artifact_dir: artifact_dir.to_path_buf(),
+        })
+    }
+
+    pub fn component(&self, name: &str) -> Result<&Component> {
+        self.components
+            .get(name)
+            .with_context(|| format!("component {name:?} not loaded"))
+    }
+
+    // ---------------- buffer helpers ----------------
+
+    /// Upload an f32 host slice as a device buffer.
+    pub fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(to_anyhow)
+    }
+
+    /// Upload an i32 scalar.
+    pub fn buf_i32_scalar(&self, v: i32) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(&[v], &[], None)
+            .map_err(to_anyhow)
+    }
+
+    /// Zero-filled f32 buffer (KV-cache init).
+    pub fn buf_zeros(&self, dims: &[usize]) -> Result<PjRtBuffer> {
+        let n: usize = dims.iter().product();
+        self.buf_f32(&vec![0f32; n], dims)
+    }
+
+    /// Download an f32 buffer to a host vector.
+    pub fn to_vec_f32(&self, buf: &PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buf.to_literal_sync().map_err(to_anyhow)?;
+        lit.to_vec::<f32>().map_err(to_anyhow)
+    }
+
+    /// Execute a component on device buffers and decompose the tuple output.
+    ///
+    /// The AOT artifacts are lowered with `return_tuple=True`; xla 0.1.6's
+    /// PJRT wrapper returns that tuple as ONE buffer, so we download it and
+    /// split into per-output literals. Components are therefore designed to
+    /// return only *small* tensors (h, logits, per-token K/V slices).
+    pub fn run(&self, name: &str, args: &[&PjRtBuffer]) -> Result<Vec<Literal>> {
+        let comp = self.component(name)?;
+        anyhow::ensure!(
+            args.len() == comp.args.len(),
+            "{name}: {} args given, {} expected",
+            args.len(),
+            comp.args.len()
+        );
+        let outs = comp.exe.execute_b(args).map_err(to_anyhow)?;
+        let replica = outs.into_iter().next().context("no replica output")?;
+        let first = replica.into_iter().next().context("no output buffer")?;
+        let mut lit = first.to_literal_sync().map_err(to_anyhow)?;
+        lit.decompose_tuple().map_err(to_anyhow)
+    }
+
+    /// Extract an f32 vector from an output literal.
+    pub fn lit_f32(lit: &Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>().map_err(to_anyhow)
+    }
+}
+
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e}")
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime is integration-tested against real artifacts in rust/tests/
+    // (requires `make artifacts`); Spec parsing is unit-tested here.
+    use super::*;
+
+    #[test]
+    fn spec_from_json() {
+        let j = json::parse(r#"{"shape":[4,8],"dtype":"float32"}"#).unwrap();
+        let s = Spec::from_json(&j).unwrap();
+        assert_eq!(s.shape, vec![4, 8]);
+        assert_eq!(s.elems(), 32);
+        assert_eq!(s.dtype, "float32");
+    }
+}

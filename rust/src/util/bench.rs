@@ -1,0 +1,93 @@
+//! Hand-rolled micro-benchmark harness (criterion is not in the offline
+//! image). Warmup + N timed iterations, reports median / p10 / p90.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<40} {:>12.1} ns/iter (p10 {:>10.1}, p90 {:>10.1}, n={})",
+            self.name, self.median_ns, self.p10_ns, self.p90_ns, self.iters
+        );
+    }
+}
+
+/// Time `f` with `warmup` + `iters` runs. Each run's duration is measured
+/// individually; use [`bench_batched`] for sub-microsecond bodies.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    summarize(name, samples)
+}
+
+/// For very fast bodies: run `inner` calls per sample.
+pub fn bench_batched<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    samples_n: usize,
+    inner: usize,
+    mut f: F,
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(samples_n);
+    for _ in 0..samples_n {
+        let t = Instant::now();
+        for _ in 0..inner {
+            f();
+        }
+        samples.push(t.elapsed().as_nanos() as f64 / inner as f64);
+    }
+    summarize(name, samples)
+}
+
+fn summarize(name: &str, samples: Vec<f64>) -> BenchResult {
+    use super::stats::percentile;
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        median_ns: percentile(&samples, 50.0),
+        p10_ns: percentile(&samples, 10.0),
+        p90_ns: percentile(&samples, 90.0),
+    }
+}
+
+/// `black_box` stand-in to defeat optimisation of benched expressions.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut acc = 0u64;
+        let r = bench("noop-ish", 2, 10, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert_eq!(r.iters, 10);
+        assert!(r.median_ns >= 0.0);
+        assert!(r.p10_ns <= r.p90_ns);
+    }
+}

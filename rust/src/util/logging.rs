@@ -1,0 +1,53 @@
+//! Tiny leveled logger. `MOE_LOG=debug|info|warn|error` (default info).
+
+use std::io::Write;
+use std::sync::OnceLock;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+fn threshold() -> Level {
+    static LEVEL: OnceLock<Level> = OnceLock::new();
+    *LEVEL.get_or_init(|| match std::env::var("MOE_LOG").as_deref() {
+        Ok("debug") => Level::Debug,
+        Ok("warn") => Level::Warn,
+        Ok("error") => Level::Error,
+        _ => Level::Info,
+    })
+}
+
+pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
+    if level < threshold() {
+        return;
+    }
+    let tag = match level {
+        Level::Debug => "DEBUG",
+        Level::Info => "INFO ",
+        Level::Warn => "WARN ",
+        Level::Error => "ERROR",
+    };
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[{tag}] {args}");
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! warn_log {
+    ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! error {
+    ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, format_args!($($t)*)) };
+}

@@ -1,0 +1,16 @@
+//! Offline-image substrates.
+//!
+//! The build environment vendors only ~100 crates (no serde, rand, clap,
+//! tokio, criterion or proptest), so this module provides the small,
+//! dependency-free versions of those facilities the rest of the crate
+//! needs: a JSON parser, a deterministic RNG, descriptive statistics, a
+//! property-testing mini-framework, a leveled logger and a scoped
+//! thread pool.
+
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

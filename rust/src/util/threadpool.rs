@@ -1,0 +1,85 @@
+//! Minimal scoped thread pool (tokio/rayon are not in the offline image).
+//!
+//! Sweeps use this to run independent evaluation points in parallel. On the
+//! single-core CI image it degrades to near-sequential execution but keeps
+//! the same API on multi-core hosts.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Run `jobs` closures on up to `workers` threads; returns results in job
+/// order. Panics in jobs propagate.
+pub fn run_parallel<T, F>(workers: usize, jobs: Vec<F>) -> Vec<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let workers = workers.max(1).min(jobs.len().max(1));
+    if workers <= 1 {
+        return jobs.into_iter().map(|j| j()).collect();
+    }
+    let queue: Arc<Mutex<Vec<(usize, F)>>> =
+        Arc::new(Mutex::new(jobs.into_iter().enumerate().rev().collect()));
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    let mut handles = Vec::new();
+    for _ in 0..workers {
+        let queue = Arc::clone(&queue);
+        let tx = tx.clone();
+        handles.push(std::thread::spawn(move || loop {
+            let job = queue.lock().unwrap().pop();
+            match job {
+                Some((idx, f)) => {
+                    let out = f();
+                    if tx.send((idx, out)).is_err() {
+                        return;
+                    }
+                }
+                None => return,
+            }
+        }));
+    }
+    drop(tx);
+    let mut results: Vec<Option<T>> = Vec::new();
+    for (idx, out) in rx {
+        if results.len() <= idx {
+            results.resize_with(idx + 1, || None);
+        }
+        results[idx] = Some(out);
+    }
+    for h in handles {
+        h.join().expect("worker panicked");
+    }
+    results.into_iter().map(|o| o.expect("missing result")).collect()
+}
+
+/// Default worker count: available parallelism (>= 1).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let jobs: Vec<_> = (0..37)
+            .map(|i| move || i * i)
+            .collect();
+        let out = run_parallel(4, jobs);
+        assert_eq!(out, (0..37).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_sequential() {
+        let jobs: Vec<_> = (0..5).map(|i| move || i).collect();
+        assert_eq!(run_parallel(1, jobs), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_jobs() {
+        let jobs: Vec<Box<dyn FnOnce() -> i32 + Send>> = vec![];
+        let out: Vec<i32> = run_parallel(4, jobs);
+        assert!(out.is_empty());
+    }
+}

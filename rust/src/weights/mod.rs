@@ -1,0 +1,330 @@
+//! Flash-image reader: the binary produced by `python/compile/export.py`.
+//!
+//! The image *is* the simulated flash device: every expert fetch is an
+//! actual `pread` of the expert's contiguous quantized span, followed by
+//! dequantization into f32 — the same bytes a real device would move over
+//! UFS. The [`crate::flash::FlashSim`] charges virtual time for those bytes.
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::os::unix::fs::FileExt;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ModelConfig, Quant};
+use crate::quant;
+use crate::util::json::{self, Json};
+
+pub const MAGIC: &[u8; 8] = b"MOEFLSH1";
+pub const ALIGN: u64 = 64;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorMeta {
+    pub name: String,
+    pub dtype: String, // "f32" | "i8" | "i4"
+    pub shape: Vec<usize>,
+    pub offset: u64,
+    pub bytes: u64,
+    pub scales_offset: i64, // -1 when f32
+    pub scales_bytes: u64,
+    pub kind: String, // "static" | "expert" | "shared"
+    pub layer: i64,
+    pub expert: i64,
+    pub part: String,
+}
+
+impl TensorMeta {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Bytes a flash read of this tensor moves (payload + scales).
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes + self.scales_bytes
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ExpertSpan {
+    pub layer: usize,
+    pub expert: usize,
+    pub kind: String,
+    pub offset: u64,
+    pub bytes: u64,
+}
+
+/// An opened flash image. Cheap to clone the metadata; reads go through the
+/// shared file handle.
+pub struct FlashImage {
+    file: File,
+    payload_start: u64,
+    pub quant: Quant,
+    pub config: ModelConfig,
+    pub tensors: Vec<TensorMeta>,
+    by_name: HashMap<String, usize>,
+    /// (layer, expert, is_shared) -> span index
+    spans: HashMap<(usize, usize, bool), ExpertSpan>,
+    pub file_bytes: u64,
+}
+
+/// Dequantized expert weights ready for upload: w1, w3 [D*F], w2 [F*D].
+#[derive(Debug, Clone, Default)]
+pub struct ExpertWeights {
+    pub w1: Vec<f32>,
+    pub w3: Vec<f32>,
+    pub w2: Vec<f32>,
+    /// Quantized bytes this fetch read from "flash".
+    pub flash_bytes: u64,
+}
+
+impl FlashImage {
+    pub fn open(path: &Path) -> Result<Self> {
+        let file = File::open(path)
+            .with_context(|| format!("open flash image {}", path.display()))?;
+        let file_bytes = file.metadata()?.len();
+        let mut head = [0u8; 12];
+        file.read_exact_at(&mut head, 0)?;
+        if &head[..8] != MAGIC {
+            bail!("{}: bad magic", path.display());
+        }
+        let hlen = u32::from_le_bytes(head[8..12].try_into().unwrap()) as u64;
+        let mut hbuf = vec![0u8; hlen as usize];
+        file.read_exact_at(&mut hbuf, 12)?;
+        let header: Json = json::parse(std::str::from_utf8(&hbuf)?)
+            .map_err(|e| anyhow::anyhow!("header json: {e}"))?;
+        let mut payload_start = 12 + hlen;
+        payload_start += (ALIGN - payload_start % ALIGN) % ALIGN;
+
+        let config = ModelConfig::from_json(header.req("config")?)?;
+        let quant = Quant::parse(header.req("quant")?.as_str().context("quant")?)?;
+
+        let mut tensors = Vec::new();
+        for t in header.req("tensors")?.as_array().context("tensors")? {
+            tensors.push(TensorMeta {
+                name: t.req("name")?.as_str().context("name")?.to_string(),
+                dtype: t.req("dtype")?.as_str().context("dtype")?.to_string(),
+                shape: t
+                    .req("shape")?
+                    .as_array()
+                    .context("shape")?
+                    .iter()
+                    .map(|v| v.as_usize().unwrap_or(0))
+                    .collect(),
+                offset: t.req("offset")?.as_i64().context("offset")? as u64,
+                bytes: t.req("bytes")?.as_i64().context("bytes")? as u64,
+                scales_offset: t.req("scales_offset")?.as_i64().context("so")?,
+                scales_bytes: t.req("scales_bytes")?.as_i64().context("sb")? as u64,
+                kind: t.req("kind")?.as_str().context("kind")?.to_string(),
+                layer: t.req("layer")?.as_i64().context("layer")?,
+                expert: t.req("expert")?.as_i64().context("expert")?,
+                part: t.req("part")?.as_str().context("part")?.to_string(),
+            });
+        }
+        let by_name = tensors
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.name.clone(), i))
+            .collect();
+        let mut spans = HashMap::new();
+        for s in header.req("expert_spans")?.as_array().context("spans")? {
+            let span = ExpertSpan {
+                layer: s.req("layer")?.as_usize().context("layer")?,
+                expert: s.req("expert")?.as_usize().context("expert")?,
+                kind: s.req("kind")?.as_str().context("kind")?.to_string(),
+                offset: s.req("offset")?.as_i64().context("offset")? as u64,
+                bytes: s.req("bytes")?.as_i64().context("bytes")? as u64,
+            };
+            spans.insert((span.layer, span.expert, span.kind == "shared"), span);
+        }
+        Ok(FlashImage {
+            file,
+            payload_start,
+            quant,
+            config,
+            tensors,
+            by_name,
+            spans,
+            file_bytes,
+        })
+    }
+
+    /// Open `artifacts/<cfg>/weights_<quant>.bin`.
+    pub fn open_artifact(artifacts: &Path, cfg_name: &str, quant: Quant) -> Result<Self> {
+        let path = artifacts
+            .join(cfg_name)
+            .join(format!("weights_{}.bin", quant.file_tag()));
+        Self::open(&path)
+    }
+
+    pub fn tensor(&self, name: &str) -> Result<&TensorMeta> {
+        self.by_name
+            .get(name)
+            .map(|&i| &self.tensors[i])
+            .with_context(|| format!("tensor {name:?} not in image"))
+    }
+
+    fn read_raw(&self, offset: u64, len: u64) -> Result<Vec<u8>> {
+        let mut buf = vec![0u8; len as usize];
+        self.file
+            .read_exact_at(&mut buf, self.payload_start + offset)?;
+        Ok(buf)
+    }
+
+    fn read_scales(&self, t: &TensorMeta) -> Result<Vec<f32>> {
+        let raw = self.read_raw(t.scales_offset as u64, t.scales_bytes)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Read + dequantize one tensor to f32 (row-major).
+    pub fn read_f32(&self, name: &str) -> Result<Vec<f32>> {
+        let t = self.tensor(name)?.clone();
+        let raw = self.read_raw(t.offset, t.bytes)?;
+        match t.dtype.as_str() {
+            "f32" => Ok(raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect()),
+            "i8" => {
+                let scales = self.read_scales(&t)?;
+                let mut out = Vec::new();
+                quant::dequant_i8(&raw, &scales, &mut out);
+                Ok(out)
+            }
+            "i4" => {
+                let scales = self.read_scales(&t)?;
+                let mut out = Vec::new();
+                quant::dequant_i4(&raw, t.elems(), &scales, &mut out);
+                Ok(out)
+            }
+            d => bail!("unknown dtype {d:?}"),
+        }
+    }
+
+    /// The contiguous flash span (bytes) a miss on (layer, expert) reads.
+    pub fn expert_span(&self, layer: usize, expert: usize, shared: bool) -> Result<&ExpertSpan> {
+        self.spans
+            .get(&(layer, expert, shared))
+            .with_context(|| format!("no expert span ({layer}, {expert}, shared={shared})"))
+    }
+
+    /// Fetch one expert: ONE contiguous flash read of its span, then
+    /// dequantize the three parts. This is the cache-miss path.
+    pub fn fetch_expert(&self, layer: usize, expert: usize, shared: bool) -> Result<ExpertWeights> {
+        let span = self.expert_span(layer, expert, shared)?.clone();
+        let base = span.offset;
+        let raw = self.read_raw(base, span.bytes)?;
+        let prefix = if shared { "shared" } else { "experts" };
+        let mut out = ExpertWeights {
+            flash_bytes: span.bytes,
+            ..Default::default()
+        };
+        for part in ["w1", "w3", "w2"] {
+            let name = format!("layers.{layer}.{prefix}.{expert}.{part}");
+            let t = self.tensor(&name)?.clone();
+            anyhow::ensure!(
+                t.offset >= base && t.offset + t.bytes <= base + span.bytes,
+                "tensor {name} outside its span"
+            );
+            let data = &raw[(t.offset - base) as usize..(t.offset - base + t.bytes) as usize];
+            let dst = match part {
+                "w1" => &mut out.w1,
+                "w3" => &mut out.w3,
+                _ => &mut out.w2,
+            };
+            match t.dtype.as_str() {
+                "f32" => {
+                    *dst = data
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                }
+                "i8" => {
+                    let s = &raw[(t.scales_offset as u64 - base) as usize
+                        ..(t.scales_offset as u64 - base + t.scales_bytes) as usize];
+                    let scales: Vec<f32> = s
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    quant::dequant_i8(data, &scales, dst);
+                }
+                "i4" => {
+                    let s = &raw[(t.scales_offset as u64 - base) as usize
+                        ..(t.scales_offset as u64 - base + t.scales_bytes) as usize];
+                    let scales: Vec<f32> = s
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    quant::dequant_i4(data, t.elems(), &scales, dst);
+                }
+                d => bail!("unknown dtype {d:?}"),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Total bytes of all routed-expert spans (the "cacheable" set).
+    pub fn routed_expert_bytes(&self) -> u64 {
+        self.spans
+            .values()
+            .filter(|s| s.kind == "expert")
+            .map(|s| s.bytes)
+            .sum()
+    }
+
+    /// Bytes of one routed expert span (they are all equal by construction).
+    pub fn bytes_per_expert(&self) -> u64 {
+        self.spans
+            .values()
+            .find(|s| s.kind == "expert")
+            .map(|s| s.bytes)
+            .unwrap_or(0)
+    }
+
+    /// Static (always-DRAM-resident) bytes: static tensors + shared experts.
+    pub fn static_bytes(&self) -> u64 {
+        let st: u64 = self
+            .tensors
+            .iter()
+            .filter(|t| t.kind == "static")
+            .map(|t| t.total_bytes())
+            .sum();
+        let sh: u64 = self
+            .spans
+            .values()
+            .filter(|s| s.kind == "shared")
+            .map(|s| s.bytes)
+            .sum();
+        st + sh
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The reader is exercised end-to-end (against images produced by
+    // python/compile/export.py) in rust/tests/weights_roundtrip.rs; here we
+    // only test pure helpers.
+    use super::*;
+
+    #[test]
+    fn tensor_meta_helpers() {
+        let t = TensorMeta {
+            name: "x".into(),
+            dtype: "i4".into(),
+            shape: vec![4, 6],
+            offset: 0,
+            bytes: 12,
+            scales_offset: 12,
+            scales_bytes: 24,
+            kind: "expert".into(),
+            layer: 0,
+            expert: 1,
+            part: "w1".into(),
+        };
+        assert_eq!(t.elems(), 24);
+        assert_eq!(t.total_bytes(), 36);
+    }
+}

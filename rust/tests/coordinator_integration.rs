@@ -1,0 +1,107 @@
+//! Serving-loop integration: the coordinator thread owns the engine,
+//! requests queue FCFS, metrics accumulate. Requires `make artifacts`.
+
+use moe_cache::cache::Policy;
+use moe_cache::config::{DeviceProfile, Quant};
+use moe_cache::coordinator::{Coordinator, Request, ServerConfig};
+use moe_cache::eval::EvalData;
+use moe_cache::model::{Engine, EngineOptions};
+use moe_cache::routing::Strategy;
+
+fn spawn_coordinator() -> Coordinator {
+    let arts = moe_cache::artifacts_dir();
+    assert!(arts.join("qwen-tiny").join("manifest.json").exists(), "make artifacts");
+    Coordinator::spawn(
+        move || {
+            Engine::load(
+                &arts,
+                "qwen-tiny",
+                EngineOptions {
+                    quant: Quant::Int4,
+                    cache_capacity: 30,
+                    policy: Policy::Lru,
+                    strategy: Strategy::CachePrior {
+                        lambda: 0.5,
+                        j: 2,
+                        delta: moe_cache::routing::DeltaMode::RunningAvg,
+                    },
+                    device: DeviceProfile::device_16gb(),
+                    seed: 1,
+                    record_trace: false,
+                    record_logits: false,
+                },
+            )
+        },
+        ServerConfig::default(),
+    )
+    .expect("spawn")
+}
+
+#[test]
+fn serves_requests_and_reports_metrics() {
+    let data = EvalData::load(&moe_cache::artifacts_dir().join("data")).unwrap();
+    let coord = spawn_coordinator();
+    let mut total_tokens = 0;
+    for (i, prompt) in data.prompts_short.iter().take(2).enumerate() {
+        let res = coord
+            .submit(Request {
+                id: i as u64,
+                prompt: prompt.clone(),
+                max_new: 12,
+                temperature: 0.8,
+                stop_token: None,
+            })
+            .unwrap();
+        assert_eq!(res.id, i as u64);
+        assert!(!res.generated.is_empty());
+        assert!(res.ttft_s > 0.0);
+        assert!(res.cache_hits + res.cache_misses > 0);
+        total_tokens += res.generated.len();
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.completed, 2);
+    assert_eq!(m.ttft_s.len(), 2);
+    assert!(total_tokens > 0);
+}
+
+#[test]
+fn concurrent_submitters_all_complete() {
+    let data = EvalData::load(&moe_cache::artifacts_dir().join("data")).unwrap();
+    let coord = std::sync::Arc::new(spawn_coordinator());
+    let mut handles = Vec::new();
+    for i in 0..3u64 {
+        let coord = coord.clone();
+        let prompt = data.prompts_short[i as usize % data.prompts_short.len()].clone();
+        handles.push(std::thread::spawn(move || {
+            coord
+                .submit(Request {
+                    id: i,
+                    prompt,
+                    max_new: 6,
+                    temperature: 0.0,
+                    stop_token: None,
+                })
+                .unwrap()
+        }));
+    }
+    for h in handles {
+        let r = h.join().unwrap();
+        assert_eq!(r.generated.len(), 6);
+    }
+}
+
+#[test]
+fn oversized_prompt_is_clamped_not_fatal() {
+    let coord = spawn_coordinator();
+    let long: Vec<u32> = (0..2000).map(|i| 24 + (i % 400) as u32).collect();
+    let res = coord
+        .submit(Request {
+            id: 99,
+            prompt: long,
+            max_new: 4,
+            temperature: 0.0,
+            stop_token: None,
+        })
+        .unwrap();
+    assert_eq!(res.generated.len(), 4);
+}

@@ -1,0 +1,110 @@
+//! Rust <-> JAX parity: the composed AOT executables + Rust gate math must
+//! reproduce `python/compile/model.decode_step` exactly (within f32
+//! accumulation tolerance across the PJRT boundary).
+//!
+//! Requires `make artifacts`. Covers: component composition, KV-cache
+//! handling, softmax/top-K/gate parity, flash-image dequantization (the
+//! engine reads weights through the f32 image).
+
+use std::path::PathBuf;
+
+use moe_cache::cache::Policy;
+use moe_cache::config::{DeviceProfile, Quant};
+use moe_cache::model::{Engine, EngineOptions};
+use moe_cache::routing::Strategy;
+use moe_cache::util::json;
+
+fn artifacts() -> PathBuf {
+    let p = moe_cache::artifacts_dir();
+    assert!(
+        p.join("qwen-tiny").join("manifest.json").exists(),
+        "run `make artifacts` first"
+    );
+    p
+}
+
+fn run_parity(model: &str) {
+    let arts = artifacts();
+    let text = std::fs::read_to_string(arts.join(model).join("parity.json"))
+        .expect("parity.json (make artifacts)");
+    let parity = json::parse(&text).unwrap();
+    let steps = parity.get("steps").unwrap().as_array().unwrap();
+
+    // f32 image + full cache + original routing == the JAX reference run.
+    let opts = EngineOptions {
+        quant: Quant::F32,
+        cache_capacity: 64, // >= n_experts for every config: no evictions
+        policy: Policy::Lru,
+        strategy: Strategy::Original,
+        device: DeviceProfile::device_16gb(),
+        seed: 0,
+        record_trace: true,
+        record_logits: false,
+    };
+    let mut engine = Engine::load(&arts, model, opts).expect("engine load");
+    let k = engine.cfg.top_k;
+
+    let mut max_logit_err = 0f32;
+    for (si, step) in steps.iter().enumerate() {
+        let tok = step.get("token").unwrap().as_usize().unwrap() as u32;
+        let logits = engine.step(tok).expect("step");
+        let want: Vec<f32> = step
+            .get("logits")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        assert_eq!(logits.len(), want.len());
+        for (a, b) in logits.iter().zip(&want) {
+            max_logit_err = max_logit_err.max((a - b).abs());
+        }
+        // Per-layer expert selection must match the JAX top-K exactly.
+        let layers = step.get("layers").unwrap().as_array().unwrap();
+        let got_sel = &engine.trace.selections[si];
+        for (li, layer) in layers.iter().enumerate() {
+            let mut want_sel: Vec<u32> = layer
+                .get("selected")
+                .unwrap()
+                .as_array()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_usize().unwrap() as u32)
+                .collect();
+            let mut got = got_sel[li].clone();
+            want_sel.sort_unstable();
+            got.sort_unstable();
+            assert_eq!(
+                got, want_sel,
+                "{model} step {si} layer {li}: selection mismatch"
+            );
+            assert_eq!(got.len(), k);
+        }
+    }
+    assert!(
+        max_logit_err < 2e-3,
+        "{model}: max logit error {max_logit_err} too large"
+    );
+    println!("{model}: parity ok over {} steps (max err {max_logit_err:.2e})", steps.len());
+}
+
+#[test]
+fn parity_mixtral_tiny() {
+    run_parity("mixtral-tiny");
+}
+
+#[test]
+fn parity_phi_tiny() {
+    run_parity("phi-tiny");
+}
+
+#[test]
+fn parity_deepseek_tiny() {
+    run_parity("deepseek-tiny");
+}
+
+#[test]
+fn parity_qwen_tiny() {
+    run_parity("qwen-tiny");
+}
