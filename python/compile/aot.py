@@ -13,8 +13,15 @@ Per config we emit artifacts/<name>/:
     experts.hlo.txt  (xn, w1s[E,..], w3s, w2s, coef[E])     -> (y,)
     expert1.hlo.txt  (xn, w1, w3, w2)                       -> (y,)
     lm_head.hlo.txt  (h, lnf, head_w)                       -> (logits,)
+    kv_append.hlo.txt(cache[H,T,hd], new[H,1,hd], pos s32[])-> cache'
     manifest.json    component arg/output shapes + config — the Rust
                      runtime loads executables strictly from this manifest.
+
+`kv_append` is a *raw* component (manifest `"raw": true`): it is lowered
+with return_tuple=False so its single output is a plain array the PJRT
+wrapper hands back as one device buffer. The Rust engine keeps the KV
+caches device-resident by feeding that buffer into the next dispatch —
+only the [H,1,hd] slice crosses the host boundary per layer per token.
 
 The attention block and the expert FFN lower through the Pallas kernels
 (interpret=True), so the L1 kernels are *inside* these artifacts.
@@ -35,11 +42,24 @@ F32 = jnp.float32
 I32 = jnp.int32
 
 
-def to_hlo_text(lowered) -> str:
+def to_hlo_text(lowered, return_tuple=True) -> str:
     mlir_mod = lowered.compiler_ir("stablehlo")
     comp = xc._xla.mlir.mlir_module_to_xla_computation(
-        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple)
     return comp.as_hlo_text()
+
+
+# Components lowered with return_tuple=False (single-array output). Their
+# PJRT result is ONE device buffer that the Rust runtime keeps resident
+# (`Runtime::run_raw`) instead of downloading + tuple-decomposing.
+RAW_COMPONENTS = frozenset({"kv_append"})
+
+# Buffer donation per component: kv_append donates the cache argument so
+# XLA records input_output_alias and can update the persistent KV buffer
+# in place instead of materializing a fresh [H,T,hd] copy per call. The
+# Rust engine never touches the donated input again after the call (the
+# returned buffer replaces it).
+DONATE_ARGNUMS = {"kv_append": (0,)}
 
 
 def spec(shape, dtype=F32):
@@ -75,6 +95,11 @@ def component_signatures(cfg: ModelConfig):
     def lm_head_fn(h, lnf, hw):
         return (model.lm_head_step(cfg, h, lnf, hw),)
 
+    def kv_append_fn(cache, new, pos):
+        # Raw component (single array output): writes the token's [H,1,hd]
+        # K or V slice into the persistent device-resident cache at `pos`.
+        return jax.lax.dynamic_update_slice(cache, new, (0, pos, 0))
+
     return {
         "embed": (embed_fn,
                   [spec((v, d)), spec((t, d)), spec((), I32), spec((), I32)]),
@@ -94,6 +119,9 @@ def component_signatures(cfg: ModelConfig):
                     [spec((1, d)), spec((d, f)), spec((d, f)),
                      spec((f, d))]),
         "lm_head": (lm_head_fn, [spec((1, d)), spec((d,)), spec((d, v))]),
+        "kv_append": (kv_append_fn,
+                      [spec(h_kv), spec((cfg.n_heads, 1, cfg.head_dim)),
+                       spec((), I32)]),
     }
 
 
@@ -101,12 +129,16 @@ def lower_config(cfg: ModelConfig, out_dir: str) -> dict:
     os.makedirs(out_dir, exist_ok=True)
     manifest = {"config": cfg.to_dict(), "components": {}}
     for name, (fn, args) in component_signatures(cfg).items():
-        lowered = jax.jit(fn).lower(*args)
-        text = to_hlo_text(lowered)
+        raw = name in RAW_COMPONENTS
+        donate = DONATE_ARGNUMS.get(name, ())
+        lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+        text = to_hlo_text(lowered, return_tuple=not raw)
         fname = f"{name}.hlo.txt"
         with open(os.path.join(out_dir, fname), "w") as fh:
             fh.write(text)
         outs = jax.eval_shape(fn, *args)
+        if not isinstance(outs, tuple):
+            outs = (outs,)
         manifest["components"][name] = {
             "file": fname,
             "args": [{"shape": list(a.shape), "dtype": str(a.dtype)}
@@ -114,6 +146,8 @@ def lower_config(cfg: ModelConfig, out_dir: str) -> dict:
             "outputs": [{"shape": list(o.shape), "dtype": str(o.dtype)}
                         for o in outs],
         }
+        if raw:
+            manifest["components"][name]["raw"] = True
         print(f"[aot] {cfg.name}/{fname}: {len(text)} chars")
     with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
         json.dump(manifest, fh, indent=1)

@@ -19,7 +19,7 @@ const LAYER: usize = 1;
 fn render(engine: &mut Engine, toks: &[u32], label: &str, warm: Option<u64>) -> anyhow::Result<f64> {
     engine.reset_all();
     if let Some(seed) = warm {
-        engine.warm_caches_random(seed);
+        engine.warm_caches_random(seed)?;
     }
     println!("\n--- {label} ---");
     println!("rows = tokens (every 4th), cols = expert id 0..{}", engine.cfg.n_experts - 1);

@@ -1,22 +1,36 @@
 //! Micro-benchmarks of the L3 hot path (perf-pass instrumentation).
 //!
-//! Measures each engine sub-operation in isolation: PJRT dispatch per
-//! component, KV upload, expert staging memcpy, cache ops, rerank, flash
-//! fetch+dequant. This is the profile that drives EXPERIMENTS.md §Perf.
+//! Measures the decode loop end-to-end with its per-stage breakdown
+//! (upload / stage / fetch / compute, from `StepStats`), plus each
+//! sub-operation in isolation — and, for the stages the device-resident
+//! refactor rewrote, the *seed-equivalent* cost next to the optimized
+//! cost:
+//!
+//! * KV movement: full `[H,T,hd]` re-upload per layer (seed) vs the
+//!   `[H,1,hd]` slice upload (+ raw `kv_append` dispatch when the
+//!   artifacts provide it).
+//! * Expert staging: full stacked memcpy + 3-stack upload every layer
+//!   (seed) vs the slot-arena staged-reuse path (coefficient upload only
+//!   when the selection repeats).
+//! * Flash fetch: allocating `fetch_expert` vs `fetch_expert_into` a
+//!   preallocated slot.
+//!
+//! Results land in `results/BENCH_hotpath.json` so the perf trajectory is
+//! tracked across PRs.
 //!
 //! Run: `cargo bench --offline --bench micro_hotpath`
 
 use moe_cache::cache::{ExpertCache, Policy};
 use moe_cache::config::{DeviceProfile, Quant};
-use moe_cache::model::{Engine, EngineOptions};
+use moe_cache::model::{Engine, EngineOptions, StepStats};
+use moe_cache::report::results_dir;
 use moe_cache::routing::{self, DeltaMode, RouterState, Strategy};
 use moe_cache::util::bench::{bench, bench_batched, black_box};
+use moe_cache::util::json::Json;
 use moe_cache::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
-    let arts = moe_cache::artifacts_dir();
-    let model = std::env::var("MOE_MODEL").unwrap_or_else(|_| "qwen-tiny".into());
-    let opts = EngineOptions {
+fn opts() -> EngineOptions {
+    EngineOptions {
         quant: Quant::Int4,
         cache_capacity: 30,
         policy: Policy::Lru,
@@ -25,86 +39,206 @@ fn main() -> anyhow::Result<()> {
         seed: 1,
         record_trace: false,
         record_logits: false,
-    };
-    let mut engine = Engine::load(&arts, &model, opts)?;
-    println!("== micro_hotpath ({model}) ==\n");
+    }
+}
 
-    // ---- end-to-end step ----
+/// Drive `steps` decode steps and accumulate the per-stage breakdown.
+fn run_steps(engine: &mut Engine, steps: usize) -> (StepStats, f64) {
     let mut tok = 24u32;
-    bench("engine.step (end-to-end, 1 token)", 5, 40, || {
+    let mut acc = StepStats::default();
+    let t0 = std::time::Instant::now();
+    for _ in 0..steps {
         if engine.pos() + 1 >= engine.cfg.max_seq {
             engine.reset_sequence();
         }
         let l = engine.step(tok).unwrap();
         tok = 24 + (black_box(l[24] > 0.0) as u32);
-    })
-    .print();
+        let s = &engine.last_step;
+        acc.hits += s.hits;
+        acc.misses += s.misses;
+        acc.flash_bytes += s.flash_bytes;
+        acc.prefetch_hits += s.prefetch_hits;
+        acc.staged_slots_copied += s.staged_slots_copied;
+        acc.staged_uploads += s.staged_uploads;
+        acc.t_upload_s += s.t_upload_s;
+        acc.t_fetch_s += s.t_fetch_s;
+        acc.t_stage_s += s.t_stage_s;
+        acc.t_compute_s += s.t_compute_s;
+    }
+    (acc, t0.elapsed().as_secs_f64())
+}
 
-    // ---- component dispatches ----
-    let rt = &engine.rt;
+fn stage_row(name: &str, total_s: f64, steps: usize) -> (String, Json) {
+    (
+        format!("{name}_ns_per_token"),
+        Json::num(total_s * 1e9 / steps as f64),
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let arts = moe_cache::artifacts_dir();
+    let model = std::env::var("MOE_MODEL").unwrap_or_else(|_| "qwen-tiny".into());
+    let mut engine = Engine::load(&arts, &model, opts())?;
+    println!("== micro_hotpath ({model}) ==");
+    println!(
+        "kv device-resident: {} (raw kv_append component {})\n",
+        engine.kv_device_resident(),
+        if engine.kv_device_resident() { "present" } else { "absent — host-mirror fallback" }
+    );
+    let mut out: Vec<(String, Json)> = vec![
+        ("model".into(), Json::str(model.clone())),
+        ("kv_device_resident".into(), Json::Bool(engine.kv_device_resident())),
+    ];
+
+    // ---- end-to-end decode + per-stage breakdown (steady state) ----
+    let steps = 60usize;
+    run_steps(&mut engine, 20); // warm the cache into steady state
+    let (acc, wall_s) = run_steps(&mut engine, steps);
+    let per_tok_ns = wall_s * 1e9 / steps as f64;
+    println!("engine.step end-to-end: {:>12.1} ns/token (n={steps})", per_tok_ns);
+    println!(
+        "  breakdown/token: upload {:>9.1} ns | fetch {:>9.1} ns | stage {:>9.1} ns | compute {:>9.1} ns",
+        acc.t_upload_s * 1e9 / steps as f64,
+        acc.t_fetch_s * 1e9 / steps as f64,
+        acc.t_stage_s * 1e9 / steps as f64,
+        acc.t_compute_s * 1e9 / steps as f64,
+    );
+    println!(
+        "  hits {} misses {} staged-copies {} staged-uploads {} (of {} layer-steps)\n",
+        acc.hits,
+        acc.misses,
+        acc.staged_slots_copied,
+        acc.staged_uploads,
+        steps * engine.cfg.n_layers,
+    );
+    out.push(("step_ns_per_token".into(), Json::num(per_tok_ns)));
+    for (name, v) in [
+        stage_row("upload", acc.t_upload_s, steps),
+        stage_row("fetch", acc.t_fetch_s, steps),
+        stage_row("stage", acc.t_stage_s, steps),
+        stage_row("compute", acc.t_compute_s, steps),
+    ] {
+        out.push((name, v));
+    }
+    out.push(("hits".into(), Json::num(acc.hits as f64)));
+    out.push(("misses".into(), Json::num(acc.misses as f64)));
+    out.push(("staged_slots_copied".into(), Json::num(acc.staged_slots_copied as f64)));
+    out.push(("staged_uploads".into(), Json::num(acc.staged_uploads as f64)));
+
     let cfg = engine.cfg.clone();
-    let d = cfg.d_model;
-    let h = rt.buf_f32(&vec![0.1; d], &[1, d])?;
-    let ln = rt.buf_f32(&vec![1.0; d], &[d])?;
-    let w_dd = rt.buf_f32(&vec![0.01; d * d], &[d, d])?;
+    let (d, f, e_cnt) = (cfg.d_model, cfg.d_ff, cfg.n_ffn_calls());
     let kvshape = [cfg.n_heads, cfg.max_seq, cfg.head_dim];
-    let kvn = kvshape.iter().product::<usize>();
-    let kc = rt.buf_f32(&vec![0.0; kvn], &kvshape)?;
-    let vc = rt.buf_f32(&vec![0.0; kvn], &kvshape)?;
-    let pos = rt.buf_i32_scalar(5)?;
-    bench("attn dispatch (KV resident)", 5, 50, || {
-        black_box(
-            rt.run("attn", &[&h, &ln, &w_dd, &w_dd, &w_dd, &w_dd, &kc, &vc, &pos])
-                .unwrap(),
-        );
-    })
-    .print();
+    let kvn: usize = kvshape.iter().product();
+    let slice_shape = [cfg.n_heads, 1, cfg.head_dim];
+    let slice_n: usize = slice_shape.iter().product();
 
+    // ---- KV movement: seed (full re-upload) vs optimized (slice) ----
+    let rt = &engine.rt;
     let kv_host = vec![0f32; kvn];
-    bench("KV upload (one layer, K+V)", 5, 50, || {
+    let kv_full = bench("KV seed: full upload (one layer, K+V)", 5, 50, || {
         black_box(rt.buf_f32(&kv_host, &kvshape).unwrap());
         black_box(rt.buf_f32(&kv_host, &kvshape).unwrap());
-    })
-    .print();
+    });
+    kv_full.print();
+    let slice_host = vec![0f32; slice_n];
+    let kv_opt = if engine.kv_device_resident() {
+        // kv_append donates its cache argument, so each call consumes the
+        // input buffer; rebind the returned buffer exactly like the
+        // engine's persistent KV loop does.
+        let mut kc = rt.buf_f32(&kv_host, &kvshape)?;
+        let mut vc = rt.buf_f32(&kv_host, &kvshape)?;
+        let pos = rt.buf_i32_scalar(5)?;
+        let r = bench("KV opt: slice upload + kv_append (K+V)", 5, 50, || {
+            let ks = rt.buf_f32(&slice_host, &slice_shape).unwrap();
+            let vs = rt.buf_f32(&slice_host, &slice_shape).unwrap();
+            kc = rt.run_raw("kv_append", &[&kc, &ks, &pos]).unwrap();
+            vc = rt.run_raw("kv_append", &[&vc, &vs, &pos]).unwrap();
+        });
+        r
+    } else {
+        bench("KV opt: slice upload only (K+V; no kv_append artifact)", 5, 50, || {
+            black_box(rt.buf_f32(&slice_host, &slice_shape).unwrap());
+            black_box(rt.buf_f32(&slice_host, &slice_shape).unwrap());
+        })
+    };
+    kv_opt.print();
 
-    let wr = rt.buf_f32(&vec![0.01; d * cfg.n_experts], &[d, cfg.n_experts])?;
-    bench("router dispatch", 5, 50, || {
-        black_box(rt.run("router", &[&h, &ln, &wr]).unwrap());
-    })
-    .print();
+    // ---- expert staging: seed (full memcpy + 3-stack upload) vs
+    // optimized (staged reuse: coefficient upload only) ----
+    let experts_src: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = (0..e_cnt)
+        .map(|i| {
+            let w = engine.image.fetch_expert(0, i % cfg.n_experts, false).unwrap();
+            (w.w1, w.w3, w.w2)
+        })
+        .collect();
+    let mut stage_w1 = vec![0f32; e_cnt * d * f];
+    let mut stage_w3 = vec![0f32; e_cnt * d * f];
+    let mut stage_w2 = vec![0f32; e_cnt * f * d];
+    let df = d * f;
+    let stage_seed = bench("stage seed: full memcpy + 3-stack upload", 5, 40, || {
+        for (i, (w1, w3, w2)) in experts_src.iter().enumerate() {
+            stage_w1[i * df..(i + 1) * df].copy_from_slice(w1);
+            stage_w3[i * df..(i + 1) * df].copy_from_slice(w3);
+            stage_w2[i * df..(i + 1) * df].copy_from_slice(w2);
+        }
+        black_box(rt.buf_f32(&stage_w1, &[e_cnt, d, f]).unwrap());
+        black_box(rt.buf_f32(&stage_w3, &[e_cnt, d, f]).unwrap());
+        black_box(rt.buf_f32(&stage_w2, &[e_cnt, f, d]).unwrap());
+    });
+    stage_seed.print();
+    let coef_host = vec![0.2f32; e_cnt];
+    let stage_opt = bench("stage opt: staged reuse (coef upload only)", 5, 40, || {
+        black_box(rt.buf_f32(&coef_host, &[e_cnt]).unwrap());
+    });
+    stage_opt.print();
 
-    let e = cfg.n_ffn_calls();
-    let f = cfg.d_ff;
-    let w1 = rt.buf_f32(&vec![0.01; e * d * f], &[e, d, f])?;
-    let w2 = rt.buf_f32(&vec![0.01; e * f * d], &[e, f, d])?;
-    let coef = rt.buf_f32(&vec![0.2; e], &[e])?;
-    bench("experts dispatch (weights resident)", 5, 50, || {
-        black_box(rt.run("experts", &[&h, &w1, &w1, &w2, &coef]).unwrap());
-    })
-    .print();
+    let seed_portion = kv_full.median_ns + stage_seed.median_ns;
+    let opt_portion = kv_opt.median_ns + stage_opt.median_ns;
+    let speedup = seed_portion / opt_portion.max(1.0);
+    println!(
+        "\nstaged-experts + KV-upload portion (per layer): seed {:.0} ns -> optimized {:.0} ns  ({speedup:.1}x)\n",
+        seed_portion, opt_portion
+    );
+    for (k, v) in [
+        ("kv_seed_ns", kv_full.median_ns),
+        ("kv_opt_ns", kv_opt.median_ns),
+        ("stage_seed_ns", stage_seed.median_ns),
+        ("stage_opt_ns", stage_opt.median_ns),
+        ("staged_kv_portion_speedup", speedup),
+    ] {
+        out.push((k.into(), Json::num(v)));
+    }
 
-    let stage = vec![0f32; e * d * f];
-    bench("experts weight upload (3 stacks)", 5, 50, || {
-        black_box(rt.buf_f32(&stage, &[e, d, f]).unwrap());
-        black_box(rt.buf_f32(&stage, &[e, d, f]).unwrap());
-        black_box(rt.buf_f32(&stage, &[e, f, d]).unwrap());
-    })
-    .print();
-
-    let head_w = rt.buf_f32(&vec![0.01; d * cfg.vocab], &[d, cfg.vocab])?;
-    bench("lm_head dispatch", 5, 50, || {
-        black_box(rt.run("lm_head", &[&h, &ln, &head_w]).unwrap());
-    })
-    .print();
-
-    // ---- flash fetch + dequant ----
-    let img = &engine.image;
+    // ---- flash fetch + dequant: allocating vs into-slot ----
+    let img = engine.image.clone();
     let mut e_idx = 0usize;
-    bench("flash fetch_expert + dequant (int4)", 5, 100, || {
+    let fetch_alloc = bench("flash fetch_expert + dequant (alloc)", 5, 100, || {
         e_idx = (e_idx + 1) % cfg.n_experts;
         black_box(img.fetch_expert(0, e_idx, false).unwrap());
-    })
-    .print();
+    });
+    fetch_alloc.print();
+    let probe = img.fetch_expert(0, 0, false)?;
+    let (mut b1, mut b3, mut b2) = (
+        vec![0f32; probe.w1.len()],
+        vec![0f32; probe.w3.len()],
+        vec![0f32; probe.w2.len()],
+    );
+    let fetch_into = bench("flash fetch_expert_into slot (no alloc)", 5, 100, || {
+        e_idx = (e_idx + 1) % cfg.n_experts;
+        black_box(img.fetch_expert_into(0, e_idx, false, &mut b1, &mut b3, &mut b2).unwrap());
+    });
+    fetch_into.print();
+    out.push(("fetch_alloc_ns".into(), Json::num(fetch_alloc.median_ns)));
+    out.push(("fetch_into_ns".into(), Json::num(fetch_into.median_ns)));
+
+    // ---- component dispatches (reference numbers) ----
+    let h = rt.buf_f32(&vec![0.1; d], &[1, d])?;
+    let ln = rt.buf_f32(&vec![1.0; d], &[d])?;
+    let head_w = rt.buf_f32(&vec![0.01; d * cfg.vocab], &[d, cfg.vocab])?;
+    let lm = bench("lm_head dispatch", 5, 50, || {
+        black_box(rt.run("lm_head", &[&h, &ln, &head_w]).unwrap());
+    });
+    lm.print();
 
     // ---- pure L3 ops ----
     let mut rng = Rng::new(3);
@@ -131,5 +265,51 @@ fn main() -> anyhow::Result<()> {
     })
     .print();
 
+    // ---- async prefetch pipeline: wall clock + virtual clock ----
+    println!();
+    // Returns per-token wall ns, per-token virtual s, prefetch-served
+    // misses, issued/used deltas, and hidden-time delta — all over the
+    // measured window only (the 20 warmup steps are excluded everywhere).
+    let bench_pipeline = |engine: &mut Engine, steps: usize| -> (f64, f64, u32, u64, u64, f64) {
+        engine.reset_all();
+        run_steps(engine, 20); // steady state
+        let vt0 = engine.flash.time_s;
+        let hid0 = engine.flash.hidden_s;
+        let (i0, u0, _) = engine.prefetch_stats();
+        let (acc, wall) = run_steps(engine, steps);
+        let (i1, u1, _) = engine.prefetch_stats();
+        (
+            wall * 1e9 / steps as f64,
+            (engine.flash.time_s - vt0) / steps as f64,
+            acc.prefetch_hits,
+            i1 - i0,
+            u1 - u0,
+            engine.flash.hidden_s - hid0,
+        )
+    };
+    let (off_ns, off_virt, _, _, _, _) = bench_pipeline(&mut engine, 40);
+    let mut engine_pf = Engine::load(&arts, &model, opts())?;
+    engine_pf.enable_prefetch(2);
+    let (on_ns, on_virt, pf_hits, issued, used, hidden_s) = bench_pipeline(&mut engine_pf, 40);
+    println!("prefetch off: {off_ns:>12.1} ns/token wall, {:.3} ms/token virtual", off_virt * 1e3);
+    println!(
+        "prefetch on : {on_ns:>12.1} ns/token wall, {:.3} ms/token virtual ({pf_hits} misses served, {used}/{issued} prefetches used, hidden {:.3} ms)",
+        on_virt * 1e3,
+        hidden_s * 1e3,
+    );
+    out.push(("prefetch_off_ns_per_token".into(), Json::num(off_ns)));
+    out.push(("prefetch_on_ns_per_token".into(), Json::num(on_ns)));
+    out.push(("prefetch_off_virtual_s_per_token".into(), Json::num(off_virt)));
+    out.push(("prefetch_on_virtual_s_per_token".into(), Json::num(on_virt)));
+    out.push(("prefetch_issued".into(), Json::num(issued as f64)));
+    out.push(("prefetch_used".into(), Json::num(used as f64)));
+
+    // ---- persist the trajectory ----
+    let json = Json::Object(out);
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("BENCH_hotpath.json");
+    std::fs::write(&path, format!("{json}"))?;
+    println!("\nwrote {}", path.display());
     Ok(())
 }

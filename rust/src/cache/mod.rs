@@ -51,8 +51,14 @@ pub struct Access {
     pub hits: u32,
     /// Experts that were not cached, in selection (weight-desc) order.
     pub missed: Vec<u32>,
-    /// Experts evicted during this access.
+    /// Experts evicted during this access, in eviction order.
     pub evicted: Vec<u32>,
+    /// Selected experts still resident when the access completed, in
+    /// selection order. A missed expert absent from this list was streamed
+    /// without being retained (or was evicted again within the same step —
+    /// the cache-smaller-than-K corner); the staging arena must keep its
+    /// weights in a transient slot rather than a cache slot.
+    pub resident_after: Vec<u32>,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -200,6 +206,11 @@ impl ExpertCache {
                 Entry { stamp, freq: 1, inserted_token: now_token },
             );
         }
+        out.resident_after = selected
+            .iter()
+            .copied()
+            .filter(|e| self.entries.contains_key(e))
+            .collect();
         out
     }
 
@@ -306,6 +317,31 @@ mod tests {
         assert_eq!(c.len(), 1);
         // Higher-weight (5) evicted first per the paper rule, so 6 remains.
         assert!(c.contains(6));
+        // 5 was inserted then evicted within the same step: not resident.
+        assert_eq!(a.resident_after, vec![6]);
+    }
+
+    #[test]
+    fn resident_after_includes_hits_and_retained_misses() {
+        let mut c = lru(4);
+        c.access(&[1, 2], 0, None);
+        let a = c.access(&[2, 3], 1, None);
+        assert_eq!(a.resident_after, vec![2, 3]);
+    }
+
+    #[test]
+    fn resident_after_excludes_same_step_evicted_hit() {
+        // Capacity 2, residents {10, 11} (10 higher weight -> older stamp).
+        // Next step selects 10 (hit) plus two misses: inserting them evicts
+        // 10 first (oldest stamp), then 11. The hit 10 must NOT appear in
+        // resident_after even though it was a hit this very step.
+        let mut c = lru(2);
+        c.access(&[10, 11], 0, None);
+        let a = c.access(&[10, 20, 21], 1, None);
+        assert_eq!(a.hits, 1);
+        assert_eq!(a.missed, vec![20, 21]);
+        assert!(!a.resident_after.contains(&10), "{:?}", a.resident_after);
+        assert!(!c.contains(10));
     }
 
     #[test]

@@ -13,6 +13,14 @@
 //! hit-rate↔throughput relation (Fig. 8), the LRU-vs-Cache-Prior speedup
 //! (Fig. 1 right), and the memory-pressure collapse when the cache is
 //! oversized (Fig. 14).
+//!
+//! **Overlapped reads** (the prefetch pipeline): a read serviced by the
+//! async expert prefetcher ([`read_flash_prefetched`](FlashSim::read_flash_prefetched))
+//! can hide behind the token's compute. The model is deterministic — per
+//! token at most `compute_per_token_s` of flash time is hideable (the
+//! virtual clock never depends on real thread timing), the rest serializes
+//! exactly like a demand miss. Demand reads are never overlapped, so runs
+//! without prefetching are bit-identical to the pre-pipeline engine.
 
 use crate::config::DeviceProfile;
 
@@ -27,10 +35,20 @@ pub struct FlashSim {
     pub dram_bytes: u64,
     pub tokens: u64,
     pub pressure_s: f64,
+    /// Reads serviced by the async prefetch pipeline (subset of
+    /// `flash_reads` / `flash_bytes` — the bytes still moved over flash).
+    pub prefetch_reads: u64,
+    pub prefetch_bytes: u64,
+    /// Flash time hidden behind compute by overlapping (the pipeline win).
+    pub hidden_s: f64,
+    /// Remaining hideable window for the current token; refilled to
+    /// `compute_per_token_s` at every `end_token`.
+    pub overlap_budget_s: f64,
 }
 
 impl FlashSim {
     pub fn new(profile: DeviceProfile) -> Self {
+        let overlap_budget_s = profile.compute_per_token_s;
         FlashSim {
             profile,
             time_s: 0.0,
@@ -39,6 +57,10 @@ impl FlashSim {
             dram_bytes: 0,
             tokens: 0,
             pressure_s: 0.0,
+            prefetch_reads: 0,
+            prefetch_bytes: 0,
+            hidden_s: 0.0,
+            overlap_budget_s,
         }
     }
 
@@ -48,6 +70,22 @@ impl FlashSim {
         self.flash_bytes += bytes;
         self.time_s +=
             self.profile.flash_latency_s + bytes as f64 / self.profile.flash_bw_bytes_per_s;
+    }
+
+    /// Charge one flash read that the prefetch pipeline issued ahead of
+    /// demand: up to the remaining per-token overlap budget of its cost is
+    /// hidden behind compute, the rest serializes like a demand read.
+    pub fn read_flash_prefetched(&mut self, bytes: u64) {
+        self.flash_reads += 1;
+        self.flash_bytes += bytes;
+        self.prefetch_reads += 1;
+        self.prefetch_bytes += bytes;
+        let cost =
+            self.profile.flash_latency_s + bytes as f64 / self.profile.flash_bw_bytes_per_s;
+        let hidden = cost.min(self.overlap_budget_s);
+        self.overlap_budget_s -= hidden;
+        self.hidden_s += hidden;
+        self.time_s += cost - hidden;
     }
 
     /// Charge a DRAM stream of `bytes` (cache hit: weights flow DRAM->CPU).
@@ -63,6 +101,7 @@ impl FlashSim {
     pub fn end_token(&mut self, resident_bytes: u64) {
         self.tokens += 1;
         self.time_s += self.profile.compute_per_token_s;
+        self.overlap_budget_s = self.profile.compute_per_token_s;
         let over = resident_bytes.saturating_sub(self.profile.mem_budget_bytes as u64);
         if over > 0 {
             let pen = over as f64 * self.profile.pressure_s_per_byte;
@@ -135,6 +174,53 @@ mod tests {
         }
         let expect = 10.0 / (10.0 * s.profile.compute_per_token_s);
         assert!((s.throughput() - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prefetched_read_hides_up_to_compute_window() {
+        // device_16gb: flash latency (1.8 ms) + 1000 B fits inside the
+        // 2.0 ms compute window, so the read hides completely.
+        let mut s = FlashSim::new(DeviceProfile::device_16gb());
+        let cost = s.profile.flash_latency_s + 1000.0 / s.profile.flash_bw_bytes_per_s;
+        assert!(cost < s.profile.compute_per_token_s);
+        s.read_flash_prefetched(1000);
+        // Fully hidden: no serialized time, but bytes still accounted.
+        assert_eq!(s.time_s, 0.0);
+        assert!((s.hidden_s - cost).abs() < 1e-12);
+        assert_eq!(s.flash_bytes, 1000);
+        assert_eq!(s.prefetch_bytes, 1000);
+        assert_eq!(s.flash_reads, 1);
+    }
+
+    #[test]
+    fn prefetch_overlap_budget_is_bounded_per_token() {
+        let mut s = sim();
+        let big = 10_000_000u64; // far beyond one token's compute window
+        s.read_flash_prefetched(big);
+        let cost = s.profile.flash_latency_s + big as f64 / s.profile.flash_bw_bytes_per_s;
+        let budget = s.profile.compute_per_token_s;
+        assert!((s.time_s - (cost - budget)).abs() < 1e-9);
+        // Budget exhausted: a second prefetched read serializes fully.
+        let t0 = s.time_s;
+        s.read_flash_prefetched(1000);
+        let cost2 = s.profile.flash_latency_s + 1000.0 / s.profile.flash_bw_bytes_per_s;
+        assert!((s.time_s - t0 - cost2).abs() < 1e-12);
+        // end_token refills the window.
+        s.end_token(0);
+        assert_eq!(s.overlap_budget_s, s.profile.compute_per_token_s);
+    }
+
+    #[test]
+    fn demand_reads_never_overlap() {
+        // Bit-identity guarantee for the prefetch-off benches: read_flash
+        // must charge exactly as before regardless of the overlap budget.
+        let mut s = sim();
+        let bw = s.profile.flash_bw_bytes_per_s;
+        let lat = s.profile.flash_latency_s;
+        s.read_flash(1000);
+        assert!((s.time_s - (lat + 1000.0 / bw)).abs() < 1e-12);
+        assert_eq!(s.prefetch_reads, 0);
+        assert_eq!(s.hidden_s, 0.0);
     }
 
     #[test]

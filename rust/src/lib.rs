@@ -20,8 +20,10 @@
 //! * [`cache`] — per-layer expert caches (LRU / LFU / Belady oracle)
 //! * [`routing`] — the paper's contribution: Max-Rank, Cumsum-Threshold,
 //!   and Cache-Prior re-ranking (§3), plus sensitivity probes (§2.3)
-//! * [`runtime`] — PJRT executable registry (HLO-text artifacts)
-//! * [`model`] — the token-generation engine composing the AOT components
+//! * [`runtime`] — PJRT executable registry (HLO-text artifacts; raw
+//!   components keep their output device-resident)
+//! * [`model`] — the token-generation engine composing the AOT components,
+//!   with the slot-arena expert staging and the async flash prefetcher
 //! * [`tracesim`] — trace-driven cache simulation (Belady bound, Fig. 10/11)
 //! * [`eval`] — perplexity / SynthQA / SynthMath harnesses + sweeps
 //! * [`coordinator`] — the serving loop (sessions, scheduling, metrics)

@@ -1,0 +1,545 @@
+//! Per-layer expert slot arena + staged stacked buffers — the host side of
+//! the device-resident hot path.
+//!
+//! The seed engine kept cached expert weights in a `HashMap<u32, ExpertHost>`
+//! and, every token, memcpy'd every selected expert (plus the shared
+//! experts) into fresh staging arrays before uploading them. The arena
+//! replaces both:
+//!
+//! * [`LayerArena`] — preallocated slot storage, one slot per cache entry
+//!   plus `top_k` overflow slots. Cache slots map to **fixed offsets**, so a
+//!   cache hit costs a slot lookup, not a multi-MB copy; a miss dequantizes
+//!   straight into its slot ([`crate::weights::FlashImage::fetch_expert_into`]).
+//!   Overflow slots absorb the two corners where a slot cannot be reused
+//!   in place: streamed-but-not-retained experts (cache smaller than K) and
+//!   the same-step conflict where an insert evicts an expert whose weights
+//!   this very dispatch still needs. [`LayerArena::finish_step`] applies the
+//!   deferred moves *after* the dispatch — the seed's "drop AFTER staging"
+//!   invariant, enforced structurally instead of by comment.
+//! * [`StagedLayer`] — the per-layer stacked arrays the fused `experts`
+//!   component consumes, keyed by which expert occupies each position.
+//!   Because an expert's weights are immutable in the flash image, a
+//!   position whose key already matches needs **no copy**, and an unchanged
+//!   key set means the previously-uploaded device buffers are bit-exact for
+//!   this token — the decode-time common case under cache-aware routing,
+//!   where consecutive selections are sticky by design.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+/// Staged-position key marking a padding slot (selection shorter than K).
+pub const PAD: u32 = u32::MAX;
+
+/// Where one missed expert's weights get written this step.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MissSlot {
+    pub expert: u32,
+    /// Arena slot the fetch dequantizes into (cache or overflow).
+    pub slot: usize,
+    /// Set when the fetch was diverted to an overflow slot because its
+    /// cache slot's occupant is still consumed by THIS step's dispatch;
+    /// `finish_step` promotes the weights into this cache slot afterwards.
+    pub promote_to: Option<usize>,
+}
+
+#[derive(Debug, Clone)]
+struct Promotion {
+    expert: u32,
+    from: usize,
+    to: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct LayerArena {
+    /// Elements per slot: w1/w3 hold `df` (= d_model * d_ff), w2 holds `fd`.
+    df: usize,
+    fd: usize,
+    n_cache: usize,
+    n_overflow: usize,
+    w1: Vec<f32>,
+    w3: Vec<f32>,
+    w2: Vec<f32>,
+    /// Expert currently written at each slot (None = never written / freed).
+    occupant: Vec<Option<u32>>,
+    /// expert -> slot holding its weights.
+    map: HashMap<u32, usize>,
+    free_cache: Vec<usize>,
+    /// Overflow slots handed out since `plan_misses` (one step's worth).
+    overflow_used: usize,
+    pending_promote: Vec<Promotion>,
+    pending_release: Vec<u32>,
+}
+
+impl LayerArena {
+    pub fn new(df: usize, fd: usize, n_cache: usize, n_overflow: usize) -> Self {
+        let slots = n_cache + n_overflow;
+        LayerArena {
+            df,
+            fd,
+            n_cache,
+            n_overflow,
+            w1: vec![0f32; slots * df],
+            w3: vec![0f32; slots * df],
+            w2: vec![0f32; slots * fd],
+            occupant: vec![None; slots],
+            map: HashMap::new(),
+            free_cache: (0..n_cache).rev().collect(),
+            overflow_used: 0,
+            pending_promote: Vec::new(),
+            pending_release: Vec::new(),
+        }
+    }
+
+    pub fn n_cache_slots(&self) -> usize {
+        self.n_cache
+    }
+
+    /// Slot currently holding `expert`'s weights, if staged.
+    pub fn slot_of(&self, expert: u32) -> Option<usize> {
+        self.map.get(&expert).copied()
+    }
+
+    pub fn slot_data(&self, slot: usize) -> (&[f32], &[f32], &[f32]) {
+        (
+            &self.w1[slot * self.df..(slot + 1) * self.df],
+            &self.w3[slot * self.df..(slot + 1) * self.df],
+            &self.w2[slot * self.fd..(slot + 1) * self.fd],
+        )
+    }
+
+    /// Mutable views of one slot's three weight parts (the dequant target).
+    pub fn slot_mut(&mut self, slot: usize) -> (&mut [f32], &mut [f32], &mut [f32]) {
+        let (df, fd) = (self.df, self.fd);
+        (
+            &mut self.w1[slot * df..(slot + 1) * df],
+            &mut self.w3[slot * df..(slot + 1) * df],
+            &mut self.w2[slot * fd..(slot + 1) * fd],
+        )
+    }
+
+    fn claim(&mut self, slot: usize, expert: u32) {
+        if let Some(old) = self.occupant[slot] {
+            // Only unmap the previous occupant if it still points here (it
+            // may have been promoted elsewhere since).
+            if self.map.get(&old) == Some(&slot) {
+                self.map.remove(&old);
+            }
+        }
+        self.occupant[slot] = Some(expert);
+        self.map.insert(expert, slot);
+    }
+
+    fn release(&mut self, expert: u32) {
+        if let Some(slot) = self.map.remove(&expert) {
+            self.occupant[slot] = None;
+            if slot < self.n_cache {
+                self.free_cache.push(slot);
+            }
+        }
+    }
+
+    fn take_overflow(&mut self) -> Result<usize> {
+        anyhow::ensure!(
+            self.overflow_used < self.n_overflow,
+            "overflow slots exhausted ({} of {})",
+            self.overflow_used,
+            self.n_overflow
+        );
+        let s = self.n_cache + self.overflow_used;
+        self.overflow_used += 1;
+        Ok(s)
+    }
+
+    /// Claim a free cache slot directly (the warm-start path, Fig. 19).
+    pub fn alloc_cache_slot(&mut self, expert: u32) -> Result<usize> {
+        let s = self
+            .free_cache
+            .pop()
+            .with_context(|| format!("no free cache slot for expert {expert}"))?;
+        self.claim(s, expert);
+        Ok(s)
+    }
+
+    /// Decide where each missed expert's weights land, mirroring the cache's
+    /// decisions for this step. `missed` / `evicted` / `resident_after` come
+    /// from [`crate::cache::Access`]; `selected` is the full selection (hits
+    /// included) — any expert in it must stay readable until the dispatch.
+    ///
+    /// Misses the cache retained reuse the slot their eviction freed (or a
+    /// free slot); misses it streamed without retaining, and misses whose
+    /// victim is itself part of this step's selection, divert to overflow
+    /// slots and are resolved by [`finish_step`] after the dispatch.
+    pub fn plan_misses(
+        &mut self,
+        missed: &[u32],
+        evicted: &[u32],
+        resident_after: &[u32],
+        selected: &[u32],
+    ) -> Result<Vec<MissSlot>> {
+        self.overflow_used = 0;
+        // Normally cleared by finish_step; drop stale entries defensively
+        // if a prior step aborted between plan and finish.
+        self.pending_promote.clear();
+        self.pending_release.clear();
+        let mut evict_idx = 0usize;
+        let mut out = Vec::with_capacity(missed.len());
+        for &e in missed {
+            if !resident_after.contains(&e) {
+                // Streamed without retention (cache smaller than K, or
+                // evicted again within this very step): transient slot.
+                let s = self.take_overflow()?;
+                self.claim(s, e);
+                self.pending_release.push(e);
+                out.push(MissSlot { expert: e, slot: s, promote_to: None });
+                continue;
+            }
+            if let Some(s) = self.free_cache.pop() {
+                self.claim(s, e);
+                out.push(MissSlot { expert: e, slot: s, promote_to: None });
+                continue;
+            }
+            // No free cache slot: reuse the slot freed by the next eviction
+            // of a prior resident (same-step transients never held one).
+            let (victim, vslot) = loop {
+                anyhow::ensure!(
+                    evict_idx < evicted.len(),
+                    "arena/cache desync: no evictable slot for expert {e}"
+                );
+                let v = evicted[evict_idx];
+                evict_idx += 1;
+                if let Some(&vs) = self.map.get(&v) {
+                    if vs < self.n_cache {
+                        break (v, vs);
+                    }
+                }
+            };
+            if selected.contains(&victim) {
+                // Same-step conflict: the victim was selected this step (a
+                // hit later evicted, cache smaller than K) and its weights
+                // still feed this dispatch — stage in overflow, promote
+                // into the victim's slot after the dispatch.
+                let o = self.take_overflow()?;
+                self.claim(o, e);
+                self.pending_promote.push(Promotion { expert: e, from: o, to: vslot });
+                out.push(MissSlot { expert: e, slot: o, promote_to: Some(vslot) });
+            } else {
+                self.release(victim);
+                let s = self.free_cache.pop().expect("slot just released");
+                self.claim(s, e);
+                out.push(MissSlot { expert: e, slot: s, promote_to: None });
+            }
+        }
+        Ok(out)
+    }
+
+    /// Apply the deferred moves once the dispatch has consumed the staged
+    /// weights: promote conflict-diverted misses into their cache slot and
+    /// drop transient (streamed) experts. This *is* the seed engine's
+    /// "drop AFTER staging" invariant.
+    pub fn finish_step(&mut self) {
+        let promotions = std::mem::take(&mut self.pending_promote);
+        for p in promotions {
+            if let Some(v) = self.occupant[p.to] {
+                if self.map.get(&v) == Some(&p.to) {
+                    self.map.remove(&v);
+                }
+            }
+            let (df, fd) = (self.df, self.fd);
+            self.w1.copy_within(p.from * df..(p.from + 1) * df, p.to * df);
+            self.w3.copy_within(p.from * df..(p.from + 1) * df, p.to * df);
+            self.w2.copy_within(p.from * fd..(p.from + 1) * fd, p.to * fd);
+            self.occupant[p.to] = Some(p.expert);
+            self.occupant[p.from] = None;
+            self.map.insert(p.expert, p.to);
+        }
+        let releases = std::mem::take(&mut self.pending_release);
+        for e in releases {
+            if let Some(&s) = self.map.get(&e) {
+                if s >= self.n_cache {
+                    self.map.remove(&e);
+                    self.occupant[s] = None;
+                }
+            }
+        }
+    }
+
+    /// Forget every staged expert (full engine reset). Slot storage is kept
+    /// allocated; stale bytes are unreachable because lookups go through
+    /// the map.
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.occupant.iter_mut().for_each(|o| *o = None);
+        self.free_cache = (0..self.n_cache).rev().collect();
+        self.overflow_used = 0;
+        self.pending_promote.clear();
+        self.pending_release.clear();
+    }
+}
+
+/// The per-layer stacked arrays the fused `experts` dispatch consumes:
+/// `top_k` routed positions followed by the always-resident shared experts
+/// (installed once at load, never copied again).
+#[derive(Debug)]
+pub struct StagedLayer {
+    top_k: usize,
+    df: usize,
+    fd: usize,
+    pub w1: Vec<f32>,
+    pub w3: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub coef: Vec<f32>,
+    /// Expert staged at each routed position ([`PAD`] until first use).
+    key: Vec<u32>,
+}
+
+impl StagedLayer {
+    pub fn new(top_k: usize, n_shared: usize, df: usize, fd: usize) -> Self {
+        let e_cnt = top_k + n_shared;
+        StagedLayer {
+            top_k,
+            df,
+            fd,
+            w1: vec![0f32; e_cnt * df],
+            w3: vec![0f32; e_cnt * df],
+            w2: vec![0f32; e_cnt * fd],
+            coef: vec![0f32; e_cnt],
+            key: vec![PAD; top_k],
+        }
+    }
+
+    /// Install shared expert `s` into its tail position (once, at load).
+    pub fn install_shared(&mut self, s: usize, w1: &[f32], w3: &[f32], w2: &[f32]) {
+        let slot = self.top_k + s;
+        self.w1[slot * self.df..(slot + 1) * self.df].copy_from_slice(w1);
+        self.w3[slot * self.df..(slot + 1) * self.df].copy_from_slice(w3);
+        self.w2[slot * self.fd..(slot + 1) * self.fd].copy_from_slice(w2);
+        self.coef[slot] = 1.0;
+    }
+
+    /// Expert ids staged at the routed positions (test/introspection).
+    pub fn staged_key(&self) -> &[u32] {
+        &self.key
+    }
+
+    /// Gather the selection's weights from the arena, copying only the
+    /// positions whose staged expert changed (expert weights are immutable,
+    /// so a matching key is always bit-exact). Selections shorter than K
+    /// leave the stale weights in place at coefficient 0 — an exactly-zero
+    /// contribution without touching a byte. Coefficients are always
+    /// refreshed. Returns the number of positions copied; 0 means the
+    /// previously uploaded device buffers remain bit-exact for this token.
+    pub fn build(&mut self, arena: &LayerArena, selected: &[u32], coef: &[f32]) -> Result<u32> {
+        let mut copied = 0u32;
+        for i in 0..self.top_k {
+            if i >= selected.len() {
+                self.coef[i] = 0.0;
+                continue;
+            }
+            let e = selected[i];
+            self.coef[i] = coef[i];
+            if self.key[i] == e {
+                continue;
+            }
+            let slot = arena
+                .slot_of(e)
+                .with_context(|| format!("expert {e} selected but not staged in arena"))?;
+            let (s1, s3, s2) = arena.slot_data(slot);
+            self.w1[i * self.df..(i + 1) * self.df].copy_from_slice(s1);
+            self.w3[i * self.df..(i + 1) * self.df].copy_from_slice(s3);
+            self.w2[i * self.fd..(i + 1) * self.fd].copy_from_slice(s2);
+            self.key[i] = e;
+            copied += 1;
+        }
+        Ok(copied)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DF: usize = 3;
+    const FD: usize = 3;
+
+    /// Write recognizable per-expert bytes into a slot.
+    fn fill(arena: &mut LayerArena, slot: usize, expert: u32) {
+        let (w1, w3, w2) = arena.slot_mut(slot);
+        w1.fill(expert as f32);
+        w3.fill(expert as f32 + 0.25);
+        w2.fill(expert as f32 + 0.5);
+    }
+
+    fn assert_slot_holds(arena: &LayerArena, slot: usize, expert: u32) {
+        let (w1, w3, w2) = arena.slot_data(slot);
+        assert!(w1.iter().all(|&x| x == expert as f32), "w1 of slot {slot}");
+        assert!(w3.iter().all(|&x| x == expert as f32 + 0.25));
+        assert!(w2.iter().all(|&x| x == expert as f32 + 0.5));
+    }
+
+    #[test]
+    fn misses_fill_free_slots_then_reuse_evicted() {
+        let mut a = LayerArena::new(DF, FD, 2, 2);
+        let plan = a.plan_misses(&[7, 8], &[], &[7, 8], &[7, 8]).unwrap();
+        assert_eq!(plan.len(), 2);
+        assert!(plan.iter().all(|m| m.slot < 2 && m.promote_to.is_none()));
+        for m in &plan {
+            fill(&mut a, m.slot, m.expert);
+        }
+        a.finish_step();
+        let s7 = a.slot_of(7).unwrap();
+        assert_slot_holds(&a, s7, 7);
+
+        // 9 misses, evicting 7 (not selected this step): direct slot reuse.
+        let plan = a.plan_misses(&[9], &[7], &[8, 9], &[8, 9]).unwrap();
+        assert_eq!(plan[0].expert, 9);
+        assert_eq!(plan[0].slot, s7);
+        assert_eq!(plan[0].promote_to, None);
+        fill(&mut a, plan[0].slot, 9);
+        a.finish_step();
+        assert_eq!(a.slot_of(7), None);
+        assert_eq!(a.slot_of(9), Some(s7));
+        assert!(a.slot_of(8).is_some());
+    }
+
+    #[test]
+    fn streamed_expert_stages_in_overflow_and_drops_after_dispatch() {
+        // Cache capacity 1, selection [5, 6] (both miss): the cache inserts
+        // 5, then evicts it to insert 6 — 5 is streamed-but-not-retained.
+        // Its weights must be readable until finish_step, from an overflow
+        // slot that never collides with the retained expert's cache slot.
+        let mut a = LayerArena::new(DF, FD, 1, 2);
+        let plan = a.plan_misses(&[5, 6], &[5], &[6], &[5, 6]).unwrap();
+        let m5 = &plan[0];
+        let m6 = &plan[1];
+        assert_eq!(m5.expert, 5);
+        assert!(m5.slot >= 1, "transient must use an overflow slot");
+        assert_eq!(m5.promote_to, None);
+        assert_eq!(m6.expert, 6);
+        assert_eq!(m6.slot, 0, "retained miss takes the free cache slot");
+        for m in &plan {
+            fill(&mut a, m.slot, m.expert);
+        }
+        // Both staged and readable at dispatch time.
+        assert_slot_holds(&a, m5.slot, 5);
+        assert_slot_holds(&a, m6.slot, 6);
+        let transient_slot = m5.slot;
+        a.finish_step();
+        assert_eq!(a.slot_of(5), None, "transient dropped after staging");
+        assert_eq!(a.slot_of(6), Some(0));
+        // Next step (cache {6}, selection [8, 9] both missing): the
+        // transient 8 reuses the same overflow slot.
+        let plan = a.plan_misses(&[8, 9], &[6, 8], &[9], &[8, 9]).unwrap();
+        assert_eq!(plan[0].expert, 8);
+        assert_eq!(plan[0].slot, transient_slot);
+    }
+
+    #[test]
+    fn same_step_evicted_hit_keeps_weights_until_finish() {
+        // THE invariant corner: capacity 2, residents {10, 11}; selection
+        // [10, 20, 21] hits 10 then evicts 11 (for 20) and 10 itself (for
+        // 21) — while 10's weights are still needed by this dispatch. The
+        // insert of 21 must divert to overflow and only overwrite 10's
+        // slot after finish_step.
+        let mut a = LayerArena::new(DF, FD, 2, 3);
+        let s10 = a.alloc_cache_slot(10).unwrap();
+        fill(&mut a, s10, 10);
+        let s11 = a.alloc_cache_slot(11).unwrap();
+        fill(&mut a, s11, 11);
+
+        let plan = a
+            .plan_misses(&[20, 21], &[11, 10], &[20, 21], &[10, 20, 21])
+            .unwrap();
+        // 20 reuses 11's slot directly (11 is not selected this step).
+        assert_eq!(plan[0], MissSlot { expert: 20, slot: s11, promote_to: None });
+        // 21 conflicts with the still-needed hit 10: overflow + promotion.
+        assert_eq!(plan[1].expert, 21);
+        assert!(plan[1].slot >= 2, "conflict miss must divert to overflow");
+        assert_eq!(plan[1].promote_to, Some(s10));
+        for m in &plan {
+            fill(&mut a, m.slot, m.expert);
+        }
+        // At dispatch time the evicted hit 10 is STILL intact in its slot.
+        assert_eq!(a.slot_of(10), Some(s10));
+        assert_slot_holds(&a, s10, 10);
+        assert_slot_holds(&a, plan[1].slot, 21);
+
+        a.finish_step();
+        // Promotion lands 21's weights in 10's old slot; 10 is gone.
+        assert_eq!(a.slot_of(10), None);
+        assert_eq!(a.slot_of(21), Some(s10));
+        assert_slot_holds(&a, s10, 21);
+        assert_eq!(a.slot_of(20), Some(s11));
+    }
+
+    #[test]
+    fn clear_resets_slot_accounting() {
+        let mut a = LayerArena::new(DF, FD, 2, 1);
+        a.alloc_cache_slot(3).unwrap();
+        a.alloc_cache_slot(4).unwrap();
+        assert!(a.alloc_cache_slot(5).is_err(), "cache slots exhausted");
+        a.clear();
+        assert_eq!(a.slot_of(3), None);
+        a.alloc_cache_slot(5).unwrap();
+        a.alloc_cache_slot(6).unwrap();
+    }
+
+    // ---------------- StagedLayer ----------------
+
+    fn arena_with(experts: &[u32]) -> LayerArena {
+        let mut a = LayerArena::new(DF, FD, 8, 2);
+        for &e in experts {
+            let s = a.alloc_cache_slot(e).unwrap();
+            fill(&mut a, s, e);
+        }
+        a
+    }
+
+    #[test]
+    fn staged_reuse_skips_copies_for_unchanged_selection() {
+        let a = arena_with(&[1, 2, 3]);
+        let mut st = StagedLayer::new(2, 1, DF, FD);
+        st.install_shared(0, &[9.0; DF], &[9.25; DF], &[9.5; FD]);
+        assert_eq!(st.coef[2], 1.0, "shared tail gated at 1.0");
+
+        let copied = st.build(&a, &[1, 2], &[0.6, 0.4]).unwrap();
+        assert_eq!(copied, 2);
+        assert_eq!(st.staged_key(), &[1, 2]);
+        assert_eq!(&st.w1[0..DF], &[1.0; DF]);
+        assert_eq!(&st.w1[DF..2 * DF], &[2.0; DF]);
+        // Same selection, different coefficients: zero copies.
+        let copied = st.build(&a, &[1, 2], &[0.7, 0.3]).unwrap();
+        assert_eq!(copied, 0);
+        assert_eq!(st.coef[0], 0.7);
+        // One position changes: exactly one copy.
+        let copied = st.build(&a, &[1, 3], &[0.5, 0.5]).unwrap();
+        assert_eq!(copied, 1);
+        assert_eq!(&st.w1[DF..2 * DF], &[3.0; DF]);
+    }
+
+    #[test]
+    fn short_selection_pads_with_zero_coefficient_and_no_copy() {
+        // The pruning path: selection shorter than K. The pad position's
+        // stale weights stay (contribution is exactly 0 via the gate), the
+        // key is untouched so a later reselection of the same expert still
+        // skips the copy.
+        let a = arena_with(&[1, 2]);
+        let mut st = StagedLayer::new(2, 0, DF, FD);
+        let copied = st.build(&a, &[1, 2], &[0.6, 0.4]).unwrap();
+        assert_eq!(copied, 2);
+        let copied = st.build(&a, &[1], &[1.0]).unwrap();
+        assert_eq!(copied, 0, "padding must not copy");
+        assert_eq!(st.coef, vec![1.0, 0.0]);
+        assert_eq!(&st.w1[DF..2 * DF], &[2.0; DF], "stale pad weights kept");
+        // Reselecting expert 2 at position 1 is still a key match.
+        let copied = st.build(&a, &[1, 2], &[0.6, 0.4]).unwrap();
+        assert_eq!(copied, 0);
+    }
+
+    #[test]
+    fn build_errors_on_unstaged_expert() {
+        let a = arena_with(&[1]);
+        let mut st = StagedLayer::new(2, 0, DF, FD);
+        assert!(st.build(&a, &[1, 42], &[0.5, 0.5]).is_err());
+    }
+}

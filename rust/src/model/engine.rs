@@ -1,27 +1,42 @@
 //! The token-generation engine (the request-path hot loop).
+//!
+//! Device-resident pipelined design (see also [`super::arena`]):
+//!
+//! * **KV caches** live as persistent `PjRtBuffer`s per layer. When the
+//!   artifacts provide the raw `kv_append` component, only the token's
+//!   `[H,1,hd]` K/V slices cross the host boundary per layer — the full
+//!   `[H,T,hd]` caches are never re-uploaded. A host mirror is still
+//!   maintained (cheap: one slice memcpy) for snapshot/restore and as the
+//!   fallback upload source with older artifact sets.
+//! * **Expert weights** stage through a per-layer slot arena: a cache hit
+//!   costs a slot lookup, a miss dequantizes straight into its slot, and
+//!   the stacked device buffers for the `experts` dispatch are reused
+//!   verbatim whenever the selection repeats (the common case under
+//!   cache-aware routing).
+//! * **Misses** can be serviced by an async prefetch pipeline
+//!   ([`super::prefetch`]) that fetches + dequantizes layer `l+1`'s
+//!   predicted selection while layer `l`'s dispatches run. Off by default:
+//!   all simulator accounting (hit/miss counts, flash bytes, virtual time)
+//!   is bit-identical to the pre-pipeline engine unless
+//!   [`Engine::enable_prefetch`] is called.
 
-use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 use xla::PjRtBuffer;
 
 use crate::cache::{ExpertCache, Policy};
 use crate::config::{DeviceProfile, ModelConfig, Quant};
 use crate::flash::FlashSim;
+use crate::model::arena::{LayerArena, StagedLayer};
+use crate::model::prefetch::Prefetcher;
 use crate::model::sampler::{log_prob, Sampler};
 use crate::routing::{self, RouterState, Strategy};
 use crate::runtime::Runtime;
 use crate::tracesim::Trace;
 use crate::weights::FlashImage;
-
-/// Host-resident dequantized expert weights (the DRAM cache payload).
-#[derive(Debug, Clone, Default)]
-pub struct ExpertHost {
-    pub w1: Vec<f32>,
-    pub w3: Vec<f32>,
-    pub w2: Vec<f32>,
-}
 
 struct LayerStatic {
     ln1: PjRtBuffer,
@@ -71,12 +86,27 @@ impl EngineOptions {
     }
 }
 
-/// Per-step statistics (one generated/scored token).
+/// Per-step statistics (one generated/scored token), including the
+/// per-stage wall-clock breakdown the micro_hotpath bench reports.
 #[derive(Debug, Clone, Default)]
 pub struct StepStats {
     pub hits: u32,
     pub misses: u32,
     pub flash_bytes: u64,
+    /// Misses whose weights arrived via the async prefetch pipeline.
+    pub prefetch_hits: u32,
+    /// Arena-slot → staged-position copies this step (0 on a full reuse).
+    pub staged_slots_copied: u32,
+    /// Layers whose stacked weight buffers had to be re-uploaded.
+    pub staged_uploads: u32,
+    /// Host→device uploads: KV buffers/slices + kv_append dispatches.
+    pub t_upload_s: f64,
+    /// Demand flash fetch + dequant + prefetch harvesting (blocking part).
+    pub t_fetch_s: f64,
+    /// Staging copies, stacked weight uploads, coefficient upload.
+    pub t_stage_s: f64,
+    /// PJRT dispatches: embed, layer, experts, lm_head.
+    pub t_compute_s: f64,
 }
 
 /// Snapshot of mutable session state (Fig. 12 oracle search needs
@@ -87,38 +117,51 @@ pub struct EngineSnapshot {
     pos: usize,
     token_counter: u64,
     caches: Vec<ExpertCache>,
-    store: Vec<HashMap<u32, ExpertHost>>,
+    arenas: Vec<LayerArena>,
+    last_sel: Vec<Vec<u32>>,
     router_state: RouterState,
 }
 
 pub struct Engine {
     pub rt: Runtime,
     pub cfg: ModelConfig,
-    pub image: FlashImage,
+    /// Shared with the prefetch workers; immutable after open.
+    pub image: Arc<FlashImage>,
     pub opts: EngineOptions,
     statics: StaticWeights,
-    /// Always-resident shared experts, staged per layer.
-    shared: Vec<Vec<ExpertHost>>,
     /// Per-layer routed-expert cache metadata.
     pub caches: Vec<ExpertCache>,
-    /// Host payloads of cached experts (parallel to `caches`).
-    store: Vec<HashMap<u32, ExpertHost>>,
+    /// Per-layer slot arenas holding the cached experts' dequantized
+    /// weights at fixed offsets (replaces the per-step HashMap store).
+    arenas: Vec<LayerArena>,
+    /// Per-layer stacked staging for the fused `experts` dispatch.
+    staged: Vec<StagedLayer>,
+    /// Persistent stacked device buffers (w1, w3, w2), reused while the
+    /// staged key is unchanged.
+    staged_dev: Vec<Option<(PjRtBuffer, PjRtBuffer, PjRtBuffer)>>,
     pub router_state: RouterState,
     pub flash: FlashSim,
     /// When false, routing falls back to Original but the cache still
     /// updates — the paper's GSM8K mode (§4.2: method applied only during
     /// autoregressive generation).
     pub strategy_active: bool,
-    // KV caches, host-resident, [H*T*hd] per layer.
+    // KV caches: host mirrors [H*T*hd] per layer (snapshot/restore +
+    // fallback upload source) ...
     kv_k: Vec<Vec<f32>>,
     kv_v: Vec<Vec<f32>>,
+    // ... and the persistent device-resident buffers (fast path; None =
+    // invalidated, lazily rebuilt from the mirror).
+    kv_dev_k: Vec<Option<PjRtBuffer>>,
+    kv_dev_v: Vec<Option<PjRtBuffer>>,
+    /// Artifacts provide the raw `kv_append` component.
+    kv_append_ok: bool,
     pos: usize,
     token_counter: u64,
-    // Staging buffers for the stacked experts call (reused across steps).
-    stage_w1: Vec<f32>,
-    stage_w3: Vec<f32>,
-    stage_w2: Vec<f32>,
-    stage_coef: Vec<f32>,
+    /// Async expert-fetch pipeline (None = disabled, the default).
+    prefetch: Option<Prefetcher>,
+    /// Previous token's selection per layer — the prefetcher's reuse
+    /// signal.
+    last_sel: Vec<Vec<u32>>,
     pub trace: Trace,
     /// Expert override for counterfactual probes: per layer replacement of
     /// the routed selection (Fig. 12). Cleared after each step.
@@ -139,7 +182,7 @@ impl Engine {
         cfg_name: &str,
         opts: EngineOptions,
     ) -> Result<Self> {
-        let image = FlashImage::open_artifact(artifacts, cfg_name, opts.quant)?;
+        let image = Arc::new(FlashImage::open_artifact(artifacts, cfg_name, opts.quant)?);
         let cfg = rt.config.clone();
         anyhow::ensure!(image.config == cfg, "flash image / manifest config mismatch");
 
@@ -175,23 +218,26 @@ impl Engine {
             layers,
         };
 
-        // Shared experts: always resident (loaded once; not cached).
-        let mut shared = Vec::new();
+        let (df, fd) = (cfg.d_model * cfg.d_ff, cfg.d_ff * cfg.d_model);
+        // Shared experts: always resident — installed into the staged tail
+        // positions ONCE; never copied again on the token path.
+        let mut staged = Vec::new();
         for l in 0..cfg.n_layers {
-            let mut per_layer = Vec::new();
+            let mut st = StagedLayer::new(cfg.top_k, cfg.n_shared, df, fd);
             for s in 0..cfg.n_shared {
                 let e = image.fetch_expert(l, s, true)?;
-                per_layer.push(ExpertHost { w1: e.w1, w3: e.w3, w2: e.w2 });
+                st.install_shared(s, &e.w1, &e.w3, &e.w2);
             }
-            shared.push(per_layer);
+            staged.push(st);
         }
-
+        let arenas = (0..cfg.n_layers)
+            .map(|_| LayerArena::new(df, fd, opts.cache_capacity, cfg.top_k))
+            .collect();
         let caches = (0..cfg.n_layers)
             .map(|_| ExpertCache::new(opts.cache_capacity, opts.policy))
             .collect();
-        let store = (0..cfg.n_layers).map(|_| HashMap::new()).collect();
         let kv_len = cfg.n_heads * cfg.max_seq * cfg.head_dim;
-        let e_stack = cfg.n_ffn_calls() * cfg.d_model * cfg.d_ff;
+        let kv_append_ok = rt.has_component("kv_append");
         let trace = Trace::new(cfg.n_experts, cfg.n_layers);
         Ok(Engine {
             router_state: RouterState::new(cfg.n_layers, opts.seed),
@@ -199,12 +245,14 @@ impl Engine {
             strategy_active: true,
             kv_k: vec![vec![0f32; kv_len]; cfg.n_layers],
             kv_v: vec![vec![0f32; kv_len]; cfg.n_layers],
+            kv_dev_k: (0..cfg.n_layers).map(|_| None).collect(),
+            kv_dev_v: (0..cfg.n_layers).map(|_| None).collect(),
+            kv_append_ok,
             pos: 0,
             token_counter: 0,
-            stage_w1: vec![0f32; e_stack],
-            stage_w3: vec![0f32; e_stack],
-            stage_w2: vec![0f32; e_stack],
-            stage_coef: vec![0f32; cfg.n_ffn_calls()],
+            prefetch: None,
+            last_sel: vec![Vec::new(); cfg.n_layers],
+            staged_dev: (0..cfg.n_layers).map(|_| None).collect(),
             trace,
             override_selection: None,
             last_step: StepStats::default(),
@@ -213,9 +261,9 @@ impl Engine {
             image,
             opts,
             statics,
-            shared,
+            arenas,
+            staged,
             caches,
-            store,
         })
     }
 
@@ -227,12 +275,60 @@ impl Engine {
         self.token_counter
     }
 
+    /// Whether the device-resident KV fast path is active (the artifacts
+    /// provide the raw `kv_append` component).
+    pub fn kv_device_resident(&self) -> bool {
+        self.kv_append_ok
+    }
+
+    /// Turn on the async expert-fetch pipeline: `workers` background
+    /// threads fetch + dequantize the next layer's predicted selection (the
+    /// cache-aware router's reuse signal) while the current layer's
+    /// dispatches run. Off by default — without it every simulator metric
+    /// is bit-identical to the pre-pipeline engine; with it, consumed
+    /// prefetches are charged through the deterministic overlap model in
+    /// [`FlashSim::read_flash_prefetched`].
+    pub fn enable_prefetch(&mut self, workers: usize) {
+        if self.prefetch.is_none() {
+            self.prefetch = Some(Prefetcher::new(workers));
+        }
+    }
+
+    /// (issued, used, in_flight) totals of the prefetch pipeline.
+    pub fn prefetch_stats(&self) -> (u64, u64, usize) {
+        self.prefetch
+            .as_ref()
+            .map(|p| (p.issued, p.used, p.in_flight()))
+            .unwrap_or((0, 0, 0))
+    }
+
+    /// Issue prefetches for `layer`'s predicted misses (the previous
+    /// token's reuse signal, skipping experts already cached). No-op with
+    /// prefetching disabled.
+    fn issue_prefetch_for_layer(&mut self, layer: usize) {
+        if self.prefetch.is_none() {
+            return;
+        }
+        for i in 0..self.last_sel[layer].len() {
+            let e = self.last_sel[layer][i];
+            if !self.caches[layer].contains(e) {
+                if let Some(p) = self.prefetch.as_mut() {
+                    p.issue(&self.image, layer, e);
+                }
+            }
+        }
+    }
+
     /// Reset the sequence state (KV caches + position). The expert cache
     /// persists across sequences, like a real deployment.
     pub fn reset_sequence(&mut self) {
         for v in self.kv_k.iter_mut().chain(self.kv_v.iter_mut()) {
             v.iter_mut().for_each(|x| *x = 0.0);
         }
+        // Invalidate the device-resident buffers; they are rebuilt lazily
+        // from the (zeroed) mirror at the next step.
+        self.kv_dev_k.iter_mut().for_each(|b| *b = None);
+        self.kv_dev_v.iter_mut().for_each(|b| *b = None);
         self.pos = 0;
     }
 
@@ -242,9 +338,17 @@ impl Engine {
         for c in &mut self.caches {
             *c = ExpertCache::new(self.opts.cache_capacity, self.opts.policy);
         }
-        for s in &mut self.store {
+        for a in &mut self.arenas {
+            a.clear();
+        }
+        for s in &mut self.last_sel {
             s.clear();
         }
+        if let Some(p) = self.prefetch.as_mut() {
+            p.reset();
+        }
+        // Staged buffers stay: their keys name immutable expert weights,
+        // so the content remains bit-exact whenever those experts return.
         self.flash.reset();
         self.token_counter = 0;
         self.router_state = RouterState::new(self.cfg.n_layers, self.opts.seed);
@@ -252,7 +356,7 @@ impl Engine {
     }
 
     /// Pre-fill every layer cache with a random expert set (Fig. 19).
-    pub fn warm_caches_random(&mut self, seed: u64) {
+    pub fn warm_caches_random(&mut self, seed: u64) -> Result<()> {
         let mut rng = crate::util::rng::Rng::new(seed);
         for l in 0..self.cfg.n_layers {
             let mut all: Vec<u32> = (0..self.cfg.n_experts as u32).collect();
@@ -260,18 +364,15 @@ impl Engine {
             all.truncate(self.opts.cache_capacity);
             self.caches[l].warm(&all, self.token_counter);
             for &e in &all {
-                let w = self.fetch_routed(l, e, true).expect("warm fetch");
-                self.store[l].insert(e, w);
+                let slot = self.arenas[l].alloc_cache_slot(e)?;
+                let bytes = {
+                    let (w1, w3, w2) = self.arenas[l].slot_mut(slot);
+                    self.image.fetch_expert_into(l, e as usize, false, w1, w3, w2)?
+                };
+                self.flash.read_flash(bytes);
             }
         }
-    }
-
-    fn fetch_routed(&mut self, layer: usize, expert: u32, charge: bool) -> Result<ExpertHost> {
-        let e = self.image.fetch_expert(layer, expert as usize, false)?;
-        if charge {
-            self.flash.read_flash(e.flash_bytes);
-        }
-        Ok(ExpertHost { w1: e.w1, w3: e.w3, w2: e.w2 })
+        Ok(())
     }
 
     /// Memory the device must keep resident: static weights + shared experts
@@ -294,10 +395,24 @@ impl Engine {
             self.pos,
             self.cfg.max_seq
         );
-        let cfg = self.cfg.clone();
-        let (d, hn, hd, t) = (cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.max_seq);
+        // Hoisted per-step scalars: no per-token config clone, no per-layer
+        // strategy clone anywhere below.
+        let (d, hn, hd, t) = (
+            self.cfg.d_model,
+            self.cfg.n_heads,
+            self.cfg.head_dim,
+            self.cfg.max_seq,
+        );
+        let n_layers = self.cfg.n_layers;
+        let (top_k, n_experts) = (self.cfg.top_k, self.cfg.n_experts);
+        let (e_cnt, d_ff, renorm) =
+            (self.cfg.n_ffn_calls(), self.cfg.d_ff, self.cfg.renorm_topk);
+        let bytes_per = self.image.bytes_per_expert();
+        let use_dev_kv = self.kv_append_ok;
+        static ORIGINAL: Strategy = Strategy::Original;
         let mut step_stats = StepStats::default();
 
+        let t0 = Instant::now();
         let tok_buf = self.rt.buf_i32_scalar(token as i32)?;
         let pos_buf = self.rt.buf_i32_scalar(self.pos as i32)?;
         let outs = self.rt.run(
@@ -305,16 +420,31 @@ impl Engine {
             &[&self.statics.embed, &self.statics.pos_embed, &tok_buf, &pos_buf],
         )?;
         let mut h: Vec<f32> = Runtime::lit_f32(&outs[0])?;
+        step_stats.t_compute_s += t0.elapsed().as_secs_f64();
 
         let overrides = self.override_selection.take();
-        let mut trace_sel: Vec<Vec<u32>> = Vec::with_capacity(cfg.n_layers);
+        let mut trace_sel: Vec<Vec<u32>> = Vec::with_capacity(n_layers);
         let mut trace_logits: Vec<Vec<f32>> = Vec::new();
 
-        for l in 0..cfg.n_layers {
-            // ---- fused attention + router (one dispatch per layer) ----
+        for l in 0..n_layers {
+            // ---- KV acquire: persistent device buffer, or upload the host
+            // mirror (first use after reset / legacy artifacts) ----
+            let t0 = Instant::now();
             let h_buf = self.rt.buf_f32(&h, &[1, d])?;
-            let kc_buf = self.rt.buf_f32(&self.kv_k[l], &[hn, t, hd])?;
-            let vc_buf = self.rt.buf_f32(&self.kv_v[l], &[hn, t, hd])?;
+            let kc_dev = if use_dev_kv { self.kv_dev_k[l].take() } else { None };
+            let kc_buf = match kc_dev {
+                Some(b) => b,
+                None => self.rt.buf_f32(&self.kv_k[l], &[hn, t, hd])?,
+            };
+            let vc_dev = if use_dev_kv { self.kv_dev_v[l].take() } else { None };
+            let vc_buf = match vc_dev {
+                Some(b) => b,
+                None => self.rt.buf_f32(&self.kv_v[l], &[hn, t, hd])?,
+            };
+            step_stats.t_upload_s += t0.elapsed().as_secs_f64();
+
+            // ---- fused attention + router (one dispatch per layer) ----
+            let t0 = Instant::now();
             let ls = &self.statics.layers[l];
             let outs = self.rt.run(
                 "layer",
@@ -325,7 +455,11 @@ impl Engine {
             let v_new: Vec<f32> = Runtime::lit_f32(&outs[2])?;
             let z: Vec<f32> = Runtime::lit_f32(&outs[3])?;
             let xn: Vec<f32> = Runtime::lit_f32(&outs[4])?;
-            // Write the [H,1,hd] slices into the host KV cache at `pos`.
+            step_stats.t_compute_s += t0.elapsed().as_secs_f64();
+
+            // ---- KV update: host mirror always (snapshot/restore source);
+            // device append on the fast path — only [H,1,hd] is uploaded.
+            let t0 = Instant::now();
             for head in 0..hn {
                 let dst = (head * t + self.pos) * hd;
                 self.kv_k[l][dst..dst + hd]
@@ -333,16 +467,25 @@ impl Engine {
                 self.kv_v[l][dst..dst + hd]
                     .copy_from_slice(&v_new[head * hd..(head + 1) * hd]);
             }
+            if use_dev_kv {
+                let k_slice = self.rt.buf_f32(&k_new, &[hn, 1, hd])?;
+                let v_slice = self.rt.buf_f32(&v_new, &[hn, 1, hd])?;
+                self.kv_dev_k[l] =
+                    Some(self.rt.run_raw("kv_append", &[&kc_buf, &k_slice, &pos_buf])?);
+                self.kv_dev_v[l] =
+                    Some(self.rt.run_raw("kv_append", &[&vc_buf, &v_slice, &pos_buf])?);
+            }
+            step_stats.t_upload_s += t0.elapsed().as_secs_f64();
 
             // ---- cache-aware selection ----
-            let mask = self.caches[l].mask(cfg.n_experts);
-            let strategy = if self.strategy_active {
-                self.opts.strategy.clone()
+            let mask = self.caches[l].mask(n_experts);
+            let strategy: &Strategy = if self.strategy_active {
+                &self.opts.strategy
             } else {
-                Strategy::Original
+                &ORIGINAL
             };
             let mut sel =
-                routing::select(&strategy, &z, &mask, l, cfg.top_k, &mut self.router_state);
+                routing::select(strategy, &z, &mask, l, top_k, &mut self.router_state);
             if let Some(ov) = overrides.as_ref().and_then(|o| o.get(l)) {
                 if !ov.is_empty() {
                     sel.experts = ov.clone();
@@ -354,51 +497,109 @@ impl Engine {
                 }
             }
 
-            // ---- cache access + flash fetches ----
+            // ---- prefetch issue: predict layer l+1 from the previous
+            // token's selection; its fetches overlap with this layer's
+            // experts dispatch ----
+            if l + 1 < n_layers {
+                self.issue_prefetch_for_layer(l + 1);
+            }
+
+            // ---- cache access + arena placement + flash fetches ----
             let access = self.caches[l].access(&sel.experts, self.token_counter, None);
             step_stats.hits += access.hits;
             step_stats.misses += access.missed.len() as u32;
-            let bytes_per = self.image.bytes_per_expert();
-            for &e in &access.missed {
-                let w = self.fetch_routed(l, e, true)?;
+            let t0 = Instant::now();
+            let plan = self.arenas[l].plan_misses(
+                &access.missed,
+                &access.evicted,
+                &access.resident_after,
+                &sel.experts,
+            )?;
+            for ms in &plan {
+                let pre = match self.prefetch.as_mut().and_then(|p| p.take(l, ms.expert)) {
+                    Some(Ok(w)) => Some(w),
+                    Some(Err(e)) => return Err(e),
+                    None => None,
+                };
+                match pre {
+                    Some(w) => {
+                        let (w1, w3, w2) = self.arenas[l].slot_mut(ms.slot);
+                        w1.copy_from_slice(&w.w1);
+                        w3.copy_from_slice(&w.w3);
+                        w2.copy_from_slice(&w.w2);
+                        self.flash.read_flash_prefetched(w.flash_bytes);
+                        step_stats.prefetch_hits += 1;
+                    }
+                    None => {
+                        let bytes = {
+                            let (w1, w3, w2) = self.arenas[l].slot_mut(ms.slot);
+                            self.image
+                                .fetch_expert_into(l, ms.expert as usize, false, w1, w3, w2)?
+                        };
+                        self.flash.read_flash(bytes);
+                    }
+                }
                 step_stats.flash_bytes += bytes_per;
-                // Streamed-but-not-retained experts (cache smaller than K)
-                // still pass through DRAM; keep them for this step only.
-                self.store[l].insert(e, w);
             }
             // Hits stream from DRAM.
             self.flash.read_dram(access.hits as u64 * bytes_per);
+            step_stats.t_fetch_s += t0.elapsed().as_secs_f64();
 
-            // ---- stacked experts call ----
-            let coef = routing::gate_coefficients(&sel.weights, &sel.experts, cfg.renorm_topk);
-            self.stage_experts(l, &sel.experts, &coef);
-            let e_cnt = cfg.n_ffn_calls();
-            let (df, fd) = (d * cfg.d_ff, cfg.d_ff * d);
+            // ---- stacked experts dispatch (staged-set reuse) ----
+            let t0 = Instant::now();
+            let coef = routing::gate_coefficients(&sel.weights, &sel.experts, renorm);
+            let copied = {
+                let (staged, arena) = (&mut self.staged[l], &self.arenas[l]);
+                staged.build(arena, &sel.experts, &coef)?
+            };
+            step_stats.staged_slots_copied += copied;
+            let staged = &self.staged[l];
+            if copied > 0 || self.staged_dev[l].is_none() {
+                let w1 = self.rt.buf_f32(&staged.w1, &[e_cnt, d, d_ff])?;
+                let w3 = self.rt.buf_f32(&staged.w3, &[e_cnt, d, d_ff])?;
+                let w2 = self.rt.buf_f32(&staged.w2, &[e_cnt, d_ff, d])?;
+                self.staged_dev[l] = Some((w1, w3, w2));
+                step_stats.staged_uploads += 1;
+            }
+            let coef_buf = self.rt.buf_f32(&staged.coef, &[e_cnt])?;
             let xn_buf = self.rt.buf_f32(&xn, &[1, d])?;
-            let w1_buf = self.rt.buf_f32(&self.stage_w1, &[e_cnt, d, cfg.d_ff])?;
-            let w3_buf = self.rt.buf_f32(&self.stage_w3, &[e_cnt, d, cfg.d_ff])?;
-            let w2_buf = self.rt.buf_f32(&self.stage_w2, &[e_cnt, cfg.d_ff, d])?;
-            let coef_buf = self.rt.buf_f32(&self.stage_coef, &[e_cnt])?;
-            let _ = (df, fd);
+            step_stats.t_stage_s += t0.elapsed().as_secs_f64();
+
+            let t0 = Instant::now();
+            let (bw1, bw3, bw2) = self.staged_dev[l]
+                .as_ref()
+                .context("staged device buffers missing")?;
             let outs = self
                 .rt
-                .run("experts", &[&xn_buf, &w1_buf, &w3_buf, &w2_buf, &coef_buf])?;
+                .run("experts", &[&xn_buf, bw1, bw3, bw2, &coef_buf])?;
             let y: Vec<f32> = Runtime::lit_f32(&outs[0])?;
+            step_stats.t_compute_s += t0.elapsed().as_secs_f64();
 
-            // Drop evicted / streamed-but-not-retained experts from the
-            // host store. This must happen AFTER staging: with a cache
-            // smaller than K, a same-step hit can be evicted by a later
-            // same-step insert while its weights are still needed for the
-            // experts call.
-            for &e in access.evicted.iter().chain(&access.missed) {
-                if !self.caches[l].contains(e) {
-                    self.store[l].remove(&e);
-                }
-            }
+            // Deferred arena moves: promote conflict-diverted misses and
+            // drop streamed-but-not-retained experts — strictly AFTER the
+            // dispatch consumed the staged weights (with a cache smaller
+            // than K, a same-step hit can be evicted by a later same-step
+            // insert while its weights are still needed above).
+            self.arenas[l].finish_step();
 
             // ---- residual ----
             for i in 0..d {
                 h[i] = h1[i] + y[i];
+            }
+
+            // Record the prefetcher's reuse signal for the next token at
+            // this layer: the top-2K *ranked* experts, not just the
+            // selected K. A selected expert is in the cache right after
+            // this step, so next-token misses come from the near-miss band
+            // just outside the selection — the band routing drift pulls
+            // experts in from.
+            let last = &mut self.last_sel[l];
+            last.clear();
+            if self.prefetch.is_some() {
+                let r = routing::ranking(&sel.weights);
+                last.extend_from_slice(&r[..(2 * top_k).min(r.len())]);
+            } else {
+                last.extend_from_slice(&sel.experts);
             }
 
             if self.opts.record_trace {
@@ -410,11 +611,17 @@ impl Engine {
         }
 
         // ---- head ----
+        let t0 = Instant::now();
         let h_buf = self.rt.buf_f32(&h, &[1, d])?;
         let outs = self
             .rt
             .run("lm_head", &[&h_buf, &self.statics.lnf, &self.statics.head])?;
         let logits: Vec<f32> = Runtime::lit_f32(&outs[0])?;
+        step_stats.t_compute_s += t0.elapsed().as_secs_f64();
+
+        // Prefetch layer 0's predicted misses for the NEXT token: the
+        // fetches overlap with sampling and caller work between steps.
+        self.issue_prefetch_for_layer(0);
 
         if self.opts.record_trace {
             let lg = if self.opts.record_logits { Some(trace_logits) } else { None };
@@ -425,45 +632,6 @@ impl Engine {
         self.flash.end_token(self.resident_bytes());
         self.last_step = step_stats;
         Ok(logits)
-    }
-
-    /// Copy selected + shared expert weights into the stacked staging
-    /// arrays. Selections shorter than K (pruning) are padded with the
-    /// first expert's weights at coefficient 0 (exactly zero contribution).
-    fn stage_experts(&mut self, layer: usize, selected: &[u32], coef: &[f32]) {
-        let cfg = &self.cfg;
-        let (df, fd) = (cfg.d_model * cfg.d_ff, cfg.d_ff * cfg.d_model);
-        let k = cfg.top_k;
-        for slot in 0..k {
-            let (src, c): (&ExpertHost, f32) = if slot < selected.len() {
-                (
-                    self.store[layer]
-                        .get(&selected[slot])
-                        .expect("selected expert must be staged"),
-                    coef[slot],
-                )
-            } else {
-                // Padding slot: reuse slot 0's weights with coef 0.
-                (
-                    self.store[layer]
-                        .get(&selected[0])
-                        .expect("padding needs at least one expert"),
-                    0.0,
-                )
-            };
-            self.stage_w1[slot * df..(slot + 1) * df].copy_from_slice(&src.w1);
-            self.stage_w3[slot * df..(slot + 1) * df].copy_from_slice(&src.w3);
-            self.stage_w2[slot * fd..(slot + 1) * fd].copy_from_slice(&src.w2);
-            self.stage_coef[slot] = c;
-        }
-        for s in 0..cfg.n_shared {
-            let slot = k + s;
-            let src = &self.shared[layer][s];
-            self.stage_w1[slot * df..(slot + 1) * df].copy_from_slice(&src.w1);
-            self.stage_w3[slot * df..(slot + 1) * df].copy_from_slice(&src.w3);
-            self.stage_w2[slot * fd..(slot + 1) * fd].copy_from_slice(&src.w2);
-            self.stage_coef[slot] = 1.0;
-        }
     }
 
     /// Teacher-forced scoring: returns (sum of -log p(next), token count).
@@ -517,7 +685,8 @@ impl Engine {
             pos: self.pos,
             token_counter: self.token_counter,
             caches: self.caches.clone(),
-            store: self.store.clone(),
+            arenas: self.arenas.clone(),
+            last_sel: self.last_sel.clone(),
             router_state: self.router_state.clone(),
         }
     }
@@ -525,11 +694,17 @@ impl Engine {
     pub fn restore(&mut self, snap: &EngineSnapshot) {
         self.kv_k = snap.kv_k.clone();
         self.kv_v = snap.kv_v.clone();
+        // Device KV no longer matches the mirror: rebuild lazily.
+        self.kv_dev_k.iter_mut().for_each(|b| *b = None);
+        self.kv_dev_v.iter_mut().for_each(|b| *b = None);
         self.pos = snap.pos;
         self.token_counter = snap.token_counter;
         self.caches = snap.caches.clone();
-        self.store = snap.store.clone();
+        self.arenas = snap.arenas.clone();
+        self.last_sel = snap.last_sel.clone();
         self.router_state = snap.router_state.clone();
+        // Staged buffers need no invalidation: their keys name immutable
+        // expert weights, so matching positions stay bit-exact.
     }
 
     /// Aggregate cache stats over all layers: (hits, misses, miss_rate).

@@ -1,15 +1,25 @@
 //! The inference engine: per-token decode loop over the AOT components.
 //!
-//! One token = `embed` → per layer (`attn` → `router` → **cache-aware
-//! re-rank** → expert fetch through the DRAM cache → `experts`) → `lm_head`.
-//! Expert weights are runtime arguments to the `experts` executable, so the
-//! Rust cache genuinely owns them: a miss reads quantized bytes from the
-//! flash image (charging the flash simulator), dequantizes, and stages them.
+//! One token = `embed` → per layer (fused `layer` dispatch against the
+//! device-resident KV buffers → **cache-aware re-rank** → expert fetch
+//! through the DRAM cache into the slot arena → stacked `experts`
+//! dispatch) → `lm_head`. Expert weights are runtime arguments to the
+//! `experts` executable, so the Rust cache genuinely owns them: a miss
+//! reads quantized bytes from the flash image (charging the flash
+//! simulator) and dequantizes straight into its arena slot; a hit costs a
+//! slot lookup, and an unchanged selection reuses the previously uploaded
+//! stacked device buffers outright.
 //!
-//! See [`engine::Engine`] for the main type; [`sampler`] for generation.
+//! See [`engine::Engine`] for the main type; [`arena`] for the slot-arena
+//! staging, [`prefetch`] for the async expert-fetch pipeline, and
+//! [`sampler`] for generation.
 
+pub mod arena;
 pub mod engine;
+pub mod prefetch;
 pub mod sampler;
 
+pub use arena::{LayerArena, MissSlot, StagedLayer};
 pub use engine::{Engine, EngineOptions, EngineSnapshot, StepStats};
+pub use prefetch::Prefetcher;
 pub use sampler::Sampler;

@@ -1,0 +1,135 @@
+//! Async expert-fetch pipeline: flash reads + dequantization off-thread,
+//! overlapped with the current layer's PJRT dispatches.
+//!
+//! The cache-aware router makes consecutive selections sticky by design
+//! (that is the paper's whole premise), so the previous token's selection
+//! at layer `l+1` is a strong predictor of the next one. While layer `l`'s
+//! attention/experts dispatches run, the engine issues fetches for layer
+//! `l+1`'s predicted misses; by the time the decode loop reaches `l+1`,
+//! the weights are (usually) dequantized and ready.
+//!
+//! Expert weights are immutable in the flash image, so a completed
+//! prefetch never goes stale: mispredictions simply wait in the pending
+//! table until that expert actually misses, or until the table is cleared.
+//!
+//! Wall-clock overlap is real (worker threads vs. the PJRT dispatch); the
+//! *virtual* clock stays deterministic — consumed prefetches are charged
+//! through [`crate::flash::FlashSim::read_flash_prefetched`], which hides
+//! at most one token's compute window regardless of thread timing.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::util::threadpool::WorkerPool;
+use crate::weights::{ExpertWeights, FlashImage};
+
+pub struct Prefetcher {
+    pool: WorkerPool,
+    pending: HashMap<(usize, u32), mpsc::Receiver<Result<ExpertWeights>>>,
+    /// Pending keys in issue order — mispredictions are evicted
+    /// oldest-first when the table fills, so a long run with routing drift
+    /// can never clog the pipeline with stale predictions.
+    order: VecDeque<(usize, u32)>,
+    /// Fetches issued / fetches that served a demand miss (lifetime totals).
+    pub issued: u64,
+    pub used: u64,
+    max_pending: usize,
+}
+
+impl Prefetcher {
+    pub fn new(workers: usize) -> Self {
+        Prefetcher {
+            pool: WorkerPool::new(workers),
+            pending: HashMap::new(),
+            order: VecDeque::new(),
+            issued: 0,
+            used: 0,
+            // Bounds both memory and the worst-case take() stall (a claim
+            // can wait behind at most this many queued fetches).
+            max_pending: workers.max(1) * 8,
+        }
+    }
+
+    /// Begin fetching `(layer, expert)` off-thread unless it is already in
+    /// flight. A full table evicts its oldest entry first (a stale
+    /// misprediction; dropping it only costs a demand fetch later), so
+    /// fresh predictions always get through.
+    pub fn issue(&mut self, image: &Arc<FlashImage>, layer: usize, expert: u32) {
+        if self.pending.contains_key(&(layer, expert)) {
+            return;
+        }
+        while self.pending.len() >= self.max_pending {
+            match self.order.pop_front() {
+                Some(old) => {
+                    // Dropping the receiver orphans the worker's send —
+                    // harmless; the fetch result is simply discarded.
+                    self.pending.remove(&old);
+                }
+                None => break, // order/pending desync: fail open
+            }
+        }
+        let (tx, rx) = mpsc::channel();
+        let image = Arc::clone(image);
+        self.pool.submit(move || {
+            let _ = tx.send(image.fetch_expert(layer, expert as usize, false));
+        });
+        self.pending.insert((layer, expert), rx);
+        self.order.push_back((layer, expert));
+        self.issued += 1;
+    }
+
+    /// Claim a prefetched expert, blocking if the fetch is still queued or
+    /// in flight. Blocking (rather than try-and-fallback) is deliberate:
+    /// whether a miss is served by prefetch must depend only on the issue
+    /// history, never on thread timing, or the FlashSim overlap accounting
+    /// would stop being deterministic. The stall is bounded by
+    /// `max_pending` queued fetches. `None` means the pair was never
+    /// issued, was evicted as stale, or its worker died — the caller falls
+    /// back to a demand fetch.
+    pub fn take(&mut self, layer: usize, expert: u32) -> Option<Result<ExpertWeights>> {
+        let rx = self.pending.remove(&(layer, expert))?;
+        self.order.retain(|k| *k != (layer, expert));
+        match rx.recv() {
+            Ok(res) => {
+                if res.is_ok() {
+                    self.used += 1;
+                }
+                Some(res)
+            }
+            Err(_) => None,
+        }
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Drop all pending work and zero the counters (engine reset). Workers
+    /// finish their jobs; the orphaned sends fail harmlessly.
+    pub fn reset(&mut self) {
+        self.pending.clear();
+        self.order.clear();
+        self.issued = 0;
+        self.used = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Prefetcher needs a FlashImage, so its end-to-end behaviour is covered
+    // by the artifact-gated integration tests and the micro_hotpath bench;
+    // the pending-table bookkeeping is exercised here via take() on
+    // never-issued keys.
+    use super::*;
+
+    #[test]
+    fn take_unissued_returns_none() {
+        let mut p = Prefetcher::new(1);
+        assert!(p.take(0, 42).is_none());
+        assert_eq!(p.in_flight(), 0);
+        assert_eq!((p.issued, p.used), (0, 0));
+    }
+}

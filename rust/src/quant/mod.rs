@@ -5,28 +5,43 @@
 //! low nibble. Scales are per last-axis column; for a row-major tensor
 //! `[.., C]`, element index `i` belongs to column `i % C`.
 
+/// Dequantize int8 into a caller-owned slice (the zero-allocation hot
+/// path: the slot arena dequantizes misses straight into their slot).
+pub fn dequant_i8_into(data: &[u8], scales: &[f32], out: &mut [f32]) {
+    assert_eq!(data.len(), out.len(), "i8 dequant size mismatch");
+    let c = scales.len();
+    for (i, (&b, o)) in data.iter().zip(out.iter_mut()).enumerate() {
+        let q = b as i8;
+        *o = q as f32 * scales[i % c];
+    }
+}
+
+/// Unpack + dequantize int4 into a caller-owned slice; the logical element
+/// count is `out.len()`.
+pub fn dequant_i4_into(data: &[u8], scales: &[f32], out: &mut [f32]) {
+    let c = scales.len();
+    let n = out.len();
+    assert!(data.len() * 2 >= n, "i4 dequant size mismatch");
+    for (i, o) in out.iter_mut().enumerate() {
+        let byte = data[i / 2];
+        let nib = if i % 2 == 0 { byte & 0xF } else { byte >> 4 };
+        let q = ((nib as i8) << 4) >> 4; // sign-extend the nibble
+        *o = q as f32 * scales[i % c];
+    }
+}
+
 /// Dequantize int8 (one byte per element) with per-column scales.
 pub fn dequant_i8(data: &[u8], scales: &[f32], out: &mut Vec<f32>) {
-    let c = scales.len();
     out.clear();
-    out.reserve(data.len());
-    for (i, &b) in data.iter().enumerate() {
-        let q = b as i8;
-        out.push(q as f32 * scales[i % c]);
-    }
+    out.resize(data.len(), 0.0);
+    dequant_i8_into(data, scales, out);
 }
 
 /// Unpack + dequantize int4; `n` is the logical element count.
 pub fn dequant_i4(data: &[u8], n: usize, scales: &[f32], out: &mut Vec<f32>) {
-    let c = scales.len();
     out.clear();
-    out.reserve(n);
-    for i in 0..n {
-        let byte = data[i / 2];
-        let nib = if i % 2 == 0 { byte & 0xF } else { byte >> 4 };
-        let q = ((nib as i8) << 4) >> 4; // sign-extend the nibble
-        out.push(q as f32 * scales[i % c]);
-    }
+    out.resize(n, 0.0);
+    dequant_i4_into(data, scales, out);
 }
 
 /// Quantize (test + image-writer support; mirrors export.quantize_sym).
@@ -123,6 +138,24 @@ mod tests {
         let (q, s) = quant_sym(&[0.0; 8], 2, 8);
         assert!(q.iter().all(|&x| x == 0));
         assert!(s.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn into_variants_match_vec_variants() {
+        let w: Vec<f32> = (0..24).map(|i| (i as f32 - 12.0) * 0.1).collect();
+        let (q8, s8) = quant_sym(&w, 4, 8);
+        let bytes: Vec<u8> = q8.iter().map(|&x| x as u8).collect();
+        let mut via_vec = Vec::new();
+        dequant_i8(&bytes, &s8, &mut via_vec);
+        let mut via_slice = vec![0f32; w.len()];
+        dequant_i8_into(&bytes, &s8, &mut via_slice);
+        assert_eq!(via_vec, via_slice);
+
+        let (q4, s4) = quant_sym(&w, 4, 4);
+        let packed = pack_i4(&q4);
+        dequant_i4(&packed, w.len(), &s4, &mut via_vec);
+        dequant_i4_into(&packed, &s4, &mut via_slice);
+        assert_eq!(via_vec, via_slice);
     }
 
     #[test]

@@ -47,6 +47,13 @@ pub struct Component {
     pub exe: PjRtLoadedExecutable,
     pub args: Vec<Spec>,
     pub outputs: Vec<Spec>,
+    /// Lowered with `return_tuple=False` (exactly one output array): the
+    /// result can stay on device as a `PjRtBuffer` via [`Runtime::run_raw`]
+    /// instead of being downloaded and tuple-decomposed. This is what makes
+    /// persistent device-resident state (the KV caches) possible — a raw
+    /// component's output feeds the next step's input without a host
+    /// round-trip.
+    pub raw: bool,
 }
 
 /// A loaded model runtime: one compiled executable per AOT component.
@@ -99,9 +106,13 @@ impl Runtime {
                 .iter()
                 .map(Spec::from_json)
                 .collect::<Result<Vec<_>>>()?;
+            let raw = comp
+                .get("raw")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(false);
             components.insert(
                 name.clone(),
-                Component { name: name.clone(), exe, args, outputs },
+                Component { name: name.clone(), exe, args, outputs, raw },
             );
         }
         Ok(Runtime {
@@ -116,6 +127,13 @@ impl Runtime {
         self.components
             .get(name)
             .with_context(|| format!("component {name:?} not loaded"))
+    }
+
+    /// Whether this artifact set provides `name`. The engine feature-gates
+    /// fast paths on optional components (e.g. `kv_append`) so older
+    /// artifacts keep working through the host-round-trip fallback.
+    pub fn has_component(&self, name: &str) -> bool {
+        self.components.contains_key(name)
     }
 
     // ---------------- buffer helpers ----------------
@@ -165,6 +183,29 @@ impl Runtime {
         let first = replica.into_iter().next().context("no output buffer")?;
         let mut lit = first.to_literal_sync().map_err(to_anyhow)?;
         lit.decompose_tuple().map_err(to_anyhow)
+    }
+
+    /// Execute a *raw* component and keep its single output on device.
+    ///
+    /// No literal download happens: the returned `PjRtBuffer` can be fed
+    /// straight into the next dispatch. This is the device-resident hot
+    /// path — e.g. `kv_append` consumes the persistent KV buffer plus a
+    /// `[H,1,hd]` slice and returns the updated persistent buffer.
+    pub fn run_raw(&self, name: &str, args: &[&PjRtBuffer]) -> Result<PjRtBuffer> {
+        let comp = self.component(name)?;
+        anyhow::ensure!(
+            comp.raw,
+            "{name}: not a raw component (lowered with return_tuple=True)"
+        );
+        anyhow::ensure!(
+            args.len() == comp.args.len(),
+            "{name}: {} args given, {} expected",
+            args.len(),
+            comp.args.len()
+        );
+        let outs = comp.exe.execute_b(args).map_err(to_anyhow)?;
+        let replica = outs.into_iter().next().context("no replica output")?;
+        replica.into_iter().next().context("no output buffer")
     }
 
     /// Extract an f32 vector from an output literal.

@@ -1,11 +1,70 @@
-//! Minimal scoped thread pool (tokio/rayon are not in the offline image).
+//! Minimal thread pools (tokio/rayon are not in the offline image).
 //!
-//! Sweeps use this to run independent evaluation points in parallel. On the
-//! single-core CI image it degrades to near-sequential execution but keeps
-//! the same API on multi-core hosts.
+//! Two shapes:
+//!
+//! * [`run_parallel`] — scoped batch execution: spawn, run all jobs, join.
+//!   Sweeps use it for independent evaluation points. On the single-core CI
+//!   image it degrades to near-sequential execution but keeps the same API.
+//! * [`WorkerPool`] — persistent workers behind a job channel. The decode
+//!   hot path's expert prefetcher submits fetch+dequant jobs per token;
+//!   spawning threads per token would dwarf the fetch itself, so the pool
+//!   lives as long as the engine.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A persistent pool of worker threads consuming a shared job queue.
+/// Dropping the pool closes the queue and joins the workers (queued jobs
+/// finish first; results delivered through channels the jobs own).
+pub struct WorkerPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn new(workers: usize) -> Self {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..workers.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                std::thread::spawn(move || loop {
+                    // Hold the lock only for the dequeue, not the job run.
+                    let job = { rx.lock().unwrap().recv() };
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => return, // sender dropped: shut down
+                    }
+                })
+            })
+            .collect();
+        WorkerPool { tx: Some(tx), workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue a job. Never blocks; jobs run in submission order per worker.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, job: F) {
+        if let Some(tx) = &self.tx {
+            // Send only fails if every worker died (panicked job); the
+            // caller's receive channel will report the loss.
+            let _ = tx.send(Box::new(job));
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
 
 /// Run `jobs` closures on up to `workers` threads; returns results in job
 /// order. Panics in jobs propagate.
@@ -81,5 +140,39 @@ mod tests {
         let jobs: Vec<Box<dyn FnOnce() -> i32 + Send>> = vec![];
         let out: Vec<i32> = run_parallel(4, jobs);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn worker_pool_runs_submitted_jobs() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.workers(), 3);
+        let (tx, rx) = mpsc::channel();
+        for i in 0..20u32 {
+            let tx = tx.clone();
+            pool.submit(move || {
+                let _ = tx.send(i * 2);
+            });
+        }
+        drop(tx);
+        let mut got: Vec<u32> = rx.iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..20).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn worker_pool_drop_flushes_queue() {
+        let (tx, rx) = mpsc::channel();
+        {
+            let pool = WorkerPool::new(1);
+            for i in 0..5u32 {
+                let tx = tx.clone();
+                pool.submit(move || {
+                    let _ = tx.send(i);
+                });
+            }
+            // Drop joins the worker after it drains the queue.
+        }
+        drop(tx);
+        assert_eq!(rx.iter().count(), 5);
     }
 }

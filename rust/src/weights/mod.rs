@@ -214,56 +214,83 @@ impl FlashImage {
     /// Fetch one expert: ONE contiguous flash read of its span, then
     /// dequantize the three parts. This is the cache-miss path.
     pub fn fetch_expert(&self, layer: usize, expert: usize, shared: bool) -> Result<ExpertWeights> {
+        let prefix = if shared { "shared" } else { "experts" };
+        let elems = |part: &str| -> Result<usize> {
+            Ok(self
+                .tensor(&format!("layers.{layer}.{prefix}.{expert}.{part}"))?
+                .elems())
+        };
+        let mut out = ExpertWeights {
+            w1: vec![0f32; elems("w1")?],
+            w3: vec![0f32; elems("w3")?],
+            w2: vec![0f32; elems("w2")?],
+            flash_bytes: 0,
+        };
+        out.flash_bytes = self.fetch_expert_into(
+            layer,
+            expert,
+            shared,
+            &mut out.w1,
+            &mut out.w3,
+            &mut out.w2,
+        )?;
+        Ok(out)
+    }
+
+    /// Fetch one expert straight into caller-owned slices (the slot-arena
+    /// miss path: no intermediate allocation — the dequantized weights land
+    /// at their final arena offset). Slices must match the part element
+    /// counts. Returns the flash bytes the span read moved.
+    pub fn fetch_expert_into(
+        &self,
+        layer: usize,
+        expert: usize,
+        shared: bool,
+        w1: &mut [f32],
+        w3: &mut [f32],
+        w2: &mut [f32],
+    ) -> Result<u64> {
         let span = self.expert_span(layer, expert, shared)?.clone();
         let base = span.offset;
         let raw = self.read_raw(base, span.bytes)?;
         let prefix = if shared { "shared" } else { "experts" };
-        let mut out = ExpertWeights {
-            flash_bytes: span.bytes,
-            ..Default::default()
-        };
-        for part in ["w1", "w3", "w2"] {
+        let dequant_part = |part: &str, dst: &mut [f32]| -> Result<()> {
             let name = format!("layers.{layer}.{prefix}.{expert}.{part}");
             let t = self.tensor(&name)?.clone();
             anyhow::ensure!(
                 t.offset >= base && t.offset + t.bytes <= base + span.bytes,
                 "tensor {name} outside its span"
             );
+            anyhow::ensure!(
+                t.elems() == dst.len(),
+                "tensor {name}: {} elems, destination holds {}",
+                t.elems(),
+                dst.len()
+            );
             let data = &raw[(t.offset - base) as usize..(t.offset - base + t.bytes) as usize];
-            let dst = match part {
-                "w1" => &mut out.w1,
-                "w3" => &mut out.w3,
-                _ => &mut out.w2,
+            let scales = |t: &TensorMeta| -> Vec<f32> {
+                raw[(t.scales_offset as u64 - base) as usize
+                    ..(t.scales_offset as u64 - base + t.scales_bytes) as usize]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect()
             };
             match t.dtype.as_str() {
                 "f32" => {
-                    *dst = data
-                        .chunks_exact(4)
-                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                        .collect();
+                    for (o, c) in dst.iter_mut().zip(data.chunks_exact(4)) {
+                        *o = f32::from_le_bytes(c.try_into().unwrap());
+                    }
                 }
-                "i8" => {
-                    let s = &raw[(t.scales_offset as u64 - base) as usize
-                        ..(t.scales_offset as u64 - base + t.scales_bytes) as usize];
-                    let scales: Vec<f32> = s
-                        .chunks_exact(4)
-                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                        .collect();
-                    quant::dequant_i8(data, &scales, dst);
-                }
-                "i4" => {
-                    let s = &raw[(t.scales_offset as u64 - base) as usize
-                        ..(t.scales_offset as u64 - base + t.scales_bytes) as usize];
-                    let scales: Vec<f32> = s
-                        .chunks_exact(4)
-                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                        .collect();
-                    quant::dequant_i4(data, t.elems(), &scales, dst);
-                }
+                "i8" => quant::dequant_i8_into(data, &scales(&t), dst),
+                "i4" => quant::dequant_i4_into(data, &scales(&t), dst),
                 d => bail!("unknown dtype {d:?}"),
             }
-        }
-        Ok(out)
+            Ok(())
+        };
+        dequant_part("w1", w1)?;
+        dequant_part("w3", w3)?;
+        dequant_part("w2", w2)?;
+        Ok(span.bytes)
     }
 
     /// Total bytes of all routed-expert spans (the "cacheable" set).
