@@ -1,0 +1,231 @@
+//! Multi-session serving: TTFT and aggregate throughput vs schedule.
+//!
+//! Submits one fixed batch of mixed-length requests (equal aggregate
+//! tokens by construction: `stop_token = None`, fixed `max_new`) under
+//! each scheduler mode and compares:
+//!
+//! * **fcfs** — the pre-session baseline: requests run to completion one
+//!   at a time, so every queued caller's TTFT absorbs the predecessors'
+//!   whole generations.
+//! * **round-robin** — token-level interleaving, quantum 1.
+//! * **affinity** — interleaving with cache-aware round ordering (sessions
+//!   whose last top-K selections overlap the resident expert set run
+//!   first — §3's locality idea across requests).
+//!
+//! Also re-runs the round-robin schedule on a fresh engine and asserts the
+//! shared-cache hit/miss totals are bit-identical — interleaving is a
+//! deterministic function of the schedule, not of thread timing (batch
+//! submission pins the admission order).
+//!
+//! Results land in `results/BENCH_serving.json`.
+//!
+//! Run: `cargo bench --offline --bench fig_serving`
+
+use anyhow::Result;
+use moe_cache::config::{ModelConfig, Quant};
+use moe_cache::coordinator::{
+    Coordinator, Event, Request, Schedule, ServerConfig,
+};
+use moe_cache::model::{Engine, EngineOptions};
+use moe_cache::report::{results_dir, Table};
+use moe_cache::routing::{DeltaMode, Strategy};
+use moe_cache::util::json::Json;
+use moe_cache::util::rng::Rng;
+use moe_cache::util::stats::{mean, percentile};
+
+const N_REQ: usize = 8;
+const MAX_SESSIONS: usize = 4;
+const MAX_NEW: usize = 24;
+
+fn requests(vocab: usize, max_seq: usize) -> Vec<Request> {
+    // Mixed prompt lengths: short interactive requests interleaved with
+    // long ones, the case FCFS head-of-line blocking punishes.
+    let lens = [8usize, 40, 12, 48, 16, 24, 8, 32];
+    (0..N_REQ)
+        .map(|i| {
+            let mut rng = Rng::new(100 + i as u64);
+            let len = lens[i % lens.len()].min(max_seq.saturating_sub(MAX_NEW + 1)).max(1);
+            Request {
+                id: i as u64,
+                prompt: (0..len)
+                    .map(|_| 4 + (rng.below(vocab.saturating_sub(4))) as u32)
+                    .collect(),
+                max_new: MAX_NEW,
+                temperature: 0.7,
+                // No stop token: every request generates exactly MAX_NEW
+                // tokens, so aggregate tokens are equal across schedules.
+                stop_token: None,
+            }
+        })
+        .collect()
+}
+
+struct Run {
+    ttft: Vec<f64>,
+    tokens: u64,
+    hits: u64,
+    misses: u64,
+    wall_s: f64,
+}
+
+fn run_schedule(
+    model: &str,
+    schedule: Schedule,
+    cache: usize,
+    j: usize,
+    reqs: Vec<Request>,
+) -> Result<Run> {
+    let arts = moe_cache::artifacts_dir();
+    let model_owned = model.to_string();
+    let opts = EngineOptions {
+        strategy: Strategy::CachePrior { lambda: 0.5, j, delta: DeltaMode::RunningAvg },
+        quant: Quant::Int4,
+        ..EngineOptions::defaults(cache)
+    };
+    let coord = Coordinator::spawn(
+        move || Engine::load(&arts, &model_owned, opts),
+        ServerConfig {
+            max_sessions: MAX_SESSIONS,
+            schedule,
+            decode_quantum: 1,
+            prefill_chunk: 16,
+            ..ServerConfig::default()
+        },
+    )?;
+
+    let t0 = std::time::Instant::now();
+    let rxs = coord.submit_batch(reqs)?;
+    let mut run = Run { ttft: Vec::new(), tokens: 0, hits: 0, misses: 0, wall_s: 0.0 };
+    for rx in rxs {
+        loop {
+            match rx.recv() {
+                Ok(Event::Token { .. }) => continue,
+                Ok(Event::Done(res)) => {
+                    run.ttft.push(res.ttft_s);
+                    run.tokens += res.generated.len() as u64;
+                    run.hits += res.cache_hits;
+                    run.misses += res.cache_misses;
+                    break;
+                }
+                Ok(Event::Failed { id, error }) => {
+                    anyhow::bail!("request {id} failed: {error}")
+                }
+                Err(_) => anyhow::bail!("coordinator dropped reply"),
+            }
+        }
+    }
+    run.wall_s = t0.elapsed().as_secs_f64();
+    coord.shutdown();
+    Ok(run)
+}
+
+fn main() -> Result<()> {
+    let model = std::env::var("MOE_MODEL").unwrap_or_else(|_| "qwen-tiny".into());
+    // Only three config fields are needed here — read the manifest
+    // directly instead of compiling the whole PJRT runtime for it.
+    let manifest_path = moe_cache::artifacts_dir().join(&model).join("manifest.json");
+    let manifest_text = std::fs::read_to_string(&manifest_path)?;
+    let manifest = moe_cache::util::json::parse(&manifest_text)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", manifest_path.display()))?;
+    let cfg = ModelConfig::from_json(manifest.req("config")?)?;
+    let cache = cfg.n_experts / 2;
+    let j = cfg.default_top_j();
+    let reqs = requests(cfg.vocab, cfg.max_seq);
+
+    println!("== fig_serving ({model}) ==");
+    println!("{N_REQ} requests x {MAX_NEW} tokens, max_sessions={MAX_SESSIONS}\n");
+
+    let mut table = Table::new(
+        "fig_serving",
+        &["schedule", "ttft_p90_s", "ttft_mean_s", "agg_tokens", "agg_tps", "hit_rate"],
+    );
+    let mut out: Vec<(String, Json)> = vec![
+        ("model".into(), Json::str(model.clone())),
+        ("requests".into(), Json::num(N_REQ as f64)),
+        ("max_new".into(), Json::num(MAX_NEW as f64)),
+        ("max_sessions".into(), Json::num(MAX_SESSIONS as f64)),
+    ];
+
+    let mut p90 = std::collections::HashMap::new();
+    let mut tokens = std::collections::HashMap::new();
+    for schedule in [Schedule::Fcfs, Schedule::RoundRobin, Schedule::Affinity] {
+        let r = run_schedule(&model, schedule, cache, j, reqs.clone())?;
+        let tp90 = percentile(&r.ttft, 90.0);
+        let hit_rate = r.hits as f64 / (r.hits + r.misses).max(1) as f64;
+        table.row(vec![
+            schedule.label().into(),
+            format!("{tp90:.4}"),
+            format!("{:.4}", mean(&r.ttft)),
+            r.tokens.to_string(),
+            format!("{:.2}", r.tokens as f64 / r.wall_s.max(1e-9)),
+            format!("{hit_rate:.4}"),
+        ]);
+        out.push((
+            format!("{}", schedule.label()),
+            Json::Object(vec![
+                ("ttft_p90_s".into(), Json::num(tp90)),
+                ("ttft_mean_s".into(), Json::num(mean(&r.ttft))),
+                ("aggregate_tokens".into(), Json::num(r.tokens as f64)),
+                ("wall_s".into(), Json::num(r.wall_s)),
+                ("agg_tps".into(), Json::num(r.tokens as f64 / r.wall_s.max(1e-9))),
+                ("cache_hits".into(), Json::num(r.hits as f64)),
+                ("cache_misses".into(), Json::num(r.misses as f64)),
+            ]),
+        ));
+        p90.insert(schedule.label(), tp90);
+        tokens.insert(schedule.label(), r.tokens);
+    }
+    table.print();
+
+    // Equal aggregate tokens across schedules (no stop token, fixed max_new).
+    assert_eq!(tokens["fcfs"], tokens["round-robin"]);
+    assert_eq!(tokens["fcfs"], tokens["affinity"]);
+
+    // Interleaving beats FCFS head-of-line blocking on p90 TTFT.
+    let improves = p90["round-robin"] < p90["fcfs"];
+    println!(
+        "p90 TTFT: fcfs {:.4}s -> round-robin {:.4}s ({})",
+        p90["fcfs"],
+        p90["round-robin"],
+        if improves { "improves" } else { "REGRESSION" },
+    );
+    assert!(
+        improves,
+        "interleaved p90 TTFT {:.4}s should beat FCFS {:.4}s",
+        p90["round-robin"], p90["fcfs"],
+    );
+    out.push(("ttft_p90_improves".into(), Json::Bool(improves)));
+
+    // Reproducibility: the same schedule on a fresh engine produces
+    // bit-identical shared-cache totals.
+    let a = run_schedule(&model, Schedule::RoundRobin, cache, j, reqs.clone())?;
+    let b = run_schedule(&model, Schedule::RoundRobin, cache, j, reqs)?;
+    let deterministic = a.hits == b.hits && a.misses == b.misses;
+    println!(
+        "repro: round-robin hits/misses {}/{} vs {}/{} ({})",
+        a.hits,
+        a.misses,
+        b.hits,
+        b.misses,
+        if deterministic { "deterministic" } else { "NONDETERMINISTIC" },
+    );
+    assert!(deterministic, "hit/miss totals must be reproducible for a fixed schedule");
+    out.push((
+        "repro".into(),
+        Json::Object(vec![
+            ("hits_run1".into(), Json::num(a.hits as f64)),
+            ("misses_run1".into(), Json::num(a.misses as f64)),
+            ("hits_run2".into(), Json::num(b.hits as f64)),
+            ("misses_run2".into(), Json::num(b.misses as f64)),
+            ("deterministic".into(), Json::Bool(deterministic)),
+        ]),
+    ));
+
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("BENCH_serving.json");
+    std::fs::write(&path, format!("{}", Json::Object(out)))?;
+    table.write_csv(&dir)?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

@@ -20,6 +20,41 @@ use std::collections::HashMap;
 
 use crate::util::stats::Welford;
 
+/// Eviction policy for one layer's [`ExpertCache`] (see the module docs
+/// for the paper mapping).
+///
+/// LRU implements the paper's within-step eviction order (§4.2): a step's
+/// selection is stamped in reverse weight order, so of two experts
+/// inserted by the same token the one with the *higher* router weight is
+/// evicted first:
+///
+/// ```
+/// use moe_cache::cache::{ExpertCache, Policy};
+///
+/// let mut c = ExpertCache::new(2, Policy::parse("lru").unwrap());
+/// c.access(&[10, 11], 0, None); // selection is weight-descending: 10 > 11
+/// let a = c.access(&[12], 1, None);
+/// assert_eq!(a.evicted, vec![10]); // higher-weight expert leaves first
+/// assert!(c.contains(11) && c.contains(12));
+/// assert_eq!(c.stats.misses, 3);
+/// ```
+///
+/// A cache smaller than the top-K cannot retain a whole selection: the
+/// same eviction rule displaces the higher-weight head *within the step*
+/// (a counted eviction, so it enters the Table 9 lifetime stats), and only
+/// the tail stays resident — which [`Access::resident_after`] makes
+/// visible to the staging arena:
+///
+/// ```
+/// use moe_cache::cache::{ExpertCache, Policy};
+///
+/// let mut c = ExpertCache::new(1, Policy::Lru);
+/// let a = c.access(&[5, 6], 0, None);
+/// assert_eq!(a.missed, vec![5, 6]);
+/// assert_eq!(a.evicted, vec![5]);        // displaced within the same step
+/// assert_eq!(a.resident_after, vec![6]); // only the tail survives
+/// assert_eq!(c.stats.evictions, 1);
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Policy {
     Lru,

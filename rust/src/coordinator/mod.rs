@@ -2,13 +2,22 @@
 //! scheduling and per-request metrics.
 //!
 //! The paper's deployment regime is strictly batch-size-1 decode (§1), so
-//! the coordinator's job is *scheduling*, not batching: it admits requests
-//! FCFS, runs prompt prefill at full speed with original routing or
-//! cache-aware routing per config, then interleaves decode across active
-//! sessions round-robin (fair token-level scheduling, the same policy
-//! llama-cpp's server uses for sequential sampling). Metrics per request:
-//! TTFT, decode tok/s, cache hit rate.
+//! the coordinator's job is *scheduling*, not batching: one engine thread
+//! owns the model, admits up to `max_sessions` requests, and interleaves
+//! their prefill chunks and decode quanta in rounds. Three policies
+//! ([`Schedule`]): the FCFS run-to-completion baseline, fair round-robin,
+//! and a cache-affinity order that runs the session whose last top-K
+//! selections best overlap the resident expert set — the paper's §3
+//! expert-locality idea extended across requests. Per-session KV and
+//! routing state swap in/out of the engine in O(1)
+//! ([`crate::model::SessionState`]); the expert DRAM cache is shared by
+//! all interleaved streams. Generated tokens stream back per token
+//! ([`Event::Token`]), so TTFT is decoupled from whole-generation latency.
+//! Metrics per request: TTFT (from submission), decode tok/s, virtual
+//! device tok/s, per-session cache hits/misses.
 
 pub mod server;
+pub mod session;
 
-pub use server::{Coordinator, Request, RequestResult, ServerConfig, ServerMetrics};
+pub use server::{Coordinator, ServerConfig, ServerMetrics};
+pub use session::{Event, FinishReason, Request, RequestResult, Schedule};

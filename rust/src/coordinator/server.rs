@@ -1,61 +1,75 @@
-//! Thread-based serving loop.
+//! Thread-based multi-session serving loop.
 //!
 //! One engine thread owns the `Engine` (PJRT executables are not Sync) and
-//! consumes a channel of requests; callers submit via [`Coordinator::submit`]
-//! and receive results over a per-request channel. This mirrors the
-//! single-device mobile deployment: one model, sequential token generation,
-//! concurrent callers queueing.
+//! consumes a channel of control messages; callers submit via
+//! [`Coordinator::submit`] (blocking) or [`Coordinator::submit_stream`]
+//! (per-token streaming) and receive [`Event`]s over a per-request channel.
+//!
+//! The engine thread admits up to `max_sessions` concurrent requests and
+//! interleaves prefill/decode across them in rounds (see
+//! [`super::session::Schedule`] for the FCFS baseline, fair round-robin,
+//! and the cache-affinity ordering). Each session's KV + routing state
+//! lives in a [`crate::model::SessionState`] and is exchanged with the
+//! engine in O(1) at quantum boundaries; the expert cache stays shared, so
+//! hit/miss accounting spans all interleaved streams and the affinity
+//! schedule can exploit cross-request expert locality. Tokens stream back
+//! as soon as they are sampled, so TTFT no longer waits behind whole
+//! generations.
 
+use std::collections::VecDeque;
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::model::{Engine, Sampler};
+use super::session::{
+    round_order, Event, FinishReason, Phase, Request, RequestResult, Schedule, Session,
+};
+use crate::model::Engine;
 use crate::util::stats::{mean, percentile};
 
 #[derive(Debug, Clone)]
-pub struct Request {
-    pub id: u64,
-    pub prompt: Vec<u32>,
-    pub max_new: usize,
-    pub temperature: f32,
-    pub stop_token: Option<u32>,
-}
-
-#[derive(Debug, Clone)]
-pub struct RequestResult {
-    pub id: u64,
-    pub generated: Vec<u32>,
-    /// Time to first generated token (s, wall clock).
-    pub ttft_s: f64,
-    /// Decode throughput (tokens / s, wall clock).
-    pub decode_tps: f64,
-    /// Virtual-device throughput for the decode phase (tokens / s).
-    pub device_tps: f64,
-    pub cache_hits: u64,
-    pub cache_misses: u64,
-}
-
-#[derive(Debug, Clone)]
 pub struct ServerConfig {
-    /// Max queued requests before submit blocks the caller.
+    /// Max requests waiting for admission before new submissions are
+    /// rejected with [`Event::Failed`].
     pub queue_depth: usize,
     /// Apply the cache-aware strategy during prefill too (WikiText/MMLU
     /// mode) or only during decode (GSM8K mode).
     pub strategy_during_prefill: bool,
+    /// Concurrent sessions interleaving decode (FCFS forces 1).
+    pub max_sessions: usize,
+    pub schedule: Schedule,
+    /// Decode tokens one session runs per round. Finer quanta interleave
+    /// more fairly but pay a session swap — and with it a device-KV
+    /// invalidation, i.e. a full KV mirror re-upload at the next step —
+    /// per switch whenever 2+ sessions are active; the default amortizes
+    /// the swap over several tokens.
+    pub decode_quantum: usize,
+    /// Prompt tokens one session prefills per round (bounds how long a
+    /// long prompt can delay other sessions' quanta).
+    pub prefill_chunk: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { queue_depth: 64, strategy_during_prefill: true }
+        ServerConfig {
+            queue_depth: 64,
+            strategy_during_prefill: true,
+            max_sessions: 4,
+            schedule: Schedule::RoundRobin,
+            decode_quantum: 8,
+            prefill_chunk: 32,
+        }
     }
 }
 
 #[derive(Debug, Clone, Default)]
 pub struct ServerMetrics {
     pub completed: u64,
+    pub aborted: u64,
+    pub rejected: u64,
+    pub tokens_generated: u64,
     pub ttft_s: Vec<f64>,
     pub decode_tps: Vec<f64>,
 }
@@ -63,8 +77,11 @@ pub struct ServerMetrics {
 impl ServerMetrics {
     pub fn summary(&self) -> String {
         format!(
-            "completed={} ttft_mean={:.3}s ttft_p90={:.3}s tps_mean={:.2} tps_p10={:.2}",
+            "completed={} aborted={} rejected={} tokens={} ttft_mean={:.3}s ttft_p90={:.3}s tps_mean={:.2} tps_p10={:.2}",
             self.completed,
+            self.aborted,
+            self.rejected,
+            self.tokens_generated,
             mean(&self.ttft_s),
             percentile(&self.ttft_s, 90.0),
             mean(&self.decode_tps),
@@ -74,7 +91,12 @@ impl ServerMetrics {
 }
 
 enum Msg {
-    Run(Request, Sender<Result<RequestResult, String>>),
+    Run(Request, Sender<Event>, Instant),
+    /// Atomic enqueue of many requests: admission order is the batch order
+    /// regardless of caller/engine thread timing, which makes a schedule —
+    /// and therefore the shared-cache hit/miss totals — reproducible.
+    Batch(Vec<(Request, Sender<Event>)>, Instant),
+    Abort(u64),
     Shutdown,
 }
 
@@ -104,22 +126,7 @@ impl Coordinator {
                     return ServerMetrics::default();
                 }
             };
-            let mut metrics = ServerMetrics::default();
-            while let Ok(msg) = rx.recv() {
-                match msg {
-                    Msg::Shutdown => break,
-                    Msg::Run(req, reply) => {
-                        let out = serve_one(&mut engine, &req, &cfg);
-                        if let Ok(r) = &out {
-                            metrics.completed += 1;
-                            metrics.ttft_s.push(r.ttft_s);
-                            metrics.decode_tps.push(r.decode_tps);
-                        }
-                        let _ = reply.send(out.map_err(|e| format!("{e:#}")));
-                    }
-                }
-            }
-            metrics
+            engine_loop(&mut engine, &rx, &cfg)
         });
         match ready_rx.recv() {
             Ok(Ok(())) => Ok(Coordinator { tx, handle: Some(handle) }),
@@ -131,20 +138,87 @@ impl Coordinator {
         }
     }
 
-    /// Submit a request and wait for its completion (the engine processes
-    /// requests FCFS; concurrent callers queue on the channel).
+    /// Submit a request and wait for its completion, discarding the token
+    /// stream. Concurrent callers' requests interleave on the engine thread
+    /// up to `max_sessions`.
     pub fn submit(&self, req: Request) -> Result<RequestResult> {
-        let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Run(req, reply_tx))
-            .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
-        reply_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("coordinator dropped reply"))?
-            .map_err(|e| anyhow::anyhow!(e))
+        let rx = self.submit_stream(req)?;
+        loop {
+            match rx.recv() {
+                Ok(Event::Token { .. }) => continue,
+                Ok(Event::Done(r)) => return Ok(r),
+                Ok(Event::Failed { error, .. }) => anyhow::bail!(error),
+                Err(_) => anyhow::bail!("coordinator dropped reply"),
+            }
+        }
     }
 
-    /// Stop the engine thread and collect server metrics.
+    /// Submit a request and stream its events: one [`Event::Token`] per
+    /// generated token as soon as it is sampled, then [`Event::Done`].
+    /// Dropping the receiver cancels the request at its next generated
+    /// token (counted as aborted), freeing the session slot.
+    pub fn submit_stream(&self, req: Request) -> Result<Receiver<Event>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.submit_with(req, reply_tx)?;
+        Ok(reply_rx)
+    }
+
+    /// Submit with a caller-provided event sender. Multiple requests can
+    /// share one channel, giving the caller a total order over their
+    /// events (used by the starvation tests).
+    pub fn submit_with(&self, req: Request, reply: Sender<Event>) -> Result<()> {
+        self.tx
+            .send(Msg::Run(req, reply, Instant::now()))
+            .map_err(|_| anyhow::anyhow!("coordinator stopped"))
+    }
+
+    /// Enqueue a whole batch atomically (admission order = batch order, so
+    /// the schedule is reproducible run-to-run) and return one event
+    /// receiver per request, in batch order. Unlike per-request submission
+    /// the batch is never cut by `queue_depth` — partial admission would
+    /// break the reproducibility contract.
+    pub fn submit_batch(&self, reqs: Vec<Request>) -> Result<Vec<Receiver<Event>>> {
+        let mut pairs = Vec::with_capacity(reqs.len());
+        let mut rxs = Vec::with_capacity(reqs.len());
+        for req in reqs {
+            let (tx, rx) = mpsc::channel();
+            pairs.push((req, tx));
+            rxs.push(rx);
+        }
+        self.tx
+            .send(Msg::Batch(pairs, Instant::now()))
+            .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
+        Ok(rxs)
+    }
+
+    /// [`Coordinator::submit_batch`] with one caller-provided sender shared
+    /// by every request: the atomic enqueue pins the admission order (the
+    /// schedule is reproducible) *and* the caller observes all events in
+    /// the engine's true emission order.
+    pub fn submit_batch_with(&self, reqs: Vec<Request>, reply: Sender<Event>) -> Result<()> {
+        let pairs = reqs.into_iter().map(|r| (r, reply.clone())).collect();
+        self.tx
+            .send(Msg::Batch(pairs, Instant::now()))
+            .map_err(|_| anyhow::anyhow!("coordinator stopped"))
+    }
+
+    /// Cancel a request by id, whether still queued or mid-decode. The
+    /// session's reply channel receives [`Event::Done`] with
+    /// [`FinishReason::Aborted`] and whatever tokens were generated. The
+    /// abort takes effect at the next *round* boundary — control messages
+    /// are drained once per round, so up to one quantum per active session
+    /// (≤ `max_sessions * decode_quantum` tokens) may still run first; a
+    /// request that completes before the abort is processed resolves
+    /// normally.
+    pub fn abort(&self, id: u64) -> Result<()> {
+        self.tx
+            .send(Msg::Abort(id))
+            .map_err(|_| anyhow::anyhow!("coordinator stopped"))
+    }
+
+    /// Stop the engine thread and collect server metrics. Shutdown drains:
+    /// requests already submitted — queued or mid-generation — run to
+    /// completion and deliver their events first; only new intake stops.
     pub fn shutdown(mut self) -> ServerMetrics {
         let _ = self.tx.send(Msg::Shutdown);
         self.handle
@@ -163,56 +237,348 @@ impl Drop for Coordinator {
     }
 }
 
-fn serve_one(engine: &mut Engine, req: &Request, cfg: &ServerConfig) -> Result<RequestResult> {
-    let hits0 = engine.cache_totals().0;
-    let misses0 = engine.cache_totals().1;
-    let vtime0 = engine.flash.time_s;
-    let vtok0 = engine.flash.tokens;
+// ---------------------------------------------------------------------
+// Engine thread
+// ---------------------------------------------------------------------
 
-    engine.reset_sequence();
-    engine.strategy_active = cfg.strategy_during_prefill;
-    let t0 = Instant::now();
-    let mut logits = vec![];
+type Pending = (Request, Sender<Event>, Instant);
+
+struct LoopState {
+    queue: VecDeque<Pending>,
+    active: Vec<Session>,
+    /// Admission `seq` of the session currently materialized in the engine
+    /// (seq, not the caller-supplied request id, which need not be unique).
+    /// Swap protocol: the engine always holds the resident session's true
+    /// state; every non-resident `Session::state` holds its own true
+    /// state; the resident session's `state` field holds a don't-care
+    /// scratch buffer.
+    resident: Option<u64>,
+    rr_cursor: usize,
+    next_seq: u64,
+    metrics: ServerMetrics,
+    shutdown: bool,
+}
+
+fn engine_loop(engine: &mut Engine, rx: &Receiver<Msg>, cfg: &ServerConfig) -> ServerMetrics {
+    let mut st = LoopState {
+        queue: VecDeque::new(),
+        active: Vec::new(),
+        resident: None,
+        rr_cursor: 0,
+        next_seq: 0,
+        metrics: ServerMetrics::default(),
+        shutdown: false,
+    };
+    // FCFS is the pre-session baseline: one request admitted at a time and
+    // run to completion before the next starts, so queued callers wait
+    // behind the whole generation — exactly what the interleaved schedules
+    // beat. It still runs in bounded quanta (admission stays blocked, so
+    // ordering is identical) to keep the intake/abort path responsive.
+    let max_active = match cfg.schedule {
+        Schedule::Fcfs => 1,
+        _ => cfg.max_sessions.max(1),
+    };
+    let (quantum, chunk) = (cfg.decode_quantum.max(1), cfg.prefill_chunk.max(1));
+
+    loop {
+        // ---- intake: block only when idle, otherwise drain what arrived.
+        // Shutdown is a drain, not a kill: intake stops, but everything
+        // already queued or mid-generation completes and gets its Done
+        // event before the thread exits.
+        if !st.shutdown {
+            if st.active.is_empty() && st.queue.is_empty() {
+                match rx.recv() {
+                    Ok(msg) => handle_msg(msg, &mut st, cfg),
+                    Err(_) => break,
+                }
+            }
+            while let Ok(msg) = rx.try_recv() {
+                handle_msg(msg, &mut st, cfg);
+            }
+        }
+        if st.shutdown && st.active.is_empty() && st.queue.is_empty() {
+            break;
+        }
+
+        // ---- admission ----
+        while st.active.len() < max_active {
+            let Some((req, reply, submitted)) = st.queue.pop_front() else {
+                break;
+            };
+            admit(engine, &mut st, req, reply, submitted);
+        }
+        if st.active.is_empty() {
+            continue;
+        }
+
+        // ---- one round: every active session gets one quantum ----
+        let order = round_order(cfg.schedule, &st.active, &engine.caches, st.rr_cursor);
+        st.rr_cursor = st.rr_cursor.wrapping_add(1);
+        // Track the round by admission seq, not the caller-supplied request
+        // id — ids need not be unique and a first-match id lookup would let
+        // one duplicate shadow the other.
+        let seqs: Vec<u64> = order.iter().map(|&i| st.active[i].seq).collect();
+        for seq in seqs {
+            // Sessions can complete (and be removed) mid-round.
+            let Some(idx) = st.active.iter().position(|s| s.seq == seq) else {
+                continue;
+            };
+            make_resident(engine, &mut st.active, &mut st.resident, seq);
+            match run_quantum(engine, &mut st.active[idx], quantum, chunk, cfg) {
+                Ok(None) => {}
+                Ok(Some(finish)) => {
+                    let sess = st.active.remove(idx);
+                    if st.resident == Some(seq) {
+                        // The engine keeps the finished sequence's state as
+                        // scratch; the next swap-in replaces it wholesale.
+                        st.resident = None;
+                    }
+                    finalize(sess, finish, &mut st.metrics);
+                }
+                Err(e) => {
+                    let sess = st.active.remove(idx);
+                    if st.resident == Some(seq) {
+                        st.resident = None;
+                    }
+                    let _ = sess.reply.send(Event::Failed {
+                        id: sess.req.id,
+                        error: format!("{e:#}"),
+                    });
+                }
+            }
+        }
+    }
+    st.metrics
+}
+
+fn handle_msg(msg: Msg, st: &mut LoopState, cfg: &ServerConfig) {
+    match msg {
+        Msg::Shutdown => st.shutdown = true,
+        Msg::Run(req, reply, submitted) => enqueue(st, cfg, req, reply, submitted, true),
+        Msg::Batch(pairs, submitted) => {
+            // A batch is admitted whole (no per-request queue_depth cut):
+            // partial admission would silently break the reproducible
+            // admission-order contract submit_batch exists to provide.
+            for (req, reply) in pairs {
+                enqueue(st, cfg, req, reply, submitted, false);
+            }
+        }
+        Msg::Abort(id) => abort_request(st, id),
+    }
+}
+
+fn enqueue(
+    st: &mut LoopState,
+    cfg: &ServerConfig,
+    req: Request,
+    reply: Sender<Event>,
+    submitted: Instant,
+    enforce_depth: bool,
+) {
+    if enforce_depth && st.queue.len() >= cfg.queue_depth {
+        st.metrics.rejected += 1;
+        let _ = reply.send(Event::Failed {
+            id: req.id,
+            error: format!("queue full ({} waiting)", st.queue.len()),
+        });
+        return;
+    }
+    st.queue.push_back((req, reply, submitted));
+}
+
+/// Cancel one request matching `id`. Request ids are caller-supplied and
+/// need not be unique; when several match, the oldest submission wins —
+/// active sessions (admitted earlier) before queued ones, in admission
+/// order — so an abort aimed at a long-running request is not shadowed by
+/// a newer duplicate still in the queue.
+fn abort_request(st: &mut LoopState, id: u64) {
+    if let Some(i) = st.active.iter().position(|s| s.id() == id) {
+        let sess = st.active.remove(i);
+        if st.resident == Some(sess.seq) {
+            st.resident = None;
+        }
+        finalize(sess, FinishReason::Aborted, &mut st.metrics);
+        return;
+    }
+    if let Some(i) = st.queue.iter().position(|(r, _, _)| r.id == id) {
+        let (req, reply, _) = st.queue.remove(i).unwrap();
+        st.metrics.aborted += 1;
+        let _ = reply.send(Event::Done(RequestResult {
+            id: req.id,
+            generated: Vec::new(),
+            finish: FinishReason::Aborted,
+            ttft_s: 0.0,
+            decode_tps: 0.0,
+            device_tps: 0.0,
+            cache_hits: 0,
+            cache_misses: 0,
+        }));
+    }
+}
+
+fn admit(
+    engine: &mut Engine,
+    st: &mut LoopState,
+    req: Request,
+    reply: Sender<Event>,
+    submitted: Instant,
+) {
+    if req.prompt.is_empty() {
+        let _ = reply.send(Event::Failed { id: req.id, error: "empty prompt".into() });
+        return;
+    }
     let prompt = clamp_prompt(&req.prompt, engine.cfg.max_seq, req.max_new);
-    for &t in &prompt {
-        logits = engine.step(t)?;
+    let state = engine.new_session_state(engine.opts.seed ^ req.id);
+    let seq = st.next_seq;
+    st.next_seq += 1;
+    st.active.push(Session::new(req, reply, state, prompt, submitted, seq));
+}
+
+/// Materialize the session with admission seq `seq` in the engine. The
+/// swap is symmetric, so the same call both saves the outgoing session and
+/// restores the incoming one; consecutive quanta of the same session skip
+/// the swap (and the KV device buffer invalidation that comes with it)
+/// entirely.
+fn make_resident(
+    engine: &mut Engine,
+    active: &mut [Session],
+    resident: &mut Option<u64>,
+    seq: u64,
+) {
+    if *resident == Some(seq) {
+        return;
     }
-    engine.strategy_active = true;
-    let mut sampler = Sampler::new(req.temperature, 40, req.id ^ 0x5eed);
-    let mut generated = Vec::new();
-    let mut ttft = 0.0;
-    let t_decode = Instant::now();
-    for i in 0..req.max_new {
-        if engine.pos() >= engine.cfg.max_seq {
-            break;
+    if let Some(old) = resident.take() {
+        if let Some(s) = active.iter_mut().find(|s| s.seq == old) {
+            engine.swap_session(&mut s.state);
         }
-        let next = sampler.sample(&logits);
-        if i == 0 {
-            ttft = t0.elapsed().as_secs_f64();
-        }
-        if Some(next) == req.stop_token {
-            break;
-        }
-        generated.push(next);
-        logits = engine.step(next)?;
+        // If the old session is gone (completed/aborted), the engine holds
+        // an orphaned sequence; the swap below replaces it wholesale.
     }
-    let decode_s = t_decode.elapsed().as_secs_f64();
+    if let Some(s) = active.iter_mut().find(|s| s.seq == seq) {
+        engine.swap_session(&mut s.state);
+        *resident = Some(seq);
+    }
+}
+
+/// One engine step with per-session accounting: the engine's cache and
+/// flash counters are shared across interleaved sessions, so each session
+/// records deltas around its own steps.
+fn step_counted(engine: &mut Engine, sess: &mut Session, token: u32) -> Result<Vec<f32>> {
+    let (hits0, misses0, _miss_rate) = engine.cache_totals();
+    let vtime0 = engine.flash.time_s;
+    let logits = engine.step(token)?;
     let (hits1, misses1, _) = engine.cache_totals();
-    let dev_tokens = (engine.flash.tokens - vtok0) as f64;
-    let dev_time = engine.flash.time_s - vtime0;
-    Ok(RequestResult {
-        id: req.id,
+    sess.hits += hits1 - hits0;
+    sess.misses += misses1 - misses0;
+    sess.dev_time_s += engine.flash.time_s - vtime0;
+    sess.dev_tokens += 1;
+    Ok(logits)
+}
+
+/// Run one quantum for `sess`: a prefill chunk, or up to `quantum` decode
+/// tokens. Returns `Some(finish)` when the request completed.
+fn run_quantum(
+    engine: &mut Engine,
+    sess: &mut Session,
+    quantum: usize,
+    chunk: usize,
+    cfg: &ServerConfig,
+) -> Result<Option<FinishReason>> {
+    if sess.is_prefilling() {
+        engine.strategy_active = cfg.strategy_during_prefill;
+        let end = sess.prompt.len().min(sess.fed.saturating_add(chunk));
+        while sess.fed < end {
+            let tok = sess.prompt[sess.fed];
+            sess.logits = step_counted(engine, sess, tok)?;
+            sess.fed += 1;
+        }
+        engine.strategy_active = true;
+        if sess.fed < sess.prompt.len() {
+            sess.last_topk = engine.last_selections().to_vec();
+            return Ok(None);
+        }
+        sess.phase = Phase::Decode;
+        sess.decode_t0 = Some(Instant::now());
+        // Fall through: the first decode tokens come out of this same
+        // quantum, so TTFT doesn't absorb an extra round of other
+        // sessions' quanta.
+    }
+
+    engine.strategy_active = true;
+    let mut finish = None;
+    let mut steps = 0usize;
+    while steps < quantum {
+        if sess.generated.len() >= sess.req.max_new {
+            finish = Some(FinishReason::Length);
+            break;
+        }
+        if engine.pos() >= engine.cfg.max_seq {
+            finish = Some(FinishReason::Overflow);
+            break;
+        }
+        let next = sess.sampler.sample(&sess.logits);
+        if sess.generated.is_empty() {
+            sess.ttft_s = sess.submitted.elapsed().as_secs_f64();
+        }
+        if Some(next) == sess.req.stop_token {
+            finish = Some(FinishReason::Stop);
+            break;
+        }
+        sess.generated.push(next);
+        let delivered = sess.reply.send(Event::Token {
+            id: sess.id(),
+            index: sess.generated.len() - 1,
+            token: next,
+        });
+        if delivered.is_err() {
+            // The caller dropped its receiver: nobody can observe further
+            // tokens, so stop burning quanta on this session.
+            finish = Some(FinishReason::Aborted);
+            break;
+        }
+        sess.logits = step_counted(engine, sess, next)?;
+        steps += 1;
+    }
+    if finish.is_none() && sess.generated.len() >= sess.req.max_new {
+        finish = Some(FinishReason::Length);
+    }
+    sess.last_topk = engine.last_selections().to_vec();
+    Ok(finish)
+}
+
+fn finalize(sess: Session, finish: FinishReason, metrics: &mut ServerMetrics) {
+    let decode_s = sess
+        .decode_t0
+        .map(|t| t.elapsed().as_secs_f64())
+        .unwrap_or(0.0);
+    let result = RequestResult {
+        id: sess.req.id,
+        finish,
+        ttft_s: sess.ttft_s,
         decode_tps: if decode_s > 0.0 {
-            generated.len() as f64 / decode_s
+            sess.generated.len() as f64 / decode_s
         } else {
             0.0
         },
-        device_tps: if dev_time > 0.0 { dev_tokens / dev_time } else { 0.0 },
-        ttft_s: ttft,
-        generated,
-        cache_hits: hits1 - hits0,
-        cache_misses: misses1 - misses0,
-    })
+        device_tps: if sess.dev_time_s > 0.0 {
+            sess.dev_tokens as f64 / sess.dev_time_s
+        } else {
+            0.0
+        },
+        cache_hits: sess.hits,
+        cache_misses: sess.misses,
+        generated: sess.generated,
+    };
+    if finish == FinishReason::Aborted {
+        metrics.aborted += 1;
+    } else {
+        metrics.completed += 1;
+        metrics.ttft_s.push(result.ttft_s);
+        metrics.decode_tps.push(result.decode_tps);
+    }
+    metrics.tokens_generated += result.generated.len() as u64;
+    let _ = sess.reply.send(Event::Done(result));
 }
 
 /// Keep the prompt tail if prompt+generation would overflow max_seq.
@@ -242,10 +608,24 @@ mod tests {
     fn metrics_summary_format() {
         let m = ServerMetrics {
             completed: 2,
+            aborted: 1,
+            rejected: 0,
+            tokens_generated: 30,
             ttft_s: vec![0.1, 0.2],
             decode_tps: vec![10.0, 20.0],
         };
         let s = m.summary();
         assert!(s.contains("completed=2"));
+        assert!(s.contains("aborted=1"));
+        assert!(s.contains("rejected=0"));
+        assert!(s.contains("tokens=30"));
+    }
+
+    #[test]
+    fn default_config_is_interleaved() {
+        let c = ServerConfig::default();
+        assert_eq!(c.schedule, Schedule::RoundRobin);
+        assert!(c.max_sessions >= 4);
+        assert!(c.decode_quantum >= 1);
     }
 }

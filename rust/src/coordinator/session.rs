@@ -1,0 +1,356 @@
+//! Per-request sessions and decode-round scheduling policies.
+//!
+//! A [`Session`] is the coordinator-side half of one request: the clamped
+//! prompt, the sampler, the streaming reply channel, per-request metrics
+//! accounting, and the engine-side [`SessionState`] (KV mirror + routing
+//! state) while the session is not materialized in the engine.
+//!
+//! [`Schedule`] picks the order in which active sessions receive their
+//! quantum within one decode round:
+//!
+//! * [`Schedule::Fcfs`] — the pre-session baseline: one request runs to
+//!   completion before the next is admitted.
+//! * [`Schedule::RoundRobin`] — fair token-level interleaving; the round
+//!   start rotates so no session systematically goes last.
+//! * [`Schedule::Affinity`] — cache-aware rounds (the paper's §3 locality
+//!   idea lifted across requests): sessions still in prefill go first
+//!   (TTFT), then decoding sessions ordered by the overlap between their
+//!   last top-K selections and the currently-resident expert set, so the
+//!   session most likely to hit runs while its experts are still hot.
+//!   Every active session still gets exactly one quantum per round, so the
+//!   ordering cannot starve anyone.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+use crate::cache::ExpertCache;
+use crate::model::{Sampler, SessionState};
+
+/// A generation request submitted to the [`super::Coordinator`].
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub temperature: f32,
+    pub stop_token: Option<u32>,
+}
+
+/// Why a request stopped generating.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generated `max_new` tokens.
+    Length,
+    /// Sampled the stop token.
+    Stop,
+    /// Hit the model's `max_seq` position limit.
+    Overflow,
+    /// Cancelled via [`super::Coordinator::abort`].
+    Aborted,
+}
+
+#[derive(Debug, Clone)]
+pub struct RequestResult {
+    pub id: u64,
+    pub generated: Vec<u32>,
+    pub finish: FinishReason,
+    /// Time from submission to the first generated token (s, wall clock) —
+    /// includes queue wait, so FCFS head-of-line blocking is visible.
+    pub ttft_s: f64,
+    /// Decode throughput (tokens / s, wall clock). Under interleaving this
+    /// is the *perceived* rate: other sessions' quanta count against it.
+    pub decode_tps: f64,
+    /// Virtual-device throughput for this session's steps (tokens / s).
+    pub device_tps: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// Streaming delivery: every generated token crosses the reply channel as
+/// soon as it is sampled, then a final [`Event::Done`] carries the metrics.
+#[derive(Debug, Clone)]
+pub enum Event {
+    Token { id: u64, index: usize, token: u32 },
+    Done(RequestResult),
+    Failed { id: u64, error: String },
+}
+
+/// Decode-round scheduling policy.
+///
+/// ```
+/// use moe_cache::coordinator::Schedule;
+///
+/// assert_eq!(Schedule::parse("affinity").unwrap().label(), "affinity");
+/// assert_eq!(Schedule::parse("rr").unwrap(), Schedule::RoundRobin);
+/// assert!(Schedule::parse("sjf").is_err());
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    Fcfs,
+    RoundRobin,
+    Affinity,
+}
+
+impl Schedule {
+    pub fn parse(s: &str) -> anyhow::Result<Schedule> {
+        match s {
+            "fcfs" => Ok(Schedule::Fcfs),
+            "round-robin" | "rr" => Ok(Schedule::RoundRobin),
+            "affinity" => Ok(Schedule::Affinity),
+            _ => anyhow::bail!("unknown schedule {s:?} (fcfs|round-robin|affinity)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Schedule::Fcfs => "fcfs",
+            Schedule::RoundRobin => "round-robin",
+            Schedule::Affinity => "affinity",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Prefill,
+    Decode,
+}
+
+/// One admitted request interleaving through the engine.
+pub struct Session {
+    pub req: Request,
+    pub reply: Sender<Event>,
+    /// Engine-side state (KV mirror, routing state). Always the session's
+    /// true state while the session is not resident in the engine; while
+    /// resident it holds a don't-care scratch buffer (see the swap protocol
+    /// in `server.rs`).
+    pub state: SessionState,
+    pub sampler: Sampler,
+    pub phase: Phase,
+    /// Clamped prompt actually fed (tail-kept if prompt+max_new > max_seq).
+    pub prompt: Vec<u32>,
+    /// Prompt tokens fed so far.
+    pub fed: usize,
+    /// Logits from the session's most recent step.
+    pub logits: Vec<f32>,
+    pub generated: Vec<u32>,
+    pub submitted: Instant,
+    pub decode_t0: Option<Instant>,
+    pub ttft_s: f64,
+    /// Admission order (monotone); FIFO + deterministic tie-break key.
+    pub seq: u64,
+    /// Per-layer selections from this session's last step — the affinity
+    /// signal, mirrored out of `Engine::last_selections` after each quantum.
+    pub last_topk: Vec<Vec<u32>>,
+    // Per-session accounting, accumulated as deltas around each step while
+    // the engine's counters are shared across all interleaved sessions.
+    pub hits: u64,
+    pub misses: u64,
+    pub dev_time_s: f64,
+    pub dev_tokens: u64,
+}
+
+impl Session {
+    pub fn new(
+        req: Request,
+        reply: Sender<Event>,
+        state: SessionState,
+        prompt: Vec<u32>,
+        submitted: Instant,
+        seq: u64,
+    ) -> Self {
+        let sampler = Sampler::new(req.temperature, 40, req.id ^ 0x5eed);
+        Session {
+            req,
+            reply,
+            state,
+            sampler,
+            phase: Phase::Prefill,
+            prompt,
+            fed: 0,
+            logits: Vec::new(),
+            generated: Vec::new(),
+            submitted,
+            decode_t0: None,
+            ttft_s: 0.0,
+            seq,
+            last_topk: Vec::new(),
+            hits: 0,
+            misses: 0,
+            dev_time_s: 0.0,
+            dev_tokens: 0,
+        }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.req.id
+    }
+
+    pub fn is_prefilling(&self) -> bool {
+        self.phase == Phase::Prefill
+    }
+
+    /// How many of this session's last-step selections are resident in the
+    /// shared expert cache right now (summed over layers).
+    pub fn overlap(&self, caches: &[ExpertCache]) -> usize {
+        affinity_overlap(&self.last_topk, caches)
+    }
+}
+
+/// Overlap between a session's per-layer last selections and the resident
+/// expert set: Σ_l |sel_l ∩ C_l|. Purely membership queries — no iteration
+/// over the cache's hash map — so the score (and therefore the affinity
+/// schedule) is deterministic for a given cache state.
+pub fn affinity_overlap(last_topk: &[Vec<u32>], caches: &[ExpertCache]) -> usize {
+    last_topk
+        .iter()
+        .enumerate()
+        .map(|(l, sel)| {
+            sel.iter()
+                .filter(|&&e| caches.get(l).map_or(false, |c| c.contains(e)))
+                .count()
+        })
+        .sum()
+}
+
+/// The order in which active sessions run this round, as indices into
+/// `sessions`.
+///
+/// * FCFS / round-robin: admission order, rotated by `rr_cursor` (FCFS
+///   keeps at most one session active, so rotation is a no-op there).
+/// * Affinity: prefilling sessions first in admission order, then decoding
+///   sessions by overlap with the resident expert set, descending; ties
+///   broken by admission order so the schedule is total and deterministic.
+pub fn round_order(
+    schedule: Schedule,
+    sessions: &[Session],
+    caches: &[ExpertCache],
+    rr_cursor: usize,
+) -> Vec<usize> {
+    let n = sessions.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    match schedule {
+        Schedule::Fcfs | Schedule::RoundRobin => {
+            (0..n).map(|i| (i + rr_cursor) % n).collect()
+        }
+        Schedule::Affinity => {
+            let mut order: Vec<usize> = (0..n).collect();
+            let key = |i: usize| {
+                let s = &sessions[i];
+                // Sort ascending: prefill (0) before decode (1); within
+                // decode, higher overlap first via negation.
+                let overlap = s.overlap(caches) as i64;
+                (
+                    if s.is_prefilling() { 0i64 } else { 1 },
+                    if s.is_prefilling() { 0 } else { -overlap },
+                    s.seq,
+                )
+            };
+            order.sort_by_key(|&i| key(i));
+            order
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::Policy;
+
+    fn session(id: u64, seq: u64, phase: Phase, last_topk: Vec<Vec<u32>>) -> Session {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        // Keep the receiver alive is not needed: senders tolerate drops.
+        let req = Request {
+            id,
+            prompt: vec![1],
+            max_new: 4,
+            temperature: 0.0,
+            stop_token: None,
+        };
+        let mut s = Session::new(
+            req,
+            tx,
+            SessionState::new(2, 8, id),
+            vec![1],
+            Instant::now(),
+            seq,
+        );
+        s.phase = phase;
+        s.last_topk = last_topk;
+        s
+    }
+
+    fn caches_with(resident: &[&[u32]]) -> Vec<ExpertCache> {
+        resident
+            .iter()
+            .map(|&r| {
+                let mut c = ExpertCache::new(8, Policy::Lru);
+                c.warm(r, 0);
+                c
+            })
+            .collect()
+    }
+
+    #[test]
+    fn schedule_parse_roundtrip() {
+        for s in ["fcfs", "round-robin", "affinity"] {
+            assert_eq!(Schedule::parse(s).unwrap().label(), s);
+        }
+        assert_eq!(Schedule::parse("rr").unwrap(), Schedule::RoundRobin);
+        assert!(Schedule::parse("sjf").is_err());
+    }
+
+    #[test]
+    fn overlap_counts_resident_selections() {
+        let caches = caches_with(&[&[0, 1], &[5]]);
+        assert_eq!(affinity_overlap(&[vec![0, 2], vec![5, 6]], &caches), 2);
+        assert_eq!(affinity_overlap(&[vec![3], vec![4]], &caches), 0);
+        // Layers beyond the cache list contribute nothing.
+        assert_eq!(affinity_overlap(&[vec![0], vec![5], vec![9]], &caches), 2);
+    }
+
+    #[test]
+    fn round_robin_rotates() {
+        let sessions = vec![
+            session(0, 0, Phase::Decode, vec![]),
+            session(1, 1, Phase::Decode, vec![]),
+            session(2, 2, Phase::Decode, vec![]),
+        ];
+        let caches = caches_with(&[]);
+        assert_eq!(round_order(Schedule::RoundRobin, &sessions, &caches, 0), vec![0, 1, 2]);
+        assert_eq!(round_order(Schedule::RoundRobin, &sessions, &caches, 1), vec![1, 2, 0]);
+        assert_eq!(round_order(Schedule::RoundRobin, &sessions, &caches, 5), vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn affinity_orders_by_overlap_prefill_first() {
+        let caches = caches_with(&[&[0, 1, 2]]);
+        let sessions = vec![
+            session(10, 0, Phase::Decode, vec![vec![7, 8]]),   // overlap 0
+            session(11, 1, Phase::Decode, vec![vec![0, 1]]),   // overlap 2
+            session(12, 2, Phase::Prefill, vec![]),            // prefill first
+            session(13, 3, Phase::Decode, vec![vec![2, 9]]),   // overlap 1
+        ];
+        let order = round_order(Schedule::Affinity, &sessions, &caches, 0);
+        assert_eq!(order, vec![2, 1, 3, 0]);
+    }
+
+    #[test]
+    fn affinity_ties_break_by_admission_order() {
+        let caches = caches_with(&[&[0]]);
+        let sessions = vec![
+            session(5, 0, Phase::Decode, vec![vec![1]]),
+            session(6, 1, Phase::Decode, vec![vec![2]]),
+        ];
+        assert_eq!(round_order(Schedule::Affinity, &sessions, &caches, 0), vec![0, 1]);
+        // Every session appears exactly once — one quantum per round.
+        let sessions = vec![
+            session(1, 0, Phase::Prefill, vec![]),
+            session(2, 1, Phase::Prefill, vec![]),
+        ];
+        let order = round_order(Schedule::Affinity, &sessions, &caches, 0);
+        assert_eq!(order, vec![0, 1]);
+    }
+}

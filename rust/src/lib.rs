@@ -10,7 +10,8 @@
 //! `python/compile` and executed through the PJRT CPU client — Python is
 //! never on the request path.
 //!
-//! Module map (see DESIGN.md for the full inventory):
+//! Module map (see `docs/ARCHITECTURE.md` for the full inventory, the
+//! paper-section mapping and the decode-step data flow):
 //!
 //! * [`util`] — offline-image substrates: JSON, RNG, stats, property tests
 //! * [`config`] — model topologies + device profiles
@@ -26,7 +27,9 @@
 //!   with the slot-arena expert staging and the async flash prefetcher
 //! * [`tracesim`] — trace-driven cache simulation (Belady bound, Fig. 10/11)
 //! * [`eval`] — perplexity / SynthQA / SynthMath harnesses + sweeps
-//! * [`coordinator`] — the serving loop (sessions, scheduling, metrics)
+//! * [`coordinator`] — the multi-session serving loop: admission, session
+//!   swap, FCFS / round-robin / cache-affinity decode rounds, streaming
+//!   delivery, per-request metrics
 //! * [`report`] — CSV/markdown emitters shared by the benches
 
 pub mod cache;

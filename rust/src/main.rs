@@ -13,7 +13,7 @@ use anyhow::{Context, Result};
 use moe_cache::cache::Policy;
 use moe_cache::cli::Args;
 use moe_cache::config::{DeviceProfile, Quant, CONFIG_NAMES};
-use moe_cache::coordinator::{Coordinator, Request, ServerConfig};
+use moe_cache::coordinator::{Coordinator, Event, Request, Schedule, ServerConfig};
 use moe_cache::eval::sweep::{run_point, EvalBudget, Task};
 use moe_cache::eval::{eval_math, eval_ppl, eval_qa, EvalData};
 use moe_cache::model::{Engine, EngineOptions};
@@ -30,7 +30,9 @@ USAGE: moe-cache <command> [--flags]
 
 COMMANDS:
   info                              artifact + model inventory
-  serve      --model M [--cache C --strategy S --prompts N --max-new T]
+  serve      --model M [--cache C --strategy S --prompts N --max-new T
+                        --max-sessions S --schedule fcfs|round-robin|affinity
+                        --quantum Q --prefill-chunk P --stream]
   eval-ppl   --model M [--cache C --strategy S --chunks N --chunk-len L]
   eval-qa    --model M [--cache C --strategy S --items N]
   eval-math  --model M [--cache C --strategy S --items N]
@@ -129,32 +131,79 @@ fn serve(args: &Args) -> Result<()> {
     let data = EvalData::load(&artifacts_dir().join("data"))?;
     let n_req = args.usize_or("prompts", 4)?;
     let max_new = args.usize_or("max-new", 48)?;
+    // Submission below goes through submit_batch_with, which is never cut
+    // by queue_depth, so any --prompts count is served in full.
+    let cfg = ServerConfig {
+        max_sessions: args.usize_or("max-sessions", 4)?,
+        schedule: Schedule::parse(args.get_or("schedule", "round-robin"))?,
+        decode_quantum: args.usize_or("quantum", 8)?,
+        prefill_chunk: args.usize_or("prefill-chunk", 32)?,
+        ..ServerConfig::default()
+    };
+    let stream = args.bool("stream");
     let args2 = args.clone();
-    let coord = Coordinator::spawn(
-        move || engine_from_args(&args2),
-        ServerConfig::default(),
-    )?;
-    let max_seq = 512;
-    println!("serving {n_req} requests (max_seq={max_seq})");
-    for (i, prompt) in data
+    let coord = Coordinator::spawn(move || engine_from_args(&args2), cfg.clone())?;
+    println!(
+        "serving {n_req} requests (schedule={} max_sessions={} quantum={})",
+        cfg.schedule.label(),
+        cfg.max_sessions,
+        cfg.decode_quantum,
+    );
+    let temperature = args.f64_or("temperature", 0.8)? as f32;
+    // All requests enter the queue together so the scheduler — not
+    // submission timing — decides the interleaving.
+    let reqs: Vec<Request> = data
         .prompts_short
         .iter()
         .chain(data.prompts_long.iter())
         .take(n_req)
         .enumerate()
-    {
-        let res = coord.submit(Request {
+        .map(|(i, prompt)| Request {
             id: i as u64,
             prompt: prompt.clone(),
             max_new,
-            temperature: args.f64_or("temperature", 0.8)? as f32,
+            temperature,
             stop_token: Some(2), // EOS
-        })?;
+        })
+        .collect();
+    let prompt_lens: Vec<usize> = reqs.iter().map(|r| r.prompt.len()).collect();
+    // One atomic batch on one shared event channel: the batch pins the
+    // admission order (the schedule — not submission timing — decides the
+    // interleaving, reproducibly), and tokens print in the engine's true
+    // emission order, making that interleaving visible.
+    let (tx, rx) = std::sync::mpsc::channel();
+    let n_submitted = reqs.len();
+    coord.submit_batch_with(reqs, tx)?;
+    let mut results: Vec<Option<moe_cache::coordinator::RequestResult>> =
+        vec![None; n_submitted];
+    let mut done = 0usize;
+    while done < n_submitted {
+        match rx.recv() {
+            Ok(Event::Token { id, index, token }) => {
+                if stream {
+                    println!("req {id} token[{index}] = {token}");
+                }
+            }
+            Ok(Event::Done(res)) => {
+                done += 1;
+                if let Some(slot) = results.get_mut(res.id as usize) {
+                    *slot = Some(res);
+                }
+            }
+            Ok(Event::Failed { id, error }) => {
+                done += 1;
+                println!("req {id}: FAILED: {error}");
+            }
+            Err(_) => anyhow::bail!("coordinator dropped reply"),
+        }
+    }
+    for res in results.into_iter().flatten() {
         println!(
-            "req {}: prompt={} gen={} ttft={:.3}s wall_tps={:.1} device_tps={:.2} hit_rate={:.3}",
+            "req {}: prompt={} gen={} finish={:?} ttft={:.3}s wall_tps={:.1} device_tps={:.2} hit_rate={:.3}",
             res.id,
-            prompt.len(),
+            prompt_lens[res.id as usize],
             res.generated.len(),
+            res.finish,
             res.ttft_s,
             res.decode_tps,
             res.device_tps,

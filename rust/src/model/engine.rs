@@ -122,6 +122,51 @@ pub struct EngineSnapshot {
     router_state: RouterState,
 }
 
+/// Per-request sequence state for multi-session serving.
+///
+/// Unlike [`EngineSnapshot`] (a deep copy taken around counterfactual
+/// probes), a `SessionState` holds only what is *per request*: the KV host
+/// mirrors, the position, and the routing state (Δ_avg estimates + probe
+/// RNG). The expert cache, slot arenas and staged device buffers stay on
+/// the engine — they model shared DRAM, and cross-request expert locality
+/// is exactly what the coordinator's affinity schedule exploits.
+///
+/// [`Engine::swap_session`] exchanges this state with the engine's in O(1)
+/// (pointer swaps of the mirror vectors), so the coordinator can interleave
+/// decode across many sessions without copying KV bytes.
+pub struct SessionState {
+    kv_k: Vec<Vec<f32>>,
+    kv_v: Vec<Vec<f32>>,
+    pos: usize,
+    router_state: RouterState,
+    last_sel: Vec<Vec<u32>>,
+}
+
+impl SessionState {
+    /// Fresh (zero-KV, position-0) state. `kv_len` is the per-layer mirror
+    /// length `n_heads * max_seq * head_dim`; prefer
+    /// [`Engine::new_session_state`], which fills the dimensions in.
+    ///
+    /// ```
+    /// use moe_cache::model::SessionState;
+    /// let s = SessionState::new(2, 8, 7);
+    /// assert_eq!(s.pos(), 0);
+    /// ```
+    pub fn new(n_layers: usize, kv_len: usize, seed: u64) -> Self {
+        SessionState {
+            kv_k: vec![vec![0f32; kv_len]; n_layers],
+            kv_v: vec![vec![0f32; kv_len]; n_layers],
+            pos: 0,
+            router_state: RouterState::new(n_layers, seed),
+            last_sel: vec![Vec::new(); n_layers],
+        }
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+}
+
 pub struct Engine {
     pub rt: Runtime,
     pub cfg: ModelConfig,
@@ -674,6 +719,42 @@ impl Engine {
             logits = self.step(next)?;
         }
         Ok(out)
+    }
+
+    // ---------------- multi-session serving ------------------------------
+
+    /// Fresh per-request state sized for this model (see [`SessionState`]).
+    pub fn new_session_state(&self, seed: u64) -> SessionState {
+        let kv_len = self.cfg.n_heads * self.cfg.max_seq * self.cfg.head_dim;
+        SessionState::new(self.cfg.n_layers, kv_len, seed)
+    }
+
+    /// Exchange the engine's per-request state with `s` in O(1).
+    ///
+    /// The swap is symmetric: calling it with session A's state materializes
+    /// A in the engine and leaves the previously-resident sequence in `s`.
+    /// The device-resident KV buffers are invalidated (they mirror the
+    /// outgoing sequence) and are rebuilt lazily from the incoming host
+    /// mirror at the next [`Engine::step`]. Expert caches, arenas, staged
+    /// buffers, flash clock and `token_counter` are engine-global and are
+    /// NOT swapped — interleaved sessions share them, which is what makes
+    /// cross-request expert locality observable to the scheduler.
+    pub fn swap_session(&mut self, s: &mut SessionState) {
+        std::mem::swap(&mut self.kv_k, &mut s.kv_k);
+        std::mem::swap(&mut self.kv_v, &mut s.kv_v);
+        std::mem::swap(&mut self.pos, &mut s.pos);
+        std::mem::swap(&mut self.router_state, &mut s.router_state);
+        std::mem::swap(&mut self.last_sel, &mut s.last_sel);
+        self.kv_dev_k.iter_mut().for_each(|b| *b = None);
+        self.kv_dev_v.iter_mut().for_each(|b| *b = None);
+    }
+
+    /// Per-layer expert selections recorded at the last step (with
+    /// prefetching enabled, the top-2K ranked band instead of the selected
+    /// K — see the comment in [`Engine::step`]). The coordinator's affinity
+    /// schedule reads this as a session's locality signature.
+    pub fn last_selections(&self) -> &[Vec<u32>] {
+        &self.last_sel
     }
 
     // ---------------- snapshot / restore (Fig. 12 oracle search) ----------

@@ -74,6 +74,43 @@ pub enum DeltaMode {
     PerToken,
 }
 
+/// A training-free routing transformation (see the module docs for the
+/// paper mapping of each variant).
+///
+/// Every strategy re-*ranks* candidates; none of them touches the gate
+/// weights, which always come from the unmodified logits. For
+/// [`Strategy::CachePrior`] that invariant is Eq. 9/10's defining property
+/// — the biased logits `z'` exist only for ranking:
+///
+/// ```
+/// use moe_cache::routing::{select, DeltaMode, RouterState, Strategy};
+///
+/// let z = [1.0f32, 0.9, 0.8, -1.0];
+/// let cached = [false, false, false, true]; // expert 3 resident in DRAM
+/// let mut st = RouterState::new(1, 0);
+/// let prior = select(
+///     &Strategy::CachePrior { lambda: 1.0, j: 1, delta: DeltaMode::PerToken },
+///     &z, &cached, 0, 2, &mut st,
+/// );
+/// let mut st2 = RouterState::new(1, 0);
+/// let original = select(&Strategy::Original, &z, &cached, 0, 2, &mut st2);
+///
+/// assert_eq!(prior.weights, original.weights); // gate weights never change
+/// assert!(prior.experts.contains(&3));         // cached expert re-ranked in
+/// assert_eq!(original.experts, vec![0, 1]);    // plain top-K ignores the cache
+/// ```
+///
+/// Strategies parse from the CLI syntax shown in [`Strategy::parse`] and
+/// round-trip through [`Strategy::label`]:
+///
+/// ```
+/// use moe_cache::routing::Strategy;
+///
+/// let s = Strategy::parse("max-rank:6:1").unwrap();
+/// assert_eq!(s.label(), "max-rank:6:1");
+/// assert!(s.cache_aware());
+/// assert!(!Strategy::Original.cache_aware());
+/// ```
 #[derive(Debug, Clone, PartialEq)]
 pub enum Strategy {
     Original,

@@ -1,14 +1,17 @@
 //! Serving-loop integration: the coordinator thread owns the engine,
-//! requests queue FCFS, metrics accumulate. Requires `make artifacts`.
+//! sessions interleave per the configured schedule, tokens stream back,
+//! and metrics accumulate. Requires `make artifacts`.
 
 use moe_cache::cache::Policy;
 use moe_cache::config::{DeviceProfile, Quant};
-use moe_cache::coordinator::{Coordinator, Request, ServerConfig};
+use moe_cache::coordinator::{
+    Coordinator, Event, FinishReason, Request, Schedule, ServerConfig,
+};
 use moe_cache::eval::EvalData;
 use moe_cache::model::{Engine, EngineOptions};
 use moe_cache::routing::Strategy;
 
-fn spawn_coordinator() -> Coordinator {
+fn spawn_with(strategy: Strategy, cfg: ServerConfig) -> Coordinator {
     let arts = moe_cache::artifacts_dir();
     assert!(arts.join("qwen-tiny").join("manifest.json").exists(), "make artifacts");
     Coordinator::spawn(
@@ -20,11 +23,7 @@ fn spawn_coordinator() -> Coordinator {
                     quant: Quant::Int4,
                     cache_capacity: 30,
                     policy: Policy::Lru,
-                    strategy: Strategy::CachePrior {
-                        lambda: 0.5,
-                        j: 2,
-                        delta: moe_cache::routing::DeltaMode::RunningAvg,
-                    },
+                    strategy,
                     device: DeviceProfile::device_16gb(),
                     seed: 1,
                     record_trace: false,
@@ -32,9 +31,24 @@ fn spawn_coordinator() -> Coordinator {
                 },
             )
         },
-        ServerConfig::default(),
+        cfg,
     )
     .expect("spawn")
+}
+
+fn spawn_coordinator() -> Coordinator {
+    spawn_with(
+        Strategy::CachePrior {
+            lambda: 0.5,
+            j: 2,
+            delta: moe_cache::routing::DeltaMode::RunningAvg,
+        },
+        ServerConfig::default(),
+    )
+}
+
+fn req(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
+    Request { id, prompt, max_new, temperature: 0.8, stop_token: None }
 }
 
 #[test]
@@ -56,11 +70,13 @@ fn serves_requests_and_reports_metrics() {
         assert!(!res.generated.is_empty());
         assert!(res.ttft_s > 0.0);
         assert!(res.cache_hits + res.cache_misses > 0);
+        assert_eq!(res.finish, FinishReason::Length);
         total_tokens += res.generated.len();
     }
     let m = coord.shutdown();
     assert_eq!(m.completed, 2);
     assert_eq!(m.ttft_s.len(), 2);
+    assert_eq!(m.tokens_generated as usize, total_tokens);
     assert!(total_tokens > 0);
 }
 
@@ -104,4 +120,162 @@ fn oversized_prompt_is_clamped_not_fatal() {
         })
         .unwrap();
     assert_eq!(res.generated.len(), 4);
+}
+
+/// KV isolation: two sessions interleaved token-by-token must generate
+/// exactly the tokens each would generate alone. Uses `Original` routing
+/// (cache-independent selection) so the only cross-session coupling left
+/// would be a KV/session-state swap bug.
+#[test]
+fn interleaved_sessions_match_solo_generation() {
+    let data = EvalData::load(&moe_cache::artifacts_dir().join("data")).unwrap();
+    let p0 = data.prompts_short[0].clone();
+    let p1 = data.prompts_short[1 % data.prompts_short.len()].clone();
+
+    let interleaved_cfg = ServerConfig {
+        max_sessions: 2,
+        schedule: Schedule::RoundRobin,
+        decode_quantum: 1,
+        prefill_chunk: 4,
+        ..ServerConfig::default()
+    };
+    let coord = spawn_with(Strategy::Original, interleaved_cfg);
+    let rxs = coord
+        .submit_batch(vec![req(0, p0.clone(), 10), req(1, p1.clone(), 10)])
+        .unwrap();
+    let mut interleaved = Vec::new();
+    for rx in rxs {
+        loop {
+            match rx.recv().unwrap() {
+                Event::Token { .. } => continue,
+                Event::Done(r) => {
+                    interleaved.push(r.generated);
+                    break;
+                }
+                Event::Failed { error, .. } => panic!("{error}"),
+            }
+        }
+    }
+    coord.shutdown();
+
+    // Solo runs: same request ids (same sampler + router seeds), fresh
+    // coordinator so nothing else is in flight.
+    let coord = spawn_with(Strategy::Original, ServerConfig::default());
+    let solo0 = coord.submit(req(0, p0, 10)).unwrap().generated;
+    let solo1 = coord.submit(req(1, p1, 10)).unwrap().generated;
+    coord.shutdown();
+
+    assert_eq!(interleaved[0], solo0, "session 0 diverged under interleaving");
+    assert_eq!(interleaved[1], solo1, "session 1 diverged under interleaving");
+    assert_eq!(solo0.len(), 10);
+}
+
+/// Fairness: a short request submitted behind a long one completes while
+/// the long one is still mid-decode (no FCFS head-of-line blocking). Both
+/// sessions share one event channel, so the received order is the engine's
+/// true emission order.
+#[test]
+fn short_request_finishes_while_long_decodes() {
+    let data = EvalData::load(&moe_cache::artifacts_dir().join("data")).unwrap();
+    let prompt = data.prompts_short[0].clone();
+    let coord = spawn_with(
+        Strategy::Original,
+        ServerConfig {
+            max_sessions: 2,
+            schedule: Schedule::RoundRobin,
+            decode_quantum: 1,
+            prefill_chunk: 8,
+            ..ServerConfig::default()
+        },
+    );
+    let (tx, rx) = std::sync::mpsc::channel();
+    coord.submit_with(req(0, prompt.clone(), 48), tx.clone()).unwrap();
+    coord.submit_with(req(1, prompt, 4), tx).unwrap();
+
+    let mut long_tokens_before_short_done = 0usize;
+    let mut short_done = false;
+    let mut long_done_first = false;
+    let mut done = 0;
+    while done < 2 {
+        match rx.recv().unwrap() {
+            Event::Token { id: 0, .. } => {
+                if !short_done {
+                    long_tokens_before_short_done += 1;
+                }
+            }
+            Event::Token { .. } => {}
+            Event::Done(r) => {
+                done += 1;
+                if r.id == 1 {
+                    short_done = true;
+                    assert_eq!(r.generated.len(), 4);
+                } else if !short_done {
+                    long_done_first = true;
+                }
+            }
+            Event::Failed { error, .. } => panic!("{error}"),
+        }
+    }
+    assert!(!long_done_first, "short request starved behind the long one");
+    assert!(
+        long_tokens_before_short_done >= 1 && long_tokens_before_short_done < 48,
+        "long request should be mid-decode when the short one completes \
+         (saw {long_tokens_before_short_done} of its tokens)"
+    );
+    let m = coord.shutdown();
+    assert_eq!(m.completed, 2);
+}
+
+/// Abort path: a cancelled request resolves with `FinishReason::Aborted`
+/// and a partial (possibly empty) generation instead of hanging.
+#[test]
+fn abort_resolves_request() {
+    let data = EvalData::load(&moe_cache::artifacts_dir().join("data")).unwrap();
+    let coord = spawn_coordinator();
+    let rx = coord
+        .submit_stream(req(7, data.prompts_short[0].clone(), 200))
+        .unwrap();
+    coord.abort(7).unwrap();
+    loop {
+        match rx.recv().unwrap() {
+            Event::Token { .. } => continue,
+            Event::Done(r) => {
+                assert_eq!(r.id, 7);
+                assert_eq!(r.finish, FinishReason::Aborted);
+                assert!(r.generated.len() < 200);
+                break;
+            }
+            Event::Failed { error, .. } => panic!("{error}"),
+        }
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.aborted, 1);
+    assert_eq!(m.completed, 0);
+}
+
+/// Streaming delivery: every generated token arrives as its own event, in
+/// order, before the final result (which carries the same tokens).
+#[test]
+fn token_stream_matches_final_result() {
+    let data = EvalData::load(&moe_cache::artifacts_dir().join("data")).unwrap();
+    let coord = spawn_coordinator();
+    let rx = coord
+        .submit_stream(req(3, data.prompts_short[0].clone(), 8))
+        .unwrap();
+    let mut streamed = Vec::new();
+    loop {
+        match rx.recv().unwrap() {
+            Event::Token { id, index, token } => {
+                assert_eq!(id, 3);
+                assert_eq!(index, streamed.len());
+                streamed.push(token);
+            }
+            Event::Done(r) => {
+                assert_eq!(r.generated, streamed);
+                break;
+            }
+            Event::Failed { error, .. } => panic!("{error}"),
+        }
+    }
+    coord.shutdown();
 }
