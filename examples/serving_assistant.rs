@@ -71,6 +71,7 @@ fn main() -> Result<()> {
             max_new: 32,
             temperature: 0.8,
             stop_token: None,
+            routing_spec: None,
         })?;
         total_generated += res.generated.len();
         t.row(vec![

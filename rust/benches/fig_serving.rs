@@ -55,6 +55,7 @@ fn requests(vocab: usize, max_seq: usize) -> Vec<Request> {
                 // No stop token: every request generates exactly MAX_NEW
                 // tokens, so aggregate tokens are equal across schedules.
                 stop_token: None,
+                routing_spec: None,
             }
         })
         .collect()
@@ -218,6 +219,38 @@ fn main() -> Result<()> {
             ("hits_run2".into(), Json::num(b.hits as f64)),
             ("misses_run2".into(), Json::num(b.misses as f64)),
             ("deterministic".into(), Json::Bool(deterministic)),
+        ]),
+    ));
+
+    // Per-session routing overrides (policy-stack API): half the requests
+    // pin plain top-K while the rest run the engine default CachePrior on
+    // the same shared cache. The mixed run must complete in full and its
+    // hit/miss totals must be as reproducible as the uniform one.
+    let mut mixed = requests(cfg.vocab, cfg.max_seq);
+    for (i, r) in mixed.iter_mut().enumerate() {
+        if i % 2 == 0 {
+            r.routing_spec = Some("original".into());
+        }
+    }
+    let ma = run_schedule(&model, Schedule::RoundRobin, cache, j, mixed.clone())?;
+    let mb = run_schedule(&model, Schedule::RoundRobin, cache, j, mixed)?;
+    println!(
+        "mixed-policy run: {} tokens, hits/misses {}/{} (repeat {}/{})",
+        ma.tokens, ma.hits, ma.misses, mb.hits, mb.misses
+    );
+    assert_eq!(ma.tokens as usize, N_REQ * MAX_NEW, "mixed-policy run must complete in full");
+    assert_eq!(
+        (ma.hits, ma.misses),
+        (mb.hits, mb.misses),
+        "per-session overrides must stay deterministic"
+    );
+    out.push((
+        "mixed_policy".into(),
+        Json::Object(vec![
+            ("tokens".into(), Json::num(ma.tokens as f64)),
+            ("cache_hits".into(), Json::num(ma.hits as f64)),
+            ("cache_misses".into(), Json::num(ma.misses as f64)),
+            ("deterministic".into(), Json::Bool(true)),
         ]),
     ));
 

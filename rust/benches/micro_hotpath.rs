@@ -246,10 +246,59 @@ fn main() -> anyhow::Result<()> {
     let mask: Vec<bool> = (0..cfg.n_experts).map(|_| rng.chance(0.5)).collect();
     let mut st = RouterState::new(cfg.n_layers, 1);
     let strat = Strategy::CachePrior { lambda: 0.5, j: 2, delta: DeltaMode::RunningAvg };
-    bench_batched("routing::select (cache-prior)", 3, 30, 1000, || {
+    bench_batched("routing::select (seed enum, cache-prior)", 3, 30, 1000, || {
         black_box(routing::select(&strat, &z, &mask, 0, cfg.top_k, &mut st));
     })
     .print();
+    // The trait-based port is the production hot path since the policy
+    // redesign (it uses partial top-K selection internally).
+    let mut pol = moe_cache::policy::parse_routing("cache-prior:0.5:2")?;
+    let trait_select = bench_batched("policy select (trait, cache-prior)", 3, 30, 1000, || {
+        black_box(pol.select(&z, &mask, 0, cfg.top_k, &mut st));
+    });
+    trait_select.print();
+
+    // ---- ranking: full argsort vs partial top-K selection ----
+    let k2 = 2 * cfg.top_k;
+    let rank_full = bench_batched("routing::ranking (full argsort)", 3, 30, 1000, || {
+        black_box(routing::ranking(&z));
+    });
+    rank_full.print();
+    let rank_part = bench_batched("routing::ranking_topk (partial, 2K)", 3, 30, 1000, || {
+        black_box(routing::ranking_topk(&z, k2));
+    });
+    rank_part.print();
+
+    // ---- promote: bitmask membership vs the seed contains-scan ----
+    let all = routing::ranking(&z);
+    let subset: Vec<u32> = all.iter().take(cfg.top_k).copied().collect();
+    let promote_bitmask = bench_batched("routing::promote (bitmask)", 3, 30, 1000, || {
+        black_box(routing::promote(&subset, &all));
+    });
+    promote_bitmask.print();
+    let contains_promote = |subset: &[u32], all: &[u32]| -> Vec<u32> {
+        let mut out = Vec::with_capacity(all.len());
+        out.extend_from_slice(subset);
+        for &e in all {
+            if !subset.contains(&e) {
+                out.push(e);
+            }
+        }
+        out
+    };
+    let promote_seed = bench_batched("promote (seed contains-scan)", 3, 30, 1000, || {
+        black_box(contains_promote(&subset, &all));
+    });
+    promote_seed.print();
+    for (key, v) in [
+        ("select_trait_ns", trait_select.median_ns),
+        ("ranking_full_ns", rank_full.median_ns),
+        ("ranking_topk_ns", rank_part.median_ns),
+        ("promote_bitmask_ns", promote_bitmask.median_ns),
+        ("promote_seed_ns", promote_seed.median_ns),
+    ] {
+        out.push((key.into(), Json::num(v)));
+    }
 
     let mut cache = ExpertCache::new(30, Policy::Lru);
     let mut t_ctr = 0u64;

@@ -1,7 +1,11 @@
 //! Per-layer expert DRAM cache (paper §2.2).
 //!
 //! One `ExpertCache` instance per MoE layer holds up to `capacity` routed
-//! experts. Policies:
+//! experts. Eviction is pluggable: the cache owns the entry table and
+//! its stamp/freq bookkeeping and delegates victim choice to a
+//! [`crate::policy::EvictionPolicy`] trait object (built from a spec via
+//! [`crate::policy::parse_eviction`], or from the legacy [`Policy`] enum
+//! shim). Seed policies:
 //!
 //! * **LRU** — the paper's default. The paper's eviction-order rule for
 //!   parallel top-K selection ("removing experts with higher router weights
@@ -18,6 +22,7 @@
 
 use std::collections::HashMap;
 
+use crate::policy::{EntryView, EvictionPolicy};
 use crate::util::stats::Welford;
 
 /// Eviction policy for one layer's [`ExpertCache`] (see the module docs
@@ -63,12 +68,30 @@ pub enum Policy {
 }
 
 impl Policy {
+    /// **Deprecated shim** (kept one release): parses through the unified
+    /// [`crate::policy`] spec grammar. Only the three seed policies are
+    /// representable as this enum — specs like `lfu-decay:64` or
+    /// `belady:trace=FILE` parse via [`crate::policy::parse_eviction`]
+    /// into an [`crate::policy::EvictionFactory`] instead.
     pub fn parse(s: &str) -> anyhow::Result<Policy> {
-        match s {
-            "lru" => Ok(Policy::Lru),
-            "lfu" => Ok(Policy::Lfu),
-            "belady" | "optimal" => Ok(Policy::Belady),
-            _ => anyhow::bail!("unknown cache policy {s:?}"),
+        crate::policy::policy_from_spec(s)
+    }
+
+    /// Canonical spec label of the policy.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Policy::Lru => "lru",
+            Policy::Lfu => "lfu",
+            Policy::Belady => "belady",
+        }
+    }
+
+    /// The trait implementation this legacy enum value stands for.
+    pub fn build(self) -> Box<dyn EvictionPolicy> {
+        match self {
+            Policy::Lru => Box::new(crate::policy::LruEviction),
+            Policy::Lfu => Box::new(crate::policy::LfuEviction),
+            Policy::Belady => Box::new(crate::policy::BeladyExternal),
         }
     }
 }
@@ -118,26 +141,52 @@ impl CacheStats {
 #[derive(Debug, Clone)]
 pub struct ExpertCache {
     capacity: usize,
-    policy: Policy,
+    /// Victim choice + touch hooks; the cache owns the entry table and
+    /// its stamp/freq bookkeeping, the policy only chooses.
+    policy: Box<dyn EvictionPolicy>,
     entries: HashMap<u32, Entry>,
     clock: u64,
+    /// Reusable view buffer for victim choice — no per-eviction
+    /// allocation on the decode hot path (capacity settles at the cache
+    /// capacity after the first full eviction).
+    scratch: Vec<EntryView>,
     pub stats: CacheStats,
 }
 
 impl ExpertCache {
+    /// Legacy-enum constructor (deprecated shim); equivalent to
+    /// [`ExpertCache::with_policy`] with the enum's trait port.
     pub fn new(capacity: usize, policy: Policy) -> Self {
+        Self::with_policy(capacity, policy.build())
+    }
+
+    /// Build with any [`EvictionPolicy`] implementation (usually via
+    /// [`crate::policy::EvictionFactory::for_layer`]).
+    pub fn with_policy(capacity: usize, policy: Box<dyn EvictionPolicy>) -> Self {
         assert!(capacity > 0, "cache capacity must be >= 1");
         ExpertCache {
             capacity,
             policy,
             entries: HashMap::new(),
             clock: 0,
+            scratch: Vec::new(),
             stats: CacheStats::default(),
         }
     }
 
     pub fn capacity(&self) -> usize {
         self.capacity
+    }
+
+    /// Canonical spec label of the eviction policy in use.
+    pub fn policy_label(&self) -> String {
+        self.policy.label()
+    }
+
+    /// Whether the policy requires the caller-provided `next_use` oracle
+    /// on [`ExpertCache::access`] (trace-replay Belady).
+    pub fn needs_oracle(&self) -> bool {
+        self.policy.needs_oracle()
     }
 
     pub fn len(&self) -> usize {
@@ -178,11 +227,13 @@ impl ExpertCache {
                 e,
                 Entry { stamp: self.clock, freq: 0, inserted_token: now_token },
             );
+            self.policy.on_warm(e, now_token);
         }
     }
 
     pub fn clear(&mut self) {
         self.entries.clear();
+        self.policy.on_clear();
     }
 
     /// Access one token-layer selection, `selected` ordered by router weight
@@ -211,6 +262,7 @@ impl ExpertCache {
                 entry.freq += 1;
                 out.hits += 1;
                 self.stats.hits += 1;
+                self.policy.on_hit(e, now_token);
             } else {
                 out.missed.push(e);
                 self.stats.misses += 1;
@@ -224,11 +276,15 @@ impl ExpertCache {
             let stamp = base + i as u64 + 1;
             if self.entries.len() >= self.capacity {
                 if let Some(victim) = self.choose_victim(next_use, now_token) {
-                    let entry = self.entries.remove(&victim).unwrap();
+                    let entry = self
+                        .entries
+                        .remove(&victim)
+                        .expect("eviction policy chose a non-resident victim");
                     self.stats.evictions += 1;
                     self.stats
                         .lifetimes
                         .push((now_token - entry.inserted_token) as f64);
+                    self.policy.on_evict(victim, now_token);
                     out.evicted.push(victim);
                 } else {
                     // Nothing evictable (degenerate tiny cache): stream the
@@ -240,6 +296,7 @@ impl ExpertCache {
                 e,
                 Entry { stamp, freq: 1, inserted_token: now_token },
             );
+            self.policy.on_insert(e, now_token);
         }
         out.resident_after = selected
             .iter()
@@ -249,31 +306,23 @@ impl ExpertCache {
         out
     }
 
+    /// Hand the policy a deterministic view of the entry table. Stamps
+    /// are unique, so any stamp-tie-broken ordering is independent of the
+    /// hash map's iteration order.
     fn choose_victim(
-        &self,
+        &mut self,
         next_use: Option<&dyn Fn(u32) -> u64>,
-        _now_token: u64,
+        now_token: u64,
     ) -> Option<u32> {
-        match self.policy {
-            Policy::Lru => self
-                .entries
-                .iter()
-                .min_by_key(|(_, e)| e.stamp)
-                .map(|(&k, _)| k),
-            Policy::Lfu => self
-                .entries
-                .iter()
-                .min_by_key(|(_, e)| (e.freq, e.stamp))
-                .map(|(&k, _)| k),
-            Policy::Belady => {
-                let f = next_use.expect("Belady policy requires a next-use oracle");
-                // Farthest next use; ties broken by LRU stamp.
-                self.entries
-                    .iter()
-                    .max_by_key(|(&k, e)| (f(k), u64::MAX - e.stamp))
-                    .map(|(&k, _)| k)
-            }
-        }
+        self.scratch.clear();
+        self.scratch
+            .extend(self.entries.iter().map(|(&k, e)| EntryView {
+                expert: k,
+                stamp: e.stamp,
+                freq: e.freq,
+                inserted_token: e.inserted_token,
+            }));
+        self.policy.victim(&self.scratch, now_token, next_use)
     }
 
     /// Account still-resident experts as living until `now_token` (called at

@@ -14,7 +14,9 @@
 //! hit/miss accounting spans all interleaved streams and the affinity
 //! schedule can exploit cross-request expert locality. Tokens stream back
 //! as soon as they are sampled, so TTFT no longer waits behind whole
-//! generations.
+//! generations. A request may carry its own routing-policy spec
+//! ([`Request::routing_spec`]); the parsed policy is owned by the session
+//! and swapped into the engine around each of its quanta.
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{self, Receiver, Sender};
@@ -427,11 +429,26 @@ fn admit(
         let _ = reply.send(Event::Failed { id: req.id, error: "empty prompt".into() });
         return;
     }
+    // Per-session routing override: parse through the unified registry at
+    // admission so a bad spec fails the one request, not the server.
+    let routing = match req.routing_spec.as_deref().map(crate::policy::parse_routing) {
+        None => None,
+        Some(Ok(p)) => Some(p),
+        Some(Err(e)) => {
+            let _ = reply.send(Event::Failed {
+                id: req.id,
+                error: format!("bad routing spec: {e:#}"),
+            });
+            return;
+        }
+    };
     let prompt = clamp_prompt(&req.prompt, engine.cfg.max_seq, req.max_new);
     let state = engine.new_session_state(engine.opts.seed ^ req.id);
     let seq = st.next_seq;
     st.next_seq += 1;
-    st.active.push(Session::new(req, reply, state, prompt, submitted, seq));
+    let mut sess = Session::new(req, reply, state, prompt, submitted, seq);
+    sess.routing = routing;
+    st.active.push(sess);
 }
 
 /// Materialize the session with admission seq `seq` in the engine. The
@@ -478,7 +495,29 @@ fn step_counted(engine: &mut Engine, sess: &mut Session, token: u32) -> Result<V
 
 /// Run one quantum for `sess`: a prefill chunk, or up to `quantum` decode
 /// tokens. Returns `Some(finish)` when the request completed.
+///
+/// A session carrying a routing override has it swapped into the engine
+/// for exactly the duration of the quantum — swapped back even when the
+/// quantum errors, so the engine default is never leaked to another
+/// session.
 fn run_quantum(
+    engine: &mut Engine,
+    sess: &mut Session,
+    quantum: usize,
+    chunk: usize,
+    cfg: &ServerConfig,
+) -> Result<Option<FinishReason>> {
+    if let Some(p) = sess.routing.as_mut() {
+        engine.swap_routing(p);
+    }
+    let out = run_quantum_inner(engine, sess, quantum, chunk, cfg);
+    if let Some(p) = sess.routing.as_mut() {
+        engine.swap_routing(p);
+    }
+    out
+}
+
+fn run_quantum_inner(
     engine: &mut Engine,
     sess: &mut Session,
     quantum: usize,

@@ -25,6 +25,7 @@ use std::time::Instant;
 
 use crate::cache::ExpertCache;
 use crate::model::{Sampler, SessionState};
+use crate::policy::RoutingPolicy;
 
 /// A generation request submitted to the [`super::Coordinator`].
 #[derive(Debug, Clone)]
@@ -34,6 +35,12 @@ pub struct Request {
     pub max_new: usize,
     pub temperature: f32,
     pub stop_token: Option<u32>,
+    /// Optional per-session routing-policy override as a registry spec
+    /// (e.g. `"original"`, `"max-rank:6:1"` — see [`crate::policy`]).
+    /// `None` runs the engine's default policy. The override is installed
+    /// around exactly this session's quanta, so interleaved sessions can
+    /// run different routing policies against the shared expert cache.
+    pub routing_spec: Option<String>,
 }
 
 /// Why a request stopped generating.
@@ -142,6 +149,10 @@ pub struct Session {
     /// Per-layer selections from this session's last step — the affinity
     /// signal, mirrored out of `Engine::last_selections` after each quantum.
     pub last_topk: Vec<Vec<u32>>,
+    /// Parsed per-session routing override ([`Request::routing_spec`]);
+    /// owned by the session so any policy-internal state persists across
+    /// its quanta. Swapped into the engine around each quantum.
+    pub routing: Option<Box<dyn RoutingPolicy>>,
     // Per-session accounting, accumulated as deltas around each step while
     // the engine's counters are shared across all interleaved sessions.
     pub hits: u64,
@@ -175,6 +186,7 @@ impl Session {
             ttft_s: 0.0,
             seq,
             last_topk: Vec::new(),
+            routing: None,
             hits: 0,
             misses: 0,
             dev_time_s: 0.0,
@@ -268,6 +280,7 @@ mod tests {
             max_new: 4,
             temperature: 0.0,
             stop_token: None,
+            routing_spec: None,
         };
         let mut s = Session::new(
             req,

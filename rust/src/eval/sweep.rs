@@ -5,9 +5,9 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use crate::cache::Policy;
 use crate::config::{DeviceProfile, Quant};
-use crate::model::{Engine, EngineOptions};
+use crate::model::EngineBuilder;
+use crate::policy::RoutingPolicy;
 use crate::routing::Strategy;
 
 use super::harness::{eval_math, eval_ppl, eval_qa, EvalResult};
@@ -22,72 +22,34 @@ pub struct SweepPoint {
 }
 
 /// The paper's hyperparameter grids (§4.2), thinned for single-core run
-/// time: Pruning/Max-Rank sweep integers, Cumsum/Cache-Prior sweep [0, 1].
+/// time. Registry-driven since the policy-stack redesign: every
+/// registered routing policy contributes its own grid
+/// ([`crate::policy::spec_grid`]), so adding a policy automatically adds
+/// its sweep points; this wrapper materializes them as the legacy
+/// [`Strategy`] enum for the figure benches (deprecated shim, kept one
+/// release).
 pub fn strategy_grid(top_k: usize, n_experts: usize, j: usize, dense: bool) -> Vec<Strategy> {
-    let mut out = vec![Strategy::Original];
-    for keep in 1..=top_k.saturating_sub(1).max(1) {
-        out.push(Strategy::Pruning { keep });
-    }
-    // Max-rank window sizes between K and N.
-    let m_grid: Vec<usize> = if dense {
-        (top_k..=n_experts).collect()
-    } else {
-        let mut g = vec![top_k, top_k + 1, top_k + 2];
-        for frac in [0.2, 0.35, 0.5, 0.75, 1.0] {
-            g.push(((n_experts as f64 * frac) as usize).max(top_k));
-        }
-        g.sort_unstable();
-        g.dedup();
-        g
-    };
-    for m in m_grid {
-        out.push(Strategy::MaxRank { m, j });
-    }
-    let p_grid: &[f32] = if dense {
-        &[0.05, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 0.95, 0.99]
-    } else {
-        &[0.3, 0.5, 0.7, 0.8, 0.9, 0.97]
-    };
-    for &p in p_grid {
-        out.push(Strategy::CumsumThreshold { p, j });
-    }
-    let l_grid: &[f32] = if dense {
-        &[0.05, 0.1, 0.15, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0]
-    } else {
-        &[0.1, 0.2, 0.35, 0.5, 0.7, 0.9]
-    };
-    for &lambda in l_grid {
-        out.push(Strategy::CachePrior {
-            lambda,
-            j,
-            delta: crate::routing::DeltaMode::RunningAvg,
-        });
-    }
-    out
+    // A future registry policy that isn't representable as the closed
+    // enum is silently absent from this legacy view — the spec-driven
+    // paths (`sweep_points`, `run_point_spec`) cover it.
+    crate::policy::spec_grid(top_k, n_experts, j, dense)
+        .iter()
+        .filter_map(|s| Strategy::parse(s).ok())
+        .collect()
 }
 
-/// The numeric hyperparameter of a strategy (x-axis bookkeeping).
+/// The numeric hyperparameter of a strategy (x-axis bookkeeping), read
+/// from the policy's own registry metadata ([`crate::policy::RoutingPolicy::param`])
+/// — no second exhaustive match to fall out of sync.
 pub fn strategy_param(s: &Strategy) -> f64 {
-    match s {
-        Strategy::Original => 0.0,
-        Strategy::Pruning { keep } => *keep as f64,
-        Strategy::SwapAtRank { rank } => *rank as f64,
-        Strategy::MaxRank { m, .. } => *m as f64,
-        Strategy::CumsumThreshold { p, .. } => *p as f64,
-        Strategy::CachePrior { lambda, .. } => *lambda as f64,
-    }
+    crate::policy::from_strategy(s).param()
 }
 
-/// Base family name ("pruning", "max-rank", ...) for grouping curves.
+/// Base family name ("pruning", "max-rank", ...) for grouping curves,
+/// from the policy's registry metadata
+/// ([`crate::policy::RoutingPolicy::family`]).
 pub fn strategy_family(s: &Strategy) -> &'static str {
-    match s {
-        Strategy::Original => "original",
-        Strategy::Pruning { .. } => "pruning",
-        Strategy::SwapAtRank { .. } => "swap",
-        Strategy::MaxRank { .. } => "max-rank",
-        Strategy::CumsumThreshold { .. } => "cumsum",
-        Strategy::CachePrior { .. } => "cache-prior",
-    }
+    crate::policy::from_strategy(s).family()
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -97,30 +59,29 @@ pub enum Task {
     Math,
 }
 
-/// Run one evaluation point. A fresh engine is built per point so every
-/// point is an independent deterministic measurement (paper §4.1).
+/// Run one evaluation point for any [`RoutingPolicy`] trait object. A
+/// fresh engine is built per point so every point is an independent
+/// deterministic measurement (paper §4.1); eviction is the paper-default
+/// LRU, seed 7, device-16gb — identical to the seed `run_point`.
 #[allow(clippy::too_many_arguments)]
-pub fn run_point(
+pub fn run_point_policy(
     artifacts: &Path,
     model: &str,
-    strategy: Strategy,
+    routing: Box<dyn RoutingPolicy>,
     cache_capacity: usize,
     quant: Quant,
     task: Task,
     data: &EvalData,
     budget: &EvalBudget,
 ) -> Result<SweepPoint> {
-    let opts = EngineOptions {
-        quant,
-        cache_capacity,
-        policy: Policy::Lru,
-        strategy: strategy.clone(),
-        device: DeviceProfile::device_16gb(),
-        seed: 7,
-        record_trace: false,
-        record_logits: false,
-    };
-    let mut engine = Engine::load(artifacts, model, opts)?;
+    let (label, param) = (routing.label(), routing.param());
+    let mut engine = EngineBuilder::new(artifacts, model)
+        .quant(quant)
+        .cache_capacity(cache_capacity)
+        .device(DeviceProfile::device_16gb())
+        .seed(7)
+        .routing(routing)
+        .build()?;
     let result = match task {
         Task::Ppl => {
             let chunks =
@@ -134,12 +95,56 @@ pub fn run_point(
             budget.gen_tokens,
         )?,
     };
-    Ok(SweepPoint {
-        model: model.to_string(),
-        strategy: strategy.label(),
-        param: strategy_param(&strategy),
-        result,
-    })
+    Ok(SweepPoint { model: model.to_string(), strategy: label, param, result })
+}
+
+/// [`run_point_policy`] from a registry spec string.
+#[allow(clippy::too_many_arguments)]
+pub fn run_point_spec(
+    artifacts: &Path,
+    model: &str,
+    spec: &str,
+    cache_capacity: usize,
+    quant: Quant,
+    task: Task,
+    data: &EvalData,
+    budget: &EvalBudget,
+) -> Result<SweepPoint> {
+    run_point_policy(
+        artifacts,
+        model,
+        crate::policy::parse_routing(spec)?,
+        cache_capacity,
+        quant,
+        task,
+        data,
+        budget,
+    )
+}
+
+/// Legacy-enum shim over [`run_point_policy`] (kept one release; labels
+/// and params come from the trait port, byte-identical to the seed).
+#[allow(clippy::too_many_arguments)]
+pub fn run_point(
+    artifacts: &Path,
+    model: &str,
+    strategy: Strategy,
+    cache_capacity: usize,
+    quant: Quant,
+    task: Task,
+    data: &EvalData,
+    budget: &EvalBudget,
+) -> Result<SweepPoint> {
+    run_point_policy(
+        artifacts,
+        model,
+        crate::policy::from_strategy(&strategy),
+        cache_capacity,
+        quant,
+        task,
+        data,
+        budget,
+    )
 }
 
 /// Evaluation budget knobs (single-core run time control).
@@ -175,7 +180,10 @@ impl EvalBudget {
     }
 }
 
-/// Sweep every strategy point for one model+task.
+/// Sweep every registered policy's grid for one model+task. Fully
+/// registry-driven: the grid never round-trips through the closed enum,
+/// so a policy added per `docs/POLICIES.md` sweeps without touching this
+/// file.
 #[allow(clippy::too_many_arguments)]
 pub fn sweep_points(
     artifacts: &Path,
@@ -190,11 +198,11 @@ pub fn sweep_points(
     top_k: usize,
 ) -> Result<Vec<SweepPoint>> {
     let mut out = Vec::new();
-    for strategy in strategy_grid(top_k, n_experts, j, false) {
-        out.push(run_point(
+    for spec in crate::policy::spec_grid(top_k, n_experts, j, false) {
+        out.push(run_point_spec(
             artifacts,
             model,
-            strategy,
+            &spec,
             cache_capacity,
             quant,
             task,
@@ -231,5 +239,26 @@ mod tests {
             strategy_param(&Strategy::CumsumThreshold { p: 0.5, j: 1 }),
             0.5
         );
+    }
+
+    #[test]
+    fn grid_labels_match_registry_specs() {
+        // The enum shim must materialize exactly the registry's grid: the
+        // parity gate pins sweep labels across the redesign.
+        let specs = crate::policy::spec_grid(4, 60, 2, false);
+        let grid = strategy_grid(4, 60, 2, false);
+        assert_eq!(grid.len(), specs.len());
+        for (s, spec) in grid.iter().zip(&specs) {
+            assert_eq!(&s.label(), spec);
+        }
+    }
+
+    #[test]
+    fn metadata_agrees_with_trait_objects() {
+        for s in strategy_grid(4, 60, 2, false) {
+            let p = crate::policy::from_strategy(&s);
+            assert_eq!(strategy_family(&s), p.family());
+            assert_eq!(strategy_param(&s), p.param());
+        }
     }
 }

@@ -18,9 +18,13 @@
 //! * [`quant`] — int4/int8 symmetric per-channel dequantization
 //! * [`weights`] — the flash-image binary format reader
 //! * [`flash`] — virtual-clock flash/DRAM device simulator
-//! * [`cache`] — per-layer expert caches (LRU / LFU / Belady oracle)
-//! * [`routing`] — the paper's contribution: Max-Rank, Cumsum-Threshold,
-//!   and Cache-Prior re-ranking (§3), plus sensitivity probes (§2.3)
+//! * [`cache`] — per-layer expert caches with pluggable eviction
+//! * [`routing`] — routing primitives (softmax/ranking/promote) and the
+//!   deprecated `Strategy` enum shims
+//! * [`policy`] — the pluggable policy stack: `RoutingPolicy` +
+//!   `EvictionPolicy` traits, the unified spec registry
+//!   (`cache-prior:0.5:2`, `lru`, `belady:trace=FILE`, `lfu-decay:64`),
+//!   and all built-in implementations
 //! * [`runtime`] — PJRT executable registry (HLO-text artifacts; raw
 //!   components keep their output device-resident)
 //! * [`model`] — the token-generation engine composing the AOT components,
@@ -39,6 +43,7 @@ pub mod coordinator;
 pub mod eval;
 pub mod flash;
 pub mod model;
+pub mod policy;
 pub mod quant;
 pub mod report;
 pub mod routing;

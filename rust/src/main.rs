@@ -9,16 +9,16 @@
 //!   trace                        — record a router trace + policy replay
 //!   footprint                    — Table 1 memory footprints
 
+use std::path::Path;
+
 use anyhow::{Context, Result};
-use moe_cache::cache::Policy;
 use moe_cache::cli::Args;
 use moe_cache::config::{DeviceProfile, Quant, CONFIG_NAMES};
 use moe_cache::coordinator::{Coordinator, Event, Request, Schedule, ServerConfig};
-use moe_cache::eval::sweep::{run_point, EvalBudget, Task};
+use moe_cache::eval::sweep::{run_point_spec, EvalBudget, Task};
 use moe_cache::eval::{eval_math, eval_ppl, eval_qa, EvalData};
-use moe_cache::model::{Engine, EngineOptions};
+use moe_cache::model::{Engine, EngineBuilder};
 use moe_cache::report::Table;
-use moe_cache::routing::Strategy;
 use moe_cache::tracesim;
 use moe_cache::weights::FlashImage;
 use moe_cache::{artifacts_dir, eval::datasets};
@@ -30,20 +30,30 @@ USAGE: moe-cache <command> [--flags]
 
 COMMANDS:
   info                              artifact + model inventory
-  serve      --model M [--cache C --strategy S --prompts N --max-new T
-                        --max-sessions S --schedule fcfs|round-robin|affinity
-                        --quantum Q --prefill-chunk P --stream]
-  eval-ppl   --model M [--cache C --strategy S --chunks N --chunk-len L]
-  eval-qa    --model M [--cache C --strategy S --items N]
-  eval-math  --model M [--cache C --strategy S --items N]
+  serve      --model M [--cache C --strategy S --policy P --prompts N
+                        --max-new T --max-sessions S --quantum Q
+                        --schedule fcfs|round-robin|affinity
+                        --prefill-chunk P --stream
+                        --strategies S1,S2  per-request routing overrides,
+                                            assigned cyclically]
+  eval-ppl   --model M [--cache C --strategy S --policy P --chunks N --chunk-len L]
+  eval-qa    --model M [--cache C --strategy S --policy P --items N]
+  eval-math  --model M [--cache C --strategy S --policy P --items N]
   sweep      --model M --task ppl|qa|math [--cache C]
   device-sim --model M [--device device-12gb|device-16gb --quant int4|int8]
-  trace      --model M [--cache C --tokens N]  (replays LRU/LFU/Belady)
+  trace      --model M [--cache C --tokens N --strategy S
+                        --policies P1,P2,..  eviction specs to replay
+                        --save-trace FILE    for later belady:trace=FILE]
   footprint                          Table-1 style memory accounting
 
-STRATEGIES: original | pruning:H | max-rank:M:J | cumsum:P:J |
-            cache-prior:LAMBDA:J | swap:RANK
+Policy specs share one grammar: name[:arg]... with positional or
+key=value args ('_' and '-' interchangeable). Examples: cache-prior:0.5:2,
+cache_prior:lambda=0.5:j=2, belady:trace=results/trace.json, lfu-decay:64.
 ";
+
+fn usage() -> String {
+    format!("{USAGE}\n{}", moe_cache::policy::registry_help())
+}
 
 fn main() {
     if let Err(e) = run() {
@@ -52,30 +62,28 @@ fn main() {
     }
 }
 
+/// Build the engine through [`EngineBuilder`]: `--strategy` and
+/// `--policy` parse through the one registry grammar, so every registered
+/// policy (including `belady:trace=FILE` and `lfu-decay:H`) is reachable
+/// from every subcommand.
 fn engine_from_args(args: &Args) -> Result<Engine> {
     let model = args.get("model").context("--model required")?;
     let arts = artifacts_dir();
-    let quant = Quant::parse(args.get_or("quant", "int4"))?;
     // Default cache: half the experts (the paper's default setting).
     let manifest = moe_cache::runtime::Runtime::load(&arts.join(model))?;
     let n = manifest.config.n_experts;
     let j = manifest.config.default_top_j();
-    let cache = args.usize_or("cache", n / 2)?;
-    let strategy = Strategy::parse(args.get_or(
-        "strategy",
-        &format!("cache-prior:0.5:{j}"),
-    ))?;
-    let opts = EngineOptions {
-        quant,
-        cache_capacity: cache,
-        policy: Policy::parse(args.get_or("policy", "lru"))?,
-        strategy,
-        device: DeviceProfile::by_name(args.get_or("device", "device-16gb"))?,
-        seed: args.usize_or("seed", 7)? as u64,
-        record_trace: args.bool("record-trace"),
-        record_logits: false,
-    };
-    Engine::from_runtime(manifest, &arts, model, opts)
+    let default_strategy = format!("cache-prior:0.5:{j}");
+    EngineBuilder::new(&arts, model)
+        .runtime(manifest)
+        .quant(Quant::parse(args.get_or("quant", "int4"))?)
+        .cache_capacity(args.usize_or("cache", n / 2)?)
+        .device(DeviceProfile::by_name(args.get_or("device", "device-16gb"))?)
+        .seed(args.usize_or("seed", 7)? as u64)
+        .record_trace(args.bool("record-trace"))
+        .routing_spec(args.get_or("strategy", &default_strategy))?
+        .eviction_spec(args.get_or("policy", "lru"))?
+        .build()
 }
 
 fn run() -> Result<()> {
@@ -92,7 +100,7 @@ fn run() -> Result<()> {
         "trace" => trace_cmd(&args),
         "footprint" => footprint(),
         _ => {
-            println!("{USAGE}");
+            println!("{}", usage());
             Ok(())
         }
     }
@@ -150,6 +158,23 @@ fn serve(args: &Args) -> Result<()> {
         cfg.decode_quantum,
     );
     let temperature = args.f64_or("temperature", 0.8)? as f32;
+    // Per-request routing overrides, assigned cyclically: e.g.
+    // `--strategies original,cache-prior:0.9:2` pins request 0 to plain
+    // top-K, request 1 to an aggressive prior, and so on. Validate up
+    // front so a typo fails the command, not the Nth request.
+    let overrides: Vec<String> = args
+        .get("strategies")
+        .map(|s| {
+            s.split(',')
+                .map(|x| x.trim().to_string())
+                .filter(|x| !x.is_empty())
+                .collect()
+        })
+        .unwrap_or_default();
+    for spec in &overrides {
+        moe_cache::policy::parse_routing(spec)
+            .with_context(|| format!("--strategies entry {spec:?}"))?;
+    }
     // All requests enter the queue together so the scheduler — not
     // submission timing — decides the interleaving.
     let reqs: Vec<Request> = data
@@ -164,6 +189,11 @@ fn serve(args: &Args) -> Result<()> {
             max_new,
             temperature,
             stop_token: Some(2), // EOS
+            routing_spec: if overrides.is_empty() {
+                None
+            } else {
+                Some(overrides[i % overrides.len()].clone())
+            },
         })
         .collect();
     let prompt_lens: Vec<usize> = reqs.iter().map(|r| r.prompt.len()).collect();
@@ -225,7 +255,7 @@ fn eval_ppl_cmd(args: &Args) -> Result<()> {
     println!(
         "model={} strategy={} ppl={:.4} miss_rate={:.4} flash_mb={:.2} device_tps={:.2}",
         engine.cfg.name,
-        engine.opts.strategy.label(),
+        engine.routing_label(),
         r.metric,
         r.miss_rate,
         r.flash_bytes as f64 / 1e6,
@@ -242,7 +272,7 @@ fn eval_qa_cmd(args: &Args) -> Result<()> {
     println!(
         "model={} strategy={} accuracy={:.4} miss_rate={:.4}",
         engine.cfg.name,
-        engine.opts.strategy.label(),
+        engine.routing_label(),
         r.metric,
         r.miss_rate
     );
@@ -257,7 +287,7 @@ fn eval_math_cmd(args: &Args) -> Result<()> {
     println!(
         "model={} strategy={} accuracy={:.4} miss_rate={:.4}",
         engine.cfg.name,
-        engine.opts.strategy.label(),
+        engine.routing_label(),
         r.metric,
         r.miss_rate
     );
@@ -282,16 +312,18 @@ fn sweep_cmd(args: &Args) -> Result<()> {
         &format!("sweep_{model}"),
         &["strategy", "param", "metric", "miss_rate", "flash_mb"],
     );
-    for strategy in moe_cache::eval::sweep::strategy_grid(
+    // Registry-driven: every registered policy's grid sweeps, including
+    // ones the legacy Strategy enum cannot represent.
+    for spec in moe_cache::policy::spec_grid(
         cfg.top_k,
         cfg.n_experts,
         cfg.default_top_j(),
         false,
     ) {
-        let p = run_point(
+        let p = run_point_spec(
             &arts,
             model,
-            strategy,
+            &spec,
             cache,
             Quant::Int4,
             task,
@@ -327,7 +359,7 @@ fn device_sim(args: &Args) -> Result<()> {
         engine.cfg.name,
         engine.opts.device.name,
         engine.opts.quant,
-        engine.opts.strategy.label(),
+        engine.routing_label(),
         total_gen,
         engine.flash.throughput(),
         miss,
@@ -336,31 +368,47 @@ fn device_sim(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Record a router trace, replay it against any set of registered
+/// eviction specs (`--policies`, comma-separated), and optionally save
+/// it (`--save-trace FILE`) so a later live run can use
+/// `--policy belady:trace=FILE` as the oracle upper bound. Recording
+/// defaults to `original` routing: cache-independent selection makes the
+/// replay (and the Belady bound) exact.
 fn trace_cmd(args: &Args) -> Result<()> {
     let model = args.get("model").context("--model required")?;
     let arts = artifacts_dir();
     let rt = moe_cache::runtime::Runtime::load(&arts.join(model))?;
     let cfg = rt.config.clone();
     let cache = args.usize_or("cache", cfg.n_experts / 2)?;
-    let opts = EngineOptions {
-        record_trace: true,
-        strategy: Strategy::Original,
-        ..EngineOptions::defaults(cache)
-    };
-    let mut engine = Engine::from_runtime(rt, &arts, model, opts)?;
+    let mut engine = EngineBuilder::new(&arts, model)
+        .runtime(rt)
+        .cache_capacity(cache)
+        .record_trace(true)
+        .routing_spec(args.get_or("strategy", "original"))?
+        .build()?;
     let data = EvalData::load(&arts.join("data"))?;
     let n_tokens = args.usize_or("tokens", 256)?;
     let chunk: Vec<u32> = data.ppl_test[..n_tokens.min(cfg.max_seq)].to_vec();
     engine.score_sequence(&chunk)?;
     let trace = engine.trace.clone();
+    if let Some(path) = args.get("save-trace") {
+        trace.save(Path::new(path))?;
+        println!("wrote trace ({} tokens x {} layers) to {path}", trace.tokens(), trace.n_layers);
+    }
     let mut t = Table::new(
         &format!("trace_{model}"),
         &["policy", "hits", "misses", "miss_rate"],
     );
-    for (name, policy) in [("lru", Policy::Lru), ("lfu", Policy::Lfu), ("belady", Policy::Belady)] {
-        let r = tracesim::simulate(&trace, cache, policy);
+    for spec in args.get_or("policies", "lru,lfu,lfu-decay:128,belady").split(',') {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            continue;
+        }
+        let factory = moe_cache::policy::parse_eviction(spec)
+            .with_context(|| format!("--policies entry {spec:?}"))?;
+        let r = tracesim::simulate_with(&trace, cache, &factory);
         t.row(vec![
-            name.into(),
+            factory.label().to_string(),
             r.hits.to_string(),
             r.misses.to_string(),
             format!("{:.4}", r.miss_rate()),

@@ -20,7 +20,7 @@
 //!   is bit-identical to the pre-pipeline engine unless
 //!   [`Engine::enable_prefetch`] is called.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -33,9 +33,11 @@ use crate::flash::FlashSim;
 use crate::model::arena::{LayerArena, StagedLayer};
 use crate::model::prefetch::Prefetcher;
 use crate::model::sampler::{log_prob, Sampler};
+use crate::policy::{EvictionFactory, OriginalPolicy, RoutingPolicy};
 use crate::routing::{self, RouterState, Strategy};
 use crate::runtime::Runtime;
 use crate::tracesim::Trace;
+use crate::util::json::Json;
 use crate::weights::FlashImage;
 
 struct LayerStatic {
@@ -56,12 +58,22 @@ struct StaticWeights {
     layers: Vec<LayerStatic>,
 }
 
+/// Flat engine knobs.
+///
+/// This is the *legacy* construction surface, kept source-compatible for
+/// one release: `policy` and `strategy` only cover the closed seed enums.
+/// New code — and anything that needs post-redesign policies
+/// (`belady:trace=...`, `lfu-decay:...`) — should construct through
+/// [`EngineBuilder`], which accepts registry specs and trait objects and
+/// stops this struct from accreting further fields.
 #[derive(Debug, Clone)]
 pub struct EngineOptions {
     pub quant: Quant,
     /// Experts cached per layer (out of n_experts).
     pub cache_capacity: usize,
+    /// Legacy eviction enum (ignored when a builder supplies a factory).
     pub policy: Policy,
+    /// Legacy routing enum (ignored when a builder supplies a policy).
     pub strategy: Strategy,
     pub device: DeviceProfile,
     pub seed: u64,
@@ -83,6 +95,140 @@ impl EngineOptions {
             record_trace: false,
             record_logits: false,
         }
+    }
+}
+
+/// Staged engine construction: artifacts → config → policies → options →
+/// sessions.
+///
+/// The canonical construction path since the policy-stack redesign. It
+/// accepts routing/eviction as registry specs (`"cache-prior:0.5:2"`,
+/// `"belady:trace=FILE"`) or as trait objects, defaults the cache
+/// capacity to half the experts (the paper's setting) when unset, and
+/// keeps [`EngineOptions`] down to the flat simulation knobs.
+///
+/// ```no_run
+/// use moe_cache::model::EngineBuilder;
+/// use std::path::Path;
+///
+/// # fn main() -> anyhow::Result<()> {
+/// let engine = EngineBuilder::new(Path::new("artifacts"), "qwen-tiny")
+///     .cache_capacity(30)
+///     .routing_spec("cache-prior:0.5:2")?
+///     .eviction_spec("lfu-decay:128")?
+///     .seed(7)
+///     .build()?;
+/// # Ok(())
+/// # }
+/// ```
+pub struct EngineBuilder {
+    artifacts: PathBuf,
+    model: String,
+    runtime: Option<Runtime>,
+    opts: EngineOptions,
+    cache_capacity: Option<usize>,
+    routing: Option<Box<dyn RoutingPolicy>>,
+    eviction: Option<EvictionFactory>,
+}
+
+impl EngineBuilder {
+    pub fn new(artifacts: &Path, model: &str) -> Self {
+        EngineBuilder {
+            artifacts: artifacts.to_path_buf(),
+            model: model.to_string(),
+            runtime: None,
+            opts: EngineOptions::defaults(0),
+            cache_capacity: None,
+            routing: None,
+            eviction: None,
+        }
+    }
+
+    /// Reuse an already-loaded [`Runtime`] instead of loading from the
+    /// artifacts directory again.
+    pub fn runtime(mut self, rt: Runtime) -> Self {
+        self.runtime = Some(rt);
+        self
+    }
+
+    /// Seed all flat knobs from a legacy [`EngineOptions`] (compat path).
+    pub fn options(mut self, opts: EngineOptions) -> Self {
+        self.cache_capacity = Some(opts.cache_capacity);
+        self.opts = opts;
+        self
+    }
+
+    pub fn quant(mut self, q: Quant) -> Self {
+        self.opts.quant = q;
+        self
+    }
+
+    /// Experts cached per layer; defaults to `n_experts / 2` when unset.
+    pub fn cache_capacity(mut self, c: usize) -> Self {
+        self.cache_capacity = Some(c);
+        self
+    }
+
+    pub fn device(mut self, d: DeviceProfile) -> Self {
+        self.opts.device = d;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.opts.seed = s;
+        self
+    }
+
+    pub fn record_trace(mut self, b: bool) -> Self {
+        self.opts.record_trace = b;
+        self
+    }
+
+    pub fn record_logits(mut self, b: bool) -> Self {
+        self.opts.record_logits = b;
+        self
+    }
+
+    /// Routing policy as a trait object.
+    pub fn routing(mut self, p: Box<dyn RoutingPolicy>) -> Self {
+        self.routing = Some(p);
+        self
+    }
+
+    /// Routing policy from a registry spec (e.g. `"max-rank:6:1"`).
+    pub fn routing_spec(mut self, spec: &str) -> Result<Self> {
+        self.routing = Some(crate::policy::parse_routing(spec)?);
+        Ok(self)
+    }
+
+    /// Eviction policy as a per-layer factory.
+    pub fn eviction(mut self, f: EvictionFactory) -> Self {
+        self.eviction = Some(f);
+        self
+    }
+
+    /// Eviction policy from a registry spec (e.g. `"belady:trace=FILE"`).
+    pub fn eviction_spec(mut self, spec: &str) -> Result<Self> {
+        self.eviction = Some(crate::policy::parse_eviction(spec)?);
+        Ok(self)
+    }
+
+    pub fn build(self) -> Result<Engine> {
+        let rt = match self.runtime {
+            Some(rt) => rt,
+            None => Runtime::load(&self.artifacts.join(&self.model))?,
+        };
+        let mut opts = self.opts;
+        opts.cache_capacity = self
+            .cache_capacity
+            .unwrap_or(rt.config.n_experts / 2);
+        let routing = self
+            .routing
+            .unwrap_or_else(|| crate::policy::from_strategy(&opts.strategy));
+        let eviction = self
+            .eviction
+            .unwrap_or_else(|| EvictionFactory::from_policy(opts.policy));
+        Engine::build_from_parts(rt, &self.artifacts, &self.model, opts, routing, eviction)
     }
 }
 
@@ -120,6 +266,9 @@ pub struct EngineSnapshot {
     arenas: Vec<LayerArena>,
     last_sel: Vec<Vec<u32>>,
     router_state: RouterState,
+    /// Routing-policy-internal state ([`RoutingPolicy::session_state`]);
+    /// `None` for the stateless built-ins.
+    policy_state: Option<Json>,
 }
 
 /// Per-request sequence state for multi-session serving.
@@ -140,6 +289,10 @@ pub struct SessionState {
     pos: usize,
     router_state: RouterState,
     last_sel: Vec<Vec<u32>>,
+    /// Routing-policy-internal per-session state
+    /// ([`RoutingPolicy::session_state`]); `None` for the stateless
+    /// built-ins, so the swap stays O(1).
+    policy_state: Option<Json>,
 }
 
 impl SessionState {
@@ -159,6 +312,7 @@ impl SessionState {
             pos: 0,
             router_state: RouterState::new(n_layers, seed),
             last_sel: vec![Vec::new(); n_layers],
+            policy_state: None,
         }
     }
 
@@ -186,6 +340,14 @@ pub struct Engine {
     staged_dev: Vec<Option<(PjRtBuffer, PjRtBuffer, PjRtBuffer)>>,
     pub router_state: RouterState,
     pub flash: FlashSim,
+    /// The active routing policy (a [`crate::policy`] trait object; the
+    /// legacy `opts.strategy` enum is only its construction-time seed).
+    routing: Box<dyn RoutingPolicy>,
+    /// Plain top-K fallback used while `strategy_active` is false.
+    routing_fallback: Box<dyn RoutingPolicy>,
+    /// Per-layer eviction-policy factory (rebuilds caches on
+    /// [`Engine::reset_all`]).
+    eviction: EvictionFactory,
     /// When false, routing falls back to Original but the cache still
     /// updates — the paper's GSM8K mode (§4.2: method applied only during
     /// autoregressive generation).
@@ -221,12 +383,39 @@ impl Engine {
         Self::from_runtime(rt, artifacts, cfg_name, opts)
     }
 
+    /// Legacy flat-options constructor (deprecated shim): builds the
+    /// trait policies from the `opts.strategy` / `opts.policy` enums and
+    /// delegates to the [`EngineBuilder`] core path.
     pub fn from_runtime(
         rt: Runtime,
         artifacts: &Path,
         cfg_name: &str,
         opts: EngineOptions,
     ) -> Result<Self> {
+        let routing = crate::policy::from_strategy(&opts.strategy);
+        let eviction = EvictionFactory::from_policy(opts.policy);
+        Self::build_from_parts(rt, artifacts, cfg_name, opts, routing, eviction)
+    }
+
+    /// The one real constructor: everything above funnels here.
+    fn build_from_parts(
+        rt: Runtime,
+        artifacts: &Path,
+        cfg_name: &str,
+        opts: EngineOptions,
+        routing: Box<dyn RoutingPolicy>,
+        eviction: EvictionFactory,
+    ) -> Result<Self> {
+        // A live engine never supplies the next-use closure, so an
+        // oracle-requiring policy (plain `belady`) would panic at the
+        // first eviction — fail construction with a usable error instead.
+        anyhow::ensure!(
+            !eviction.for_layer(0).needs_oracle(),
+            "eviction policy {:?} needs a clairvoyant next-use oracle and only runs in \
+             trace replay (`trace --policies ...`); for a live engine record a trace \
+             first and use `belady:trace=FILE`",
+            eviction.label()
+        );
         let image = Arc::new(FlashImage::open_artifact(artifacts, cfg_name, opts.quant)?);
         let cfg = rt.config.clone();
         anyhow::ensure!(image.config == cfg, "flash image / manifest config mismatch");
@@ -279,7 +468,7 @@ impl Engine {
             .map(|_| LayerArena::new(df, fd, opts.cache_capacity, cfg.top_k))
             .collect();
         let caches = (0..cfg.n_layers)
-            .map(|_| ExpertCache::new(opts.cache_capacity, opts.policy))
+            .map(|l| ExpertCache::with_policy(opts.cache_capacity, eviction.for_layer(l)))
             .collect();
         let kv_len = cfg.n_heads * cfg.max_seq * cfg.head_dim;
         let kv_append_ok = rt.has_component("kv_append");
@@ -287,6 +476,9 @@ impl Engine {
         Ok(Engine {
             router_state: RouterState::new(cfg.n_layers, opts.seed),
             flash: FlashSim::new(opts.device.clone()),
+            routing,
+            routing_fallback: Box::new(OriginalPolicy),
+            eviction,
             strategy_active: true,
             kv_k: vec![vec![0f32; kv_len]; cfg.n_layers],
             kv_v: vec![vec![0f32; kv_len]; cfg.n_layers],
@@ -380,8 +572,8 @@ impl Engine {
     /// Full reset: sequence + expert caches + stats + trace.
     pub fn reset_all(&mut self) {
         self.reset_sequence();
-        for c in &mut self.caches {
-            *c = ExpertCache::new(self.opts.cache_capacity, self.opts.policy);
+        for (l, c) in self.caches.iter_mut().enumerate() {
+            *c = ExpertCache::with_policy(self.opts.cache_capacity, self.eviction.for_layer(l));
         }
         for a in &mut self.arenas {
             a.clear();
@@ -454,7 +646,6 @@ impl Engine {
             (self.cfg.n_ffn_calls(), self.cfg.d_ff, self.cfg.renorm_topk);
         let bytes_per = self.image.bytes_per_expert();
         let use_dev_kv = self.kv_append_ok;
-        static ORIGINAL: Strategy = Strategy::Original;
         let mut step_stats = StepStats::default();
 
         let t0 = Instant::now();
@@ -522,23 +713,19 @@ impl Engine {
             }
             step_stats.t_upload_s += t0.elapsed().as_secs_f64();
 
-            // ---- cache-aware selection ----
+            // ---- cache-aware selection (trait-object policy) ----
             let mask = self.caches[l].mask(n_experts);
-            let strategy: &Strategy = if self.strategy_active {
-                &self.opts.strategy
+            let mut sel = if self.strategy_active {
+                self.routing.select(&z, &mask, l, top_k, &mut self.router_state)
             } else {
-                &ORIGINAL
+                self.routing_fallback.select(&z, &mask, l, top_k, &mut self.router_state)
             };
-            let mut sel =
-                routing::select(strategy, &z, &mask, l, top_k, &mut self.router_state);
             if let Some(ov) = overrides.as_ref().and_then(|o| o.get(l)) {
                 if !ov.is_empty() {
                     sel.experts = ov.clone();
                     // keep weight-desc order for gating/eviction
                     let w = sel.weights.clone();
-                    sel.experts.sort_by(|&a, &b| {
-                        w[b as usize].partial_cmp(&w[a as usize]).unwrap().then(a.cmp(&b))
-                    });
+                    sel.experts.sort_by(routing::weight_desc(&w));
                 }
             }
 
@@ -641,8 +828,10 @@ impl Engine {
             let last = &mut self.last_sel[l];
             last.clear();
             if self.prefetch.is_some() {
-                let r = routing::ranking(&sel.weights);
-                last.extend_from_slice(&r[..(2 * top_k).min(r.len())]);
+                // Partial selection: the feed only ever consumes the
+                // top-2K band, so skip the full argsort.
+                let r = routing::ranking_topk(&sel.weights, 2 * top_k);
+                last.extend_from_slice(&r);
             } else {
                 last.extend_from_slice(&sel.experts);
             }
@@ -745,8 +934,49 @@ impl Engine {
         std::mem::swap(&mut self.pos, &mut s.pos);
         std::mem::swap(&mut self.router_state, &mut s.router_state);
         std::mem::swap(&mut self.last_sel, &mut s.last_sel);
+        // Exchange routing-policy-internal state: snapshot the outgoing
+        // session's before installing the incoming one's. An incoming
+        // session without recorded state (brand-new) resets the policy so
+        // the outgoing session's state cannot leak into it. No-op (None +
+        // reset no-op) for the stateless built-in policies.
+        let outgoing = self.routing.session_state();
+        match s.policy_state.take() {
+            Some(st) => self.routing.restore_session_state(&st),
+            None => self.routing.reset_session_state(),
+        }
+        s.policy_state = outgoing;
         self.kv_dev_k.iter_mut().for_each(|b| *b = None);
         self.kv_dev_v.iter_mut().for_each(|b| *b = None);
+    }
+
+    // ---------------- policy accessors ------------------------------------
+
+    /// Canonical spec label of the active routing policy.
+    pub fn routing_label(&self) -> String {
+        self.routing.label()
+    }
+
+    /// The active routing policy (introspection: family, param,
+    /// cache-awareness).
+    pub fn routing_policy(&self) -> &dyn RoutingPolicy {
+        self.routing.as_ref()
+    }
+
+    /// Canonical spec label of the eviction policy.
+    pub fn eviction_label(&self) -> String {
+        self.eviction.label().to_string()
+    }
+
+    /// Replace the routing policy, returning the previous one.
+    pub fn set_routing_policy(&mut self, p: Box<dyn RoutingPolicy>) -> Box<dyn RoutingPolicy> {
+        std::mem::replace(&mut self.routing, p)
+    }
+
+    /// Exchange the routing policy in place — the coordinator installs a
+    /// per-session override around each quantum this way, so the policy
+    /// object (and any internal state) stays owned by the session.
+    pub fn swap_routing(&mut self, p: &mut Box<dyn RoutingPolicy>) {
+        std::mem::swap(&mut self.routing, p);
     }
 
     /// Per-layer expert selections recorded at the last step (with
@@ -769,6 +999,7 @@ impl Engine {
             arenas: self.arenas.clone(),
             last_sel: self.last_sel.clone(),
             router_state: self.router_state.clone(),
+            policy_state: self.routing.session_state(),
         }
     }
 
@@ -784,6 +1015,10 @@ impl Engine {
         self.arenas = snap.arenas.clone();
         self.last_sel = snap.last_sel.clone();
         self.router_state = snap.router_state.clone();
+        match &snap.policy_state {
+            Some(st) => self.routing.restore_session_state(st),
+            None => self.routing.reset_session_state(),
+        }
         // Staged buffers need no invalidation: their keys name immutable
         // expert weights, so matching positions stay bit-exact.
     }

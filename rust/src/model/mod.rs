@@ -20,6 +20,6 @@ pub mod prefetch;
 pub mod sampler;
 
 pub use arena::{LayerArena, MissSlot, StagedLayer};
-pub use engine::{Engine, EngineOptions, EngineSnapshot, SessionState, StepStats};
+pub use engine::{Engine, EngineBuilder, EngineOptions, EngineSnapshot, SessionState, StepStats};
 pub use prefetch::Prefetcher;
 pub use sampler::Sampler;

@@ -1,0 +1,375 @@
+//! Eviction-policy implementations: byte-identical ports of the seed
+//! LRU / LFU / Belady behaviours, plus the two policies only expressible
+//! post-redesign — the trace-replaying [`BeladyTrace`] oracle and
+//! [`LfuDecay`].
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::cache::Policy;
+use crate::tracesim::NextUseOracle;
+
+use super::{EntryView, EvictionPolicy};
+
+// ---------------------------------------------------------------------
+// Factory
+// ---------------------------------------------------------------------
+
+/// Builds one [`EvictionPolicy`] instance per cache layer.
+///
+/// Layer-aware policies need it: [`BeladyTrace`] shares one loaded trace
+/// oracle across all layers but each layer's instance replays its own
+/// row. The engine keeps the factory so `reset_all` can rebuild fresh
+/// per-layer policies.
+#[derive(Clone)]
+pub struct EvictionFactory {
+    label: String,
+    make: Arc<dyn Fn(usize) -> Box<dyn EvictionPolicy> + Send + Sync>,
+}
+
+impl EvictionFactory {
+    pub fn new(
+        label: impl Into<String>,
+        make: impl Fn(usize) -> Box<dyn EvictionPolicy> + Send + Sync + 'static,
+    ) -> Self {
+        EvictionFactory { label: label.into(), make: Arc::new(make) }
+    }
+
+    /// Canonical spec label (round-trips through
+    /// [`super::parse_eviction`]).
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Fresh policy instance for cache layer `layer`.
+    pub fn for_layer(&self, layer: usize) -> Box<dyn EvictionPolicy> {
+        (self.make)(layer)
+    }
+
+    /// Legacy-enum bridge (deprecated shim path).
+    pub fn from_policy(p: Policy) -> Self {
+        match p {
+            Policy::Lru => EvictionFactory::new("lru", |_| Box::new(LruEviction)),
+            Policy::Lfu => EvictionFactory::new("lfu", |_| Box::new(LfuEviction)),
+            Policy::Belady => EvictionFactory::new("belady", |_| Box::new(BeladyExternal)),
+        }
+    }
+}
+
+impl std::fmt::Debug for EvictionFactory {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "EvictionFactory({})", self.label)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Seed ports
+// ---------------------------------------------------------------------
+
+/// The paper's default: evict the oldest stamp. Within one token the
+/// highest-weight expert of a selection carries the oldest stamp, which
+/// is exactly the paper's §4.2 parallel-selection eviction order.
+#[derive(Debug, Clone, Default)]
+pub struct LruEviction;
+
+impl EvictionPolicy for LruEviction {
+    fn label(&self) -> String {
+        "lru".into()
+    }
+
+    fn victim(
+        &mut self,
+        entries: &[EntryView],
+        _now_token: u64,
+        _next_use: Option<&dyn Fn(u32) -> u64>,
+    ) -> Option<u32> {
+        entries.iter().min_by_key(|e| e.stamp).map(|e| e.expert)
+    }
+
+    fn clone_box(&self) -> Box<dyn EvictionPolicy> {
+        Box::new(self.clone())
+    }
+}
+
+/// Frequency-based (related-work ablation): evict the lowest access
+/// count, ties broken LRU.
+#[derive(Debug, Clone, Default)]
+pub struct LfuEviction;
+
+impl EvictionPolicy for LfuEviction {
+    fn label(&self) -> String {
+        "lfu".into()
+    }
+
+    fn victim(
+        &mut self,
+        entries: &[EntryView],
+        _now_token: u64,
+        _next_use: Option<&dyn Fn(u32) -> u64>,
+    ) -> Option<u32> {
+        entries.iter().min_by_key(|e| (e.freq, e.stamp)).map(|e| e.expert)
+    }
+
+    fn clone_box(&self) -> Box<dyn EvictionPolicy> {
+        Box::new(self.clone())
+    }
+}
+
+/// The clairvoyant oracle driven by a *caller-provided* next-use closure
+/// (trace replay in [`crate::tracesim`], Fig. 10/11): evicts the expert
+/// whose next use is farthest in the future, ties broken LRU.
+#[derive(Debug, Clone, Default)]
+pub struct BeladyExternal;
+
+impl EvictionPolicy for BeladyExternal {
+    fn label(&self) -> String {
+        "belady".into()
+    }
+
+    fn victim(
+        &mut self,
+        entries: &[EntryView],
+        _now_token: u64,
+        next_use: Option<&dyn Fn(u32) -> u64>,
+    ) -> Option<u32> {
+        let f = next_use.expect("Belady policy requires a next-use oracle");
+        entries
+            .iter()
+            .max_by_key(|e| (f(e.expert), u64::MAX - e.stamp))
+            .map(|e| e.expert)
+    }
+
+    fn needs_oracle(&self) -> bool {
+        true
+    }
+
+    fn clone_box(&self) -> Box<dyn EvictionPolicy> {
+        Box::new(self.clone())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Post-redesign policies
+// ---------------------------------------------------------------------
+
+/// Belady oracle replaying a *recorded* trace (spec
+/// `belady:trace=PATH`): the upper bound for fig-style plots, runnable
+/// live inside the engine — each layer's instance reads its own row of
+/// the shared [`NextUseOracle`].
+///
+/// The oracle indexes by the engine's token counter, so it is exact when
+/// the replay run feeds the same token stream from a fresh engine
+/// (`reset_all` token counting) with cache-independent routing; with
+/// cache-aware routing it is a prediction, still useful as a bound probe.
+/// Tokens beyond the recorded trace fall back to "never used again".
+#[derive(Debug, Clone)]
+pub struct BeladyTrace {
+    oracle: Arc<NextUseOracle>,
+    layer: usize,
+    tokens: usize,
+    n_layers: usize,
+    label: String,
+}
+
+impl BeladyTrace {
+    pub fn new(
+        oracle: Arc<NextUseOracle>,
+        layer: usize,
+        tokens: usize,
+        n_layers: usize,
+        label: String,
+    ) -> Self {
+        BeladyTrace { oracle, layer, tokens, n_layers, label }
+    }
+
+    fn next_use(&self, expert: u32, now_token: u64) -> u64 {
+        if self.layer >= self.n_layers || now_token >= self.tokens as u64 {
+            return u64::MAX;
+        }
+        self.oracle.next_use(self.layer, now_token as usize, expert)
+    }
+}
+
+impl EvictionPolicy for BeladyTrace {
+    fn label(&self) -> String {
+        self.label.clone()
+    }
+
+    fn victim(
+        &mut self,
+        entries: &[EntryView],
+        now_token: u64,
+        _next_use: Option<&dyn Fn(u32) -> u64>,
+    ) -> Option<u32> {
+        entries
+            .iter()
+            .max_by_key(|e| (self.next_use(e.expert, now_token), u64::MAX - e.stamp))
+            .map(|e| e.expert)
+    }
+
+    fn clone_box(&self) -> Box<dyn EvictionPolicy> {
+        Box::new(self.clone())
+    }
+}
+
+/// LFU with exponential decay (spec `lfu-decay:HALF_LIFE`): each entry's
+/// score halves every `half_life` tokens and gains 1 per touch, so stale
+/// frequency mass ages out instead of pinning once-hot experts forever —
+/// the classic fix for plain LFU's pathology on drifting working sets.
+/// Victim = lowest decayed score, ties broken LRU.
+#[derive(Debug, Clone)]
+pub struct LfuDecay {
+    half_life: f64,
+    /// expert -> (decayed score as of `last`, last update token).
+    score: HashMap<u32, (f64, u64)>,
+}
+
+impl LfuDecay {
+    pub fn new(half_life: f64) -> Self {
+        assert!(half_life > 0.0 && half_life.is_finite(), "half-life must be > 0");
+        LfuDecay { half_life, score: HashMap::new() }
+    }
+
+    fn decayed(&self, expert: u32, now_token: u64) -> f64 {
+        match self.score.get(&expert) {
+            None => 0.0,
+            Some(&(s, last)) => {
+                s * 0.5f64.powf(now_token.saturating_sub(last) as f64 / self.half_life)
+            }
+        }
+    }
+
+    fn bump(&mut self, expert: u32, now_token: u64) {
+        let s = self.decayed(expert, now_token);
+        self.score.insert(expert, (s + 1.0, now_token));
+    }
+}
+
+impl EvictionPolicy for LfuDecay {
+    fn label(&self) -> String {
+        format!("lfu-decay:{}", self.half_life)
+    }
+
+    fn victim(
+        &mut self,
+        entries: &[EntryView],
+        now_token: u64,
+        _next_use: Option<&dyn Fn(u32) -> u64>,
+    ) -> Option<u32> {
+        entries
+            .iter()
+            .min_by(|a, b| {
+                self.decayed(a.expert, now_token)
+                    .partial_cmp(&self.decayed(b.expert, now_token))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.stamp.cmp(&b.stamp))
+            })
+            .map(|e| e.expert)
+    }
+
+    fn on_hit(&mut self, expert: u32, now_token: u64) {
+        self.bump(expert, now_token);
+    }
+
+    fn on_insert(&mut self, expert: u32, now_token: u64) {
+        self.bump(expert, now_token);
+    }
+
+    fn on_evict(&mut self, expert: u32, _now_token: u64) {
+        self.score.remove(&expert);
+    }
+
+    fn on_warm(&mut self, expert: u32, now_token: u64) {
+        // Warm entries start at score 0 (the seed LFU warm sets freq 0).
+        self.score.entry(expert).or_insert((0.0, now_token));
+    }
+
+    fn on_clear(&mut self) {
+        self.score.clear();
+    }
+
+    fn clone_box(&self) -> Box<dyn EvictionPolicy> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::ExpertCache;
+
+    #[test]
+    fn lru_port_matches_enum_cache() {
+        let mut a = ExpertCache::new(2, Policy::Lru);
+        let mut b = ExpertCache::with_policy(2, Box::new(LruEviction));
+        for (t, sel) in [vec![10u32, 11], vec![12], vec![10, 12]].iter().enumerate() {
+            let ra = a.access(sel, t as u64, None);
+            let rb = b.access(sel, t as u64, None);
+            assert_eq!(ra.evicted, rb.evicted);
+            assert_eq!(ra.resident_after, rb.resident_after);
+        }
+        assert_eq!(a.stats.hits, b.stats.hits);
+        assert_eq!(a.stats.misses, b.stats.misses);
+    }
+
+    #[test]
+    fn lfu_decay_forgets_stale_frequency() {
+        // Expert 1 is hammered early, then goes cold; plain LFU would pin
+        // it forever, decay ages it out.
+        let hl = 4.0;
+        let mut c = ExpertCache::with_policy(2, Box::new(LfuDecay::new(hl)));
+        for t in 0..6u64 {
+            c.access(&[1], t, None);
+        }
+        // 1's score ~6 at t=6; after 40 tokens it decays to ~6 * 2^-10.
+        c.access(&[2], 40, None);
+        c.access(&[2], 41, None);
+        let a = c.access(&[3], 42, None); // should evict the stale 1
+        assert_eq!(a.evicted, vec![1]);
+        assert!(c.contains(2) && c.contains(3));
+    }
+
+    #[test]
+    fn lfu_decay_zero_elapsed_is_plain_lfu() {
+        // All accesses at the same token: no decay, behaves like LFU.
+        let mut c = ExpertCache::with_policy(2, Box::new(LfuDecay::new(64.0)));
+        c.access(&[1], 0, None);
+        c.access(&[1], 0, None);
+        c.access(&[2], 0, None);
+        let a = c.access(&[3], 0, None); // evicts 2 (score 1) not 1 (score 2)
+        assert_eq!(a.evicted, vec![2]);
+    }
+
+    #[test]
+    fn belady_trace_replays_recorded_future() {
+        use crate::tracesim::Trace;
+        let mut tr = Trace::new(8, 1);
+        tr.push_token(vec![vec![1]], None);
+        tr.push_token(vec![vec![2]], None);
+        tr.push_token(vec![vec![3]], None);
+        tr.push_token(vec![vec![2]], None); // 2 reused at t=3; 1 never again
+        let oracle = Arc::new(NextUseOracle::build(&tr));
+        let mk = |layer| {
+            Box::new(BeladyTrace::new(oracle.clone(), layer, tr.tokens(), tr.n_layers, "belady:trace=test".into()))
+        };
+        let mut c = ExpertCache::with_policy(2, mk(0));
+        c.access(&[1], 0, None);
+        c.access(&[2], 1, None);
+        // Insert 3 at t=2: 1 is never used again -> evicted; 2 (next use 3) kept.
+        let a = c.access(&[3], 2, None);
+        assert_eq!(a.evicted, vec![1]);
+        assert!(c.contains(2) && c.contains(3));
+        // Past the trace end everything looks "never used": falls back LRU.
+        let b = c.access(&[4], 99, None);
+        assert_eq!(b.evicted.len(), 1);
+    }
+
+    #[test]
+    fn factory_builds_per_layer() {
+        let f = EvictionFactory::from_policy(Policy::Lfu);
+        assert_eq!(f.label(), "lfu");
+        assert_eq!(f.for_layer(0).label(), "lfu");
+        assert!(!f.for_layer(3).needs_oracle());
+        assert!(EvictionFactory::from_policy(Policy::Belady).for_layer(0).needs_oracle());
+    }
+}

@@ -1,0 +1,350 @@
+//! The pluggable policy stack: object-safe routing + eviction traits and
+//! the unified spec registry.
+//!
+//! The paper's §3 contribution is one point in a space of training-free,
+//! cache-conditional policies. This module opens that space:
+//!
+//! * [`RoutingPolicy`] — re-ranks the router's ranking vector given a
+//!   cache mask (the seed `routing::Strategy` behaviours, ported
+//!   byte-identically, plus anything a future PR drops in).
+//! * [`EvictionPolicy`] — victim choice + touch/warm hooks for
+//!   [`crate::cache::ExpertCache`] (LRU / LFU / Belady ports, plus the
+//!   post-redesign [`BeladyTrace`] oracle and [`LfuDecay`]).
+//! * [`registry`] — ONE canonical string/JSON-ish grammar
+//!   (`cache-prior:0.5:2`, `cache_prior:lambda=0.5,j=2`, `lru`,
+//!   `belady:trace=results/trace.json`) replacing the three divergent
+//!   `parse()` paths that used to live in `routing`, `cache` and the CLI.
+//!
+//! Adding a policy is now an additive file drop: implement one trait,
+//! append one registry entry. Nothing in the engine hot path, the sweep
+//! grid, the CLI parser or the coordinator needs to change.
+//!
+//! ## Spec grammar
+//!
+//! ```text
+//! spec     := name (":" arg)*
+//! arg      := value                  // positional, in registry order
+//!           | key "=" value          // named (after these, no positionals)
+//! name/key := lowercase; '_' and '-' are interchangeable
+//! ```
+//!
+//! ```
+//! use moe_cache::policy::{parse_eviction, parse_routing};
+//!
+//! let a = parse_routing("cache-prior:0.5:2").unwrap();
+//! let b = parse_routing("cache_prior:lambda=0.5:j=2").unwrap();
+//! assert_eq!(a.label(), b.label());
+//! assert!(parse_routing("bogus").is_err()); // error enumerates the registry
+//! assert_eq!(parse_eviction("lfu-decay:64").unwrap().label(), "lfu-decay:64");
+//! ```
+
+pub mod evictors;
+pub mod registry;
+pub mod routers;
+
+pub use evictors::{
+    BeladyExternal, BeladyTrace, EvictionFactory, LfuDecay, LfuEviction, LruEviction,
+};
+pub use registry::{
+    eviction_entries, parse_eviction, parse_routing, policy_from_spec, registry_help,
+    routing_entries, spec_grid, strategy_from_spec, EvictionEntry, GridCtx, RoutingEntry,
+};
+pub use routers::{
+    from_strategy, CachePriorPolicy, CumsumPolicy, MaxRankPolicy, OriginalPolicy,
+    PruningPolicy, SwapPolicy,
+};
+
+use crate::routing::{RouterState, Selection};
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------
+// Routing
+// ---------------------------------------------------------------------
+
+/// A training-free routing transformation (paper §3): re-ranks the
+/// router's ranking vector given the cache mask, never the gate weights.
+///
+/// Contract (the parity gate in `tests/policy_parity.rs` pins it):
+///
+/// * `select` returns exactly the experts the gate computation should
+///   consume, ordered by *original* router weight descending, with
+///   `weights = softmax(z)` over all experts from the unmodified logits.
+/// * Per-session mutable state (the Δ_avg running estimate, the probe
+///   RNG) lives in [`RouterState`], which the engine snapshots and swaps
+///   with [`crate::model::SessionState`]. A policy that keeps additional
+///   mutable per-session state inside itself must expose it through
+///   [`RoutingPolicy::session_state`] / `restore_session_state` so
+///   session swaps and `Engine::snapshot` keep working.
+pub trait RoutingPolicy: Send {
+    /// One routing decision for one token at one layer. `z`: raw router
+    /// logits; `cache_mask[i]`: expert i resident in DRAM; `k`: top-K.
+    fn select(
+        &mut self,
+        z: &[f32],
+        cache_mask: &[bool],
+        layer: usize,
+        k: usize,
+        state: &mut RouterState,
+    ) -> Selection;
+
+    /// Canonical spec label; must round-trip through
+    /// [`registry::parse_routing`].
+    fn label(&self) -> String;
+
+    /// Base family name ("pruning", "max-rank", ...) for grouping sweep
+    /// curves — the registry metadata the sweep driver reads.
+    fn family(&self) -> &'static str;
+
+    /// The scalar hyperparameter (sweep x-axis bookkeeping).
+    fn param(&self) -> f64 {
+        0.0
+    }
+
+    /// Whether the policy consults the cache state.
+    fn cache_aware(&self) -> bool {
+        false
+    }
+
+    /// Snapshot mutable per-session state held *inside* the policy object
+    /// (beyond `RouterState`, which the engine already swaps). `None` =
+    /// stateless (all six built-ins). Stateful policies must return
+    /// `Some` from every snapshot so a round-trip through
+    /// `restore_session_state` is lossless.
+    fn session_state(&self) -> Option<Json> {
+        None
+    }
+
+    /// Restore state captured by [`RoutingPolicy::session_state`].
+    fn restore_session_state(&mut self, _state: &Json) {}
+
+    /// Reset per-session internal state to its fresh-session value. The
+    /// engine calls this when materializing a session that has no
+    /// recorded state (a brand-new `SessionState` or snapshot), so one
+    /// session's internal state can never leak into another. No-op for
+    /// the stateless built-ins.
+    fn reset_session_state(&mut self) {}
+
+    fn clone_box(&self) -> Box<dyn RoutingPolicy>;
+}
+
+impl Clone for Box<dyn RoutingPolicy> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Eviction
+// ---------------------------------------------------------------------
+
+/// Read-only view of one cache entry, handed to
+/// [`EvictionPolicy::victim`]. Stamps are unique within a cache (the
+/// access clock), so any ordering that tie-breaks on `stamp` is total and
+/// deterministic regardless of hash-map iteration order.
+#[derive(Debug, Clone, Copy)]
+pub struct EntryView {
+    pub expert: u32,
+    /// LRU stamp: within one token the highest-weight expert of the
+    /// selection carries the *oldest* stamp (paper §4.2 eviction order).
+    pub stamp: u64,
+    /// Access count since insertion (1 on insert, +1 per hit).
+    pub freq: u64,
+    pub inserted_token: u64,
+}
+
+/// Victim choice + touch/warm hooks for one layer's
+/// [`crate::cache::ExpertCache`].
+///
+/// The cache owns the entry table and its stamp/freq bookkeeping; the
+/// policy only *chooses*. Stateful policies (e.g. [`LfuDecay`]) maintain
+/// their own side tables through the hooks, which the cache invokes on
+/// every hit / insert / eviction / warm / clear.
+pub trait EvictionPolicy: Send + std::fmt::Debug {
+    /// Canonical spec label; must round-trip through
+    /// [`registry::parse_eviction`].
+    fn label(&self) -> String;
+
+    /// Choose the expert to evict. `next_use` is the caller-provided
+    /// clairvoyant oracle (trace replay); only policies with
+    /// [`EvictionPolicy::needs_oracle`] may rely on it. Returning `None`
+    /// streams the incoming expert without retaining it.
+    fn victim(
+        &mut self,
+        entries: &[EntryView],
+        now_token: u64,
+        next_use: Option<&dyn Fn(u32) -> u64>,
+    ) -> Option<u32>;
+
+    fn on_hit(&mut self, _expert: u32, _now_token: u64) {}
+    fn on_insert(&mut self, _expert: u32, _now_token: u64) {}
+    fn on_evict(&mut self, _expert: u32, _now_token: u64) {}
+    /// Pre-fill (Fig. 19 warm start); not counted as an access.
+    fn on_warm(&mut self, _expert: u32, _now_token: u64) {}
+    /// The cache was cleared wholesale.
+    fn on_clear(&mut self) {}
+
+    /// True when `victim` requires the caller-provided `next_use` oracle
+    /// (the classic trace-replay Belady). [`crate::tracesim::simulate_with`]
+    /// builds the oracle from the trace exactly when this is set.
+    fn needs_oracle(&self) -> bool {
+        false
+    }
+
+    fn clone_box(&self) -> Box<dyn EvictionPolicy>;
+}
+
+impl Clone for Box<dyn EvictionPolicy> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Spec grammar
+// ---------------------------------------------------------------------
+
+/// A parsed policy spec: `name[:arg]...` where each arg is positional or
+/// `key=value`. Names and keys normalize `_` to `-`, so
+/// `cache_prior:lambda=0.5` and `cache-prior:0.5` hit the same entry.
+#[derive(Debug, Clone)]
+pub struct SpecArgs {
+    name: String,
+    positional: Vec<String>,
+    named: Vec<(String, String)>,
+    raw: String,
+}
+
+impl SpecArgs {
+    pub fn parse(spec: &str) -> anyhow::Result<SpecArgs> {
+        let raw = spec.trim().to_string();
+        anyhow::ensure!(!raw.is_empty(), "empty policy spec");
+        let mut parts = raw.split(':');
+        let name = parts.next().unwrap_or("").replace('_', "-");
+        anyhow::ensure!(!name.is_empty(), "policy spec {raw:?} has no name");
+        let mut positional = Vec::new();
+        let mut named: Vec<(String, String)> = Vec::new();
+        for p in parts {
+            match p.split_once('=') {
+                Some((k, v)) => named.push((k.trim().replace('_', "-"), v.to_string())),
+                None => {
+                    anyhow::ensure!(
+                        named.is_empty(),
+                        "positional arg {p:?} after named args in {raw:?}"
+                    );
+                    positional.push(p.to_string());
+                }
+            }
+        }
+        Ok(SpecArgs { name, positional, named, raw })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn raw(&self) -> &str {
+        &self.raw
+    }
+
+    /// Value of the arg named `key` or at positional index `idx`
+    /// (named wins).
+    pub fn get(&self, idx: usize, key: &str) -> Option<&str> {
+        self.named
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+            .or_else(|| self.positional.get(idx).map(|s| s.as_str()))
+    }
+
+    pub fn f64_req(&self, idx: usize, key: &str) -> anyhow::Result<f64> {
+        let v = self.get(idx, key).ok_or_else(|| {
+            anyhow::anyhow!("{:?}: missing required arg {key:?} (position {idx})", self.raw)
+        })?;
+        v.parse().map_err(|_| {
+            anyhow::anyhow!("{:?}: arg {key:?} must be a number, got {v:?}", self.raw)
+        })
+    }
+
+    pub fn f64_or(&self, idx: usize, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(idx, key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                anyhow::anyhow!("{:?}: arg {key:?} must be a number, got {v:?}", self.raw)
+            }),
+        }
+    }
+
+    /// f32 arg parsed directly as f32 (exactly the legacy parse path, so
+    /// hyperparameter values are bit-identical to the seed grammar).
+    pub fn f32_req(&self, idx: usize, key: &str) -> anyhow::Result<f32> {
+        let v = self.get(idx, key).ok_or_else(|| {
+            anyhow::anyhow!("{:?}: missing required arg {key:?} (position {idx})", self.raw)
+        })?;
+        v.parse().map_err(|_| {
+            anyhow::anyhow!("{:?}: arg {key:?} must be a number, got {v:?}", self.raw)
+        })
+    }
+
+    /// Numeric arg truncated to usize (the legacy grammar parsed numbers
+    /// as floats, so `pruning:1` and `pruning:1.0` are both keep=1).
+    pub fn usize_req(&self, idx: usize, key: &str) -> anyhow::Result<usize> {
+        Ok(self.f64_req(idx, key)? as usize)
+    }
+
+    pub fn usize_or(&self, idx: usize, key: &str, default: usize) -> anyhow::Result<usize> {
+        Ok(self.f64_or(idx, key, default as f64)? as usize)
+    }
+
+    /// Reject any args (for bare specs like `original` / `lru`).
+    pub fn no_args(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.positional.is_empty() && self.named.is_empty(),
+            "{:?}: policy {:?} takes no arguments",
+            self.raw,
+            self.name
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_positional_and_named() {
+        let a = SpecArgs::parse("cache-prior:0.5:2").unwrap();
+        assert_eq!(a.name(), "cache-prior");
+        assert_eq!(a.get(0, "lambda"), Some("0.5"));
+        assert_eq!(a.get(1, "j"), Some("2"));
+        assert_eq!(a.get(2, "missing"), None);
+
+        let b = SpecArgs::parse("cache_prior:lambda=8").unwrap();
+        assert_eq!(b.name(), "cache-prior");
+        assert_eq!(b.f64_req(0, "lambda").unwrap(), 8.0);
+        assert_eq!(b.usize_or(1, "j", 1).unwrap(), 1);
+    }
+
+    #[test]
+    fn spec_rejects_malformed() {
+        assert!(SpecArgs::parse("").is_err());
+        assert!(SpecArgs::parse("   ").is_err());
+        // positional after named is ambiguous
+        assert!(SpecArgs::parse("x:a=1:2").is_err());
+        let a = SpecArgs::parse("pruning").unwrap();
+        assert!(a.f64_req(0, "keep").is_err());
+        assert!(SpecArgs::parse("pruning:abc").unwrap().f64_req(0, "keep").is_err());
+    }
+
+    #[test]
+    fn spec_trace_path_value() {
+        let a = SpecArgs::parse("belady:trace=results/trace_qwen.json").unwrap();
+        assert_eq!(a.get(0, "trace"), Some("results/trace_qwen.json"));
+    }
+
+    #[test]
+    fn no_args_enforced() {
+        assert!(SpecArgs::parse("lru").unwrap().no_args().is_ok());
+        assert!(SpecArgs::parse("lru:3").unwrap().no_args().is_err());
+    }
+}

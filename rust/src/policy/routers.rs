@@ -1,0 +1,384 @@
+//! Trait ports of the paper's six routing strategies (§2.3, §3).
+//!
+//! Each struct reproduces the corresponding `routing::Strategy` arm of the
+//! seed `routing::select` **byte-identically** — same selections, same
+//! gate weights, same `RouterState` mutations (Δ_avg pushes, RNG draws) —
+//! which `tests/policy_parity.rs` pins with property tests. The hot-path
+//! difference is that [`OriginalPolicy`], [`PruningPolicy`],
+//! [`SwapPolicy`] and [`CachePriorPolicy`] use the partial top-K
+//! selection ([`crate::routing::ranking_topk`]) instead of a full argsort
+//! where the full ranking vector is never consumed.
+
+use crate::routing::{
+    max_rank_select, ranking, ranking_topk, softmax, weight_desc, DeltaMode, RouterState,
+    Selection, Strategy,
+};
+
+use super::RoutingPolicy;
+
+/// Order `experts` by original router weight descending (ties: lower id),
+/// the order the gate computation and the cache's eviction rule consume —
+/// the same [`weight_desc`] comparator as the seed `routing::select`
+/// epilogue, shared so the two cannot drift.
+fn finalize(mut experts: Vec<u32>, weights: Vec<f32>) -> Selection {
+    experts.sort_by(weight_desc(&weights));
+    Selection { experts, weights }
+}
+
+/// Plain top-K (Eq. 1–3).
+#[derive(Debug, Clone, Default)]
+pub struct OriginalPolicy;
+
+impl RoutingPolicy for OriginalPolicy {
+    fn select(
+        &mut self,
+        z: &[f32],
+        _cache_mask: &[bool],
+        _layer: usize,
+        k: usize,
+        _state: &mut RouterState,
+    ) -> Selection {
+        let w = softmax(z);
+        let chosen = ranking_topk(&w, k.min(z.len()));
+        finalize(chosen, w)
+    }
+
+    fn label(&self) -> String {
+        "original".into()
+    }
+
+    fn family(&self) -> &'static str {
+        "original"
+    }
+
+    fn clone_box(&self) -> Box<dyn RoutingPolicy> {
+        Box::new(self.clone())
+    }
+}
+
+/// Select only the top-`keep` experts (§4.2 baseline; Fig. 2-left probe).
+#[derive(Debug, Clone)]
+pub struct PruningPolicy {
+    pub keep: usize,
+}
+
+impl RoutingPolicy for PruningPolicy {
+    fn select(
+        &mut self,
+        z: &[f32],
+        _cache_mask: &[bool],
+        _layer: usize,
+        k: usize,
+        _state: &mut RouterState,
+    ) -> Selection {
+        let n = z.len();
+        let w = softmax(z);
+        let chosen = ranking_topk(&w, self.keep.clamp(1, k.min(n)));
+        finalize(chosen, w)
+    }
+
+    fn label(&self) -> String {
+        format!("pruning:{}", self.keep)
+    }
+
+    fn family(&self) -> &'static str {
+        "pruning"
+    }
+
+    fn param(&self) -> f64 {
+        self.keep as f64
+    }
+
+    fn clone_box(&self) -> Box<dyn RoutingPolicy> {
+        Box::new(self.clone())
+    }
+}
+
+/// Replace the expert at 0-based rank `rank` with a uniformly random
+/// non-selected expert (Fig. 2-right sensitivity probe). Consumes the
+/// shared probe RNG in [`RouterState`], in the same draw order as the
+/// seed implementation.
+#[derive(Debug, Clone)]
+pub struct SwapPolicy {
+    pub rank: usize,
+}
+
+impl RoutingPolicy for SwapPolicy {
+    fn select(
+        &mut self,
+        z: &[f32],
+        _cache_mask: &[bool],
+        _layer: usize,
+        k: usize,
+        state: &mut RouterState,
+    ) -> Selection {
+        let n = z.len();
+        let w = softmax(z);
+        let mut sel = ranking_topk(&w, k.min(n));
+        if self.rank < sel.len() && n > k {
+            loop {
+                let cand = state.rng.below(n) as u32;
+                if !sel.contains(&cand) {
+                    sel[self.rank] = cand;
+                    break;
+                }
+            }
+        }
+        finalize(sel, w)
+    }
+
+    fn label(&self) -> String {
+        format!("swap:{}", self.rank)
+    }
+
+    fn family(&self) -> &'static str {
+        "swap"
+    }
+
+    fn param(&self) -> f64 {
+        self.rank as f64
+    }
+
+    fn clone_box(&self) -> Box<dyn RoutingPolicy> {
+        Box::new(self.clone())
+    }
+}
+
+/// Max-Rank (§3.1, Algorithm 1): promote cached experts within the top-M
+/// window, force the top-J, take the first K.
+#[derive(Debug, Clone)]
+pub struct MaxRankPolicy {
+    pub m: usize,
+    pub j: usize,
+}
+
+impl RoutingPolicy for MaxRankPolicy {
+    fn select(
+        &mut self,
+        z: &[f32],
+        cache_mask: &[bool],
+        _layer: usize,
+        k: usize,
+        _state: &mut RouterState,
+    ) -> Selection {
+        let w = softmax(z);
+        let r = ranking(&w);
+        let chosen = max_rank_select(&r, cache_mask, self.m.max(k), self.j, k);
+        finalize(chosen, w)
+    }
+
+    fn label(&self) -> String {
+        format!("max-rank:{}:{}", self.m, self.j)
+    }
+
+    fn family(&self) -> &'static str {
+        "max-rank"
+    }
+
+    fn param(&self) -> f64 {
+        self.m as f64
+    }
+
+    fn cache_aware(&self) -> bool {
+        true
+    }
+
+    fn clone_box(&self) -> Box<dyn RoutingPolicy> {
+        Box::new(self.clone())
+    }
+}
+
+/// Max-Rank with M chosen per token from the cumulative probability mass
+/// (§3.2, Algorithm 2).
+#[derive(Debug, Clone)]
+pub struct CumsumPolicy {
+    pub p: f32,
+    pub j: usize,
+}
+
+impl RoutingPolicy for CumsumPolicy {
+    fn select(
+        &mut self,
+        z: &[f32],
+        cache_mask: &[bool],
+        _layer: usize,
+        k: usize,
+        _state: &mut RouterState,
+    ) -> Selection {
+        let n = z.len();
+        let w = softmax(z);
+        let r = ranking(&w);
+        // Algorithm 2: M = min i s.t. Σ_{j=1..i} w[r_j] >= p.
+        let mut m = 0usize;
+        let mut pcum = 0f32;
+        while pcum < self.p && m < n {
+            pcum += w[r[m] as usize];
+            m += 1;
+        }
+        let chosen = max_rank_select(&r, cache_mask, m.max(k), self.j, k);
+        finalize(chosen, w)
+    }
+
+    fn label(&self) -> String {
+        format!("cumsum:{}:{}", self.p, self.j)
+    }
+
+    fn family(&self) -> &'static str {
+        "cumsum"
+    }
+
+    fn param(&self) -> f64 {
+        self.p as f64
+    }
+
+    fn cache_aware(&self) -> bool {
+        true
+    }
+
+    fn clone_box(&self) -> Box<dyn RoutingPolicy> {
+        Box::new(self.clone())
+    }
+}
+
+/// The paper's method (§3.3, Eq. 9/10): `z' = z + λ · Δ · m̃_t`, used ONLY
+/// for re-ranking; gate weights always come from the unmodified logits.
+#[derive(Debug, Clone)]
+pub struct CachePriorPolicy {
+    pub lambda: f32,
+    pub j: usize,
+    pub delta: DeltaMode,
+}
+
+impl RoutingPolicy for CachePriorPolicy {
+    fn select(
+        &mut self,
+        z: &[f32],
+        cache_mask: &[bool],
+        layer: usize,
+        k: usize,
+        state: &mut RouterState,
+    ) -> Selection {
+        let n = z.len();
+        let w = softmax(z);
+        let range = z.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+            - z.iter().copied().fold(f32::INFINITY, f32::min);
+        let d = match &self.delta {
+            DeltaMode::RunningAvg => {
+                state.delta_avg[layer].push(range as f64);
+                state.delta_avg[layer].get() as f32
+            }
+            DeltaMode::Calibrated(per_layer) => per_layer[layer],
+            DeltaMode::PerToken => range,
+        };
+        // m̃_t: cache mask plus the guaranteed top-J (Eq. 9 setup).
+        let mut mask = cache_mask.to_vec();
+        for &e in &ranking_topk(&w, self.j) {
+            mask[e as usize] = true;
+        }
+        let zp: Vec<f32> = z
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| if mask[i] { x + self.lambda * d } else { x })
+            .collect();
+        let chosen = ranking_topk(&zp, k.min(n));
+        finalize(chosen, w)
+    }
+
+    fn label(&self) -> String {
+        // Non-default delta modes are part of the canonical spec (the
+        // label must round-trip through the registry); the spec-less
+        // Calibrated mode keeps the seed label form.
+        match self.delta {
+            DeltaMode::PerToken => format!("cache-prior:{}:{}:per-token", self.lambda, self.j),
+            _ => format!("cache-prior:{}:{}", self.lambda, self.j),
+        }
+    }
+
+    fn family(&self) -> &'static str {
+        "cache-prior"
+    }
+
+    fn param(&self) -> f64 {
+        self.lambda as f64
+    }
+
+    fn cache_aware(&self) -> bool {
+        true
+    }
+
+    fn clone_box(&self) -> Box<dyn RoutingPolicy> {
+        Box::new(self.clone())
+    }
+}
+
+/// Legacy-enum bridge: the trait implementation equivalent to a seed
+/// [`Strategy`] value. The compat construction path
+/// (`Engine::from_runtime` with `EngineOptions::strategy`) goes through
+/// here, so enum-configured engines run the same trait objects as
+/// spec-configured ones.
+pub fn from_strategy(s: &Strategy) -> Box<dyn RoutingPolicy> {
+    match s {
+        Strategy::Original => Box::new(OriginalPolicy),
+        Strategy::Pruning { keep } => Box::new(PruningPolicy { keep: *keep }),
+        Strategy::SwapAtRank { rank } => Box::new(SwapPolicy { rank: *rank }),
+        Strategy::MaxRank { m, j } => Box::new(MaxRankPolicy { m: *m, j: *j }),
+        Strategy::CumsumThreshold { p, j } => Box::new(CumsumPolicy { p: *p, j: *j }),
+        Strategy::CachePrior { lambda, j, delta } => Box::new(CachePriorPolicy {
+            lambda: *lambda,
+            j: *j,
+            delta: delta.clone(),
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_match_enum_labels() {
+        for s in [
+            Strategy::Original,
+            Strategy::Pruning { keep: 1 },
+            Strategy::SwapAtRank { rank: 2 },
+            Strategy::MaxRank { m: 6, j: 1 },
+            Strategy::CumsumThreshold { p: 0.7, j: 2 },
+            Strategy::CachePrior { lambda: 0.5, j: 1, delta: DeltaMode::RunningAvg },
+            Strategy::CachePrior { lambda: 0.5, j: 1, delta: DeltaMode::PerToken },
+        ] {
+            assert_eq!(from_strategy(&s).label(), s.label());
+            assert_eq!(from_strategy(&s).cache_aware(), s.cache_aware());
+        }
+    }
+
+    #[test]
+    fn per_token_label_roundtrips_through_registry() {
+        let p = crate::policy::parse_routing("cache-prior:0.5:1:per-token").unwrap();
+        assert_eq!(p.label(), "cache-prior:0.5:1:per-token");
+        let p2 = crate::policy::parse_routing(&p.label()).unwrap();
+        assert_eq!(p2.label(), p.label());
+        // Default delta keeps the seed label form (sweep parity).
+        assert_eq!(
+            crate::policy::parse_routing("cache-prior:0.5:1").unwrap().label(),
+            "cache-prior:0.5:1"
+        );
+    }
+
+    #[test]
+    fn stateless_session_state_is_none() {
+        let p = from_strategy(&Strategy::CachePrior {
+            lambda: 0.5,
+            j: 1,
+            delta: DeltaMode::RunningAvg,
+        });
+        assert!(p.session_state().is_none());
+    }
+
+    #[test]
+    fn clone_box_preserves_label() {
+        let p: Box<dyn RoutingPolicy> = Box::new(MaxRankPolicy { m: 8, j: 2 });
+        assert_eq!(p.clone_box().label(), p.label());
+        let q = p.clone(); // via the blanket Clone for Box<dyn RoutingPolicy>
+        assert_eq!(q.label(), "max-rank:8:2");
+    }
+}

@@ -34,26 +34,82 @@ pub fn softmax(z: &[f32]) -> Vec<f32> {
     exps.iter().map(|&e| e / sum).collect()
 }
 
-/// Ranking vector r: expert ids sorted by weight descending (Eq. 2).
-/// Ties broken by lower expert id (matches jax.lax.top_k).
-pub fn ranking(w: &[f32]) -> Vec<u32> {
-    let mut idx: Vec<u32> = (0..w.len() as u32).collect();
-    idx.sort_by(|&a, &b| {
+/// THE ranking total order (Eq. 2): weight descending, ties broken by
+/// lower expert id (matches jax.lax.top_k). Every sort in the routing
+/// stack — [`ranking`], [`ranking_topk`], the selection epilogue, and
+/// the trait-port finalizer in [`crate::policy`] — uses this one
+/// comparator, so the byte-identical-parity guarantee cannot be broken
+/// by one copy drifting.
+#[inline]
+pub fn weight_desc(w: &[f32]) -> impl Fn(&u32, &u32) -> std::cmp::Ordering + '_ {
+    move |&a: &u32, &b: &u32| {
         w[b as usize]
             .partial_cmp(&w[a as usize])
             .unwrap()
             .then(a.cmp(&b))
-    });
+    }
+}
+
+/// Ranking vector r: expert ids sorted by weight descending (Eq. 2).
+/// Ties broken by lower expert id (matches jax.lax.top_k).
+pub fn ranking(w: &[f32]) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..w.len() as u32).collect();
+    idx.sort_by(weight_desc(w));
+    idx
+}
+
+/// The top-`k` prefix of [`ranking`] without the full argsort: partial
+/// selection (O(N + K log K) instead of O(N log N)) under the same total
+/// order ([`weight_desc`]), so the result is byte-identical to
+/// `ranking(w)[..k]`. This is the hot-path variant for strategies that
+/// never consume the full ranking vector (plain top-K, cache-prior
+/// re-ranking, the prefetcher's top-2K feed) — micro-benched against the
+/// full argsort in `micro_hotpath`.
+pub fn ranking_topk(w: &[f32], k: usize) -> Vec<u32> {
+    let n = w.len();
+    let k = k.min(n);
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    if k < n {
+        idx.select_nth_unstable_by(k - 1, weight_desc(w));
+        idx.truncate(k);
+    }
+    idx.sort_by(weight_desc(w));
     idx
 }
 
 /// The paper's promote() (Eq. 5): subset ⊕ (all \ subset), both ordered.
+/// Membership is a bitmask (O(K+E)) rather than the seed's O(K·E)
+/// `contains` scan over the subset; for the realistic expert counts
+/// (ids < 128, every shipped config) the mask is a single `u128` with no
+/// allocation at all.
 pub fn promote(subset: &[u32], all: &[u32]) -> Vec<u32> {
+    // Every in-tree caller passes subset ⊆ all, so the output length is
+    // exactly all.len().
     let mut out = Vec::with_capacity(all.len());
     out.extend_from_slice(subset);
-    for &e in all {
-        if !subset.contains(&e) {
-            out.push(e);
+    if subset.iter().all(|&e| e < 128) {
+        let mut mask: u128 = 0;
+        for &e in subset {
+            mask |= 1u128 << e;
+        }
+        for &e in all {
+            if e >= 128 || mask & (1u128 << e) == 0 {
+                out.push(e);
+            }
+        }
+    } else {
+        let cap = subset.iter().map(|&e| e as usize + 1).max().unwrap_or(0);
+        let mut in_subset = vec![false; cap];
+        for &e in subset {
+            in_subset[e as usize] = true;
+        }
+        for &e in all {
+            if (e as usize) >= cap || !in_subset[e as usize] {
+                out.push(e);
+            }
         }
     }
     out
@@ -127,29 +183,15 @@ pub enum Strategy {
 impl Strategy {
     /// Parse e.g. "original", "pruning:1", "max-rank:6:1",
     /// "cumsum:0.7:1", "cache-prior:0.5:2", "swap:2".
+    ///
+    /// **Deprecated shim** (kept one release): this is now a thin wrapper
+    /// over the unified [`crate::policy`] spec grammar, which also accepts
+    /// named args (`cache_prior:lambda=0.5:j=2`) and enumerates the
+    /// registered policies on unknown names. New code should use
+    /// [`crate::policy::parse_routing`], which returns the trait object
+    /// directly and covers policies this closed enum cannot represent.
     pub fn parse(s: &str) -> anyhow::Result<Strategy> {
-        let parts: Vec<&str> = s.split(':').collect();
-        let num =
-            |i: usize| -> anyhow::Result<f32> { Ok(parts.get(i).unwrap_or(&"").parse()?) };
-        match parts[0] {
-            "original" => Ok(Strategy::Original),
-            "pruning" => Ok(Strategy::Pruning { keep: num(1)? as usize }),
-            "swap" => Ok(Strategy::SwapAtRank { rank: num(1)? as usize }),
-            "max-rank" => Ok(Strategy::MaxRank {
-                m: num(1)? as usize,
-                j: num(2).unwrap_or(1.0) as usize,
-            }),
-            "cumsum" => Ok(Strategy::CumsumThreshold {
-                p: num(1)?,
-                j: num(2).unwrap_or(1.0) as usize,
-            }),
-            "cache-prior" => Ok(Strategy::CachePrior {
-                lambda: num(1)?,
-                j: num(2).unwrap_or(1.0) as usize,
-                delta: DeltaMode::RunningAvg,
-            }),
-            _ => anyhow::bail!("unknown strategy {s:?}"),
-        }
+        crate::policy::strategy_from_spec(s)
     }
 
     pub fn label(&self) -> String {
@@ -159,6 +201,12 @@ impl Strategy {
             Strategy::SwapAtRank { rank } => format!("swap:{rank}"),
             Strategy::MaxRank { m, j } => format!("max-rank:{m}:{j}"),
             Strategy::CumsumThreshold { p, j } => format!("cumsum:{p}:{j}"),
+            // Non-default delta is part of the spec so the label
+            // round-trips; Calibrated (not spec-expressible) keeps the
+            // seed form.
+            Strategy::CachePrior { lambda, j, delta: DeltaMode::PerToken } => {
+                format!("cache-prior:{lambda}:{j}:per-token")
+            }
             Strategy::CachePrior { lambda, j, .. } => {
                 format!("cache-prior:{lambda}:{j}")
             }
@@ -274,18 +322,14 @@ pub fn select(
     // Order the final selection by original weight descending (gate +
     // eviction order both consume this).
     let mut experts = chosen;
-    experts.sort_by(|&a, &b| {
-        w[b as usize]
-            .partial_cmp(&w[a as usize])
-            .unwrap()
-            .then(a.cmp(&b))
-    });
+    experts.sort_by(weight_desc(&w));
     Selection { experts, weights: w }
 }
 
 /// Max-Rank (§3.1, Algorithm 1): promote cached experts within the top-M
-/// window, then force the top-J, then take the first K.
-fn max_rank_select(
+/// window, then force the top-J, then take the first K. Public so
+/// policy implementations ([`crate::policy`]) can reuse it.
+pub fn max_rank_select(
     r: &[u32],
     cache_mask: &[bool],
     m: usize,
@@ -358,6 +402,58 @@ mod tests {
         assert_eq!(r2, vec![0, 2, 3, 1, 4, 5]);
         // top-2 = {E1, E3} = ids {0, 2} — exactly the paper's example.
         assert_eq!(&r2[..2], &[0, 2]);
+    }
+
+    #[test]
+    fn ranking_topk_matches_full_ranking_prefix() {
+        prop_check("ranking_topk == ranking[..k]", 300, |g| {
+            let n = g.range(1, 96);
+            let k = g.range(0, n + 2); // include k == 0 and k > n
+            // Mix smooth and tie-heavy weight vectors.
+            let w: Vec<f32> = if g.bool() {
+                g.vec_f32(n, 2.0)
+            } else {
+                g.vec_f32(n, 2.0)
+                    .iter()
+                    .map(|x| (x * 2.0).round() / 2.0)
+                    .collect()
+            };
+            let full = ranking(&w);
+            let part = ranking_topk(&w, k);
+            if part == full[..k.min(n)] {
+                Ok(())
+            } else {
+                Err(format!("k={k} {part:?} vs {:?}", &full[..k.min(n)]))
+            }
+        });
+    }
+
+    #[test]
+    fn promote_matches_seed_contains_scan() {
+        // The bitmask promote must reproduce the seed O(K·E) scan exactly.
+        fn promote_seed(subset: &[u32], all: &[u32]) -> Vec<u32> {
+            let mut out = Vec::with_capacity(all.len());
+            out.extend_from_slice(subset);
+            for &e in all {
+                if !subset.contains(&e) {
+                    out.push(e);
+                }
+            }
+            out
+        }
+        prop_check("promote bitmask == contains scan", 300, |g| {
+            let n = g.range(1, 64);
+            let all: Vec<u32> = ranking(&g.vec_f32(n, 1.0));
+            let k = g.range(0, n + 1);
+            let subset: Vec<u32> = all.iter().take(k).copied().collect();
+            let a = promote(&subset, &all);
+            let b = promote_seed(&subset, &all);
+            if a == b {
+                Ok(())
+            } else {
+                Err(format!("{a:?} vs {b:?}"))
+            }
+        });
     }
 
     #[test]

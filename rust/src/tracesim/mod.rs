@@ -9,7 +9,10 @@
 //! A [`Trace`] is the per-token, per-layer ordered selection (plus router
 //! logits when recorded, for offline strategy replay).
 
+use std::path::Path;
+
 use crate::cache::{ExpertCache, Policy};
+use crate::policy::EvictionFactory;
 use crate::util::json::Json;
 
 /// Router trace: `selections[token][layer]` = experts ordered weight-desc.
@@ -68,6 +71,22 @@ impl Trace {
         ])
     }
 
+    /// Write the trace as JSON (the `belady:trace=FILE` eviction spec and
+    /// the `trace --save-trace` CLI read this format back).
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .map_err(|e| anyhow::anyhow!("writing trace {}: {e}", path.display()))
+    }
+
+    /// Load a trace written by [`Trace::save`].
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading trace {}: {e}", path.display()))?;
+        let j = crate::util::json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing trace {}: {e}", path.display()))?;
+        Self::from_json(&j)
+    }
+
     pub fn from_json(j: &Json) -> anyhow::Result<Self> {
         let n_experts = j.req("n_experts")?.as_usize().unwrap_or(0);
         let n_layers = j.req("n_layers")?.as_usize().unwrap_or(0);
@@ -91,6 +110,7 @@ impl Trace {
 
 /// Per-layer next-use oracle: for layer `l`, position `t`, expert `e`,
 /// the next step index > t where `e` is selected (u64::MAX if never).
+#[derive(Debug)]
 pub struct NextUseOracle {
     /// next[l][t][e] — step index of the next use strictly after t.
     next: Vec<Vec<Vec<u64>>>,
@@ -139,15 +159,25 @@ impl SimResult {
     }
 }
 
-/// Replay `trace` against per-layer caches of `capacity` with `policy`.
+/// Replay `trace` against per-layer caches of `capacity` with the legacy
+/// `policy` enum (deprecated shim over [`simulate_with`]).
 pub fn simulate(trace: &Trace, capacity: usize, policy: Policy) -> SimResult {
-    let oracle = if policy == Policy::Belady {
+    simulate_with(trace, capacity, &EvictionFactory::from_policy(policy))
+}
+
+/// Replay `trace` against per-layer caches built from any registered
+/// eviction spec ([`crate::policy::parse_eviction`]). Policies that
+/// declare [`crate::policy::EvictionPolicy::needs_oracle`] (the classic
+/// Belady) get a [`NextUseOracle`] built from this very trace.
+pub fn simulate_with(trace: &Trace, capacity: usize, factory: &EvictionFactory) -> SimResult {
+    let oracle = if factory.for_layer(0).needs_oracle() {
         Some(NextUseOracle::build(trace))
     } else {
         None
     };
-    let mut caches: Vec<ExpertCache> =
-        (0..trace.n_layers).map(|_| ExpertCache::new(capacity, policy)).collect();
+    let mut caches: Vec<ExpertCache> = (0..trace.n_layers)
+        .map(|l| ExpertCache::with_policy(capacity, factory.for_layer(l)))
+        .collect();
     for (t, per_layer) in trace.selections.iter().enumerate() {
         for (l, sel) in per_layer.iter().enumerate() {
             match &oracle {
@@ -186,15 +216,27 @@ pub fn simulate(trace: &Trace, capacity: usize, policy: Policy) -> SimResult {
     }
 }
 
-/// Replay with exact pooled lifetime statistics (Table 9).
+/// Replay with exact pooled lifetime statistics (Table 9); legacy-enum
+/// shim over [`simulate_lifetimes_with`].
 pub fn simulate_lifetimes(trace: &Trace, capacity: usize, policy: Policy) -> (SimResult, Vec<f64>) {
-    let oracle = if policy == Policy::Belady {
+    simulate_lifetimes_with(trace, capacity, &EvictionFactory::from_policy(policy))
+}
+
+/// [`simulate_with`] variant that also returns the per-layer mean
+/// lifetimes (Table 9).
+pub fn simulate_lifetimes_with(
+    trace: &Trace,
+    capacity: usize,
+    factory: &EvictionFactory,
+) -> (SimResult, Vec<f64>) {
+    let oracle = if factory.for_layer(0).needs_oracle() {
         Some(NextUseOracle::build(trace))
     } else {
         None
     };
-    let mut caches: Vec<ExpertCache> =
-        (0..trace.n_layers).map(|_| ExpertCache::new(capacity, policy)).collect();
+    let mut caches: Vec<ExpertCache> = (0..trace.n_layers)
+        .map(|l| ExpertCache::with_policy(capacity, factory.for_layer(l)))
+        .collect();
     let mut lifetimes: Vec<f64> = Vec::new();
     for (t, per_layer) in trace.selections.iter().enumerate() {
         for (l, sel) in per_layer.iter().enumerate() {
@@ -289,6 +331,59 @@ mod tests {
                 Err(format!("belady {} lru {} lfu {}", b.hits, l.hits, f.hits))
             }
         });
+    }
+
+    #[test]
+    fn simulate_with_matches_legacy_simulate() {
+        use crate::policy::parse_eviction;
+        let tr = random_trace(11, 100, 3, 16, 3);
+        for (spec, policy) in
+            [("lru", Policy::Lru), ("lfu", Policy::Lfu), ("belady", Policy::Belady)]
+        {
+            let a = simulate(&tr, 6, policy);
+            let b = simulate_with(&tr, 6, &parse_eviction(spec).unwrap());
+            assert_eq!((a.hits, a.misses, a.evictions), (b.hits, b.misses, b.evictions), "{spec}");
+        }
+    }
+
+    #[test]
+    fn belady_trace_file_is_optimal_on_its_own_trace() {
+        use crate::policy::parse_eviction;
+        // The acceptance bound: replaying a recorded trace, the
+        // belady:trace oracle's miss rate is <= every non-oracle policy.
+        let tr = random_trace(21, 150, 2, 14, 3);
+        let dir = std::env::temp_dir().join("moe_cache_test_traces");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("belady_trace_file_is_optimal.json");
+        tr.save(&path).unwrap();
+        let spec = format!("belady:trace={}", path.display());
+        let oracle = simulate_with(&tr, 6, &parse_eviction(&spec).unwrap());
+        for other in ["lru", "lfu", "lfu-decay:32", "lfu-decay:128"] {
+            let r = simulate_with(&tr, 6, &parse_eviction(other).unwrap());
+            assert!(
+                oracle.miss_rate() <= r.miss_rate() + 1e-12,
+                "belady:trace {} > {other} {}",
+                oracle.miss_rate(),
+                r.miss_rate()
+            );
+        }
+        // And it matches the classic next-use-closure Belady exactly.
+        let classic = simulate(&tr, 6, Policy::Belady);
+        assert_eq!((oracle.hits, oracle.misses), (classic.hits, classic.misses));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn trace_save_load_roundtrip() {
+        let tr = random_trace(7, 12, 2, 8, 2);
+        let dir = std::env::temp_dir().join("moe_cache_test_traces");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("save_load_roundtrip.json");
+        tr.save(&path).unwrap();
+        let back = Trace::load(&path).unwrap();
+        assert_eq!(back.selections, tr.selections);
+        assert_eq!((back.n_experts, back.n_layers), (tr.n_experts, tr.n_layers));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

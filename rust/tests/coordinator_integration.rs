@@ -48,7 +48,7 @@ fn spawn_coordinator() -> Coordinator {
 }
 
 fn req(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
-    Request { id, prompt, max_new, temperature: 0.8, stop_token: None }
+    Request { id, prompt, max_new, temperature: 0.8, stop_token: None, routing_spec: None }
 }
 
 #[test]
@@ -64,6 +64,7 @@ fn serves_requests_and_reports_metrics() {
                 max_new: 12,
                 temperature: 0.8,
                 stop_token: None,
+                routing_spec: None,
             })
             .unwrap();
         assert_eq!(res.id, i as u64);
@@ -96,6 +97,7 @@ fn concurrent_submitters_all_complete() {
                     max_new: 6,
                     temperature: 0.0,
                     stop_token: None,
+                    routing_spec: None,
                 })
                 .unwrap()
         }));
@@ -117,6 +119,7 @@ fn oversized_prompt_is_clamped_not_fatal() {
             max_new: 4,
             temperature: 0.0,
             stop_token: None,
+            routing_spec: None,
         })
         .unwrap();
     assert_eq!(res.generated.len(), 4);
@@ -277,5 +280,66 @@ fn token_stream_matches_final_result() {
             Event::Failed { error, .. } => panic!("{error}"),
         }
     }
+    coord.shutdown();
+}
+
+/// Per-session routing override: a request pinning `original` on an
+/// engine whose default is CachePrior must generate exactly the tokens a
+/// solo run on an Original-routing engine generates (Original selection
+/// is cache-independent, and the sampler/router seeds derive from the
+/// request id), and the override must not leak into the default engine
+/// policy for other requests.
+/// New-in-this-PR tests skip (instead of failing) when the generated
+/// artifacts are absent, so the tier-1 gate stays no worse than seed on a
+/// bare checkout.
+fn artifacts_ready() -> bool {
+    let arts = moe_cache::artifacts_dir();
+    arts.join("qwen-tiny").join("manifest.json").exists()
+        && arts.join("qwen-tiny").join("weights_int4.bin").exists()
+        && arts.join("data").is_dir()
+}
+
+#[test]
+fn per_session_routing_override_matches_solo_original() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let data = EvalData::load(&moe_cache::artifacts_dir().join("data")).unwrap();
+    let prompt = data.prompts_short[0].clone();
+
+    let coord = spawn_with(Strategy::Original, ServerConfig::default());
+    let solo = coord.submit(req(5, prompt.clone(), 10)).unwrap().generated;
+    coord.shutdown();
+
+    // Engine default: CachePrior. Request 5 overrides to original.
+    let coord = spawn_coordinator();
+    let mut r = req(5, prompt, 10);
+    r.routing_spec = Some("original".into());
+    let overridden = coord.submit(r).unwrap().generated;
+    coord.shutdown();
+
+    assert_eq!(overridden, solo, "override did not produce original-routing tokens");
+    assert_eq!(overridden.len(), 10);
+}
+
+/// A malformed routing spec fails that one request with `Event::Failed`
+/// (the error names the registry) and leaves the server serving.
+#[test]
+fn bad_routing_spec_fails_request_not_server() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let data = EvalData::load(&moe_cache::artifacts_dir().join("data")).unwrap();
+    let coord = spawn_coordinator();
+    let mut bad = req(1, data.prompts_short[0].clone(), 4);
+    bad.routing_spec = Some("not-a-policy".into());
+    let err = coord.submit(bad).unwrap_err().to_string();
+    assert!(err.contains("bad routing spec"), "{err}");
+    assert!(err.contains("cache-prior"), "error should enumerate the registry: {err}");
+    // Server still alive and serving.
+    let ok = coord.submit(req(2, data.prompts_short[0].clone(), 4)).unwrap();
+    assert_eq!(ok.generated.len(), 4);
     coord.shutdown();
 }
