@@ -52,7 +52,7 @@ fn measure(
         engine.generate(p, 40, &mut sampler, None)?;
     }
     let (_, _, miss) = engine.cache_totals();
-    Ok((engine.flash.throughput(), miss))
+    Ok((engine.tier_stats().throughput(), miss))
 }
 
 fn main() -> anyhow::Result<()> {

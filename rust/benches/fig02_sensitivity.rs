@@ -1,7 +1,7 @@
 //! Fig. 2: expert-selection sensitivity.
 //!
-//! Left: drop all experts ranked >= h (Pruning) — perplexity vs h.
-//! Right: replace the rank-k expert with a random one (SwapAtRank) —
+//! Left: drop all experts ranked >= h (pruning) — perplexity vs h.
+//! Right: replace the rank-k expert with a random one (swap) —
 //! perplexity vs k. The paper's findings to reproduce: the top-1 expert is
 //! critical for every model; granular MoEs (qwen/deepseek) recover much
 //! faster with rank than coarse ones (mixtral/phi).
@@ -9,10 +9,9 @@
 //! Run: `cargo bench --offline --bench fig02_sensitivity`
 
 use moe_cache::config::{Quant, CONFIG_NAMES};
-use moe_cache::eval::sweep::{run_point, EvalBudget, Task};
+use moe_cache::eval::sweep::{run_point_spec, EvalBudget, Task};
 use moe_cache::eval::EvalData;
 use moe_cache::report::{results_dir, Table};
-use moe_cache::routing::Strategy;
 use moe_cache::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
@@ -26,14 +25,14 @@ fn main() -> anyhow::Result<()> {
     for model in CONFIG_NAMES {
         let cfg = Runtime::load(&arts.join(model))?.config.clone();
         let cache = cfg.n_experts; // full cache: isolate routing effects
-        let base = run_point(
-            &arts, model, Strategy::Original, cache, Quant::Int4, Task::Ppl, &data, &budget,
+        let base = run_point_spec(
+            &arts, model, "original", cache, Quant::Int4, Task::Ppl, &data, &budget,
         )?;
         println!("{model}: baseline ppl {:.3}", base.result.metric);
         // Left plot: keep only top-h (drop ranked >= h).
         for keep in 1..cfg.top_k {
-            let p = run_point(
-                &arts, model, Strategy::Pruning { keep }, cache, Quant::Int4,
+            let p = run_point_spec(
+                &arts, model, &format!("pruning:{keep}"), cache, Quant::Int4,
                 Task::Ppl, &data, &budget,
             )?;
             t.row(vec![
@@ -45,8 +44,8 @@ fn main() -> anyhow::Result<()> {
         }
         // Right plot: swap the rank-k expert with a random one.
         for rank in 0..cfg.top_k.min(4) {
-            let p = run_point(
-                &arts, model, Strategy::SwapAtRank { rank }, cache, Quant::Int4,
+            let p = run_point_spec(
+                &arts, model, &format!("swap:{rank}"), cache, Quant::Int4,
                 Task::Ppl, &data, &budget,
             )?;
             t.row(vec![

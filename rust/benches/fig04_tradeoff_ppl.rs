@@ -8,7 +8,7 @@
 //! (MOE_BENCH=smoke for a quick pass, =full for paper-scale token counts)
 
 use moe_cache::config::{Quant, CONFIG_NAMES};
-use moe_cache::eval::sweep::{strategy_family, sweep_points, EvalBudget, Task};
+use moe_cache::eval::sweep::{sweep_points, EvalBudget, Task};
 use moe_cache::eval::EvalData;
 use moe_cache::report::{results_dir, Table};
 use moe_cache::runtime::Runtime;
@@ -30,14 +30,14 @@ fn main() -> anyhow::Result<()> {
             cfg.default_top_j(), cfg.n_experts, cfg.top_k,
         )?;
         for p in &points {
-            let strategy = moe_cache::routing::Strategy::parse(&p.strategy)?;
+            let family = moe_cache::policy::parse_routing(&p.strategy)?.family();
             println!(
                 "  {:<20} ppl {:8.3} miss {:.4}",
                 p.strategy, p.result.metric, p.result.miss_rate
             );
             t.row(vec![
                 model.into(),
-                strategy_family(&strategy).into(),
+                family.into(),
                 p.strategy.clone(),
                 format!("{:.3}", p.param),
                 format!("{:.4}", p.result.metric),

@@ -3,24 +3,24 @@
 //! Run: `cargo bench --offline --bench fig05_tradeoff_qa`
 
 use moe_cache::config::{Quant, CONFIG_NAMES};
-use moe_cache::eval::sweep::{run_point, strategy_family, EvalBudget, Task};
+use moe_cache::eval::sweep::{run_point_spec, EvalBudget, Task};
 use moe_cache::eval::EvalData;
 use moe_cache::report::{results_dir, Table};
-use moe_cache::routing::{DeltaMode, Strategy};
 use moe_cache::runtime::Runtime;
 
 /// Thinner grid than Fig. 4: QA items are ~100-token prompts, so each point
-/// is expensive on one core.
-fn grid(top_k: usize, n: usize, j: usize) -> Vec<Strategy> {
-    let mut g = vec![Strategy::Original, Strategy::Pruning { keep: 1.max(top_k / 2) }];
+/// is expensive on one core. Registry spec strings — same hyperparameter
+/// values as the seed enum grid.
+fn grid(top_k: usize, n: usize, j: usize) -> Vec<String> {
+    let mut g = vec!["original".to_string(), format!("pruning:{}", 1.max(top_k / 2))];
     for m in [top_k + 1, n / 2, n] {
-        g.push(Strategy::MaxRank { m, j });
+        g.push(format!("max-rank:{m}:{j}"));
     }
     for p in [0.5, 0.9] {
-        g.push(Strategy::CumsumThreshold { p, j });
+        g.push(format!("cumsum:{p}:{j}"));
     }
     for l in [0.2, 0.5, 0.8] {
-        g.push(Strategy::CachePrior { lambda: l, j, delta: DeltaMode::RunningAvg });
+        g.push(format!("cache-prior:{l}:{j}"));
     }
     g
 }
@@ -37,9 +37,10 @@ fn main() -> anyhow::Result<()> {
         let cfg = Runtime::load(&arts.join(model))?.config.clone();
         let cache = cfg.n_experts / 2;
         println!("== {model} ==");
-        for strategy in grid(cfg.top_k, cfg.n_experts, cfg.default_top_j()) {
-            let p = run_point(
-                &arts, model, strategy.clone(), cache, Quant::Int4, Task::Qa, &data, &budget,
+        for spec in grid(cfg.top_k, cfg.n_experts, cfg.default_top_j()) {
+            let family = moe_cache::policy::parse_routing(&spec)?.family();
+            let p = run_point_spec(
+                &arts, model, &spec, cache, Quant::Int4, Task::Qa, &data, &budget,
             )?;
             println!(
                 "  {:<20} acc {:.3} miss {:.4}",
@@ -47,7 +48,7 @@ fn main() -> anyhow::Result<()> {
             );
             t.row(vec![
                 model.into(),
-                strategy_family(&strategy).into(),
+                family.into(),
                 p.strategy.clone(),
                 format!("{:.4}", p.result.metric),
                 format!("{:.4}", p.result.miss_rate),

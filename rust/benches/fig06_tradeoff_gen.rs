@@ -7,20 +7,19 @@
 //! Run: `cargo bench --offline --bench fig06_tradeoff_gen`
 
 use moe_cache::config::{Quant, CONFIG_NAMES};
-use moe_cache::eval::sweep::{run_point, strategy_family, EvalBudget, Task};
+use moe_cache::eval::sweep::{run_point_spec, EvalBudget, Task};
 use moe_cache::eval::EvalData;
 use moe_cache::report::{results_dir, Table};
-use moe_cache::routing::{DeltaMode, Strategy};
 use moe_cache::runtime::Runtime;
 
-fn grid(top_k: usize, n: usize, j: usize) -> Vec<Strategy> {
-    let mut g = vec![Strategy::Original];
-    g.push(Strategy::MaxRank { m: n / 2, j });
-    g.push(Strategy::CumsumThreshold { p: 0.7, j });
+/// Registry spec strings — same hyperparameter values as the seed grid.
+fn grid(n: usize, j: usize) -> Vec<String> {
+    let mut g = vec!["original".to_string()];
+    g.push(format!("max-rank:{}:{j}", n / 2));
+    g.push(format!("cumsum:0.7:{j}"));
     for l in [0.3, 0.6, 0.9] {
-        g.push(Strategy::CachePrior { lambda: l, j, delta: DeltaMode::RunningAvg });
+        g.push(format!("cache-prior:{l}:{j}"));
     }
-    let _ = top_k;
     g
 }
 
@@ -36,9 +35,10 @@ fn main() -> anyhow::Result<()> {
         let cfg = Runtime::load(&arts.join(model))?.config.clone();
         let cache = cfg.n_experts / 2;
         println!("== {model} ==");
-        for strategy in grid(cfg.top_k, cfg.n_experts, cfg.default_top_j()) {
-            let p = run_point(
-                &arts, model, strategy.clone(), cache, Quant::Int4, Task::Math, &data, &budget,
+        for spec in grid(cfg.n_experts, cfg.default_top_j()) {
+            let family = moe_cache::policy::parse_routing(&spec)?.family();
+            let p = run_point_spec(
+                &arts, model, &spec, cache, Quant::Int4, Task::Math, &data, &budget,
             )?;
             println!(
                 "  {:<20} acc {:.3} miss {:.4}",
@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
             );
             t.row(vec![
                 model.into(),
-                strategy_family(&strategy).into(),
+                family.into(),
                 p.strategy.clone(),
                 format!("{:.4}", p.result.metric),
                 format!("{:.4}", p.result.miss_rate),

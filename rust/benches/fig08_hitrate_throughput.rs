@@ -39,7 +39,7 @@ fn run(cache: usize, lambda: f32, prompts: &[Vec<u32>]) -> anyhow::Result<(f64, 
     }
     let (h, m, _) = engine.cache_totals();
     let hit_rate = h as f64 / (h + m).max(1) as f64;
-    Ok((hit_rate, engine.flash.throughput()))
+    Ok((hit_rate, engine.tier_stats().throughput()))
 }
 
 fn main() -> anyhow::Result<()> {

@@ -48,9 +48,10 @@ fn main() -> anyhow::Result<()> {
             for p in &prompts {
                 engine.generate(p, 32, &mut s, None)?;
             }
-            let tps = engine.flash.throughput();
+            let tier = engine.tier_stats();
+            let tps = tier.throughput();
             best = best.max(tps);
-            rows.push((cache, tps, engine.flash.pressure_s));
+            rows.push((cache, tps, tier.pressure_s));
         }
         for (cache, tps, pressure) in rows {
             println!(

@@ -35,7 +35,7 @@ fn run(cache: usize, lambda: f32, prompts: &[Vec<u32>]) -> anyhow::Result<f64> {
     for p in prompts {
         engine.generate(p, 40, &mut s, None)?;
     }
-    Ok(engine.flash.throughput())
+    Ok(engine.tier_stats().throughput())
 }
 
 fn main() -> anyhow::Result<()> {

@@ -322,18 +322,18 @@ fn main() -> anyhow::Result<()> {
     let bench_pipeline = |engine: &mut Engine, steps: usize| -> (f64, f64, u32, u64, u64, f64) {
         engine.reset_all();
         run_steps(engine, 20); // steady state
-        let vt0 = engine.flash.time_s;
-        let hid0 = engine.flash.hidden_s;
+        let t0 = engine.tier_stats();
         let (i0, u0, _) = engine.prefetch_stats();
         let (acc, wall) = run_steps(engine, steps);
         let (i1, u1, _) = engine.prefetch_stats();
+        let t1 = engine.tier_stats();
         (
             wall * 1e9 / steps as f64,
-            (engine.flash.time_s - vt0) / steps as f64,
+            (t1.time_s - t0.time_s) / steps as f64,
             acc.prefetch_hits,
             i1 - i0,
             u1 - u0,
-            engine.flash.hidden_s - hid0,
+            t1.hidden_s - t0.hidden_s,
         )
     };
     let (off_ns, off_virt, _, _, _, _) = bench_pipeline(&mut engine, 40);
@@ -353,6 +353,40 @@ fn main() -> anyhow::Result<()> {
     out.push(("prefetch_issued".into(), Json::num(issued as f64)));
     out.push(("prefetch_used".into(), Json::num(used as f64)));
 
+    // ---- storage backends: SimStore pread vs MmapStore fetch latency ----
+    // Same spans, same dequantization — the difference is pread+alloc vs
+    // reading straight out of the mapping. Results go to their own
+    // trajectory file (results/BENCH_store.json).
+    println!();
+    let image_path = arts.join(&model).join("weights_int4.bin");
+    let mut sim_store: Box<dyn moe_cache::store::ExpertStore> = Box::new(
+        moe_cache::store::SimStore::new(engine.image.clone(), DeviceProfile::device_16gb()),
+    );
+    let mut mmap_store: Box<dyn moe_cache::store::ExpertStore> =
+        Box::new(moe_cache::store::MmapStore::open(&image_path)?);
+    let probe = engine.image.fetch_expert(0, 0, false)?;
+    let (mut s1, mut s3, mut s2) = (
+        vec![0f32; probe.w1.len()],
+        vec![0f32; probe.w3.len()],
+        vec![0f32; probe.w2.len()],
+    );
+    let mut store_out: Vec<(String, Json)> = vec![("model".into(), Json::str(model.clone()))];
+    for (name, store) in [("sim", &mut sim_store), ("mmap", &mut mmap_store)] {
+        let mut e_idx = 0usize;
+        let r = bench(&format!("store fetch_into ({name})"), 5, 100, || {
+            e_idx = (e_idx + 1) % cfg.n_experts;
+            black_box(store.fetch_into(0, e_idx, &mut s1, &mut s3, &mut s2).unwrap());
+        });
+        r.print();
+        let stats = store.stats();
+        store_out.push((format!("{name}_fetch_ns"), Json::num(r.median_ns)));
+        store_out.push((format!("{name}_flash_reads"), Json::num(stats.flash_reads as f64)));
+        store_out.push((
+            format!("{name}_mean_fetch_latency_us"),
+            Json::num(stats.mean_fetch_latency_s() * 1e6),
+        ));
+    }
+
     // ---- persist the trajectory ----
     let json = Json::Object(out);
     let dir = results_dir();
@@ -360,5 +394,9 @@ fn main() -> anyhow::Result<()> {
     let path = dir.join("BENCH_hotpath.json");
     std::fs::write(&path, format!("{json}"))?;
     println!("\nwrote {}", path.display());
+    let store_json = Json::Object(store_out);
+    let store_path = dir.join("BENCH_store.json");
+    std::fs::write(&store_path, format!("{store_json}"))?;
+    println!("wrote {}", store_path.display());
     Ok(())
 }

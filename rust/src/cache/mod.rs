@@ -36,7 +36,7 @@ use crate::util::stats::Welford;
 /// ```
 /// use moe_cache::cache::{ExpertCache, Policy};
 ///
-/// let mut c = ExpertCache::new(2, Policy::parse("lru").unwrap());
+/// let mut c = ExpertCache::new(2, Policy::Lru);
 /// c.access(&[10, 11], 0, None); // selection is weight-descending: 10 > 11
 /// let a = c.access(&[12], 1, None);
 /// assert_eq!(a.evicted, vec![10]); // higher-weight expert leaves first
@@ -68,16 +68,10 @@ pub enum Policy {
 }
 
 impl Policy {
-    /// **Deprecated shim** (kept one release): parses through the unified
-    /// [`crate::policy`] spec grammar. Only the three seed policies are
-    /// representable as this enum — specs like `lfu-decay:64` or
-    /// `belady:trace=FILE` parse via [`crate::policy::parse_eviction`]
-    /// into an [`crate::policy::EvictionFactory`] instead.
-    pub fn parse(s: &str) -> anyhow::Result<Policy> {
-        crate::policy::policy_from_spec(s)
-    }
-
-    /// Canonical spec label of the policy.
+    /// Canonical spec label of the policy. Spec parsing goes through the
+    /// registry ([`crate::policy::parse_eviction`]), which returns an
+    /// [`crate::policy::EvictionFactory`] and also covers policies this
+    /// closed enum cannot represent (`lfu-decay:64`, `belady:trace=FILE`).
     pub fn label(&self) -> &'static str {
         match self {
             Policy::Lru => "lru",

@@ -479,16 +479,17 @@ fn make_resident(
 }
 
 /// One engine step with per-session accounting: the engine's cache and
-/// flash counters are shared across interleaved sessions, so each session
-/// records deltas around its own steps.
+/// storage-tier counters are shared across interleaved sessions, so each
+/// session records deltas around its own steps (the [`Engine::tier_stats`]
+/// snapshot works the same for simulated and measured backends).
 fn step_counted(engine: &mut Engine, sess: &mut Session, token: u32) -> Result<Vec<f32>> {
     let (hits0, misses0, _miss_rate) = engine.cache_totals();
-    let vtime0 = engine.flash.time_s;
+    let vtime0 = engine.tier_stats().time_s;
     let logits = engine.step(token)?;
     let (hits1, misses1, _) = engine.cache_totals();
     sess.hits += hits1 - hits0;
     sess.misses += misses1 - misses0;
-    sess.dev_time_s += engine.flash.time_s - vtime0;
+    sess.dev_time_s += engine.tier_stats().time_s - vtime0;
     sess.dev_tokens += 1;
     Ok(logits)
 }

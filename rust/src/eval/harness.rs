@@ -45,15 +45,16 @@ fn finish(engine: &mut Engine, metric: f64, tokens: u64) -> EvalResult {
         means.push(c.stats.lifetimes.mean());
         stds.push(c.stats.lifetimes.std());
     }
+    let tier = engine.tier_stats();
     EvalResult {
         metric,
         miss_rate,
         hits,
         misses,
-        flash_bytes: engine.flash.flash_bytes,
+        flash_bytes: tier.flash_bytes,
         tokens,
-        virtual_time_s: engine.flash.time_s,
-        throughput_tps: engine.flash.throughput(),
+        virtual_time_s: tier.time_s,
+        throughput_tps: tier.throughput(),
         lifetime_mean: crate::util::stats::mean(&means),
         lifetime_std: crate::util::stats::mean(&stds),
     }

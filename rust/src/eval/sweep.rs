@@ -1,5 +1,15 @@
 //! Hyperparameter sweep driver: produce the paper's trade-off curves
 //! (Figs. 4/5/6/15). One [`SweepPoint`] per (strategy, hyperparameter).
+//!
+//! Fully registry-driven since the policy-stack redesign: the grid is the
+//! concatenation of every registered routing policy's own spec grid
+//! ([`crate::policy::spec_grid`]), points run straight off spec strings
+//! ([`run_point_spec`]) or trait objects ([`run_point_policy`]), and
+//! family/param metadata comes from the trait
+//! ([`crate::policy::RoutingPolicy::family`] / `param`). The one-release
+//! legacy-enum shims (`run_point`, `strategy_grid`, `strategy_param`,
+//! `strategy_family`) are gone — parse the spec through
+//! [`crate::policy::parse_routing`] instead.
 
 use std::path::Path;
 
@@ -8,7 +18,6 @@ use anyhow::Result;
 use crate::config::{DeviceProfile, Quant};
 use crate::model::EngineBuilder;
 use crate::policy::RoutingPolicy;
-use crate::routing::Strategy;
 
 use super::harness::{eval_math, eval_ppl, eval_qa, EvalResult};
 use super::EvalData;
@@ -21,37 +30,6 @@ pub struct SweepPoint {
     pub result: EvalResult,
 }
 
-/// The paper's hyperparameter grids (§4.2), thinned for single-core run
-/// time. Registry-driven since the policy-stack redesign: every
-/// registered routing policy contributes its own grid
-/// ([`crate::policy::spec_grid`]), so adding a policy automatically adds
-/// its sweep points; this wrapper materializes them as the legacy
-/// [`Strategy`] enum for the figure benches (deprecated shim, kept one
-/// release).
-pub fn strategy_grid(top_k: usize, n_experts: usize, j: usize, dense: bool) -> Vec<Strategy> {
-    // A future registry policy that isn't representable as the closed
-    // enum is silently absent from this legacy view — the spec-driven
-    // paths (`sweep_points`, `run_point_spec`) cover it.
-    crate::policy::spec_grid(top_k, n_experts, j, dense)
-        .iter()
-        .filter_map(|s| Strategy::parse(s).ok())
-        .collect()
-}
-
-/// The numeric hyperparameter of a strategy (x-axis bookkeeping), read
-/// from the policy's own registry metadata ([`crate::policy::RoutingPolicy::param`])
-/// — no second exhaustive match to fall out of sync.
-pub fn strategy_param(s: &Strategy) -> f64 {
-    crate::policy::from_strategy(s).param()
-}
-
-/// Base family name ("pruning", "max-rank", ...) for grouping curves,
-/// from the policy's registry metadata
-/// ([`crate::policy::RoutingPolicy::family`]).
-pub fn strategy_family(s: &Strategy) -> &'static str {
-    crate::policy::from_strategy(s).family()
-}
-
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Task {
     Ppl,
@@ -62,7 +40,8 @@ pub enum Task {
 /// Run one evaluation point for any [`RoutingPolicy`] trait object. A
 /// fresh engine is built per point so every point is an independent
 /// deterministic measurement (paper §4.1); eviction is the paper-default
-/// LRU, seed 7, device-16gb — identical to the seed `run_point`.
+/// LRU, seed 7, device-16gb, and the storage tier is the seed-parity
+/// `sim` store — identical to the seed `run_point`.
 #[allow(clippy::too_many_arguments)]
 pub fn run_point_policy(
     artifacts: &Path,
@@ -122,31 +101,6 @@ pub fn run_point_spec(
     )
 }
 
-/// Legacy-enum shim over [`run_point_policy`] (kept one release; labels
-/// and params come from the trait port, byte-identical to the seed).
-#[allow(clippy::too_many_arguments)]
-pub fn run_point(
-    artifacts: &Path,
-    model: &str,
-    strategy: Strategy,
-    cache_capacity: usize,
-    quant: Quant,
-    task: Task,
-    data: &EvalData,
-    budget: &EvalBudget,
-) -> Result<SweepPoint> {
-    run_point_policy(
-        artifacts,
-        model,
-        crate::policy::from_strategy(&strategy),
-        cache_capacity,
-        quant,
-        task,
-        data,
-        budget,
-    )
-}
-
 /// Evaluation budget knobs (single-core run time control).
 #[derive(Debug, Clone)]
 pub struct EvalBudget {
@@ -181,7 +135,7 @@ impl EvalBudget {
 }
 
 /// Sweep every registered policy's grid for one model+task. Fully
-/// registry-driven: the grid never round-trips through the closed enum,
+/// registry-driven: the grid never round-trips through a closed enum,
 /// so a policy added per `docs/POLICIES.md` sweeps without touching this
 /// file.
 #[allow(clippy::too_many_arguments)]
@@ -215,13 +169,15 @@ pub fn sweep_points(
 
 #[cfg(test)]
 mod tests {
-    use super::*;
+    use crate::policy::{parse_routing, spec_grid};
 
     #[test]
     fn grid_contains_all_families() {
-        let g = strategy_grid(4, 60, 2, false);
-        let fams: std::collections::HashSet<&str> =
-            g.iter().map(strategy_family).collect();
+        let g = spec_grid(4, 60, 2, false);
+        let fams: std::collections::HashSet<&str> = g
+            .iter()
+            .map(|s| parse_routing(s).unwrap().family())
+            .collect();
         for f in ["original", "pruning", "max-rank", "cumsum", "cache-prior"] {
             assert!(fams.contains(f), "missing {f}");
         }
@@ -229,36 +185,22 @@ mod tests {
 
     #[test]
     fn dense_grid_is_larger() {
-        assert!(strategy_grid(2, 8, 1, true).len() > strategy_grid(2, 8, 1, false).len());
+        assert!(spec_grid(2, 8, 1, true).len() > spec_grid(2, 8, 1, false).len());
     }
 
     #[test]
-    fn params_extracted() {
-        assert_eq!(strategy_param(&Strategy::Pruning { keep: 2 }), 2.0);
-        assert_eq!(
-            strategy_param(&Strategy::CumsumThreshold { p: 0.5, j: 1 }),
-            0.5
-        );
+    fn params_extracted_from_trait_metadata() {
+        assert_eq!(parse_routing("pruning:2").unwrap().param(), 2.0);
+        assert_eq!(parse_routing("cumsum:0.5:1").unwrap().param(), 0.5);
     }
 
     #[test]
-    fn grid_labels_match_registry_specs() {
-        // The enum shim must materialize exactly the registry's grid: the
-        // parity gate pins sweep labels across the redesign.
-        let specs = crate::policy::spec_grid(4, 60, 2, false);
-        let grid = strategy_grid(4, 60, 2, false);
-        assert_eq!(grid.len(), specs.len());
-        for (s, spec) in grid.iter().zip(&specs) {
-            assert_eq!(&s.label(), spec);
-        }
-    }
-
-    #[test]
-    fn metadata_agrees_with_trait_objects() {
-        for s in strategy_grid(4, 60, 2, false) {
-            let p = crate::policy::from_strategy(&s);
-            assert_eq!(strategy_family(&s), p.family());
-            assert_eq!(strategy_param(&s), p.param());
+    fn grid_specs_roundtrip_through_registry() {
+        // Sweep labels are pinned: every grid spec parses and re-labels to
+        // itself, so CSV output is stable across the shim removal.
+        for spec in spec_grid(4, 60, 2, false) {
+            let p = parse_routing(&spec).unwrap();
+            assert_eq!(p.label(), spec);
         }
     }
 }

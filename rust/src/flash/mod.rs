@@ -21,54 +21,46 @@
 //! virtual clock never depends on real thread timing), the rest serializes
 //! exactly like a demand miss. Demand reads are never overlapped, so runs
 //! without prefetching are bit-identical to the pre-pipeline engine.
+//!
+//! Since the storage-tier redesign the counters live in a
+//! [`crate::store::TierStats`] snapshot behind [`FlashSim::stats`] —
+//! nothing outside this module mutates (or even sees) individual fields,
+//! and [`crate::store::SimStore`] is the only decode-path caller.
 
 use crate::config::DeviceProfile;
+use crate::store::TierStats;
 
 #[derive(Debug, Clone)]
 pub struct FlashSim {
-    pub profile: DeviceProfile,
-    /// Virtual time elapsed (seconds).
-    pub time_s: f64,
-    /// Totals for reporting.
-    pub flash_bytes: u64,
-    pub flash_reads: u64,
-    pub dram_bytes: u64,
-    pub tokens: u64,
-    pub pressure_s: f64,
-    /// Reads serviced by the async prefetch pipeline (subset of
-    /// `flash_reads` / `flash_bytes` — the bytes still moved over flash).
-    pub prefetch_reads: u64,
-    pub prefetch_bytes: u64,
-    /// Flash time hidden behind compute by overlapping (the pipeline win).
-    pub hidden_s: f64,
+    profile: DeviceProfile,
+    /// All counters, exposed read-only through [`FlashSim::stats`].
+    stats: TierStats,
     /// Remaining hideable window for the current token; refilled to
     /// `compute_per_token_s` at every `end_token`.
-    pub overlap_budget_s: f64,
+    overlap_budget_s: f64,
 }
 
 impl FlashSim {
     pub fn new(profile: DeviceProfile) -> Self {
         let overlap_budget_s = profile.compute_per_token_s;
-        FlashSim {
-            profile,
-            time_s: 0.0,
-            flash_bytes: 0,
-            flash_reads: 0,
-            dram_bytes: 0,
-            tokens: 0,
-            pressure_s: 0.0,
-            prefetch_reads: 0,
-            prefetch_bytes: 0,
-            hidden_s: 0.0,
-            overlap_budget_s,
-        }
+        FlashSim { profile, stats: TierStats::default(), overlap_budget_s }
+    }
+
+    /// The device profile the clock charges against.
+    pub fn profile(&self) -> &DeviceProfile {
+        &self.profile
+    }
+
+    /// Read-only snapshot of every counter.
+    pub fn stats(&self) -> &TierStats {
+        &self.stats
     }
 
     /// Charge one flash read of `bytes` (a cache miss fetching an expert).
     pub fn read_flash(&mut self, bytes: u64) {
-        self.flash_reads += 1;
-        self.flash_bytes += bytes;
-        self.time_s +=
+        self.stats.flash_reads += 1;
+        self.stats.flash_bytes += bytes;
+        self.stats.time_s +=
             self.profile.flash_latency_s + bytes as f64 / self.profile.flash_bw_bytes_per_s;
     }
 
@@ -76,22 +68,22 @@ impl FlashSim {
     /// demand: up to the remaining per-token overlap budget of its cost is
     /// hidden behind compute, the rest serializes like a demand read.
     pub fn read_flash_prefetched(&mut self, bytes: u64) {
-        self.flash_reads += 1;
-        self.flash_bytes += bytes;
-        self.prefetch_reads += 1;
-        self.prefetch_bytes += bytes;
+        self.stats.flash_reads += 1;
+        self.stats.flash_bytes += bytes;
+        self.stats.prefetch_reads += 1;
+        self.stats.prefetch_bytes += bytes;
         let cost =
             self.profile.flash_latency_s + bytes as f64 / self.profile.flash_bw_bytes_per_s;
         let hidden = cost.min(self.overlap_budget_s);
         self.overlap_budget_s -= hidden;
-        self.hidden_s += hidden;
-        self.time_s += cost - hidden;
+        self.stats.hidden_s += hidden;
+        self.stats.time_s += cost - hidden;
     }
 
     /// Charge a DRAM stream of `bytes` (cache hit: weights flow DRAM->CPU).
     pub fn read_dram(&mut self, bytes: u64) {
-        self.dram_bytes += bytes;
-        self.time_s += bytes as f64 / self.profile.dram_bw_bytes_per_s;
+        self.stats.dram_bytes += bytes;
+        self.stats.time_s += bytes as f64 / self.profile.dram_bw_bytes_per_s;
     }
 
     /// Charge the fixed per-token compute plus the OS memory-pressure
@@ -99,29 +91,27 @@ impl FlashSim {
     /// the budget forces the OS to re-read evicted KV/activations from
     /// flash every token).
     pub fn end_token(&mut self, resident_bytes: u64) {
-        self.tokens += 1;
-        self.time_s += self.profile.compute_per_token_s;
+        self.stats.tokens += 1;
+        self.stats.time_s += self.profile.compute_per_token_s;
         self.overlap_budget_s = self.profile.compute_per_token_s;
         let over = resident_bytes.saturating_sub(self.profile.mem_budget_bytes as u64);
         if over > 0 {
             let pen = over as f64 * self.profile.pressure_s_per_byte;
-            self.pressure_s += pen;
-            self.time_s += pen;
+            self.stats.pressure_s += pen;
+            self.stats.time_s += pen;
         }
     }
 
     /// Tokens per second of virtual time so far.
     pub fn throughput(&self) -> f64 {
-        if self.time_s == 0.0 {
-            0.0
-        } else {
-            self.tokens as f64 / self.time_s
-        }
+        self.stats.throughput()
     }
 
+    /// Rewind the clock in place: zero the stats, refill the overlap
+    /// window. No reallocation, no profile clone.
     pub fn reset(&mut self) {
-        let profile = self.profile.clone();
-        *self = FlashSim::new(profile);
+        self.stats = TierStats::default();
+        self.overlap_budget_s = self.profile.compute_per_token_s;
     }
 }
 
@@ -137,12 +127,12 @@ mod tests {
     #[test]
     fn flash_read_charges_latency_plus_bandwidth() {
         let mut s = sim();
-        let bw = s.profile.flash_bw_bytes_per_s;
-        let lat = s.profile.flash_latency_s;
+        let bw = s.profile().flash_bw_bytes_per_s;
+        let lat = s.profile().flash_latency_s;
         s.read_flash(1000);
-        assert!((s.time_s - (lat + 1000.0 / bw)).abs() < 1e-12);
-        assert_eq!(s.flash_bytes, 1000);
-        assert_eq!(s.flash_reads, 1);
+        assert!((s.stats().time_s - (lat + 1000.0 / bw)).abs() < 1e-12);
+        assert_eq!(s.stats().flash_bytes, 1000);
+        assert_eq!(s.stats().flash_reads, 1);
     }
 
     #[test]
@@ -151,19 +141,19 @@ mod tests {
         let mut b = sim();
         a.read_flash(100_000);
         b.read_dram(100_000);
-        assert!(a.time_s > 10.0 * b.time_s);
+        assert!(a.stats().time_s > 10.0 * b.stats().time_s);
     }
 
     #[test]
     fn pressure_only_above_budget() {
         let mut s = sim();
-        let budget = s.profile.mem_budget_bytes as u64;
+        let budget = s.profile().mem_budget_bytes as u64;
         s.end_token(budget);
-        assert_eq!(s.pressure_s, 0.0);
-        let t0 = s.time_s;
+        assert_eq!(s.stats().pressure_s, 0.0);
+        let t0 = s.stats().time_s;
         s.end_token(budget + 10_000_000);
-        assert!(s.pressure_s > 0.0);
-        assert!(s.time_s > t0 + s.profile.compute_per_token_s);
+        assert!(s.stats().pressure_s > 0.0);
+        assert!(s.stats().time_s > t0 + s.profile().compute_per_token_s);
     }
 
     #[test]
@@ -172,7 +162,7 @@ mod tests {
         for _ in 0..10 {
             s.end_token(0);
         }
-        let expect = 10.0 / (10.0 * s.profile.compute_per_token_s);
+        let expect = 10.0 / (10.0 * s.profile().compute_per_token_s);
         assert!((s.throughput() - expect).abs() < 1e-9);
     }
 
@@ -181,15 +171,15 @@ mod tests {
         // device_16gb: flash latency (1.8 ms) + 1000 B fits inside the
         // 2.0 ms compute window, so the read hides completely.
         let mut s = FlashSim::new(DeviceProfile::device_16gb());
-        let cost = s.profile.flash_latency_s + 1000.0 / s.profile.flash_bw_bytes_per_s;
-        assert!(cost < s.profile.compute_per_token_s);
+        let cost = s.profile().flash_latency_s + 1000.0 / s.profile().flash_bw_bytes_per_s;
+        assert!(cost < s.profile().compute_per_token_s);
         s.read_flash_prefetched(1000);
         // Fully hidden: no serialized time, but bytes still accounted.
-        assert_eq!(s.time_s, 0.0);
-        assert!((s.hidden_s - cost).abs() < 1e-12);
-        assert_eq!(s.flash_bytes, 1000);
-        assert_eq!(s.prefetch_bytes, 1000);
-        assert_eq!(s.flash_reads, 1);
+        assert_eq!(s.stats().time_s, 0.0);
+        assert!((s.stats().hidden_s - cost).abs() < 1e-12);
+        assert_eq!(s.stats().flash_bytes, 1000);
+        assert_eq!(s.stats().prefetch_bytes, 1000);
+        assert_eq!(s.stats().flash_reads, 1);
     }
 
     #[test]
@@ -197,17 +187,21 @@ mod tests {
         let mut s = sim();
         let big = 10_000_000u64; // far beyond one token's compute window
         s.read_flash_prefetched(big);
-        let cost = s.profile.flash_latency_s + big as f64 / s.profile.flash_bw_bytes_per_s;
-        let budget = s.profile.compute_per_token_s;
-        assert!((s.time_s - (cost - budget)).abs() < 1e-9);
+        let cost = s.profile().flash_latency_s + big as f64 / s.profile().flash_bw_bytes_per_s;
+        let budget = s.profile().compute_per_token_s;
+        assert!((s.stats().time_s - (cost - budget)).abs() < 1e-9);
         // Budget exhausted: a second prefetched read serializes fully.
-        let t0 = s.time_s;
+        let t0 = s.stats().time_s;
         s.read_flash_prefetched(1000);
-        let cost2 = s.profile.flash_latency_s + 1000.0 / s.profile.flash_bw_bytes_per_s;
-        assert!((s.time_s - t0 - cost2).abs() < 1e-12);
-        // end_token refills the window.
+        let cost2 = s.profile().flash_latency_s + 1000.0 / s.profile().flash_bw_bytes_per_s;
+        assert!((s.stats().time_s - t0 - cost2).abs() < 1e-12);
+        // end_token refills the window: a fully hideable read hides again.
         s.end_token(0);
-        assert_eq!(s.overlap_budget_s, s.profile.compute_per_token_s);
+        let t1 = s.stats().time_s;
+        let h1 = s.stats().hidden_s;
+        s.read_flash_prefetched(0);
+        assert_eq!(s.stats().time_s, t1, "refilled window must hide the read");
+        assert!(s.stats().hidden_s > h1);
     }
 
     #[test]
@@ -215,22 +209,24 @@ mod tests {
         // Bit-identity guarantee for the prefetch-off benches: read_flash
         // must charge exactly as before regardless of the overlap budget.
         let mut s = sim();
-        let bw = s.profile.flash_bw_bytes_per_s;
-        let lat = s.profile.flash_latency_s;
+        let bw = s.profile().flash_bw_bytes_per_s;
+        let lat = s.profile().flash_latency_s;
         s.read_flash(1000);
-        assert!((s.time_s - (lat + 1000.0 / bw)).abs() < 1e-12);
-        assert_eq!(s.prefetch_reads, 0);
-        assert_eq!(s.hidden_s, 0.0);
+        assert!((s.stats().time_s - (lat + 1000.0 / bw)).abs() < 1e-12);
+        assert_eq!(s.stats().prefetch_reads, 0);
+        assert_eq!(s.stats().hidden_s, 0.0);
     }
 
     #[test]
-    fn reset_clears_counters() {
+    fn reset_clears_counters_in_place() {
         let mut s = sim();
         s.read_flash(10);
+        s.read_flash_prefetched(5_000_000); // drain the overlap window too
         s.end_token(0);
         s.reset();
-        assert_eq!(s.time_s, 0.0);
-        assert_eq!(s.tokens, 0);
-        assert_eq!(s.flash_bytes, 0);
+        assert_eq!(*s.stats(), TierStats::default());
+        // The overlap window is refilled: a small prefetched read hides.
+        s.read_flash_prefetched(0);
+        assert_eq!(s.stats().time_s, 0.0);
     }
 }

@@ -18,9 +18,12 @@
 //! * [`quant`] — int4/int8 symmetric per-channel dequantization
 //! * [`weights`] — the flash-image binary format reader
 //! * [`flash`] — virtual-clock flash/DRAM device simulator
+//! * [`store`] — the pluggable storage tier: the `ExpertStore` trait,
+//!   `TierStats` accounting, and the `sim` / `mmap` / `mem` backends
+//!   selected through the same registry grammar as policies
 //! * [`cache`] — per-layer expert caches with pluggable eviction
 //! * [`routing`] — routing primitives (softmax/ranking/promote) and the
-//!   deprecated `Strategy` enum shims
+//!   label-only `Strategy`/`DeltaMode` enums
 //! * [`policy`] — the pluggable policy stack: `RoutingPolicy` +
 //!   `EvictionPolicy` traits, the unified spec registry
 //!   (`cache-prior:0.5:2`, `lru`, `belady:trace=FILE`, `lfu-decay:64`),
@@ -48,6 +51,7 @@ pub mod quant;
 pub mod report;
 pub mod routing;
 pub mod runtime;
+pub mod store;
 pub mod tracesim;
 pub mod util;
 pub mod weights;

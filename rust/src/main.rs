@@ -40,19 +40,27 @@ COMMANDS:
   eval-qa    --model M [--cache C --strategy S --policy P --items N]
   eval-math  --model M [--cache C --strategy S --policy P --items N]
   sweep      --model M --task ppl|qa|math [--cache C]
-  device-sim --model M [--device device-12gb|device-16gb --quant int4|int8]
+  device-sim --model M [--device device-12gb|device-16gb --quant int4|int8
+                        --store sim|mmap|mem  storage backend (sim = virtual
+                                              clock; mmap = measured I/O)]
   trace      --model M [--cache C --tokens N --strategy S
                         --policies P1,P2,..  eviction specs to replay
                         --save-trace FILE    for later belady:trace=FILE]
   footprint                          Table-1 style memory accounting
 
-Policy specs share one grammar: name[:arg]... with positional or
+Policy and store specs share one grammar: name[:arg]... with positional or
 key=value args ('_' and '-' interchangeable). Examples: cache-prior:0.5:2,
-cache_prior:lambda=0.5:j=2, belady:trace=results/trace.json, lfu-decay:64.
+cache_prior:lambda=0.5:j=2, belady:trace=results/trace.json, lfu-decay:64,
+sim:profile=device-12gb, mmap:path=weights.bin. Every subcommand that
+builds an engine accepts --store (default: the virtual-clock sim).
 ";
 
 fn usage() -> String {
-    format!("{USAGE}\n{}", moe_cache::policy::registry_help())
+    format!(
+        "{USAGE}\n{}{}",
+        moe_cache::policy::registry_help(),
+        moe_cache::store::registry_help()
+    )
 }
 
 fn main() {
@@ -83,6 +91,7 @@ fn engine_from_args(args: &Args) -> Result<Engine> {
         .record_trace(args.bool("record-trace"))
         .routing_spec(args.get_or("strategy", &default_strategy))?
         .eviction_spec(args.get_or("policy", "lru"))?
+        .store_spec(args.get_or("store", "sim"))?
         .build()
 }
 
@@ -354,17 +363,35 @@ fn device_sim(args: &Args) -> Result<()> {
         total_gen += out.len();
     }
     let (_, _, miss) = engine.cache_totals();
+    let tier = engine.tier_stats();
+    // A measured backend's clock only advances inside fetches, so
+    // tokens/time_s is NOT a device throughput there — report the
+    // measured per-fetch latency instead of a misleading tps.
+    let tps = if tier.fetch_wall_s > 0.0 {
+        "measured".to_string()
+    } else {
+        format!("{:.2}", tier.throughput())
+    };
     println!(
-        "model={} device={} quant={:?} strategy={} tokens={} device_tps={:.2} miss_rate={:.3} flash_mb={:.2}",
+        "model={} store={} quant={:?} strategy={} tokens={} device_tps={} miss_rate={:.3} flash_mb={:.2}",
         engine.cfg.name,
-        engine.opts.device.name,
+        engine.store_label(),
         engine.opts.quant,
         engine.routing_label(),
         total_gen,
-        engine.flash.throughput(),
+        tps,
         miss,
-        engine.flash.flash_bytes as f64 / 1e6,
+        tier.flash_bytes as f64 / 1e6,
     );
+    if tier.fetch_wall_s > 0.0 {
+        // Measured backend (mmap): report the real per-fetch latency.
+        println!(
+            "measured: fetches={} fetch_wall_ms={:.3} mean_fetch_us={:.2}",
+            tier.flash_reads,
+            tier.fetch_wall_s * 1e3,
+            tier.mean_fetch_latency_s() * 1e6,
+        );
+    }
     Ok(())
 }
 

@@ -29,13 +29,12 @@ use xla::PjRtBuffer;
 
 use crate::cache::{ExpertCache, Policy};
 use crate::config::{DeviceProfile, ModelConfig, Quant};
-use crate::flash::FlashSim;
 use crate::model::arena::{LayerArena, StagedLayer};
-use crate::model::prefetch::Prefetcher;
 use crate::model::sampler::{log_prob, Sampler};
 use crate::policy::{EvictionFactory, OriginalPolicy, RoutingPolicy};
 use crate::routing::{self, RouterState, Strategy};
 use crate::runtime::Runtime;
+use crate::store::{self, ExpertStore, TierStats};
 use crate::tracesim::Trace;
 use crate::util::json::Json;
 use crate::weights::FlashImage;
@@ -103,9 +102,11 @@ impl EngineOptions {
 ///
 /// The canonical construction path since the policy-stack redesign. It
 /// accepts routing/eviction as registry specs (`"cache-prior:0.5:2"`,
-/// `"belady:trace=FILE"`) or as trait objects, defaults the cache
-/// capacity to half the experts (the paper's setting) when unset, and
-/// keeps [`EngineOptions`] down to the flat simulation knobs.
+/// `"belady:trace=FILE"`) or as trait objects, the storage backend as a
+/// [`crate::store`] spec (`"sim:profile=device-12gb"`, `"mmap"`, `"mem"`),
+/// defaults the cache capacity to half the experts (the paper's setting)
+/// when unset, and keeps [`EngineOptions`] down to the flat simulation
+/// knobs.
 ///
 /// ```no_run
 /// use moe_cache::model::EngineBuilder;
@@ -116,6 +117,7 @@ impl EngineOptions {
 ///     .cache_capacity(30)
 ///     .routing_spec("cache-prior:0.5:2")?
 ///     .eviction_spec("lfu-decay:128")?
+///     .store_spec("sim:profile=device-12gb")?
 ///     .seed(7)
 ///     .build()?;
 /// # Ok(())
@@ -129,6 +131,7 @@ pub struct EngineBuilder {
     cache_capacity: Option<usize>,
     routing: Option<Box<dyn RoutingPolicy>>,
     eviction: Option<EvictionFactory>,
+    store: Option<String>,
 }
 
 impl EngineBuilder {
@@ -141,6 +144,7 @@ impl EngineBuilder {
             cache_capacity: None,
             routing: None,
             eviction: None,
+            store: None,
         }
     }
 
@@ -213,6 +217,16 @@ impl EngineBuilder {
         Ok(self)
     }
 
+    /// Storage backend from a registry spec (e.g. `"sim:profile=device-12gb"`,
+    /// `"mmap"`, `"mem"`). Validated here (grammar + name); the backend is
+    /// built against the opened flash image in [`EngineBuilder::build`].
+    /// Defaults to the virtual-clock `sim` store on [`EngineOptions::device`].
+    pub fn store_spec(mut self, spec: &str) -> Result<Self> {
+        store::validate_store_spec(spec)?;
+        self.store = Some(spec.to_string());
+        Ok(self)
+    }
+
     pub fn build(self) -> Result<Engine> {
         let rt = match self.runtime {
             Some(rt) => rt,
@@ -228,7 +242,15 @@ impl EngineBuilder {
         let eviction = self
             .eviction
             .unwrap_or_else(|| EvictionFactory::from_policy(opts.policy));
-        Engine::build_from_parts(rt, &self.artifacts, &self.model, opts, routing, eviction)
+        Engine::build_from_parts(
+            rt,
+            &self.artifacts,
+            &self.model,
+            opts,
+            routing,
+            eviction,
+            self.store.as_deref(),
+        )
     }
 }
 
@@ -324,7 +346,8 @@ impl SessionState {
 pub struct Engine {
     pub rt: Runtime,
     pub cfg: ModelConfig,
-    /// Shared with the prefetch workers; immutable after open.
+    /// Metadata + static-weight reads; the decode-path expert traffic goes
+    /// through [`Engine::expert_store`] instead. Immutable after open.
     pub image: Arc<FlashImage>,
     pub opts: EngineOptions,
     statics: StaticWeights,
@@ -339,7 +362,10 @@ pub struct Engine {
     /// staged key is unchanged.
     staged_dev: Vec<Option<(PjRtBuffer, PjRtBuffer, PjRtBuffer)>>,
     pub router_state: RouterState,
-    pub flash: FlashSim,
+    /// The storage tier serving (and accounting for) expert bytes — the
+    /// third pluggable axis next to routing and eviction. Read through
+    /// [`Engine::tier_stats`].
+    store: Box<dyn ExpertStore>,
     /// The active routing policy (a [`crate::policy`] trait object; the
     /// legacy `opts.strategy` enum is only its construction-time seed).
     routing: Box<dyn RoutingPolicy>,
@@ -364,8 +390,6 @@ pub struct Engine {
     kv_append_ok: bool,
     pos: usize,
     token_counter: u64,
-    /// Async expert-fetch pipeline (None = disabled, the default).
-    prefetch: Option<Prefetcher>,
     /// Previous token's selection per layer — the prefetcher's reuse
     /// signal.
     last_sel: Vec<Vec<u32>>,
@@ -394,7 +418,7 @@ impl Engine {
     ) -> Result<Self> {
         let routing = crate::policy::from_strategy(&opts.strategy);
         let eviction = EvictionFactory::from_policy(opts.policy);
-        Self::build_from_parts(rt, artifacts, cfg_name, opts, routing, eviction)
+        Self::build_from_parts(rt, artifacts, cfg_name, opts, routing, eviction, None)
     }
 
     /// The one real constructor: everything above funnels here.
@@ -405,6 +429,7 @@ impl Engine {
         opts: EngineOptions,
         routing: Box<dyn RoutingPolicy>,
         eviction: EvictionFactory,
+        store_spec: Option<&str>,
     ) -> Result<Self> {
         // A live engine never supplies the next-use closure, so an
         // oracle-requiring policy (plain `belady`) would panic at the
@@ -419,6 +444,16 @@ impl Engine {
         let image = Arc::new(FlashImage::open_artifact(artifacts, cfg_name, opts.quant)?);
         let cfg = rt.config.clone();
         anyhow::ensure!(image.config == cfg, "flash image / manifest config mismatch");
+
+        // The storage tier: built against the opened image so spec
+        // defaults (mmap path, device profile) come from this engine's
+        // configuration. Default is the seed-parity virtual-clock sim.
+        let store_ctx = store::StoreCtx {
+            image: &image,
+            image_path: FlashImage::artifact_path(artifacts, cfg_name, opts.quant),
+            device: opts.device.clone(),
+        };
+        let store = store::parse_store(store_spec.unwrap_or("sim"), &store_ctx)?;
 
         // Upload static weights once (DRAM-resident per the paper §2.2).
         let d = cfg.d_model;
@@ -475,7 +510,7 @@ impl Engine {
         let trace = Trace::new(cfg.n_experts, cfg.n_layers);
         Ok(Engine {
             router_state: RouterState::new(cfg.n_layers, opts.seed),
-            flash: FlashSim::new(opts.device.clone()),
+            store,
             routing,
             routing_fallback: Box::new(OriginalPolicy),
             eviction,
@@ -487,7 +522,6 @@ impl Engine {
             kv_append_ok,
             pos: 0,
             token_counter: 0,
-            prefetch: None,
             last_sel: vec![Vec::new(); cfg.n_layers],
             staged_dev: (0..cfg.n_layers).map(|_| None).collect(),
             trace,
@@ -518,40 +552,34 @@ impl Engine {
         self.kv_append_ok
     }
 
-    /// Turn on the async expert-fetch pipeline: `workers` background
-    /// threads fetch + dequantize the next layer's predicted selection (the
-    /// cache-aware router's reuse signal) while the current layer's
-    /// dispatches run. Off by default — without it every simulator metric
-    /// is bit-identical to the pre-pipeline engine; with it, consumed
-    /// prefetches are charged through the deterministic overlap model in
-    /// [`FlashSim::read_flash_prefetched`].
+    /// Turn on the store's async expert-fetch pipeline: `workers`
+    /// background threads fetch + dequantize the next layer's predicted
+    /// selection (the cache-aware router's reuse signal) while the current
+    /// layer's dispatches run. Off by default — without it every simulator
+    /// metric is bit-identical to the pre-pipeline engine; with it, the
+    /// `sim` store charges consumed prefetches through the deterministic
+    /// overlap model in [`crate::flash::FlashSim::read_flash_prefetched`].
+    /// No-op on backends without a pipeline.
     pub fn enable_prefetch(&mut self, workers: usize) {
-        if self.prefetch.is_none() {
-            self.prefetch = Some(Prefetcher::new(workers));
-        }
+        self.store.enable_prefetch(workers);
     }
 
-    /// (issued, used, in_flight) totals of the prefetch pipeline.
+    /// (issued, used, in_flight) totals of the store's prefetch pipeline.
     pub fn prefetch_stats(&self) -> (u64, u64, usize) {
-        self.prefetch
-            .as_ref()
-            .map(|p| (p.issued, p.used, p.in_flight()))
-            .unwrap_or((0, 0, 0))
+        self.store.prefetch_stats()
     }
 
-    /// Issue prefetches for `layer`'s predicted misses (the previous
+    /// Issue prefetch hints for `layer`'s predicted misses (the previous
     /// token's reuse signal, skipping experts already cached). No-op with
     /// prefetching disabled.
     fn issue_prefetch_for_layer(&mut self, layer: usize) {
-        if self.prefetch.is_none() {
+        if !self.store.prefetch_enabled() {
             return;
         }
         for i in 0..self.last_sel[layer].len() {
             let e = self.last_sel[layer][i];
             if !self.caches[layer].contains(e) {
-                if let Some(p) = self.prefetch.as_mut() {
-                    p.issue(&self.image, layer, e);
-                }
+                self.store.prefetch(layer, e);
             }
         }
     }
@@ -581,12 +609,10 @@ impl Engine {
         for s in &mut self.last_sel {
             s.clear();
         }
-        if let Some(p) = self.prefetch.as_mut() {
-            p.reset();
-        }
         // Staged buffers stay: their keys name immutable expert weights,
         // so the content remains bit-exact whenever those experts return.
-        self.flash.reset();
+        // The store rewinds its accounting and cancels pending prefetches.
+        self.store.reset();
         self.token_counter = 0;
         self.router_state = RouterState::new(self.cfg.n_layers, self.opts.seed);
         self.trace = Trace::new(self.cfg.n_experts, self.cfg.n_layers);
@@ -602,11 +628,8 @@ impl Engine {
             self.caches[l].warm(&all, self.token_counter);
             for &e in &all {
                 let slot = self.arenas[l].alloc_cache_slot(e)?;
-                let bytes = {
-                    let (w1, w3, w2) = self.arenas[l].slot_mut(slot);
-                    self.image.fetch_expert_into(l, e as usize, false, w1, w3, w2)?
-                };
-                self.flash.read_flash(bytes);
+                let (w1, w3, w2) = self.arenas[l].slot_mut(slot);
+                self.store.fetch_into(l, e as usize, w1, w3, w2)?;
             }
         }
         Ok(())
@@ -748,33 +771,17 @@ impl Engine {
                 &sel.experts,
             )?;
             for ms in &plan {
-                let pre = match self.prefetch.as_mut().and_then(|p| p.take(l, ms.expert)) {
-                    Some(Ok(w)) => Some(w),
-                    Some(Err(e)) => return Err(e),
-                    None => None,
-                };
-                match pre {
-                    Some(w) => {
-                        let (w1, w3, w2) = self.arenas[l].slot_mut(ms.slot);
-                        w1.copy_from_slice(&w.w1);
-                        w3.copy_from_slice(&w.w3);
-                        w2.copy_from_slice(&w.w2);
-                        self.flash.read_flash_prefetched(w.flash_bytes);
-                        step_stats.prefetch_hits += 1;
-                    }
+                let (w1, w3, w2) = self.arenas[l].slot_mut(ms.slot);
+                match self.store.take_prefetched(l, ms.expert, w1, w3, w2)? {
+                    Some(_) => step_stats.prefetch_hits += 1,
                     None => {
-                        let bytes = {
-                            let (w1, w3, w2) = self.arenas[l].slot_mut(ms.slot);
-                            self.image
-                                .fetch_expert_into(l, ms.expert as usize, false, w1, w3, w2)?
-                        };
-                        self.flash.read_flash(bytes);
+                        self.store.fetch_into(l, ms.expert as usize, w1, w3, w2)?;
                     }
                 }
                 step_stats.flash_bytes += bytes_per;
             }
-            // Hits stream from DRAM.
-            self.flash.read_dram(access.hits as u64 * bytes_per);
+            // Hits stream from the fast tier.
+            self.store.charge_hit(access.hits as u64, bytes_per);
             step_stats.t_fetch_s += t0.elapsed().as_secs_f64();
 
             // ---- stacked experts dispatch (staged-set reuse) ----
@@ -827,7 +834,7 @@ impl Engine {
             // experts in from.
             let last = &mut self.last_sel[l];
             last.clear();
-            if self.prefetch.is_some() {
+            if self.store.prefetch_enabled() {
                 // Partial selection: the feed only ever consumes the
                 // top-2K band, so skip the full argsort.
                 let r = routing::ranking_topk(&sel.weights, 2 * top_k);
@@ -863,7 +870,8 @@ impl Engine {
         }
         self.pos += 1;
         self.token_counter += 1;
-        self.flash.end_token(self.resident_bytes());
+        let resident = self.resident_bytes();
+        self.store.end_token(resident);
         self.last_step = step_stats;
         Ok(logits)
     }
@@ -947,6 +955,25 @@ impl Engine {
         s.policy_state = outgoing;
         self.kv_dev_k.iter_mut().for_each(|b| *b = None);
         self.kv_dev_v.iter_mut().for_each(|b| *b = None);
+    }
+
+    // ---------------- storage-tier accessors -------------------------------
+
+    /// Snapshot of the storage tier's accounting (hit/miss bytes, virtual
+    /// or measured time, prefetch totals) — the read surface that replaced
+    /// the old public `FlashSim` counters.
+    pub fn tier_stats(&self) -> TierStats {
+        self.store.stats()
+    }
+
+    /// Canonical spec label of the active storage backend.
+    pub fn store_label(&self) -> String {
+        self.store.label()
+    }
+
+    /// The active storage backend (introspection / span metadata).
+    pub fn expert_store(&self) -> &dyn ExpertStore {
+        self.store.as_ref()
     }
 
     // ---------------- policy accessors ------------------------------------

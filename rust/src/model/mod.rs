@@ -5,10 +5,12 @@
 //! through the DRAM cache into the slot arena → stacked `experts`
 //! dispatch) → `lm_head`. Expert weights are runtime arguments to the
 //! `experts` executable, so the Rust cache genuinely owns them: a miss
-//! reads quantized bytes from the flash image (charging the flash
-//! simulator) and dequantizes straight into its arena slot; a hit costs a
-//! slot lookup, and an unchanged selection reuses the previously uploaded
-//! stacked device buffers outright.
+//! fetches quantized bytes through the engine's pluggable
+//! [`crate::store::ExpertStore`] backend (virtual-clock simulation,
+//! memory-mapped measured I/O, or all-resident) and dequantizes straight
+//! into its arena slot; a hit costs a slot lookup, and an unchanged
+//! selection reuses the previously uploaded stacked device buffers
+//! outright.
 //!
 //! See [`engine::Engine`] for the main type; [`arena`] for the slot-arena
 //! staging, [`prefetch`] for the async expert-fetch pipeline, and

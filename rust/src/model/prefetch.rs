@@ -13,9 +13,16 @@
 //! table until that expert actually misses, or until the table is cleared.
 //!
 //! Wall-clock overlap is real (worker threads vs. the PJRT dispatch); the
-//! *virtual* clock stays deterministic — consumed prefetches are charged
-//! through [`crate::flash::FlashSim::read_flash_prefetched`], which hides
-//! at most one token's compute window regardless of thread timing.
+//! *virtual* clock stays deterministic — the `sim` store charges consumed
+//! prefetches through [`crate::flash::FlashSim::read_flash_prefetched`],
+//! which hides at most one token's compute window regardless of thread
+//! timing.
+//!
+//! Since the storage-tier redesign the pipeline is owned by the store
+//! backends ([`crate::store::SimStore`] / [`crate::store::MmapStore`]):
+//! the engine only emits `prefetch` hints and `take_prefetched` claims
+//! through the [`crate::store::ExpertStore`] trait, and each backend does
+//! its own charging.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;

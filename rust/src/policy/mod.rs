@@ -46,8 +46,8 @@ pub use evictors::{
     BeladyExternal, BeladyTrace, EvictionFactory, LfuDecay, LfuEviction, LruEviction,
 };
 pub use registry::{
-    eviction_entries, parse_eviction, parse_routing, policy_from_spec, registry_help,
-    routing_entries, spec_grid, strategy_from_spec, EvictionEntry, GridCtx, RoutingEntry,
+    eviction_entries, parse_eviction, parse_routing, registry_help, routing_entries,
+    spec_grid, EvictionEntry, GridCtx, RoutingEntry,
 };
 pub use routers::{
     from_strategy, CachePriorPolicy, CumsumPolicy, MaxRankPolicy, OriginalPolicy,

@@ -3,10 +3,11 @@
 //! hyperparameter sweep grid.
 //!
 //! This is the single source of truth that replaced the three divergent
-//! `parse()` paths (`routing::Strategy::parse`, `cache::Policy::parse`,
-//! ad-hoc CLI flag handling) and the second exhaustive
-//! `strategy_param`/`strategy_family` match in `eval::sweep`. Unknown
-//! names fail with an error that enumerates the registered entries.
+//! seed `parse()` paths (the `Strategy`/`Policy` enum parsers and ad-hoc
+//! CLI flag handling — their one-release deprecated shims are gone now)
+//! and the second exhaustive `strategy_param`/`strategy_family` match in
+//! `eval::sweep`. Unknown names fail with an error that enumerates the
+//! registered entries.
 //!
 //! Adding a policy = implement the trait in its own file + append one
 //! entry here (see `docs/POLICIES.md` for the walkthrough).
@@ -16,8 +17,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::cache::Policy;
-use crate::routing::{DeltaMode, Strategy};
+use crate::routing::DeltaMode;
 use crate::tracesim::{NextUseOracle, Trace};
 
 use super::evictors::{BeladyExternal, BeladyTrace, EvictionFactory, LfuDecay, LfuEviction, LruEviction};
@@ -358,77 +358,8 @@ pub fn parse_eviction(spec: &str) -> Result<EvictionFactory> {
     )
 }
 
-/// Deprecated-shim support: parse a spec into the legacy
-/// [`Strategy`] enum (only the six seed strategies are representable).
-pub fn strategy_from_spec(spec: &str) -> Result<Strategy> {
-    let a = SpecArgs::parse(spec)?;
-    match a.name() {
-        "original" => {
-            a.no_args()?;
-            Ok(Strategy::Original)
-        }
-        "pruning" => Ok(Strategy::Pruning { keep: a.usize_req(0, "keep")? }),
-        "swap" => Ok(Strategy::SwapAtRank { rank: a.usize_req(0, "rank")? }),
-        "max-rank" => Ok(Strategy::MaxRank {
-            m: a.usize_req(0, "m")?,
-            j: a.usize_or(1, "j", 1)?,
-        }),
-        "cumsum" => Ok(Strategy::CumsumThreshold {
-            p: a.f32_req(0, "p")?,
-            j: a.usize_or(1, "j", 1)?,
-        }),
-        "cache-prior" => Ok(Strategy::CachePrior {
-            lambda: a.f32_req(0, "lambda")?,
-            j: a.usize_or(1, "j", 1)?,
-            delta: parse_delta(&a)?,
-        }),
-        other => anyhow::bail!(
-            "unknown routing policy {other:?}; registered: {}",
-            routing_names()
-        ),
-    }
-}
-
-/// Deprecated-shim support: parse a spec into the legacy
-/// [`Policy`] enum (only lru/lfu/plain-belady are representable).
-pub fn policy_from_spec(spec: &str) -> Result<Policy> {
-    let a = SpecArgs::parse(spec)?;
-    match a.name() {
-        "lru" => {
-            a.no_args()?;
-            Ok(Policy::Lru)
-        }
-        "lfu" => {
-            a.no_args()?;
-            Ok(Policy::Lfu)
-        }
-        "belady" | "optimal" => {
-            anyhow::ensure!(
-                a.get(0, "trace").is_none(),
-                "{spec:?} is not representable as the legacy cache::Policy enum; \
-                 pass it to EngineBuilder::eviction_spec / --policy instead"
-            );
-            Ok(Policy::Belady)
-        }
-        other => {
-            for e in EVICTION_ENTRIES {
-                if e.name == other || e.aliases.contains(&other) {
-                    anyhow::bail!(
-                        "{spec:?} is not representable as the legacy cache::Policy enum; \
-                         pass it to EngineBuilder::eviction_spec / --policy instead"
-                    );
-                }
-            }
-            anyhow::bail!(
-                "unknown eviction policy {other:?}; registered: {}",
-                eviction_names()
-            )
-        }
-    }
-}
-
 /// The registry-driven sweep grid: spec strings in registration order,
-/// replacing the hand-maintained `strategy_grid` match. The sparse/dense
+/// replacing the hand-maintained seed grid match. The sparse/dense
 /// hyperparameter values are identical to the seed grids (§4.2).
 pub fn spec_grid(top_k: usize, n_experts: usize, j: usize, dense: bool) -> Vec<String> {
     let ctx = GridCtx { top_k, n_experts, j, dense };
@@ -486,33 +417,14 @@ mod tests {
     }
 
     #[test]
-    fn legacy_shims_agree_with_registry() {
-        for s in ["original", "pruning:1", "swap:2", "max-rank:6:1", "cumsum:0.7:2", "cache-prior:0.5:1"] {
-            let via_enum = strategy_from_spec(s).unwrap();
-            assert_eq!(via_enum.label(), parse_routing(s).unwrap().label());
-        }
-        assert_eq!(policy_from_spec("lru").unwrap(), Policy::Lru);
-        assert_eq!(policy_from_spec("optimal").unwrap(), Policy::Belady);
-        assert!(policy_from_spec("lfu-decay:64").is_err());
-        assert!(policy_from_spec("belady:trace=x.json").is_err());
-    }
-
-    #[test]
-    fn delta_arg_has_one_interpretation_across_shim_and_registry() {
-        use crate::routing::DeltaMode;
-        // Registry build and legacy-enum shim must agree on delta.
-        let s = strategy_from_spec("cache-prior:0.5:1:per-token").unwrap();
-        assert_eq!(
-            s,
-            Strategy::CachePrior { lambda: 0.5, j: 1, delta: DeltaMode::PerToken }
-        );
-        assert!(parse_routing("cache-prior:0.5:1:per-token").unwrap().cache_aware());
-        // Default stays RunningAvg (seed parity); bad values error.
-        assert_eq!(
-            strategy_from_spec("cache-prior:0.5:1").unwrap(),
-            Strategy::CachePrior { lambda: 0.5, j: 1, delta: DeltaMode::RunningAvg }
-        );
-        assert!(strategy_from_spec("cache-prior:0.5:1:bogus").is_err());
+    fn delta_arg_has_one_interpretation() {
+        // Both delta spellings build, per-token round-trips in the label,
+        // bad values error, the default stays RunningAvg (seed parity).
+        let p = parse_routing("cache-prior:0.5:1:per-token").unwrap();
+        assert!(p.cache_aware());
+        assert_eq!(p.label(), "cache-prior:0.5:1:per-token");
+        assert_eq!(parse_routing("cache-prior:0.5:1").unwrap().label(), "cache-prior:0.5:1");
+        assert!(parse_routing("cache-prior:0.5:1:bogus").is_err());
         assert!(parse_routing("cache_prior:lambda=0.5:delta=per_token").is_ok());
     }
 

@@ -156,13 +156,15 @@ pub enum DeltaMode {
 /// assert_eq!(original.experts, vec![0, 1]);    // plain top-K ignores the cache
 /// ```
 ///
-/// Strategies parse from the CLI syntax shown in [`Strategy::parse`] and
-/// round-trip through [`Strategy::label`]:
+/// Strategies label themselves in the unified spec grammar
+/// ([`Strategy::label`]); spec *parsing* lives in the registry
+/// ([`crate::policy::parse_routing`]), which returns trait objects and
+/// also covers policies this closed enum cannot represent:
 ///
 /// ```
 /// use moe_cache::routing::Strategy;
 ///
-/// let s = Strategy::parse("max-rank:6:1").unwrap();
+/// let s = Strategy::MaxRank { m: 6, j: 1 };
 /// assert_eq!(s.label(), "max-rank:6:1");
 /// assert!(s.cache_aware());
 /// assert!(!Strategy::Original.cache_aware());
@@ -181,19 +183,6 @@ pub enum Strategy {
 }
 
 impl Strategy {
-    /// Parse e.g. "original", "pruning:1", "max-rank:6:1",
-    /// "cumsum:0.7:1", "cache-prior:0.5:2", "swap:2".
-    ///
-    /// **Deprecated shim** (kept one release): this is now a thin wrapper
-    /// over the unified [`crate::policy`] spec grammar, which also accepts
-    /// named args (`cache_prior:lambda=0.5:j=2`) and enumerates the
-    /// registered policies on unknown names. New code should use
-    /// [`crate::policy::parse_routing`], which returns the trait object
-    /// directly and covers policies this closed enum cannot represent.
-    pub fn parse(s: &str) -> anyhow::Result<Strategy> {
-        crate::policy::strategy_from_spec(s)
-    }
-
     pub fn label(&self) -> String {
         match self {
             Strategy::Original => "original".into(),
@@ -707,18 +696,19 @@ mod tests {
     }
 
     #[test]
-    fn strategy_parse_roundtrip() {
+    fn strategy_labels_roundtrip_through_registry() {
+        // The enum's labels must stay valid registry specs: parsing a
+        // label through crate::policy and re-labelling is the identity.
         for s in [
-            "original",
-            "pruning:1",
-            "swap:2",
-            "max-rank:6:1",
-            "cumsum:0.7:2",
-            "cache-prior:0.5:1",
+            Strategy::Original,
+            Strategy::Pruning { keep: 1 },
+            Strategy::SwapAtRank { rank: 2 },
+            Strategy::MaxRank { m: 6, j: 1 },
+            Strategy::CumsumThreshold { p: 0.7, j: 2 },
+            Strategy::CachePrior { lambda: 0.5, j: 1, delta: DeltaMode::RunningAvg },
         ] {
-            let st = Strategy::parse(s).unwrap();
-            assert_eq!(Strategy::parse(&st.label()).unwrap(), st);
+            let p = crate::policy::parse_routing(&s.label()).unwrap();
+            assert_eq!(p.label(), s.label());
         }
-        assert!(Strategy::parse("bogus").is_err());
     }
 }

@@ -1,0 +1,99 @@
+//! `MemStore`: everything resident — the DRAM-unbounded upper bound.
+//!
+//! Models a host with enough memory to pin every routed expert: the first
+//! touch of an expert loads it (uncharged, as part of the one-off model
+//! load), and every subsequent access — hit *or* miss at the cache level —
+//! streams from DRAM at the profile's DRAM bandwidth. No flash reads, no
+//! memory-pressure penalty. This is the asymptote the Fig. 8 hit-rate ↔
+//! throughput line approaches as the hit rate goes to 1: with it, a
+//! sweep's throughput can be reported relative to a true upper bound
+//! instead of its own best point.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::DeviceProfile;
+use crate::weights::{ExpertWeights, FlashImage};
+
+use super::{ExpertStore, SpanMeta, TierStats};
+
+pub struct MemStore {
+    image: Arc<FlashImage>,
+    profile: DeviceProfile,
+    /// Lazily-filled resident set: (layer, expert) -> dequantized weights.
+    resident: HashMap<(usize, usize), ExpertWeights>,
+    stats: TierStats,
+}
+
+impl MemStore {
+    pub fn new(image: Arc<FlashImage>, profile: DeviceProfile) -> Self {
+        MemStore { image, profile, resident: HashMap::new(), stats: TierStats::default() }
+    }
+
+    /// Experts currently materialized in the resident set.
+    pub fn resident_experts(&self) -> usize {
+        self.resident.len()
+    }
+}
+
+impl ExpertStore for MemStore {
+    fn label(&self) -> String {
+        format!("mem:profile={}", self.profile.name)
+    }
+
+    fn span_meta(&self, layer: usize, expert: usize) -> Result<SpanMeta> {
+        let s = self.image.expert_span(layer, expert, false)?;
+        Ok(SpanMeta { offset: s.offset, bytes: s.bytes })
+    }
+
+    fn fetch_into(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        w1: &mut [f32],
+        w3: &mut [f32],
+        w2: &mut [f32],
+    ) -> Result<u64> {
+        let bytes = self.image.expert_span(layer, expert, false)?.bytes;
+        if !self.resident.contains_key(&(layer, expert)) {
+            // First touch: materialize into the resident set. Not charged —
+            // it models the one-off load of a model that fits DRAM whole,
+            // not steady-state serving traffic.
+            let w = self.image.fetch_expert(layer, expert, false)?;
+            self.resident.insert((layer, expert), w);
+        }
+        let w = &self.resident[&(layer, expert)];
+        w1.copy_from_slice(&w.w1);
+        w3.copy_from_slice(&w.w3);
+        w2.copy_from_slice(&w.w2);
+        // A cache-level miss still moves the expert's bytes — but from
+        // DRAM, at DRAM bandwidth. The flash counters stay at zero.
+        self.stats.dram_bytes += bytes;
+        self.stats.time_s += bytes as f64 / self.profile.dram_bw_bytes_per_s;
+        Ok(bytes)
+    }
+
+    fn charge_hit(&mut self, hits: u64, bytes_per_expert: u64) {
+        let bytes = hits * bytes_per_expert;
+        self.stats.dram_bytes += bytes;
+        self.stats.time_s += bytes as f64 / self.profile.dram_bw_bytes_per_s;
+    }
+
+    fn end_token(&mut self, _resident_bytes: u64) {
+        // Unbounded DRAM: compute is charged, pressure never is.
+        self.stats.tokens += 1;
+        self.stats.time_s += self.profile.compute_per_token_s;
+    }
+
+    fn stats(&self) -> TierStats {
+        self.stats.clone()
+    }
+
+    fn reset(&mut self) {
+        // The resident set survives (the weights are immutable); only the
+        // accounting rewinds.
+        self.stats = TierStats::default();
+    }
+}

@@ -1,0 +1,251 @@
+//! `MmapStore`: the measured backend — the artifact's flash image is
+//! memory-mapped and every expert fetch dequantizes straight out of the
+//! mapping, timed with a real wall clock.
+//!
+//! Where [`super::SimStore`] *models* device time, this backend *measures*
+//! it: [`TierStats::time_s`] / [`TierStats::fetch_wall_s`] accumulate the
+//! wall-clock seconds the process actually spent inside fetches (page
+//! faults + dequantization), and [`TierStats::mean_fetch_latency_s`]
+//! reports the per-fetch latency. Byte totals (`flash_bytes`,
+//! `flash_reads`, `dram_bytes`) follow the same accounting contract as the
+//! simulator, so hit/miss byte counters are directly comparable across
+//! backends.
+//!
+//! The mapping is created through a minimal `mmap(2)` FFI shim (read-only,
+//! private) — no extra crates; the image format is identical to what
+//! [`FlashImage`] reads with `pread`, and the dequantization goes through
+//! the very same [`FlashImage::dequant_expert_span`], so fetched weights
+//! are bit-identical to the reader path (pinned by `tests/store_parity.rs`).
+
+use std::fs::File;
+use std::os::raw::{c_int, c_void};
+use std::os::unix::io::AsRawFd;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::model::prefetch::Prefetcher;
+use crate::weights::FlashImage;
+
+use super::{ExpertStore, SpanMeta, TierStats};
+
+extern "C" {
+    fn mmap(
+        addr: *mut c_void,
+        len: usize,
+        prot: c_int,
+        flags: c_int,
+        fd: c_int,
+        offset: i64,
+    ) -> *mut c_void;
+    fn munmap(addr: *mut c_void, len: usize) -> c_int;
+}
+
+const PROT_READ: c_int = 1;
+const MAP_PRIVATE: c_int = 2;
+
+/// A read-only private mapping of one file. Unmapped on drop.
+struct Mapping {
+    ptr: *mut c_void,
+    len: usize,
+}
+
+// The mapping is read-only and owned exclusively by the store; raw-pointer
+// reads from another thread would only ever see the immutable file bytes.
+unsafe impl Send for Mapping {}
+
+impl Mapping {
+    fn map(file: &File) -> Result<Self> {
+        let len = file.metadata()?.len() as usize;
+        anyhow::ensure!(len > 0, "cannot mmap an empty image");
+        // SAFETY: we request a fresh read-only private mapping of `len`
+        // bytes backed by `file`; the kernel either returns a valid region
+        // of that length or MAP_FAILED, which we turn into an error.
+        let ptr = unsafe {
+            mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, file.as_raw_fd(), 0)
+        };
+        // MAP_FAILED is (void*)-1.
+        anyhow::ensure!(
+            !ptr.is_null() && ptr as usize != usize::MAX,
+            "mmap failed: {}",
+            std::io::Error::last_os_error()
+        );
+        Ok(Mapping { ptr, len })
+    }
+
+    fn as_slice(&self) -> &[u8] {
+        // SAFETY: `ptr` is a live PROT_READ mapping of exactly `len` bytes
+        // (established in `map`, released only in `drop`).
+        unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+    }
+}
+
+impl Drop for Mapping {
+    fn drop(&mut self) {
+        // SAFETY: `ptr`/`len` describe the mapping created in `map`.
+        unsafe {
+            munmap(self.ptr, self.len);
+        }
+    }
+}
+
+pub struct MmapStore {
+    /// Reader for the same file: header metadata, span table, dequant —
+    /// and the pread path the async prefetch workers use.
+    image: Arc<FlashImage>,
+    map: Mapping,
+    payload_start: u64,
+    /// The mapped file, kept for the round-tripping spec label.
+    path: std::path::PathBuf,
+    stats: TierStats,
+    prefetcher: Option<Prefetcher>,
+}
+
+impl MmapStore {
+    /// Map the flash image at `path`.
+    pub fn open(path: &Path) -> Result<Self> {
+        let image = Arc::new(
+            FlashImage::open(path)
+                .with_context(|| format!("opening mmap store image {}", path.display()))?,
+        );
+        let file = File::open(path)
+            .with_context(|| format!("mmap store image {}", path.display()))?;
+        let map = Mapping::map(&file)?;
+        anyhow::ensure!(
+            map.len as u64 >= image.file_bytes,
+            "mapping shorter than the image header claims"
+        );
+        let payload_start = image.payload_start();
+        Ok(MmapStore {
+            image,
+            map,
+            payload_start,
+            path: path.to_path_buf(),
+            stats: TierStats::default(),
+            prefetcher: None,
+        })
+    }
+
+    /// The underlying image metadata (config/span validation).
+    pub fn image(&self) -> &FlashImage {
+        &self.image
+    }
+
+    /// The span's bytes inside the mapping.
+    fn span_slice(&self, offset: u64, bytes: u64) -> Result<&[u8]> {
+        let start = (self.payload_start + offset) as usize;
+        let end = start + bytes as usize;
+        anyhow::ensure!(end <= self.map.len, "span [{start}, {end}) outside the mapping");
+        Ok(&self.map.as_slice()[start..end])
+    }
+}
+
+impl ExpertStore for MmapStore {
+    fn label(&self) -> String {
+        // The path arg round-trips so a run's store can be reconstructed
+        // from its label alone (the default path differs per engine).
+        // Caveat: the spec grammar splits on ':', so a path containing a
+        // colon cannot round-trip — the artifact layout never produces
+        // one, and such a path is only reachable via MmapStore::open.
+        format!("mmap:path={}", self.path.display())
+    }
+
+    fn span_meta(&self, layer: usize, expert: usize) -> Result<SpanMeta> {
+        let s = self.image.expert_span(layer, expert, false)?;
+        Ok(SpanMeta { offset: s.offset, bytes: s.bytes })
+    }
+
+    fn fetch_into(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        w1: &mut [f32],
+        w3: &mut [f32],
+        w2: &mut [f32],
+    ) -> Result<u64> {
+        let t0 = Instant::now();
+        let span = self.image.expert_span(layer, expert, false)?.clone();
+        let raw = self.span_slice(span.offset, span.bytes)?;
+        self.image
+            .dequant_expert_span(layer, expert, false, raw, span.offset, w1, w3, w2)?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.stats.time_s += dt;
+        self.stats.fetch_wall_s += dt;
+        self.stats.flash_reads += 1;
+        self.stats.flash_bytes += span.bytes;
+        Ok(span.bytes)
+    }
+
+    fn prefetch(&mut self, layer: usize, expert: u32) {
+        if let Some(p) = self.prefetcher.as_mut() {
+            p.issue(&self.image, layer, expert);
+        }
+    }
+
+    fn take_prefetched(
+        &mut self,
+        layer: usize,
+        expert: u32,
+        w1: &mut [f32],
+        w3: &mut [f32],
+        w2: &mut [f32],
+    ) -> Result<Option<u64>> {
+        // Measured backend: the charge is the *blocking* part only — the
+        // wall time this thread waits for the worker plus the copy; the
+        // overlapped fetch itself ran off-thread.
+        let t0 = Instant::now();
+        match super::claim_prefetched(&mut self.prefetcher, layer, expert, w1, w3, w2)? {
+            None => Ok(None),
+            Some(bytes) => {
+                let dt = t0.elapsed().as_secs_f64();
+                self.stats.time_s += dt;
+                self.stats.fetch_wall_s += dt;
+                self.stats.flash_reads += 1;
+                self.stats.flash_bytes += bytes;
+                self.stats.prefetch_reads += 1;
+                self.stats.prefetch_bytes += bytes;
+                Ok(Some(bytes))
+            }
+        }
+    }
+
+    fn enable_prefetch(&mut self, workers: usize) -> bool {
+        if self.prefetcher.is_none() {
+            self.prefetcher = Some(Prefetcher::new(workers));
+        }
+        true
+    }
+
+    fn prefetch_enabled(&self) -> bool {
+        self.prefetcher.is_some()
+    }
+
+    fn prefetch_stats(&self) -> (u64, u64, usize) {
+        super::pipeline_stats(&self.prefetcher)
+    }
+
+    fn charge_hit(&mut self, hits: u64, bytes_per_expert: u64) {
+        // Hits cost a slot lookup, not a byte move — record the streamed
+        // bytes for cross-backend comparability, charge no time.
+        self.stats.dram_bytes += hits * bytes_per_expert;
+    }
+
+    fn end_token(&mut self, _resident_bytes: u64) {
+        // Measured backend: no synthetic compute or pressure charge; the
+        // clock only advances inside fetches.
+        self.stats.tokens += 1;
+    }
+
+    fn stats(&self) -> TierStats {
+        self.stats.clone()
+    }
+
+    fn reset(&mut self) {
+        self.stats = TierStats::default();
+        if let Some(p) = self.prefetcher.as_mut() {
+            p.reset();
+        }
+    }
+}

@@ -1,0 +1,427 @@
+//! The pluggable storage tier: one `ExpertStore` trait in front of every
+//! way expert bytes can be served.
+//!
+//! The paper's premise is a two-tier memory hierarchy — only a subset of
+//! expert weights fits DRAM, and decode throughput is governed by which
+//! tier each selected expert is served from (§3, Fig. 8). This module
+//! turns that hierarchy into an API, the system's third pluggable axis
+//! next to routing and eviction policies:
+//!
+//! * [`ExpertStore`] — owns the full lifecycle of expert bytes: span
+//!   metadata, demand [`ExpertStore::fetch_into`] (dequantized, straight
+//!   into an arena slot), async [`ExpertStore::prefetch`] hints, hit /
+//!   token-boundary time accounting, and a [`TierStats`] snapshot that
+//!   replaces every direct read of the old `FlashSim` public counters.
+//! * [`SimStore`] — wraps the [`crate::flash::FlashSim`] virtual clock;
+//!   hit/miss totals and `time_s` are bit-identical to the pre-redesign
+//!   engine by construction (pinned by `tests/store_parity.rs`).
+//! * [`MmapStore`] — memory-maps the artifact's flash image and measures
+//!   real wall-clock fetch latency: the first *measured* — not simulated —
+//!   on-device decode path.
+//! * [`MemStore`] — everything resident in DRAM; the unbounded-memory
+//!   upper bound Fig. 8's asymptote approaches.
+//!
+//! ## Spec grammar
+//!
+//! Stores are selected exactly like policies, through the PR-3 registry
+//! grammar (`name[:arg|key=value]...`, `_` ≡ `-`):
+//!
+//! ```text
+//! sim | sim:profile=device-12gb      virtual clock on a device profile
+//! mmap | mmap:path=FILE              memory-mapped image, measured latency
+//! mem  | mem:profile=device-16gb     all experts resident (upper bound)
+//! ```
+//!
+//! Unlike policy specs, building a store needs runtime context (the opened
+//! flash image, the device profile), so parsing happens in two steps:
+//! [`validate_store_spec`] checks the grammar/name up front (the
+//! `EngineBuilder` does this so a typo fails at configuration time) and
+//! [`parse_store`] builds the backend against a [`StoreCtx`].
+//!
+//! ```
+//! use moe_cache::store::validate_store_spec;
+//!
+//! assert!(validate_store_spec("sim").is_ok());
+//! assert!(validate_store_spec("sim:profile=device_12gb").is_ok());
+//! assert!(validate_store_spec("bogus").is_err()); // enumerates the registry
+//! ```
+//!
+//! ## Accounting invariants (the trait contract)
+//!
+//! * `fetch_into` charges exactly one demand miss on the tier that
+//!   actually serves it and returns the bytes moved. Backends with a
+//!   slow tier (`sim`, `mmap`) grow `stats().flash_bytes` by that amount
+//!   and `stats().flash_reads` by one; an all-resident backend (`mem`)
+//!   serves misses from the fast tier — it grows `dram_bytes` and leaves
+//!   every `flash_*` counter at zero.
+//! * `take_prefetched` charges a miss served by the prefetch pipeline
+//!   (counted in both the `flash_*` and `prefetch_*` totals).
+//! * `charge_hit` accounts fast-tier streaming for cache hits; it never
+//!   touches the `flash_*` counters.
+//! * `end_token` closes a token: exactly one `stats().tokens` increment
+//!   per decode step, plus whatever per-token cost the backend models.
+//! * `reset` zeroes the stats and drops pending prefetches; it must not
+//!   reallocate backend resources (maps stay mapped, clocks just rewind).
+//!
+//! See `docs/STORAGE.md` for the add-a-backend walkthrough.
+
+pub mod mem;
+pub mod mmap;
+pub mod sim;
+
+pub use mem::MemStore;
+pub use mmap::MmapStore;
+pub use sim::SimStore;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::DeviceProfile;
+use crate::model::prefetch::Prefetcher;
+use crate::policy::SpecArgs;
+use crate::weights::FlashImage;
+
+// ---------------------------------------------------------------------
+// TierStats
+// ---------------------------------------------------------------------
+
+/// Snapshot of a store's tier accounting — the one read surface that
+/// replaced the old `FlashSim` public counters.
+///
+/// Simulated backends fill `time_s` from their virtual clock; measured
+/// backends (mmap) fill it with real wall-clock fetch time and also
+/// report it under [`TierStats::fetch_wall_s`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TierStats {
+    /// Tier time elapsed (seconds): virtual for `sim`/`mem`, measured
+    /// wall-clock fetch time for `mmap`.
+    pub time_s: f64,
+    /// Bytes moved over the slow tier (demand + prefetched misses).
+    pub flash_bytes: u64,
+    /// Slow-tier reads (one per serviced miss).
+    pub flash_reads: u64,
+    /// Bytes streamed from the fast tier (cache hits).
+    pub dram_bytes: u64,
+    /// Tokens closed with [`ExpertStore::end_token`].
+    pub tokens: u64,
+    /// Accumulated memory-pressure penalty (Fig. 14), simulated backends.
+    pub pressure_s: f64,
+    /// Misses served by the async prefetch pipeline (subset of
+    /// `flash_reads` / `flash_bytes`).
+    pub prefetch_reads: u64,
+    pub prefetch_bytes: u64,
+    /// Slow-tier time hidden behind compute by overlapping (sim pipeline).
+    pub hidden_s: f64,
+    /// Real wall-clock seconds spent inside fetches (measured backends;
+    /// 0 for purely virtual clocks).
+    pub fetch_wall_s: f64,
+}
+
+impl TierStats {
+    /// Tokens per second of tier time so far.
+    pub fn throughput(&self) -> f64 {
+        if self.time_s == 0.0 {
+            0.0
+        } else {
+            self.tokens as f64 / self.time_s
+        }
+    }
+
+    /// Mean measured latency per slow-tier read (0 when nothing was
+    /// measured — virtual backends, or no misses yet).
+    pub fn mean_fetch_latency_s(&self) -> f64 {
+        if self.flash_reads == 0 {
+            0.0
+        } else {
+            self.fetch_wall_s / self.flash_reads as f64
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// SpanMeta + the trait
+// ---------------------------------------------------------------------
+
+/// Metadata of one expert's contiguous span in the slow tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanMeta {
+    /// Offset inside the backing image payload.
+    pub offset: u64,
+    /// Bytes one fetch of this expert moves.
+    pub bytes: u64,
+}
+
+/// A storage backend serving (and accounting for) expert weights.
+///
+/// Object-safe: the engine holds a `Box<dyn ExpertStore>` and drives the
+/// whole decode-time byte lifecycle through it. See the module docs for
+/// the accounting invariants each implementation must uphold.
+pub trait ExpertStore: Send {
+    /// Canonical spec label; must round-trip through [`parse_store`].
+    fn label(&self) -> String;
+
+    /// Span metadata for a routed expert.
+    fn span_meta(&self, layer: usize, expert: usize) -> Result<SpanMeta>;
+
+    /// Demand-fetch one routed expert, dequantized straight into the
+    /// caller's arena-slot views, charging one miss. Returns the bytes
+    /// the slow tier moved.
+    fn fetch_into(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        w1: &mut [f32],
+        w3: &mut [f32],
+        w2: &mut [f32],
+    ) -> Result<u64>;
+
+    /// Async hint: begin staging `(layer, expert)` ahead of demand.
+    /// Cancellable — [`ExpertStore::reset`] drops all pending hints, and
+    /// backends may drop stale hints under pressure. No-op by default
+    /// (backends without a pipeline, or pipeline disabled).
+    fn prefetch(&mut self, _layer: usize, _expert: u32) {}
+
+    /// Claim a prefetched expert into the caller's slot views, charging a
+    /// pipeline-served miss. `Ok(None)` means the pair was never staged
+    /// (or was cancelled) — the caller falls back to
+    /// [`ExpertStore::fetch_into`].
+    fn take_prefetched(
+        &mut self,
+        _layer: usize,
+        _expert: u32,
+        _w1: &mut [f32],
+        _w3: &mut [f32],
+        _w2: &mut [f32],
+    ) -> Result<Option<u64>> {
+        Ok(None)
+    }
+
+    /// Turn the async prefetch pipeline on (`workers` background threads).
+    /// Returns whether the backend supports one; default no.
+    fn enable_prefetch(&mut self, _workers: usize) -> bool {
+        false
+    }
+
+    /// Whether prefetch hints are currently being serviced.
+    fn prefetch_enabled(&self) -> bool {
+        false
+    }
+
+    /// (issued, used, in_flight) pipeline totals.
+    fn prefetch_stats(&self) -> (u64, u64, usize) {
+        (0, 0, 0)
+    }
+
+    /// Account `hits` cache hits streaming from the fast tier.
+    fn charge_hit(&mut self, hits: u64, bytes_per_expert: u64);
+
+    /// Close one token: per-token compute plus the backend's
+    /// memory-pressure model for a resident set of `resident_bytes`.
+    fn end_token(&mut self, resident_bytes: u64);
+
+    /// Snapshot of the tier accounting.
+    fn stats(&self) -> TierStats;
+
+    /// Zero the accounting and drop pending prefetches.
+    fn reset(&mut self);
+}
+
+// ---------------------------------------------------------------------
+// Shared prefetch-pipeline plumbing
+// ---------------------------------------------------------------------
+
+/// Claim a completed prefetch out of a backend's [`Prefetcher`] and copy
+/// it into the caller's slot views, returning the span bytes so the
+/// backend can apply its own time charge. `Ok(None)` = disabled, never
+/// staged, or cancelled. One shared implementation so the claim/copy and
+/// worker-error handling cannot drift between backends.
+pub(crate) fn claim_prefetched(
+    prefetcher: &mut Option<Prefetcher>,
+    layer: usize,
+    expert: u32,
+    w1: &mut [f32],
+    w3: &mut [f32],
+    w2: &mut [f32],
+) -> Result<Option<u64>> {
+    let Some(p) = prefetcher.as_mut() else {
+        return Ok(None);
+    };
+    match p.take(layer, expert) {
+        None => Ok(None),
+        Some(Err(e)) => Err(e),
+        Some(Ok(w)) => {
+            w1.copy_from_slice(&w.w1);
+            w3.copy_from_slice(&w.w3);
+            w2.copy_from_slice(&w.w2);
+            Ok(Some(w.flash_bytes))
+        }
+    }
+}
+
+/// (issued, used, in_flight) totals of an optional pipeline.
+pub(crate) fn pipeline_stats(prefetcher: &Option<Prefetcher>) -> (u64, u64, usize) {
+    prefetcher
+        .as_ref()
+        .map(|p| (p.issued, p.used, p.in_flight()))
+        .unwrap_or((0, 0, 0))
+}
+
+// ---------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------
+
+/// Runtime context a store backend is built against.
+pub struct StoreCtx<'a> {
+    /// The opened flash image of the model being served.
+    pub image: &'a Arc<FlashImage>,
+    /// Path of that image on disk (the `mmap` default).
+    pub image_path: PathBuf,
+    /// Device profile simulated backends charge against.
+    pub device: DeviceProfile,
+}
+
+/// One registered store backend.
+pub struct StoreEntry {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub summary: &'static str,
+    /// A spec string that builds with defaults (registry smoke test).
+    pub example: &'static str,
+    pub build: fn(&SpecArgs, &StoreCtx) -> Result<Box<dyn ExpertStore>>,
+}
+
+/// Device profile from an optional spec arg, defaulting to the context's.
+fn profile_arg(a: &SpecArgs, ctx: &StoreCtx) -> Result<DeviceProfile> {
+    match a.get(0, "profile") {
+        None => Ok(ctx.device.clone()),
+        Some(name) => DeviceProfile::by_name(&name.replace('_', "-")),
+    }
+}
+
+fn build_sim(a: &SpecArgs, ctx: &StoreCtx) -> Result<Box<dyn ExpertStore>> {
+    Ok(Box::new(SimStore::new(ctx.image.clone(), profile_arg(a, ctx)?)))
+}
+
+fn build_mmap(a: &SpecArgs, ctx: &StoreCtx) -> Result<Box<dyn ExpertStore>> {
+    let path = match a.get(0, "path") {
+        Some(p) => PathBuf::from(p),
+        None => ctx.image_path.clone(),
+    };
+    let store = MmapStore::open(&path)?;
+    anyhow::ensure!(
+        store.image().config == ctx.image.config,
+        "mmap store image {} does not match the engine's model config",
+        path.display()
+    );
+    Ok(Box::new(store))
+}
+
+fn build_mem(a: &SpecArgs, ctx: &StoreCtx) -> Result<Box<dyn ExpertStore>> {
+    Ok(Box::new(MemStore::new(ctx.image.clone(), profile_arg(a, ctx)?)))
+}
+
+const STORE_ENTRIES: &[StoreEntry] = &[
+    StoreEntry {
+        name: "sim",
+        aliases: &["flash-sim"],
+        summary: "virtual-clock flash/DRAM simulator (profile=device-16gb|device-12gb)",
+        example: "sim",
+        build: build_sim,
+    },
+    StoreEntry {
+        name: "mmap",
+        aliases: &[],
+        summary: "memory-mapped flash image, measured wall-clock fetch latency (path=FILE)",
+        example: "mmap",
+        build: build_mmap,
+    },
+    StoreEntry {
+        name: "mem",
+        aliases: &["resident"],
+        summary: "all experts DRAM-resident: the unbounded-memory upper bound (Fig. 8 asymptote)",
+        example: "mem",
+        build: build_mem,
+    },
+];
+
+pub fn store_entries() -> &'static [StoreEntry] {
+    STORE_ENTRIES
+}
+
+fn store_names() -> String {
+    STORE_ENTRIES
+        .iter()
+        .map(|e| e.example)
+        .collect::<Vec<_>>()
+        .join(" | ")
+}
+
+fn find_entry(name: &str) -> Result<&'static StoreEntry> {
+    STORE_ENTRIES
+        .iter()
+        .find(|e| e.name == name || e.aliases.contains(&name))
+        .with_context(|| format!("unknown store {name:?}; registered: {}", store_names()))
+}
+
+/// Grammar + name check without runtime context (configuration-time
+/// validation; the actual build happens in [`parse_store`]).
+pub fn validate_store_spec(spec: &str) -> Result<()> {
+    let args = SpecArgs::parse(spec)?;
+    find_entry(args.name()).map(|_| ())
+}
+
+/// Build a store backend from a registry spec against `ctx`.
+pub fn parse_store(spec: &str, ctx: &StoreCtx) -> Result<Box<dyn ExpertStore>> {
+    let args = SpecArgs::parse(spec)?;
+    let entry = find_entry(args.name())?;
+    (entry.build)(&args, ctx).with_context(|| format!("in store spec {spec:?}"))
+}
+
+/// Human-readable registry listing for `--help` output.
+pub fn registry_help() -> String {
+    let mut out = String::from("STORES (--store):\n");
+    for e in STORE_ENTRIES {
+        out.push_str(&format!("  {:<24} {}\n", e.example, e.summary));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_stats_throughput() {
+        let mut s = TierStats::default();
+        assert_eq!(s.throughput(), 0.0);
+        s.tokens = 10;
+        s.time_s = 2.0;
+        assert!((s.throughput() - 5.0).abs() < 1e-12);
+        assert_eq!(s.mean_fetch_latency_s(), 0.0);
+        s.flash_reads = 4;
+        s.fetch_wall_s = 0.2;
+        assert!((s.mean_fetch_latency_s() - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spec_validation_enumerates_registry() {
+        assert!(validate_store_spec("sim").is_ok());
+        assert!(validate_store_spec("sim:profile=device-12gb").is_ok());
+        assert!(validate_store_spec("mmap:path=weights.bin").is_ok());
+        assert!(validate_store_spec("mem").is_ok());
+        assert!(validate_store_spec("resident").is_ok());
+        let err = format!("{:#}", validate_store_spec("bogus").unwrap_err());
+        assert!(err.contains("sim") && err.contains("mmap") && err.contains("mem"), "{err}");
+        assert!(validate_store_spec("").is_err());
+    }
+
+    #[test]
+    fn help_lists_every_entry() {
+        let h = registry_help();
+        for e in store_entries() {
+            assert!(h.contains(e.name), "help missing {}", e.name);
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! `SimStore`: the virtual-clock backend wrapping [`FlashSim`].
+//!
+//! Every fetch is a real `pread` + dequantization out of the flash image
+//! (the bytes a device would move over UFS), while *time* is charged on
+//! the deterministic virtual clock. This is the seed engine's behaviour
+//! behind the [`ExpertStore`] trait: hit/miss totals, `flash_bytes` and
+//! `time_s` are bit-identical by construction — the store calls exactly
+//! the same `FlashSim` methods in exactly the same order the engine used
+//! to (`tests/store_parity.rs` pins it).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::DeviceProfile;
+use crate::flash::FlashSim;
+use crate::model::prefetch::Prefetcher;
+use crate::weights::FlashImage;
+
+use super::{ExpertStore, SpanMeta, TierStats};
+
+pub struct SimStore {
+    image: Arc<FlashImage>,
+    sim: FlashSim,
+    /// Async expert-fetch pipeline (None = disabled, the default; with it
+    /// off, all accounting is bit-identical to the pre-pipeline engine).
+    prefetcher: Option<Prefetcher>,
+}
+
+impl SimStore {
+    pub fn new(image: Arc<FlashImage>, profile: DeviceProfile) -> Self {
+        SimStore { image, sim: FlashSim::new(profile), prefetcher: None }
+    }
+
+    /// The device profile the virtual clock charges against.
+    pub fn profile(&self) -> &DeviceProfile {
+        self.sim.profile()
+    }
+}
+
+impl ExpertStore for SimStore {
+    fn label(&self) -> String {
+        format!("sim:profile={}", self.sim.profile().name)
+    }
+
+    fn span_meta(&self, layer: usize, expert: usize) -> Result<SpanMeta> {
+        let s = self.image.expert_span(layer, expert, false)?;
+        Ok(SpanMeta { offset: s.offset, bytes: s.bytes })
+    }
+
+    fn fetch_into(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        w1: &mut [f32],
+        w3: &mut [f32],
+        w2: &mut [f32],
+    ) -> Result<u64> {
+        let bytes = self.image.fetch_expert_into(layer, expert, false, w1, w3, w2)?;
+        self.sim.read_flash(bytes);
+        Ok(bytes)
+    }
+
+    fn prefetch(&mut self, layer: usize, expert: u32) {
+        if let Some(p) = self.prefetcher.as_mut() {
+            p.issue(&self.image, layer, expert);
+        }
+    }
+
+    fn take_prefetched(
+        &mut self,
+        layer: usize,
+        expert: u32,
+        w1: &mut [f32],
+        w3: &mut [f32],
+        w2: &mut [f32],
+    ) -> Result<Option<u64>> {
+        match super::claim_prefetched(&mut self.prefetcher, layer, expert, w1, w3, w2)? {
+            None => Ok(None),
+            Some(bytes) => {
+                self.sim.read_flash_prefetched(bytes);
+                Ok(Some(bytes))
+            }
+        }
+    }
+
+    fn enable_prefetch(&mut self, workers: usize) -> bool {
+        if self.prefetcher.is_none() {
+            self.prefetcher = Some(Prefetcher::new(workers));
+        }
+        true
+    }
+
+    fn prefetch_enabled(&self) -> bool {
+        self.prefetcher.is_some()
+    }
+
+    fn prefetch_stats(&self) -> (u64, u64, usize) {
+        super::pipeline_stats(&self.prefetcher)
+    }
+
+    fn charge_hit(&mut self, hits: u64, bytes_per_expert: u64) {
+        self.sim.read_dram(hits * bytes_per_expert);
+    }
+
+    fn end_token(&mut self, resident_bytes: u64) {
+        self.sim.end_token(resident_bytes);
+    }
+
+    fn stats(&self) -> TierStats {
+        self.sim.stats().clone()
+    }
+
+    fn reset(&mut self) {
+        self.sim.reset();
+        if let Some(p) = self.prefetcher.as_mut() {
+            p.reset();
+        }
+    }
+}

@@ -12,7 +12,10 @@
 use std::path::Path;
 
 use crate::cache::{ExpertCache, Policy};
+use crate::config::DeviceProfile;
+use crate::flash::FlashSim;
 use crate::policy::EvictionFactory;
+use crate::store::TierStats;
 use crate::util::json::Json;
 
 /// Router trace: `selections[token][layer]` = experts ordered weight-desc.
@@ -169,7 +172,29 @@ pub fn simulate(trace: &Trace, capacity: usize, policy: Policy) -> SimResult {
 /// eviction spec ([`crate::policy::parse_eviction`]). Policies that
 /// declare [`crate::policy::EvictionPolicy::needs_oracle`] (the classic
 /// Belady) get a [`NextUseOracle`] built from this very trace.
+///
+/// One replay core serves both this and [`simulate_with_tier`] — here the
+/// tier charging runs on zero-byte spans and its stats are discarded.
 pub fn simulate_with(trace: &Trace, capacity: usize, factory: &EvictionFactory) -> SimResult {
+    simulate_with_tier(trace, capacity, factory, DeviceProfile::device_16gb(), 0).0
+}
+
+/// Replay a trace with full storage-tier accounting: per-layer caches
+/// built from `factory`, every miss charged as one expert-span flash read
+/// and every hit as a DRAM stream on a [`crate::flash::FlashSim`] virtual
+/// clock — the same accounting contract the engine's `sim` store uses, so
+/// the returned [`TierStats`] (virtual `time_s`, `flash_bytes`,
+/// `throughput()`) is directly comparable with a live run's
+/// [`crate::model::Engine::tier_stats`]. This is how eviction-policy
+/// ablations get a *time* axis (not just hit rates) without touching the
+/// model.
+pub fn simulate_with_tier(
+    trace: &Trace,
+    capacity: usize,
+    factory: &EvictionFactory,
+    profile: DeviceProfile,
+    bytes_per_expert: u64,
+) -> (SimResult, TierStats) {
     let oracle = if factory.for_layer(0).needs_oracle() {
         Some(NextUseOracle::build(trace))
     } else {
@@ -178,18 +203,22 @@ pub fn simulate_with(trace: &Trace, capacity: usize, factory: &EvictionFactory) 
     let mut caches: Vec<ExpertCache> = (0..trace.n_layers)
         .map(|l| ExpertCache::with_policy(capacity, factory.for_layer(l)))
         .collect();
+    let mut sim = FlashSim::new(profile);
     for (t, per_layer) in trace.selections.iter().enumerate() {
         for (l, sel) in per_layer.iter().enumerate() {
-            match &oracle {
+            let acc = match &oracle {
                 Some(o) => {
                     let f = |e: u32| o.next_use(l, t, e);
-                    caches[l].access(sel, t as u64, Some(&f));
+                    caches[l].access(sel, t as u64, Some(&f))
                 }
-                None => {
-                    caches[l].access(sel, t as u64, None);
-                }
+                None => caches[l].access(sel, t as u64, None),
+            };
+            for _ in &acc.missed {
+                sim.read_flash(bytes_per_expert);
             }
+            sim.read_dram(acc.hits as u64 * bytes_per_expert);
         }
+        sim.end_token(0);
     }
     let tokens = trace.tokens() as u64;
     let mut hits = 0;
@@ -201,19 +230,12 @@ pub fn simulate_with(trace: &Trace, capacity: usize, factory: &EvictionFactory) 
         hits += c.stats.hits;
         misses += c.stats.misses;
         evictions += c.stats.evictions;
-        // Merge by re-pushing means is wrong; collect via counts instead.
-        // Welford doesn't merge, so approximate by weighting means.
         lt.push(c.stats.lifetimes.mean());
-        let _ = &c;
     }
-    // For exact lifetime stats across layers use simulate_detailed.
-    SimResult {
-        hits,
-        misses,
-        evictions,
-        lifetime_mean: lt.mean(),
-        lifetime_std: lt.std(),
-    }
+    (
+        SimResult { hits, misses, evictions, lifetime_mean: lt.mean(), lifetime_std: lt.std() },
+        sim.stats().clone(),
+    )
 }
 
 /// Replay with exact pooled lifetime statistics (Table 9); legacy-enum
@@ -393,6 +415,31 @@ mod tests {
         let back = Trace::from_json(&j).unwrap();
         assert_eq!(back.selections, tr.selections);
         assert_eq!(back.n_experts, 8);
+    }
+
+    #[test]
+    fn tier_replay_matches_counts_and_orders_policies_by_time() {
+        use crate::config::DeviceProfile;
+        use crate::policy::parse_eviction;
+        let tr = random_trace(13, 120, 2, 16, 3);
+        let bytes = 4096u64;
+        let profile = DeviceProfile::device_16gb();
+        let (lru, lru_tier) =
+            simulate_with_tier(&tr, 6, &parse_eviction("lru").unwrap(), profile.clone(), bytes);
+        // Hit/miss totals agree with the plain replay.
+        let plain = simulate(&tr, 6, Policy::Lru);
+        assert_eq!((lru.hits, lru.misses), (plain.hits, plain.misses));
+        // Byte/token accounting follows the sim-store contract exactly.
+        assert_eq!(lru_tier.flash_bytes, lru.misses * bytes);
+        assert_eq!(lru_tier.flash_reads, lru.misses);
+        assert_eq!(lru_tier.dram_bytes, lru.hits * bytes);
+        assert_eq!(lru_tier.tokens, tr.tokens() as u64);
+        assert!(lru_tier.time_s > 0.0 && lru_tier.throughput() > 0.0);
+        // Fewer misses must mean less virtual time: Belady <= LRU.
+        let (bel, bel_tier) =
+            simulate_with_tier(&tr, 6, &parse_eviction("belady").unwrap(), profile, bytes);
+        assert!(bel.misses <= lru.misses);
+        assert!(bel_tier.time_s <= lru_tier.time_s + 1e-12);
     }
 
     #[test]

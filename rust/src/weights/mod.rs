@@ -149,12 +149,18 @@ impl FlashImage {
         })
     }
 
+    /// The canonical on-disk location of a config's flash image:
+    /// `artifacts/<cfg>/weights_<quant>.bin`. One definition shared by
+    /// [`FlashImage::open_artifact`] and the mmap store's default path.
+    pub fn artifact_path(artifacts: &Path, cfg_name: &str, quant: Quant) -> std::path::PathBuf {
+        artifacts
+            .join(cfg_name)
+            .join(format!("weights_{}.bin", quant.file_tag()))
+    }
+
     /// Open `artifacts/<cfg>/weights_<quant>.bin`.
     pub fn open_artifact(artifacts: &Path, cfg_name: &str, quant: Quant) -> Result<Self> {
-        let path = artifacts
-            .join(cfg_name)
-            .join(format!("weights_{}.bin", quant.file_tag()));
-        Self::open(&path)
+        Self::open(&Self::artifact_path(artifacts, cfg_name, quant))
     }
 
     pub fn tensor(&self, name: &str) -> Result<&TensorMeta> {
@@ -162,6 +168,13 @@ impl FlashImage {
             .get(name)
             .map(|&i| &self.tensors[i])
             .with_context(|| format!("tensor {name:?} not in image"))
+    }
+
+    /// Byte offset where the payload region begins (tensor offsets are
+    /// relative to this). Lets alternative backends (the mmap store) read
+    /// the same image without going through this reader's file handle.
+    pub fn payload_start(&self) -> u64 {
+        self.payload_start
     }
 
     fn read_raw(&self, offset: u64, len: u64) -> Result<Vec<u8>> {
@@ -211,6 +224,13 @@ impl FlashImage {
             .with_context(|| format!("no expert span ({layer}, {expert}, shared={shared})"))
     }
 
+    /// Raw (still-quantized) bytes of one expert span — the input
+    /// [`FlashImage::dequant_expert_span`] expects, for backends that
+    /// source span bytes some other way (tests, mappings).
+    pub fn read_span_bytes(&self, span: &ExpertSpan) -> Result<Vec<u8>> {
+        self.read_raw(span.offset, span.bytes)
+    }
+
     /// Fetch one expert: ONE contiguous flash read of its span, then
     /// dequantize the three parts. This is the cache-miss path.
     pub fn fetch_expert(&self, layer: usize, expert: usize, shared: bool) -> Result<ExpertWeights> {
@@ -251,14 +271,34 @@ impl FlashImage {
         w2: &mut [f32],
     ) -> Result<u64> {
         let span = self.expert_span(layer, expert, shared)?.clone();
-        let base = span.offset;
-        let raw = self.read_raw(base, span.bytes)?;
+        let raw = self.read_raw(span.offset, span.bytes)?;
+        self.dequant_expert_span(layer, expert, shared, &raw, span.offset, w1, w3, w2)?;
+        Ok(span.bytes)
+    }
+
+    /// Dequantize one expert's three parts out of its already-read span
+    /// bytes (`raw`, starting at payload-relative offset `base`). This is
+    /// the backend-agnostic half of [`FlashImage::fetch_expert_into`]: the
+    /// mmap store hands in a slice of its mapping instead of a `pread`
+    /// buffer, so both paths produce bit-identical f32 weights.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dequant_expert_span(
+        &self,
+        layer: usize,
+        expert: usize,
+        shared: bool,
+        raw: &[u8],
+        base: u64,
+        w1: &mut [f32],
+        w3: &mut [f32],
+        w2: &mut [f32],
+    ) -> Result<()> {
         let prefix = if shared { "shared" } else { "experts" };
         let dequant_part = |part: &str, dst: &mut [f32]| -> Result<()> {
             let name = format!("layers.{layer}.{prefix}.{expert}.{part}");
             let t = self.tensor(&name)?.clone();
             anyhow::ensure!(
-                t.offset >= base && t.offset + t.bytes <= base + span.bytes,
+                t.offset >= base && t.offset + t.bytes <= base + raw.len() as u64,
                 "tensor {name} outside its span"
             );
             anyhow::ensure!(
@@ -290,7 +330,7 @@ impl FlashImage {
         dequant_part("w1", w1)?;
         dequant_part("w3", w3)?;
         dequant_part("w2", w2)?;
-        Ok(span.bytes)
+        Ok(())
     }
 
     /// Total bytes of all routed-expert spans (the "cacheable" set).

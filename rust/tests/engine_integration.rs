@@ -132,11 +132,12 @@ fn flash_bytes_match_miss_count() {
     e.score_sequence(&toks).unwrap();
     let (_, misses, _) = e.cache_totals();
     let expect = misses * e.image.bytes_per_expert();
+    let tier = e.tier_stats();
     assert_eq!(
-        e.flash.flash_bytes, expect,
+        tier.flash_bytes, expect,
         "every miss reads exactly one expert span"
     );
-    assert_eq!(e.flash.flash_reads, misses);
+    assert_eq!(tier.flash_reads, misses);
 }
 
 #[test]
@@ -229,9 +230,9 @@ fn staged_reuse_and_prefetch_do_not_change_results() {
 
     assert_eq!(nll_base.to_bits(), nll_pf.to_bits(), "logits must be bit-identical");
     assert_eq!((h_base, m_base), (h_pf, m_pf));
-    assert_eq!(base.flash.flash_bytes, pf.flash.flash_bytes);
+    assert_eq!(base.tier_stats().flash_bytes, pf.tier_stats().flash_bytes);
     // The overlap model may only ever make the virtual clock faster.
-    assert!(pf.flash.time_s <= base.flash.time_s + 1e-12);
+    assert!(pf.tier_stats().time_s <= base.tier_stats().time_s + 1e-12);
     let (issued, used, _) = pf.prefetch_stats();
     assert!(issued >= used);
     if m_pf > 40 {

@@ -133,25 +133,26 @@ fn trait_hit_miss_totals_match_enum_over_sequences() {
 }
 
 #[test]
-fn deprecated_parse_shims_agree_with_registry() {
+fn enum_labels_stay_valid_registry_specs() {
+    // The closed enums no longer parse specs themselves; their labels must
+    // still round-trip through the one registry grammar.
     for s in [
-        "original",
-        "pruning:1",
-        "swap:2",
-        "max-rank:6:1",
-        "cumsum:0.7:2",
-        "cache-prior:0.5:1",
+        Strategy::Original,
+        Strategy::Pruning { keep: 1 },
+        Strategy::SwapAtRank { rank: 2 },
+        Strategy::MaxRank { m: 6, j: 1 },
+        Strategy::CumsumThreshold { p: 0.7, j: 2 },
+        Strategy::CachePrior { lambda: 0.5, j: 1, delta: DeltaMode::RunningAvg },
     ] {
-        let legacy = Strategy::parse(s).unwrap();
-        let traited = parse_routing(s).unwrap();
-        assert_eq!(legacy.label(), traited.label());
-        assert_eq!(from_strategy(&legacy).family(), traited.family());
+        let traited = parse_routing(&s.label()).unwrap();
+        assert_eq!(traited.label(), s.label());
+        assert_eq!(from_strategy(&s).family(), traited.family());
     }
-    for s in ["lru", "lfu", "belady", "optimal"] {
-        let legacy = Policy::parse(s).unwrap();
-        let factory = parse_eviction(s).unwrap();
-        assert_eq!(legacy.label(), factory.for_layer(0).label());
+    for p in [Policy::Lru, Policy::Lfu, Policy::Belady] {
+        let factory = parse_eviction(p.label()).unwrap();
+        assert_eq!(p.label(), factory.for_layer(0).label());
     }
+    assert_eq!(parse_eviction("optimal").unwrap().for_layer(0).label(), "belady");
 }
 
 // ---------------------------------------------------------------------

@@ -1,0 +1,362 @@
+//! Storage-tier parity gate.
+//!
+//! 1. Property tests (artifact-free): the `FlashSim` accounting behind
+//!    `SimStore` reproduces the seed engine's virtual-clock formulas
+//!    bit-identically over random operation sequences.
+//! 2. Artifact-gated: `sim:`-backed engine runs reproduce the default
+//!    engine's hit/miss totals, `flash_bytes` and virtual `time_s`
+//!    bit-identically across the default sweep grid; `MmapStore` fetches
+//!    round-trip against the `read_f32` reference for every expert part
+//!    in i8 and i4; `mmap`/`mem` engines complete decode end-to-end with
+//!    sane `TierStats`. Requires `make artifacts`.
+
+use std::path::PathBuf;
+
+use moe_cache::config::{DeviceProfile, Quant};
+use moe_cache::eval::EvalData;
+use moe_cache::flash::FlashSim;
+use moe_cache::model::EngineBuilder;
+use moe_cache::store::{ExpertStore, MmapStore, TierStats};
+use moe_cache::util::prop::prop_check;
+
+// ---------------------------------------------------------------------
+// Artifact-free: FlashSim == the seed accounting formulas, bit for bit
+// ---------------------------------------------------------------------
+
+/// Reference model: the seed engine's virtual-clock charging, written out
+/// independently so a regression in `FlashSim` cannot hide behind its own
+/// implementation.
+#[derive(Default)]
+struct SeedClock {
+    stats: TierStats,
+    overlap_budget_s: f64,
+}
+
+impl SeedClock {
+    fn new(p: &DeviceProfile) -> Self {
+        SeedClock { stats: TierStats::default(), overlap_budget_s: p.compute_per_token_s }
+    }
+
+    fn read_flash(&mut self, p: &DeviceProfile, bytes: u64) {
+        self.stats.flash_reads += 1;
+        self.stats.flash_bytes += bytes;
+        self.stats.time_s += p.flash_latency_s + bytes as f64 / p.flash_bw_bytes_per_s;
+    }
+
+    fn read_flash_prefetched(&mut self, p: &DeviceProfile, bytes: u64) {
+        self.stats.flash_reads += 1;
+        self.stats.flash_bytes += bytes;
+        self.stats.prefetch_reads += 1;
+        self.stats.prefetch_bytes += bytes;
+        let cost = p.flash_latency_s + bytes as f64 / p.flash_bw_bytes_per_s;
+        let hidden = cost.min(self.overlap_budget_s);
+        self.overlap_budget_s -= hidden;
+        self.stats.hidden_s += hidden;
+        self.stats.time_s += cost - hidden;
+    }
+
+    fn read_dram(&mut self, p: &DeviceProfile, bytes: u64) {
+        self.stats.dram_bytes += bytes;
+        self.stats.time_s += bytes as f64 / p.dram_bw_bytes_per_s;
+    }
+
+    fn end_token(&mut self, p: &DeviceProfile, resident: u64) {
+        self.stats.tokens += 1;
+        self.stats.time_s += p.compute_per_token_s;
+        self.overlap_budget_s = p.compute_per_token_s;
+        let over = resident.saturating_sub(p.mem_budget_bytes as u64);
+        if over > 0 {
+            let pen = over as f64 * p.pressure_s_per_byte;
+            self.stats.pressure_s += pen;
+            self.stats.time_s += pen;
+        }
+    }
+}
+
+#[test]
+fn flashsim_matches_seed_formulas_bit_identically() {
+    prop_check("FlashSim == seed clock", 200, |g| {
+        let profile = if g.bool() {
+            DeviceProfile::device_12gb()
+        } else {
+            DeviceProfile::device_16gb()
+        };
+        let mut sim = FlashSim::new(profile.clone());
+        let mut reference = SeedClock::new(&profile);
+        let ops = g.range(1, 120);
+        for _ in 0..ops {
+            let bytes = g.range(0, 10_000_000) as u64;
+            match g.range(0, 4) {
+                0 => {
+                    sim.read_flash(bytes);
+                    reference.read_flash(&profile, bytes);
+                }
+                1 => {
+                    sim.read_flash_prefetched(bytes);
+                    reference.read_flash_prefetched(&profile, bytes);
+                }
+                2 => {
+                    sim.read_dram(bytes);
+                    reference.read_dram(&profile, bytes);
+                }
+                _ => {
+                    sim.end_token(bytes);
+                    reference.end_token(&profile, bytes);
+                }
+            }
+        }
+        let got = sim.stats();
+        let want = &reference.stats;
+        if got.time_s.to_bits() != want.time_s.to_bits() {
+            return Err(format!("time_s {} vs {}", got.time_s, want.time_s));
+        }
+        if got.hidden_s.to_bits() != want.hidden_s.to_bits()
+            || got.pressure_s.to_bits() != want.pressure_s.to_bits()
+        {
+            return Err("hidden/pressure diverged".into());
+        }
+        if (got.flash_bytes, got.flash_reads, got.dram_bytes, got.tokens)
+            != (want.flash_bytes, want.flash_reads, want.dram_bytes, want.tokens)
+        {
+            return Err("byte/count totals diverged".into());
+        }
+        if (got.prefetch_reads, got.prefetch_bytes) != (want.prefetch_reads, want.prefetch_bytes)
+        {
+            return Err("prefetch totals diverged".into());
+        }
+        // reset rewinds to zero with the overlap window refilled.
+        sim.reset();
+        if *sim.stats() != TierStats::default() {
+            return Err("reset left residue".into());
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Artifact-gated suites
+// ---------------------------------------------------------------------
+
+const MODEL: &str = "qwen-tiny";
+
+fn artifacts() -> Option<PathBuf> {
+    let p = moe_cache::artifacts_dir();
+    let ready = p.join(MODEL).join("manifest.json").exists()
+        && p.join(MODEL).join("weights_int4.bin").exists();
+    if ready {
+        Some(p)
+    } else {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        None
+    }
+}
+
+/// The acceptance pin: for every default-sweep-grid policy spec, a run on
+/// an explicit `sim:` store spec reproduces the default engine's hit/miss
+/// totals, `flash_bytes` and virtual `time_s` *bit-identically* — the
+/// default IS the seed behaviour, so the trait indirection provably
+/// changed nothing.
+#[test]
+fn sim_store_reproduces_default_accounting_across_sweep_grid() {
+    let Some(arts) = artifacts() else { return };
+    let data = EvalData::load(&arts.join("data")).unwrap();
+    let tokens: Vec<u32> = data.ppl_test[..48].to_vec();
+    let rt = moe_cache::runtime::Runtime::load(&arts.join(MODEL)).unwrap();
+    let cfg = rt.config.clone();
+    drop(rt);
+
+    for spec in moe_cache::policy::spec_grid(cfg.top_k, cfg.n_experts, cfg.default_top_j(), false)
+    {
+        let run = |store: Option<&str>| {
+            let mut b = EngineBuilder::new(&arts, MODEL)
+                .cache_capacity(cfg.n_experts / 2)
+                .seed(7)
+                .routing_spec(&spec)
+                .unwrap();
+            if let Some(s) = store {
+                b = b.store_spec(s).unwrap();
+            }
+            let mut e = b.build().unwrap();
+            let (nll, _) = e.score_sequence(&tokens).unwrap();
+            let (hits, misses, _) = e.cache_totals();
+            (nll, hits, misses, e.tier_stats())
+        };
+        let (nll_a, h_a, m_a, tier_a) = run(None);
+        let (nll_b, h_b, m_b, tier_b) = run(Some("sim:profile=device-16gb"));
+        assert_eq!(nll_a.to_bits(), nll_b.to_bits(), "{spec}: nll diverged");
+        assert_eq!((h_a, m_a), (h_b, m_b), "{spec}: hit/miss diverged");
+        assert_eq!(tier_a.flash_bytes, tier_b.flash_bytes, "{spec}");
+        assert_eq!(
+            tier_a.time_s.to_bits(),
+            tier_b.time_s.to_bits(),
+            "{spec}: virtual time diverged"
+        );
+        // And the totals decompose exactly per the accounting contract.
+        let bytes_per = tier_a.flash_bytes / tier_a.flash_reads.max(1);
+        assert_eq!(tier_a.flash_bytes, m_a * bytes_per, "{spec}: bytes != misses * span");
+        assert_eq!(tier_a.flash_reads, m_a, "{spec}: one read per miss");
+        assert_eq!(tier_a.dram_bytes, h_a * bytes_per, "{spec}: hits stream from DRAM");
+        // The analytic seed formula reconstructs time_s (different float
+        // summation order, so tight-relative rather than bit equality).
+        let p = DeviceProfile::device_16gb();
+        let expect = m_a as f64 * (p.flash_latency_s + bytes_per as f64 / p.flash_bw_bytes_per_s)
+            + tier_a.dram_bytes as f64 / p.dram_bw_bytes_per_s
+            + tier_a.tokens as f64 * p.compute_per_token_s
+            + tier_a.pressure_s;
+        assert!(
+            (tier_a.time_s - expect).abs() <= 1e-9 * expect.max(1.0),
+            "{spec}: time {} vs analytic {expect}",
+            tier_a.time_s
+        );
+    }
+}
+
+/// Every registered store example builds against a real image and serves
+/// a fetch with coherent span metadata.
+#[test]
+fn every_store_entry_builds_and_fetches() {
+    let Some(arts) = artifacts() else { return };
+    let image = std::sync::Arc::new(
+        moe_cache::weights::FlashImage::open_artifact(&arts, MODEL, Quant::Int4).unwrap(),
+    );
+    let ctx = moe_cache::store::StoreCtx {
+        image: &image,
+        image_path: arts.join(MODEL).join("weights_int4.bin"),
+        device: DeviceProfile::device_16gb(),
+    };
+    let elems = |part: &str| image.tensor(&format!("layers.0.experts.0.{part}")).unwrap().elems();
+    let (mut w1, mut w3, mut w2) =
+        (vec![0f32; elems("w1")], vec![0f32; elems("w3")], vec![0f32; elems("w2")]);
+    for e in moe_cache::store::store_entries() {
+        let mut store = moe_cache::store::parse_store(e.example, &ctx)
+            .unwrap_or_else(|err| panic!("{}: {err:#}", e.example));
+        let meta = store.span_meta(0, 0).unwrap();
+        assert!(meta.bytes > 0, "{}", e.name);
+        let moved = store.fetch_into(0, 0, &mut w1, &mut w3, &mut w2).unwrap();
+        assert_eq!(moved, meta.bytes, "{}", e.name);
+        assert!(w1.iter().all(|x| x.is_finite()), "{}", e.name);
+        store.charge_hit(2, meta.bytes);
+        store.end_token(0);
+        let stats = store.stats();
+        assert_eq!(stats.tokens, 1, "{}", e.name);
+        store.reset();
+        assert_eq!(store.stats(), TierStats::default(), "{}", e.name);
+        // Labels round-trip through the registry.
+        moe_cache::store::validate_store_spec(&store.label())
+            .unwrap_or_else(|err| panic!("label {}: {err:#}", store.label()));
+    }
+}
+
+/// MmapStore round-trip: every part of every probed expert span (routed
+/// and shared, i8 and i4) dequantizes bit-identically to the `read_f32`
+/// pread reference.
+#[test]
+fn mmap_fetch_matches_read_f32_reference() {
+    let Some(arts) = artifacts() else { return };
+    for quant in [Quant::Int8, Quant::Int4] {
+        let path = arts.join(MODEL).join(format!("weights_{}.bin", quant.file_tag()));
+        if !path.exists() {
+            eprintln!("skipping {quant:?}: image missing");
+            continue;
+        }
+        let mut store = MmapStore::open(&path).unwrap();
+        let cfg = store.image().config.clone();
+        let probes = [
+            (0usize, 0usize),
+            (cfg.n_layers - 1, cfg.n_experts - 1),
+            (cfg.n_layers / 2, cfg.n_experts / 2),
+        ];
+        for (layer, expert) in probes {
+            let read = |part: &str| {
+                store
+                    .image()
+                    .read_f32(&format!("layers.{layer}.experts.{expert}.{part}"))
+                    .unwrap()
+            };
+            let (r1, r3, r2) = (read("w1"), read("w3"), read("w2"));
+            let (mut w1, mut w3, mut w2) =
+                (vec![0f32; r1.len()], vec![0f32; r3.len()], vec![0f32; r2.len()]);
+            let bytes = store.fetch_into(layer, expert, &mut w1, &mut w3, &mut w2).unwrap();
+            assert_eq!(bytes, store.span_meta(layer, expert).unwrap().bytes);
+            for (got, want) in [(&w1, &r1), (&w3, &r3), (&w2, &r2)] {
+                assert_eq!(got.len(), want.len());
+                for (a, b) in got.iter().zip(want.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{quant:?} L{layer} E{expert}");
+                }
+            }
+        }
+        // Shared spans (when the model has them) through the same dequant.
+        if cfg.n_shared > 0 {
+            let via_pread = store.image().fetch_expert(0, 0, true).unwrap();
+            let span = store.image().expert_span(0, 0, true).unwrap().clone();
+            let (mut s1, mut s3, mut s2) = (
+                vec![0f32; via_pread.w1.len()],
+                vec![0f32; via_pread.w3.len()],
+                vec![0f32; via_pread.w2.len()],
+            );
+            // The mmap store only serves routed experts on the decode
+            // path; exercise the shared kind through the shared dequant
+            // entry point against the mapping-backed reader.
+            let raw = store.image().read_span_bytes(&span).unwrap();
+            store
+                .image()
+                .dequant_expert_span(0, 0, true, &raw, span.offset, &mut s1, &mut s3, &mut s2)
+                .unwrap();
+            assert_eq!(s1, via_pread.w1);
+            assert_eq!(s3, via_pread.w3);
+            assert_eq!(s2, via_pread.w2);
+        }
+        let stats = store.stats();
+        assert_eq!(stats.flash_reads, probes.len() as u64);
+        assert!(stats.fetch_wall_s > 0.0, "mmap must measure wall time");
+        assert!(stats.mean_fetch_latency_s() > 0.0);
+    }
+}
+
+/// `mmap:` and `mem:` engines complete a decode run end-to-end with the
+/// same logits as the default sim engine (same bytes, different tier) and
+/// coherent TierStats: measured latency for mmap, zero flash traffic for
+/// mem.
+#[test]
+fn mmap_and_mem_backed_engines_decode_end_to_end() {
+    let Some(arts) = artifacts() else { return };
+    let data = EvalData::load(&arts.join("data")).unwrap();
+    let tokens: Vec<u32> = data.ppl_test[..40].to_vec();
+    let run = |store: &str| {
+        let mut e = EngineBuilder::new(&arts, MODEL)
+            .cache_capacity(16)
+            .seed(3)
+            .routing_spec("cache-prior:0.5:2")
+            .unwrap()
+            .store_spec(store)
+            .unwrap()
+            .build()
+            .unwrap();
+        let (nll, n) = e.score_sequence(&tokens).unwrap();
+        assert_eq!(n, tokens.len() - 1, "{store}");
+        let (hits, misses, _) = e.cache_totals();
+        (nll, hits, misses, e.tier_stats(), e.store_label())
+    };
+    let (nll_sim, h_sim, m_sim, _, _) = run("sim");
+    let (nll_mmap, h_mmap, m_mmap, tier_mmap, label_mmap) = run("mmap");
+    // Same bytes, same routing: logits and cache behaviour identical.
+    assert_eq!(nll_sim.to_bits(), nll_mmap.to_bits(), "mmap changed the math");
+    assert_eq!((h_sim, m_sim), (h_mmap, m_mmap));
+    // The label embeds the mapped path and round-trips as a spec.
+    assert!(label_mmap.starts_with("mmap:path="), "{label_mmap}");
+    moe_cache::store::validate_store_spec(&label_mmap).unwrap();
+    assert_eq!(tier_mmap.flash_reads, m_mmap);
+    assert!(tier_mmap.fetch_wall_s > 0.0, "mmap must report measured latency");
+    assert!(tier_mmap.mean_fetch_latency_s() > 0.0);
+    assert_eq!(tier_mmap.pressure_s, 0.0);
+
+    let (nll_mem, h_mem, m_mem, tier_mem, _) = run("mem");
+    assert_eq!(nll_sim.to_bits(), nll_mem.to_bits(), "mem changed the math");
+    assert_eq!((h_sim, m_sim), (h_mem, m_mem));
+    assert_eq!(tier_mem.flash_bytes, 0, "mem never touches flash");
+    assert_eq!(tier_mem.flash_reads, 0);
+    assert!(tier_mem.dram_bytes > 0);
+    // The DRAM-unbounded upper bound: strictly faster than the flash sim.
+    let (_, _, _, tier_sim2, _) = run("sim");
+    assert!(tier_mem.throughput() > tier_sim2.throughput());
+}
