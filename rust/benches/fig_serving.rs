@@ -11,13 +11,18 @@
 //! * **affinity** — interleaving with cache-aware round ordering (sessions
 //!   whose last top-K selections overlap the resident expert set run
 //!   first — §3's locality idea across requests).
+//! * **gang** — lockstepped fused-batch decode (`Engine::step_batch`):
+//!   every decoding session advances one token per batch step, distinct
+//!   experts fetched once for the whole round.
 //!
 //! Also re-runs the round-robin schedule on a fresh engine and asserts the
 //! shared-cache hit/miss totals are bit-identical — interleaving is a
 //! deterministic function of the schedule, not of thread timing (batch
 //! submission pins the admission order).
 //!
-//! Results land in `results/BENCH_serving.json`.
+//! Results land in `results/BENCH_serving.json`, plus a focused
+//! serial-vs-gang comparison (aggregate tps + store fetch counts at equal
+//! aggregate tokens) in `results/BENCH_batch.json`.
 //!
 //! Run: `cargo bench --offline --bench fig_serving`
 
@@ -67,6 +72,9 @@ struct Run {
     hits: u64,
     misses: u64,
     wall_s: f64,
+    /// Storage-tier fetches over the whole run (coordinator shutdown
+    /// totals) — the number gang scheduling exists to shrink.
+    flash_reads: u64,
 }
 
 fn run_schedule(
@@ -96,7 +104,8 @@ fn run_schedule(
 
     let t0 = std::time::Instant::now();
     let rxs = coord.submit_batch(reqs)?;
-    let mut run = Run { ttft: Vec::new(), tokens: 0, hits: 0, misses: 0, wall_s: 0.0 };
+    let mut run =
+        Run { ttft: Vec::new(), tokens: 0, hits: 0, misses: 0, wall_s: 0.0, flash_reads: 0 };
     for rx in rxs {
         loop {
             match rx.recv() {
@@ -116,7 +125,8 @@ fn run_schedule(
         }
     }
     run.wall_s = t0.elapsed().as_secs_f64();
-    coord.shutdown();
+    let metrics = coord.shutdown();
+    run.flash_reads = metrics.flash_reads;
     Ok(run)
 }
 
@@ -149,7 +159,11 @@ fn main() -> Result<()> {
 
     let mut p90 = std::collections::HashMap::new();
     let mut tokens = std::collections::HashMap::new();
-    for schedule in [Schedule::Fcfs, Schedule::RoundRobin, Schedule::Affinity] {
+    let mut fetches = std::collections::HashMap::new();
+    let mut tps = std::collections::HashMap::new();
+    for schedule in
+        [Schedule::Fcfs, Schedule::RoundRobin, Schedule::Affinity, Schedule::Gang]
+    {
         let r = run_schedule(&model, schedule, cache, j, reqs.clone())?;
         let tp90 = percentile(&r.ttft, 90.0);
         let hit_rate = r.hits as f64 / (r.hits + r.misses).max(1) as f64;
@@ -162,7 +176,7 @@ fn main() -> Result<()> {
             format!("{hit_rate:.4}"),
         ]);
         out.push((
-            format!("{}", schedule.label()),
+            schedule.label().to_string(),
             Json::Object(vec![
                 ("ttft_p90_s".into(), Json::num(tp90)),
                 ("ttft_mean_s".into(), Json::num(mean(&r.ttft))),
@@ -171,16 +185,31 @@ fn main() -> Result<()> {
                 ("agg_tps".into(), Json::num(r.tokens as f64 / r.wall_s.max(1e-9))),
                 ("cache_hits".into(), Json::num(r.hits as f64)),
                 ("cache_misses".into(), Json::num(r.misses as f64)),
+                ("flash_reads".into(), Json::num(r.flash_reads as f64)),
             ]),
         ));
         p90.insert(schedule.label(), tp90);
         tokens.insert(schedule.label(), r.tokens);
+        fetches.insert(schedule.label(), r.flash_reads);
+        tps.insert(schedule.label(), r.tokens as f64 / r.wall_s.max(1e-9));
     }
     table.print();
 
     // Equal aggregate tokens across schedules (no stop token, fixed max_new).
     assert_eq!(tokens["fcfs"], tokens["round-robin"]);
     assert_eq!(tokens["fcfs"], tokens["affinity"]);
+    assert_eq!(tokens["fcfs"], tokens["gang"]);
+
+    // Serial-vs-gang at equal aggregate tokens: the coalesced batch step
+    // should need no MORE store fetches than serial FCFS (the strict-win
+    // case on the default config is pinned by tests/batch_parity.rs).
+    println!(
+        "store fetches at {} aggregate tokens: fcfs {} -> gang {} ({})",
+        tokens["fcfs"],
+        fetches["fcfs"],
+        fetches["gang"],
+        if fetches["gang"] < fetches["fcfs"] { "fewer" } else { "NOT FEWER" },
+    );
 
     // Interleaving beats FCFS head-of-line blocking on p90 TTFT.
     let improves = p90["round-robin"] < p90["fcfs"];
@@ -260,5 +289,33 @@ fn main() -> Result<()> {
     std::fs::write(&path, format!("{}", Json::Object(out)))?;
     table.write_csv(&dir)?;
     println!("\nwrote {}", path.display());
+
+    // Focused serial-vs-gang trajectory: aggregate tps + flash-fetch
+    // counts at equal aggregate tokens (the CI batching smoke).
+    let batch_json = Json::Object(vec![
+        ("model".into(), Json::str(model)),
+        ("aggregate_tokens".into(), Json::num(tokens["fcfs"] as f64)),
+        (
+            "serial_fcfs".into(),
+            Json::Object(vec![
+                ("agg_tps".into(), Json::num(tps["fcfs"])),
+                ("flash_reads".into(), Json::num(fetches["fcfs"] as f64)),
+            ]),
+        ),
+        (
+            "gang".into(),
+            Json::Object(vec![
+                ("agg_tps".into(), Json::num(tps["gang"])),
+                ("flash_reads".into(), Json::num(fetches["gang"] as f64)),
+            ]),
+        ),
+        (
+            "gang_fewer_fetches".into(),
+            Json::Bool(fetches["gang"] < fetches["fcfs"]),
+        ),
+    ]);
+    let batch_path = dir.join("BENCH_batch.json");
+    std::fs::write(&batch_path, format!("{batch_json}"))?;
+    println!("wrote {}", batch_path.display());
     Ok(())
 }

@@ -323,9 +323,10 @@ fn main() -> anyhow::Result<()> {
         engine.reset_all();
         run_steps(engine, 20); // steady state
         let t0 = engine.tier_stats();
-        let (i0, u0, _) = engine.prefetch_stats();
+        let p0 = engine.prefetch_stats();
         let (acc, wall) = run_steps(engine, steps);
-        let (i1, u1, _) = engine.prefetch_stats();
+        let p1 = engine.prefetch_stats();
+        let (i0, u0, i1, u1) = (p0.issued, p0.used, p1.issued, p1.used);
         let t1 = engine.tier_stats();
         (
             wall * 1e9 / steps as f64,
@@ -386,6 +387,53 @@ fn main() -> anyhow::Result<()> {
             Json::num(stats.mean_fetch_latency_s() * 1e6),
         ));
     }
+
+    // ---- coalesced fetch: one gang batch's misses through fetch_many
+    // (offset-sorted walk over the mapping) vs the same misses as looped
+    // fetch_into calls in request order. The mapping is already warm from
+    // the stages above, so this isolates the per-call overhead + access
+    // order (sort, sequential walk locality), not cold page-in — the
+    // cold-fault benefit of the offset sort is not measurable in-process
+    // once the file is cached. ----
+    println!();
+    let batch_n = 8usize.min(cfg.n_experts);
+    // Distinct experts in a deliberately non-monotone request order, so
+    // the offset sort has something to do.
+    let batch: Vec<usize> = (0..batch_n).map(|i| (i * 23 + 5) % cfg.n_experts).collect();
+    let mut bufs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = batch
+        .iter()
+        .map(|_| {
+            (
+                vec![0f32; probe.w1.len()],
+                vec![0f32; probe.w3.len()],
+                vec![0f32; probe.w2.len()],
+            )
+        })
+        .collect();
+    let looped = bench(&format!("mmap looped fetch_into ({batch_n} misses)"), 5, 40, || {
+        for (i, &e) in batch.iter().enumerate() {
+            let (b1, b3, b2) = &mut bufs[i];
+            black_box(mmap_store.fetch_into(0, e, b1, b3, b2).unwrap());
+        }
+    });
+    looped.print();
+    let coalesced = bench(&format!("mmap fetch_many ({batch_n} misses)"), 5, 40, || {
+        let mut dsts: Vec<moe_cache::store::FetchDst> = batch
+            .iter()
+            .zip(bufs.iter_mut())
+            .map(|(&e, (b1, b3, b2))| moe_cache::store::FetchDst {
+                expert: e,
+                w1: b1.as_mut_slice(),
+                w3: b3.as_mut_slice(),
+                w2: b2.as_mut_slice(),
+            })
+            .collect();
+        black_box(mmap_store.fetch_many(0, &mut dsts).unwrap());
+    });
+    coalesced.print();
+    store_out.push(("mmap_fetch_into_loop_ns".into(), Json::num(looped.median_ns)));
+    store_out.push(("mmap_fetch_many_ns".into(), Json::num(coalesced.median_ns)));
+    store_out.push(("fetch_many_batch".into(), Json::num(batch_n as f64)));
 
     // ---- persist the trajectory ----
     let json = Json::Object(out);

@@ -119,6 +119,13 @@ pub struct CacheStats {
     pub misses: u64,
     pub evictions: u64,
     pub lifetimes: Welford,
+    /// Batched (gang) accesses taken through [`ExpertCache::access_batch`].
+    pub batch_steps: u64,
+    /// Token-level selections those batched accesses covered (what a
+    /// token-at-a-time engine would have charged); `hits + misses` grew by
+    /// the *distinct* count instead, so `batch_token_accesses` minus the
+    /// distinct charges is the coalescing saving.
+    pub batch_token_accesses: u64,
 }
 
 impl CacheStats {
@@ -298,6 +305,40 @@ impl ExpertCache {
             .filter(|e| self.entries.contains_key(e))
             .collect();
         out
+    }
+
+    /// Batched (gang) access: one shared access for the *distinct* union
+    /// selection of a whole fused batch step, ordered by maximum original
+    /// gate weight descending across the batch
+    /// ([`crate::model::BatchGroups::build`] produces exactly this list).
+    ///
+    /// Charging semantics: hits and misses grow **per distinct expert per
+    /// step**, not per token — B tokens that agree on an expert cost one
+    /// charge, which is the accounting counterpart of fetching it once.
+    /// `token_accesses` records what the token-at-a-time engine would have
+    /// charged for the same selections, so the coalescing saving stays
+    /// observable in [`CacheStats`].
+    ///
+    /// ```
+    /// use moe_cache::cache::{ExpertCache, Policy};
+    ///
+    /// let mut c = ExpertCache::new(4, Policy::Lru);
+    /// // Two sessions selected {1, 2} and {2, 3}: distinct union [2, 1, 3].
+    /// let a = c.access_batch(&[2, 1, 3], 4, 0);
+    /// assert_eq!(a.missed, vec![2, 1, 3]); // 3 distinct charges, not 4
+    /// assert_eq!(c.stats.misses, 3);
+    /// assert_eq!(c.stats.batch_token_accesses, 4);
+    /// assert_eq!(c.stats.batch_steps, 1);
+    /// ```
+    pub fn access_batch(
+        &mut self,
+        distinct: &[u32],
+        token_accesses: u64,
+        now_token: u64,
+    ) -> Access {
+        self.stats.batch_steps += 1;
+        self.stats.batch_token_accesses += token_accesses;
+        self.access(distinct, now_token, None)
     }
 
     /// Hand the policy a deterministic view of the entry table. Stamps

@@ -1,14 +1,17 @@
 //! The serving coordinator (L3): request queue, sessions, prefill/decode
 //! scheduling and per-request metrics.
 //!
-//! The paper's deployment regime is strictly batch-size-1 decode (§1), so
-//! the coordinator's job is *scheduling*, not batching: one engine thread
-//! owns the model, admits up to `max_sessions` requests, and interleaves
-//! their prefill chunks and decode quanta in rounds. Three policies
-//! ([`Schedule`]): the FCFS run-to-completion baseline, fair round-robin,
-//! and a cache-affinity order that runs the session whose last top-K
-//! selections best overlap the resident expert set — the paper's §3
-//! expert-locality idea extended across requests. Per-session KV and
+//! The paper's deployment regime is batch-size-1 decode (§1); serving
+//! heavy multi-session traffic adds two levers on top of it. *Scheduling*:
+//! one engine thread owns the model, admits up to `max_sessions` requests,
+//! and interleaves their prefill chunks and decode quanta in rounds.
+//! *Batching*: the gang schedule locksteps decoding sessions through fused
+//! batch steps that fetch each distinct selected expert once for the whole
+//! round (see `docs/BATCHING.md`). Four policies ([`Schedule`]): the FCFS
+//! run-to-completion baseline, fair round-robin, a cache-affinity order
+//! that runs the session whose last top-K selections best overlap the
+//! resident expert set — the paper's §3 expert-locality idea extended
+//! across requests — and gang. Per-session KV and
 //! routing state swap in/out of the engine in O(1)
 //! ([`crate::model::SessionState`]); the expert DRAM cache is shared by
 //! all interleaved streams. Generated tokens stream back per token

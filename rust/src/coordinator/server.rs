@@ -17,6 +17,13 @@
 //! generations. A request may carry its own routing-policy spec
 //! ([`Request::routing_spec`]); the parsed policy is owned by the session
 //! and swapped into the engine around each of its quanta.
+//!
+//! Under [`Schedule::Gang`] decode rounds are *lockstepped* instead of
+//! interleaved: every decoding session advances one token per fused batch
+//! step (`Engine::step_batch`), so sessions that route to the same expert
+//! in the same round share one store fetch (see `docs/BATCHING.md`).
+
+#![warn(clippy::unwrap_used)]
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{self, Receiver, Sender};
@@ -28,7 +35,7 @@ use anyhow::Result;
 use super::session::{
     round_order, Event, FinishReason, Phase, Request, RequestResult, Schedule, Session,
 };
-use crate::model::Engine;
+use crate::model::{Engine, SessionSlot, SessionState};
 use crate::util::stats::{mean, percentile};
 
 #[derive(Debug, Clone)]
@@ -74,12 +81,17 @@ pub struct ServerMetrics {
     pub tokens_generated: u64,
     pub ttft_s: Vec<f64>,
     pub decode_tps: Vec<f64>,
+    /// Storage-tier totals at shutdown: slow-tier reads (= store fetches)
+    /// and bytes. This is the number gang scheduling exists to shrink —
+    /// the serial-vs-gang benches compare it at equal aggregate tokens.
+    pub flash_reads: u64,
+    pub flash_bytes: u64,
 }
 
 impl ServerMetrics {
     pub fn summary(&self) -> String {
         format!(
-            "completed={} aborted={} rejected={} tokens={} ttft_mean={:.3}s ttft_p90={:.3}s tps_mean={:.2} tps_p10={:.2}",
+            "completed={} aborted={} rejected={} tokens={} ttft_mean={:.3}s ttft_p90={:.3}s tps_mean={:.2} tps_p10={:.2} flash_reads={}",
             self.completed,
             self.aborted,
             self.rejected,
@@ -88,6 +100,7 @@ impl ServerMetrics {
             percentile(&self.ttft_s, 90.0),
             mean(&self.decode_tps),
             percentile(&self.decode_tps, 10.0),
+            self.flash_reads,
         )
     }
 }
@@ -314,6 +327,10 @@ fn engine_loop(engine: &mut Engine, rx: &Receiver<Msg>, cfg: &ServerConfig) -> S
         }
 
         // ---- one round: every active session gets one quantum ----
+        if cfg.schedule == Schedule::Gang {
+            gang_round(engine, &mut st, quantum, chunk, cfg);
+            continue;
+        }
         let order = round_order(cfg.schedule, &st.active, &engine.caches, st.rr_cursor);
         st.rr_cursor = st.rr_cursor.wrapping_add(1);
         // Track the round by admission seq, not the caller-supplied request
@@ -350,6 +367,9 @@ fn engine_loop(engine: &mut Engine, rx: &Receiver<Msg>, cfg: &ServerConfig) -> S
             }
         }
     }
+    let tier = engine.tier_stats();
+    st.metrics.flash_reads = tier.flash_reads;
+    st.metrics.flash_bytes = tier.flash_bytes;
     st.metrics
 }
 
@@ -403,18 +423,21 @@ fn abort_request(st: &mut LoopState, id: u64) {
         return;
     }
     if let Some(i) = st.queue.iter().position(|(r, _, _)| r.id == id) {
-        let (req, reply, _) = st.queue.remove(i).unwrap();
-        st.metrics.aborted += 1;
-        let _ = reply.send(Event::Done(RequestResult {
-            id: req.id,
-            generated: Vec::new(),
-            finish: FinishReason::Aborted,
-            ttft_s: 0.0,
-            decode_tps: 0.0,
-            device_tps: 0.0,
-            cache_hits: 0,
-            cache_misses: 0,
-        }));
+        // The index was just found, so remove() cannot miss — but a queued
+        // abort is not worth a panic path either way.
+        if let Some((req, reply, _)) = st.queue.remove(i) {
+            st.metrics.aborted += 1;
+            let _ = reply.send(Event::Done(RequestResult {
+                id: req.id,
+                generated: Vec::new(),
+                finish: FinishReason::Aborted,
+                ttft_s: 0.0,
+                decode_tps: 0.0,
+                device_tps: 0.0,
+                cache_hits: 0,
+                cache_misses: 0,
+            }));
+        }
     }
 }
 
@@ -492,6 +515,217 @@ fn step_counted(engine: &mut Engine, sess: &mut Session, token: u32) -> Result<V
     sess.dev_time_s += engine.tier_stats().time_s - vtime0;
     sess.dev_tokens += 1;
     Ok(logits)
+}
+
+/// Remove the session with admission seq `seq` from the active set and
+/// resolve it with `finish` (gang rounds complete sessions mid-batch).
+fn remove_session(st: &mut LoopState, seq: u64, finish: FinishReason) {
+    if let Some(i) = st.active.iter().position(|s| s.seq == seq) {
+        let sess = st.active.remove(i);
+        if st.resident == Some(seq) {
+            st.resident = None;
+        }
+        finalize(sess, finish, &mut st.metrics);
+    }
+}
+
+/// Remove the session with admission seq `seq` and fail it with `error`.
+fn fail_session(st: &mut LoopState, seq: u64, error: &str) {
+    if let Some(i) = st.active.iter().position(|s| s.seq == seq) {
+        let sess = st.active.remove(i);
+        if st.resident == Some(seq) {
+            st.resident = None;
+        }
+        let _ = sess.reply.send(Event::Failed { id: sess.req.id, error: error.to_string() });
+    }
+}
+
+/// Run one serial quantum for `seq` (a gang round's prefill chunk or its
+/// lone-decoder fallback), resolving completion or failure in place.
+fn serial_quantum(
+    engine: &mut Engine,
+    st: &mut LoopState,
+    seq: u64,
+    quantum: usize,
+    chunk: usize,
+    cfg: &ServerConfig,
+) {
+    let Some(idx) = st.active.iter().position(|s| s.seq == seq) else {
+        return;
+    };
+    make_resident(engine, &mut st.active, &mut st.resident, seq);
+    match run_quantum(engine, &mut st.active[idx], quantum, chunk, cfg) {
+        Ok(None) => {}
+        Ok(Some(finish)) => remove_session(st, seq, finish),
+        Err(e) => fail_session(st, seq, &format!("{e:#}")),
+    }
+}
+
+/// One gang round: prefilling sessions advance one chunk each (serial,
+/// admission order — a completed prefill falls through into its first
+/// decode quantum exactly like the other schedules, so TTFT is
+/// comparable, and that session joins the gang from the NEXT round), then
+/// every session already decoding at round start locksteps through up to
+/// `quantum` fused batch steps ([`Engine::step_batch`]): one token per
+/// session per step, distinct experts fetched once for the whole batch.
+/// Every session still gets exactly one quantum per round. With fewer
+/// than two decoding sessions the round falls back to the serial quantum
+/// path — gang only changes execution when there is a batch to fuse.
+///
+/// Per-session accounting: hits/misses come from the step's
+/// token-level attribution (`BatchPlan::per_slot`); the shared tier time
+/// of each batch step is divided evenly across its slots.
+fn gang_round(
+    engine: &mut Engine,
+    st: &mut LoopState,
+    quantum: usize,
+    chunk: usize,
+    cfg: &ServerConfig,
+) {
+    // Decode set snapshot BEFORE the prefill pass: a session finishing
+    // prefill this round takes its fall-through decode quantum serially
+    // (inside run_quantum, like every schedule) and only joins the gang
+    // NEXT round — one quantum per session per round stays true.
+    let live: Vec<u64> = st
+        .active
+        .iter()
+        .filter(|s| !s.is_prefilling())
+        .map(|s| s.seq)
+        .collect();
+
+    // ---- serial prefill chunks ----
+    let prefill: Vec<u64> = st
+        .active
+        .iter()
+        .filter(|s| s.is_prefilling())
+        .map(|s| s.seq)
+        .collect();
+    for seq in prefill {
+        serial_quantum(engine, st, seq, quantum, chunk, cfg);
+    }
+
+    // ---- lockstepped decode ----
+    if live.len() < 2 {
+        // A lone decoder (or none): the serial path is the same math with
+        // less bookkeeping.
+        for seq in live {
+            serial_quantum(engine, st, seq, quantum, chunk, cfg);
+        }
+        return;
+    }
+    let mut live = live;
+
+    // The batch step works entirely on the slots, so the engine must hold
+    // no live session: swap the resident one back to its owner first.
+    if let Some(old) = st.resident.take() {
+        if let Some(s) = st.active.iter_mut().find(|s| s.seq == old) {
+            engine.swap_session(&mut s.state);
+        }
+    }
+    engine.strategy_active = true;
+
+    for _ in 0..quantum {
+        // ---- sample one token per live session; peel off finishers ----
+        let mut seqs: Vec<u64> = Vec::with_capacity(live.len());
+        let mut slots: Vec<SessionSlot> = Vec::with_capacity(live.len());
+        let mut finished: Vec<(u64, FinishReason)> = Vec::new();
+        for &seq in &live {
+            let Some(i) = st.active.iter().position(|s| s.seq == seq) else {
+                continue;
+            };
+            let sess = &mut st.active[i];
+            if sess.generated.len() >= sess.req.max_new {
+                finished.push((seq, FinishReason::Length));
+                continue;
+            }
+            if sess.state.pos() >= engine.cfg.max_seq {
+                finished.push((seq, FinishReason::Overflow));
+                continue;
+            }
+            let next = sess.sampler.sample(&sess.logits);
+            if sess.generated.is_empty() {
+                sess.ttft_s = sess.submitted.elapsed().as_secs_f64();
+            }
+            if Some(next) == sess.req.stop_token {
+                finished.push((seq, FinishReason::Stop));
+                continue;
+            }
+            sess.generated.push(next);
+            let delivered = sess.reply.send(Event::Token {
+                id: sess.id(),
+                index: sess.generated.len() - 1,
+                token: next,
+            });
+            if delivered.is_err() {
+                finished.push((seq, FinishReason::Aborted));
+                continue;
+            }
+            // Lend the session's state (and routing override) to the slot;
+            // the placeholder is allocation-free.
+            let state = std::mem::replace(&mut sess.state, SessionState::new(0, 0, 0));
+            let mut slot = SessionSlot::new(state, next);
+            slot.routing = sess.routing.take();
+            seqs.push(seq);
+            slots.push(slot);
+        }
+        for (seq, finish) in finished {
+            remove_session(st, seq, finish);
+        }
+        live.retain(|seq| seqs.contains(seq));
+        if slots.is_empty() {
+            break;
+        }
+
+        // ---- one fused batch step for the whole gang ----
+        let vtime0 = engine.tier_stats().time_s;
+        match engine.step_batch(&mut slots) {
+            Ok(plan) => {
+                let vshare = (engine.tier_stats().time_s - vtime0) / seqs.len() as f64;
+                for (i, (seq, slot)) in seqs.iter().zip(slots).enumerate() {
+                    let Some(idx) = st.active.iter().position(|s| s.seq == *seq) else {
+                        continue;
+                    };
+                    let sess = &mut st.active[idx];
+                    sess.state = slot.state;
+                    sess.routing = slot.routing;
+                    sess.logits = slot.logits;
+                    sess.last_topk = sess.state.last_selections().to_vec();
+                    if let Some(&(h, m)) = plan.per_slot.get(i) {
+                        sess.hits += h;
+                        sess.misses += m;
+                    }
+                    sess.dev_time_s += vshare;
+                    sess.dev_tokens += 1;
+                }
+            }
+            Err(e) => {
+                // The whole batch shares the failure: restore each state,
+                // fail each request, keep the server serving.
+                let msg = format!("{e:#}");
+                for (seq, slot) in seqs.iter().zip(slots) {
+                    if let Some(idx) = st.active.iter().position(|s| s.seq == *seq) {
+                        let sess = &mut st.active[idx];
+                        sess.state = slot.state;
+                        sess.routing = slot.routing;
+                    }
+                    fail_session(st, *seq, &msg);
+                }
+                break;
+            }
+        }
+    }
+
+    // Timely completion: a session that hit max_new on the quantum's last
+    // step resolves now, not one round later.
+    let done: Vec<u64> = st
+        .active
+        .iter()
+        .filter(|s| !s.is_prefilling() && s.generated.len() >= s.req.max_new)
+        .map(|s| s.seq)
+        .collect();
+    for seq in done {
+        remove_session(st, seq, FinishReason::Length);
+    }
 }
 
 /// Run one quantum for `sess`: a prefill chunk, or up to `quantum` decode
@@ -633,6 +867,8 @@ fn clamp_prompt(prompt: &[u32], max_seq: usize, max_new: usize) -> Vec<u32> {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
+
     use super::*;
 
     #[test]
@@ -653,12 +889,15 @@ mod tests {
             tokens_generated: 30,
             ttft_s: vec![0.1, 0.2],
             decode_tps: vec![10.0, 20.0],
+            flash_reads: 5,
+            flash_bytes: 4096,
         };
         let s = m.summary();
         assert!(s.contains("completed=2"));
         assert!(s.contains("aborted=1"));
         assert!(s.contains("rejected=0"));
         assert!(s.contains("tokens=30"));
+        assert!(s.contains("flash_reads=5"));
     }
 
     #[test]

@@ -19,6 +19,12 @@
 //!   session most likely to hit runs while its experts are still hot.
 //!   Every active session still gets exactly one quantum per round, so the
 //!   ordering cannot starve anyone.
+//! * [`Schedule::Gang`] — lockstepped decode: prefilling sessions advance
+//!   one chunk each (serial), then every decoding session moves one token
+//!   per fused batch step (`Engine::step_batch`), so same-round selections
+//!   of the same expert are fetched from the store once instead of once
+//!   per session (see `docs/BATCHING.md`). Falls back to the serial
+//!   quantum path whenever fewer than two sessions are decoding.
 
 use std::sync::mpsc::Sender;
 use std::time::Instant;
@@ -89,6 +95,7 @@ pub enum Event {
 ///
 /// assert_eq!(Schedule::parse("affinity").unwrap().label(), "affinity");
 /// assert_eq!(Schedule::parse("rr").unwrap(), Schedule::RoundRobin);
+/// assert_eq!(Schedule::parse("gang").unwrap().label(), "gang");
 /// assert!(Schedule::parse("sjf").is_err());
 /// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -96,6 +103,8 @@ pub enum Schedule {
     Fcfs,
     RoundRobin,
     Affinity,
+    /// Lockstepped fused-batch decode (`Engine::step_batch`).
+    Gang,
 }
 
 impl Schedule {
@@ -104,7 +113,8 @@ impl Schedule {
             "fcfs" => Ok(Schedule::Fcfs),
             "round-robin" | "rr" => Ok(Schedule::RoundRobin),
             "affinity" => Ok(Schedule::Affinity),
-            _ => anyhow::bail!("unknown schedule {s:?} (fcfs|round-robin|affinity)"),
+            "gang" => Ok(Schedule::Gang),
+            _ => anyhow::bail!("unknown schedule {s:?} (fcfs|round-robin|affinity|gang)"),
         }
     }
 
@@ -113,6 +123,7 @@ impl Schedule {
             Schedule::Fcfs => "fcfs",
             Schedule::RoundRobin => "round-robin",
             Schedule::Affinity => "affinity",
+            Schedule::Gang => "gang",
         }
     }
 }
@@ -244,9 +255,11 @@ pub fn round_order(
         return Vec::new();
     }
     match schedule {
-        Schedule::Fcfs | Schedule::RoundRobin => {
-            (0..n).map(|i| (i + rr_cursor) % n).collect()
-        }
+        // Gang rounds are driven whole-batch by the server (`gang_round`);
+        // when this ordering is consulted anyway (e.g. a serial fallback),
+        // admission order is the deterministic choice.
+        Schedule::Fcfs | Schedule::Gang => (0..n).collect(),
+        Schedule::RoundRobin => (0..n).map(|i| (i + rr_cursor) % n).collect(),
         Schedule::Affinity => {
             let mut order: Vec<usize> = (0..n).collect();
             let key = |i: usize| {
@@ -308,11 +321,24 @@ mod tests {
 
     #[test]
     fn schedule_parse_roundtrip() {
-        for s in ["fcfs", "round-robin", "affinity"] {
+        for s in ["fcfs", "round-robin", "affinity", "gang"] {
             assert_eq!(Schedule::parse(s).unwrap().label(), s);
         }
         assert_eq!(Schedule::parse("rr").unwrap(), Schedule::RoundRobin);
         assert!(Schedule::parse("sjf").is_err());
+    }
+
+    #[test]
+    fn gang_round_order_is_admission_order() {
+        let sessions = vec![
+            session(0, 0, Phase::Decode, vec![]),
+            session(1, 1, Phase::Decode, vec![]),
+            session(2, 2, Phase::Prefill, vec![]),
+        ];
+        let caches = caches_with(&[]);
+        // The cursor must not perturb gang (or fcfs) ordering.
+        assert_eq!(round_order(Schedule::Gang, &sessions, &caches, 3), vec![0, 1, 2]);
+        assert_eq!(round_order(Schedule::Fcfs, &sessions, &caches, 2), vec![0, 1, 2]);
     }
 
     #[test]

@@ -35,8 +35,9 @@
 //! * [`tracesim`] — trace-driven cache simulation (Belady bound, Fig. 10/11)
 //! * [`eval`] — perplexity / SynthQA / SynthMath harnesses + sweeps
 //! * [`coordinator`] — the multi-session serving loop: admission, session
-//!   swap, FCFS / round-robin / cache-affinity decode rounds, streaming
-//!   delivery, per-request metrics
+//!   swap, FCFS / round-robin / cache-affinity / gang decode rounds
+//!   (gang = lockstepped fused-batch decode with per-distinct-expert
+//!   fetch coalescing), streaming delivery, per-request metrics
 //! * [`report`] — CSV/markdown emitters shared by the benches
 
 pub mod cache;

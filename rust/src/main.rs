@@ -32,7 +32,10 @@ COMMANDS:
   info                              artifact + model inventory
   serve      --model M [--cache C --strategy S --policy P --prompts N
                         --max-new T --max-sessions S --quantum Q
-                        --schedule fcfs|round-robin|affinity
+                        --schedule fcfs|round-robin|affinity|gang
+                                            (gang = lockstepped fused-batch
+                                            decode: distinct experts fetched
+                                            once per round across sessions)
                         --prefill-chunk P --stream
                         --strategies S1,S2  per-request routing overrides,
                                             assigned cyclically]

@@ -24,6 +24,8 @@
 //!   this token — the decode-time common case under cache-aware routing,
 //!   where consecutive selections are sticky by design.
 
+#![warn(clippy::unwrap_used)]
+
 use std::collections::HashMap;
 
 use anyhow::{Context, Result};
@@ -118,6 +120,65 @@ impl LayerArena {
         )
     }
 
+    /// Disjoint mutable views of several slots at once — the destinations
+    /// of one coalesced [`crate::store::ExpertStore::fetch_many`] call.
+    /// `slots` must be distinct and in range; the views come back in the
+    /// order of `slots`, each a `(w1, w3, w2)` triple like
+    /// [`LayerArena::slot_mut`].
+    #[allow(clippy::type_complexity)]
+    pub fn slot_views_mut(
+        &mut self,
+        slots: &[usize],
+    ) -> Result<Vec<(&mut [f32], &mut [f32], &mut [f32])>> {
+        let (df, fd) = (self.df, self.fd);
+        let n_slots = self.n_cache + self.n_overflow;
+        let mut order: Vec<usize> = (0..slots.len()).collect();
+        order.sort_unstable_by_key(|&i| slots[i]);
+        for w in order.windows(2) {
+            anyhow::ensure!(
+                slots[w[0]] != slots[w[1]],
+                "duplicate slot {} in a coalesced fetch",
+                slots[w[0]]
+            );
+        }
+        if let Some(&last) = order.last() {
+            anyhow::ensure!(
+                slots[last] < n_slots,
+                "slot {} out of range ({n_slots} slots)",
+                slots[last]
+            );
+        }
+        // Walk the three backing vecs once in ascending slot order,
+        // splitting each requested range off the remainder — disjointness
+        // is structural, no unsafe needed.
+        let mut out: Vec<Option<(&mut [f32], &mut [f32], &mut [f32])>> =
+            slots.iter().map(|_| None).collect();
+        let mut r1: &mut [f32] = &mut self.w1;
+        let mut r3: &mut [f32] = &mut self.w3;
+        let mut r2: &mut [f32] = &mut self.w2;
+        let (mut cdf, mut cfd) = (0usize, 0usize); // elements already split off
+        for &i in &order {
+            let s = slots[i];
+            let (_, rest) = std::mem::take(&mut r1).split_at_mut(s * df - cdf);
+            let (v1, rest) = rest.split_at_mut(df);
+            r1 = rest;
+            let (_, rest) = std::mem::take(&mut r3).split_at_mut(s * df - cdf);
+            let (v3, rest) = rest.split_at_mut(df);
+            r3 = rest;
+            let (_, rest) = std::mem::take(&mut r2).split_at_mut(s * fd - cfd);
+            let (v2, rest) = rest.split_at_mut(fd);
+            r2 = rest;
+            cdf = (s + 1) * df;
+            cfd = (s + 1) * fd;
+            out[i] = Some((v1, v3, v2));
+        }
+        let mut views = Vec::with_capacity(out.len());
+        for o in out {
+            views.push(o.context("coalesced-fetch view not filled")?);
+        }
+        Ok(views)
+    }
+
     fn claim(&mut self, slot: usize, expert: u32) {
         if let Some(old) = self.occupant[slot] {
             // Only unmap the previous occupant if it still points here (it
@@ -149,6 +210,24 @@ impl LayerArena {
         let s = self.n_cache + self.overflow_used;
         self.overflow_used += 1;
         Ok(s)
+    }
+
+    /// Ensure at least `n` overflow slots exist. A fused batch step can
+    /// stream more transient experts per step than the serial `top_k`
+    /// sizing anticipated (up to batch × top_k when the cache is smaller
+    /// than the distinct union), so the engine grows the tail before
+    /// planning a batch's misses. Existing slot indices are unaffected:
+    /// overflow slots only ever extend the tail.
+    pub fn ensure_overflow(&mut self, n: usize) {
+        if n <= self.n_overflow {
+            return;
+        }
+        let slots = self.n_cache + n;
+        self.w1.resize(slots * self.df, 0f32);
+        self.w3.resize(slots * self.df, 0f32);
+        self.w2.resize(slots * self.fd, 0f32);
+        self.occupant.resize(slots, None);
+        self.n_overflow = n;
     }
 
     /// Claim a free cache slot directly (the warm-start path, Fig. 19).
@@ -225,7 +304,10 @@ impl LayerArena {
                 out.push(MissSlot { expert: e, slot: o, promote_to: Some(vslot) });
             } else {
                 self.release(victim);
-                let s = self.free_cache.pop().expect("slot just released");
+                let s = self
+                    .free_cache
+                    .pop()
+                    .with_context(|| format!("arena desync: no slot freed by evicting {victim}"))?;
                 self.claim(s, e);
                 out.push(MissSlot { expert: e, slot: s, promote_to: None });
             }
@@ -274,6 +356,68 @@ impl LayerArena {
         self.overflow_used = 0;
         self.pending_promote.clear();
         self.pending_release.clear();
+    }
+}
+
+/// The expert-grouped inversion of one layer's batched routing decisions
+/// (the fused batch step's dispatch plan): for each *distinct* expert
+/// selected anywhere in the batch, the list of `(slot, gate coefficient)`
+/// pairs routed to it. The engine fetches/stages each distinct expert
+/// once and applies it to every token in its user list — B tokens that
+/// agree on an expert cost one store fetch instead of B.
+#[derive(Debug, Clone, Default)]
+pub struct BatchGroups {
+    /// Distinct experts ordered by their maximum original gate weight
+    /// across the batch, descending (ties: lower id) — the order the
+    /// shared cache access consumes, extending the paper's §4.2
+    /// "higher-weight first" stamping across the whole batch.
+    pub distinct: Vec<u32>,
+    /// `users[i]`: the slots routed to `distinct[i]` with their gate
+    /// coefficients, in ascending slot order.
+    pub users: Vec<Vec<(usize, f32)>>,
+}
+
+impl BatchGroups {
+    /// Invert per-slot selections into per-expert user lists.
+    ///
+    /// `experts[s]` / `coefs[s]`: slot `s`'s selection (weight-descending)
+    /// and its aligned gate coefficients; `weights[s]`: slot `s`'s full
+    /// softmax vector over all `n_experts` (the cross-batch ordering
+    /// signal — original weights, never renormalized coefficients).
+    pub fn build(
+        experts: &[&[u32]],
+        coefs: &[&[f32]],
+        weights: &[&[f32]],
+        n_experts: usize,
+    ) -> BatchGroups {
+        let mut maxw = vec![f32::NEG_INFINITY; n_experts];
+        let mut users: Vec<Vec<(usize, f32)>> = vec![Vec::new(); n_experts];
+        for (s, (es, cs)) in experts.iter().zip(coefs).enumerate() {
+            for (i, &e) in es.iter().enumerate() {
+                let e_us = e as usize;
+                users[e_us].push((s, cs[i]));
+                let w = weights[s][e_us];
+                if w > maxw[e_us] {
+                    maxw[e_us] = w;
+                }
+            }
+        }
+        let mut distinct: Vec<u32> = (0..n_experts as u32)
+            .filter(|&e| !users[e as usize].is_empty())
+            .collect();
+        distinct.sort_by(crate::routing::weight_desc(&maxw));
+        let users = distinct
+            .iter()
+            .map(|&e| std::mem::take(&mut users[e as usize]))
+            .collect();
+        BatchGroups { distinct, users }
+    }
+
+    /// Selections across the batch, counted per token (what a
+    /// token-at-a-time engine would access); `distinct.len()` is what the
+    /// batch step accesses instead.
+    pub fn token_accesses(&self) -> u64 {
+        self.users.iter().map(|u| u.len() as u64).sum()
     }
 }
 
@@ -357,6 +501,8 @@ impl StagedLayer {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
+
     use super::*;
 
     const DF: usize = 3;
@@ -470,6 +616,78 @@ mod tests {
         assert_eq!(a.slot_of(21), Some(s10));
         assert_slot_holds(&a, s10, 21);
         assert_eq!(a.slot_of(20), Some(s11));
+    }
+
+    #[test]
+    fn ensure_overflow_grows_tail_without_moving_slots() {
+        let mut a = LayerArena::new(DF, FD, 2, 1);
+        let s0 = a.alloc_cache_slot(9).unwrap();
+        fill(&mut a, s0, 9);
+        a.ensure_overflow(5);
+        // Existing cache-slot contents and mapping are untouched.
+        assert_eq!(a.slot_of(9), Some(s0));
+        assert_slot_holds(&a, s0, 9);
+        // The grown tail is addressable: five transient misses fit where
+        // one used to.
+        let plan = a
+            .plan_misses(&[20, 21, 22, 23, 24], &[], &[], &[20, 21, 22, 23, 24])
+            .unwrap();
+        assert_eq!(plan.len(), 5);
+        assert!(plan.iter().all(|m| m.slot >= 2), "all transients in overflow");
+        // Shrinking requests are no-ops.
+        a.ensure_overflow(2);
+        let views = a.slot_views_mut(&[2, 6]).unwrap();
+        assert_eq!(views.len(), 2);
+    }
+
+    #[test]
+    fn slot_views_mut_returns_disjoint_views_in_request_order() {
+        let mut a = LayerArena::new(DF, FD, 3, 1);
+        {
+            let views = a.slot_views_mut(&[2, 0]).unwrap();
+            assert_eq!(views.len(), 2);
+            // Request order preserved: views[0] is slot 2, views[1] slot 0.
+            let (w1_a, _, w2_a) = &views[0];
+            assert_eq!((w1_a.len(), w2_a.len()), (DF, FD));
+        }
+        // Write through the views, then confirm via slot_data.
+        {
+            let mut views = a.slot_views_mut(&[2, 0, 3]).unwrap();
+            for (i, (w1, w3, w2)) in views.iter_mut().enumerate() {
+                w1.fill(i as f32);
+                w3.fill(i as f32);
+                w2.fill(i as f32);
+            }
+        }
+        assert_eq!(a.slot_data(2).0, &[0.0; DF]);
+        assert_eq!(a.slot_data(0).0, &[1.0; DF]);
+        assert_eq!(a.slot_data(3).0, &[2.0; DF]);
+        assert_eq!(a.slot_data(1).0, &[0.0; DF], "untouched slot stays zero");
+        // Duplicates and out-of-range slots are rejected.
+        assert!(a.slot_views_mut(&[1, 1]).is_err());
+        assert!(a.slot_views_mut(&[4]).is_err());
+        // Empty request is fine.
+        assert!(a.slot_views_mut(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn batch_groups_invert_and_order_by_max_weight() {
+        // Slot 0 selects [5, 2], slot 1 selects [2, 7]; full weight
+        // vectors make 2's max weight (0.9, from slot 1) the largest.
+        let w0 = vec![0.0, 0.0, 0.4, 0.0, 0.0, 0.6, 0.0, 0.0];
+        let w1 = vec![0.0, 0.0, 0.9, 0.0, 0.0, 0.0, 0.0, 0.1];
+        let g = BatchGroups::build(
+            &[&[5, 2], &[2, 7]],
+            &[&[0.6, 0.4], &[0.9, 0.1]],
+            &[&w0, &w1],
+            8,
+        );
+        assert_eq!(g.distinct, vec![2, 5, 7]);
+        assert_eq!(g.users[0], vec![(0, 0.4), (1, 0.9)]); // expert 2
+        assert_eq!(g.users[1], vec![(0, 0.6)]); // expert 5
+        assert_eq!(g.users[2], vec![(1, 0.1)]); // expert 7
+        assert_eq!(g.token_accesses(), 4);
+        assert_eq!(g.distinct.len(), 3, "4 token accesses, 3 distinct");
     }
 
     #[test]

@@ -19,6 +19,14 @@
 //!   all simulator accounting (hit/miss counts, flash bytes, virtual time)
 //!   is bit-identical to the pre-pipeline engine unless
 //!   [`Engine::enable_prefetch`] is called.
+//! * **Fused batch decode** ([`Engine::step_batch`]): gang-scheduled
+//!   sessions advance one token each through a single step that runs
+//!   attention per-session, routes per-token, then *inverts* the dispatch
+//!   — each distinct selected expert across the batch is fetched/staged
+//!   once and applied to every token routed to it, with cache hits/misses
+//!   charged per distinct expert per step (see `docs/BATCHING.md`).
+
+#![warn(clippy::unwrap_used)]
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -29,12 +37,12 @@ use xla::PjRtBuffer;
 
 use crate::cache::{ExpertCache, Policy};
 use crate::config::{DeviceProfile, ModelConfig, Quant};
-use crate::model::arena::{LayerArena, StagedLayer};
+use crate::model::arena::{BatchGroups, LayerArena, StagedLayer};
 use crate::model::sampler::{log_prob, Sampler};
-use crate::policy::{EvictionFactory, OriginalPolicy, RoutingPolicy};
-use crate::routing::{self, RouterState, Strategy};
+use crate::policy::{BatchSelectInput, EvictionFactory, OriginalPolicy, RoutingPolicy};
+use crate::routing::{self, RouterState, Selection, Strategy};
 use crate::runtime::Runtime;
-use crate::store::{self, ExpertStore, TierStats};
+use crate::store::{self, ExpertStore, FetchDst, PrefetchStats, TierStats};
 use crate::tracesim::Trace;
 use crate::util::json::Json;
 use crate::weights::FlashImage;
@@ -341,6 +349,69 @@ impl SessionState {
     pub fn pos(&self) -> usize {
         self.pos
     }
+
+    /// Per-layer expert selections recorded at this session's last step
+    /// (the coordinator mirrors this into its affinity signal after a
+    /// gang quantum, where the engine-side
+    /// [`Engine::last_selections`] reflects only the resident session).
+    pub fn last_selections(&self) -> &[Vec<u32>] {
+        &self.last_sel
+    }
+}
+
+/// One session's slot in a fused batch step ([`Engine::step_batch`]): the
+/// session's sequence state, the token to feed at its position, an
+/// optional per-session routing override, and the output logits.
+pub struct SessionSlot {
+    /// The session's sequence state (KV mirrors, position, routing state).
+    pub state: SessionState,
+    /// Input token this step feeds at the session's current position.
+    pub token: u32,
+    /// Per-session routing override (the coordinator's
+    /// `Request::routing_spec`); `None` runs the engine's policy.
+    pub routing: Option<Box<dyn RoutingPolicy>>,
+    /// Next-token logits, filled by [`Engine::step_batch`].
+    pub logits: Vec<f32>,
+}
+
+impl SessionSlot {
+    pub fn new(state: SessionState, token: u32) -> Self {
+        SessionSlot { state, token, routing: None, logits: Vec::new() }
+    }
+}
+
+/// Per-layer record of one fused batch step's expert-grouped dispatch.
+#[derive(Debug, Clone, Default)]
+pub struct BatchLayerPlan {
+    /// Distinct experts selected across the batch, ordered by max original
+    /// gate weight descending (the order the shared cache access charged).
+    pub distinct: Vec<u32>,
+    /// For each distinct expert, its users as `(slot, gate coefficient)`.
+    pub users: Vec<Vec<(usize, f32)>>,
+    /// Distinct experts this layer fetched from the store (the coalesced
+    /// misses, prefetch-claimed ones included).
+    pub fetched: Vec<u32>,
+    /// Distinct experts charged as cache hits.
+    pub hits: u32,
+}
+
+/// What one fused batch step did: the per-layer expert grouping plus the
+/// step-level accounting the gang/serial comparison reads.
+#[derive(Debug, Clone, Default)]
+pub struct BatchPlan {
+    pub layers: Vec<BatchLayerPlan>,
+    /// Distinct-expert store fetches this step (Σ `layers[l].fetched`).
+    pub fetches: u64,
+    /// Token-level misses against the same start-of-layer residency — the
+    /// fetches a token-at-a-time engine would have issued for these very
+    /// selections. `fetches <= token_misses` always (distinct ≤ total).
+    pub token_misses: u64,
+    /// Per-slot `(hits, misses)` against start-of-layer residency — the
+    /// per-session attribution the coordinator reports (the shared cache's
+    /// own stats charge per *distinct* expert instead).
+    pub per_slot: Vec<(u64, u64)>,
+    /// Aggregate per-stage stats (also left in [`Engine::last_step`]).
+    pub stats: StepStats,
 }
 
 pub struct Engine {
@@ -564,8 +635,11 @@ impl Engine {
         self.store.enable_prefetch(workers);
     }
 
-    /// (issued, used, in_flight) totals of the store's prefetch pipeline.
-    pub fn prefetch_stats(&self) -> (u64, u64, usize) {
+    /// Totals of the store's prefetch pipeline (issued / used / deduped
+    /// hints / in-flight). Gang-scheduled sessions hinting the same
+    /// `(layer, expert)` within a round coalesce onto one fetch; the
+    /// coalesced hints are counted in [`PrefetchStats::deduped`].
+    pub fn prefetch_stats(&self) -> PrefetchStats {
         self.store.prefetch_stats()
     }
 
@@ -874,6 +948,372 @@ impl Engine {
         self.store.end_token(resident);
         self.last_step = step_stats;
         Ok(logits)
+    }
+
+    /// Fused batch decode: advance every slot's session by ONE token in a
+    /// single gang-scheduled step.
+    ///
+    /// Per layer the step (1) runs attention per-session against each
+    /// slot's own KV mirrors, (2) routes per-token through the batched
+    /// policy entry point ([`crate::policy::RoutingPolicy::select_batch`],
+    /// all sessions seeing the same start-of-layer cache mask), then (3)
+    /// *inverts* the dispatch: the distinct union of all selections is
+    /// accessed once in the shared cache
+    /// ([`crate::cache::ExpertCache::access_batch`] — hits/misses charged
+    /// per distinct expert per step), its misses are serviced by ONE
+    /// coalesced [`crate::store::ExpertStore::fetch_many`] call, and each
+    /// staged expert feeds every token routed to it. B tokens that agree
+    /// on an expert therefore cost one fetch instead of B — the
+    /// cross-request locality the gang schedule exists to harvest.
+    ///
+    /// Numerics are bit-identical to running [`Engine::step`] per session
+    /// (same dispatches in the same per-session order; only *shared-state*
+    /// accounting differs), which the gang/serial parity test pins.
+    ///
+    /// The engine's own resident sequence (KV, position, policy state) is
+    /// untouched: the step works entirely on the slots. Batch mode always
+    /// uploads KV from the slots' host mirrors (the device-resident KV
+    /// fast path is per-engine, not per-slot), does not record traces, and
+    /// ignores [`Engine::override_selection`].
+    pub fn step_batch(&mut self, slots: &mut [SessionSlot]) -> Result<BatchPlan> {
+        anyhow::ensure!(!slots.is_empty(), "step_batch on an empty batch");
+        let n_layers = self.cfg.n_layers;
+        for (i, slot) in slots.iter().enumerate() {
+            anyhow::ensure!(
+                slot.state.pos < self.cfg.max_seq,
+                "slot {i}: sequence overflow: pos {} >= max_seq {}",
+                slot.state.pos,
+                self.cfg.max_seq
+            );
+            anyhow::ensure!(
+                slot.state.kv_k.len() == n_layers && slot.state.last_sel.len() == n_layers,
+                "slot {i}: session state not sized for this model \
+                 (build it with Engine::new_session_state)"
+            );
+        }
+        // A stateful engine policy carries per-session internal state; the
+        // batch core exchanges it through `SessionState::policy_state`
+        // around every select. Save the engine's own resident state here
+        // and restore it on BOTH exits — a failed batch must not leak one
+        // slot's policy state into the resident sequence either.
+        let use_fallback = !self.strategy_active;
+        let stateful = !use_fallback && self.routing.session_state().is_some();
+        let saved_policy_state = if stateful { self.routing.session_state() } else { None };
+        let result = self.step_batch_core(slots, stateful, use_fallback);
+        if stateful {
+            match &saved_policy_state {
+                Some(st) => self.routing.restore_session_state(st),
+                None => self.routing.reset_session_state(),
+            }
+        }
+        result
+    }
+
+    /// The body of [`Engine::step_batch`]; policy-state save/restore lives
+    /// in the wrapper so it runs on the error path too.
+    fn step_batch_core(
+        &mut self,
+        slots: &mut [SessionSlot],
+        stateful: bool,
+        use_fallback: bool,
+    ) -> Result<BatchPlan> {
+        let n_layers = self.cfg.n_layers;
+        let b = slots.len();
+        let (d, hn, hd, t) = (
+            self.cfg.d_model,
+            self.cfg.n_heads,
+            self.cfg.head_dim,
+            self.cfg.max_seq,
+        );
+        let (top_k, n_experts) = (self.cfg.top_k, self.cfg.n_experts);
+        let (e_cnt, d_ff, renorm) =
+            (self.cfg.n_ffn_calls(), self.cfg.d_ff, self.cfg.renorm_topk);
+        let bytes_per = self.image.bytes_per_expert();
+        let prefetch_on = self.store.prefetch_enabled();
+        let any_override = slots.iter().any(|s| s.routing.is_some());
+
+        let mut plan = BatchPlan {
+            layers: Vec::with_capacity(n_layers),
+            fetches: 0,
+            token_misses: 0,
+            per_slot: vec![(0u64, 0u64); b],
+            stats: StepStats::default(),
+        };
+        let mut stats = StepStats::default();
+
+        // ---- embed per slot ----
+        let mut hs: Vec<Vec<f32>> = Vec::with_capacity(b);
+        for slot in slots.iter() {
+            let t0 = Instant::now();
+            let tok_buf = self.rt.buf_i32_scalar(slot.token as i32)?;
+            let pos_buf = self.rt.buf_i32_scalar(slot.state.pos as i32)?;
+            let outs = self.rt.run(
+                "embed",
+                &[&self.statics.embed, &self.statics.pos_embed, &tok_buf, &pos_buf],
+            )?;
+            hs.push(Runtime::lit_f32(&outs[0])?);
+            stats.t_compute_s += t0.elapsed().as_secs_f64();
+        }
+
+        let mut h1s: Vec<Vec<f32>> = vec![Vec::new(); b];
+        let mut zs: Vec<Vec<f32>> = vec![Vec::new(); b];
+        let mut xns: Vec<Vec<f32>> = vec![Vec::new(); b];
+
+        for l in 0..n_layers {
+            // ---- attention + router per session (own KV, host mirrors) ----
+            for (i, slot) in slots.iter_mut().enumerate() {
+                let t0 = Instant::now();
+                let h_buf = self.rt.buf_f32(&hs[i], &[1, d])?;
+                let pos_buf = self.rt.buf_i32_scalar(slot.state.pos as i32)?;
+                let kc_buf = self.rt.buf_f32(&slot.state.kv_k[l], &[hn, t, hd])?;
+                let vc_buf = self.rt.buf_f32(&slot.state.kv_v[l], &[hn, t, hd])?;
+                stats.t_upload_s += t0.elapsed().as_secs_f64();
+
+                let t0 = Instant::now();
+                let ls = &self.statics.layers[l];
+                let outs = self.rt.run(
+                    "layer",
+                    &[&h_buf, &ls.ln1, &ls.wq, &ls.wk, &ls.wv, &ls.wo, &kc_buf, &vc_buf, &pos_buf, &ls.ln2, &ls.router],
+                )?;
+                h1s[i] = Runtime::lit_f32(&outs[0])?;
+                let k_new: Vec<f32> = Runtime::lit_f32(&outs[1])?;
+                let v_new: Vec<f32> = Runtime::lit_f32(&outs[2])?;
+                zs[i] = Runtime::lit_f32(&outs[3])?;
+                xns[i] = Runtime::lit_f32(&outs[4])?;
+                stats.t_compute_s += t0.elapsed().as_secs_f64();
+
+                let t0 = Instant::now();
+                let pos = slot.state.pos;
+                for head in 0..hn {
+                    let dst = (head * t + pos) * hd;
+                    slot.state.kv_k[l][dst..dst + hd]
+                        .copy_from_slice(&k_new[head * hd..(head + 1) * hd]);
+                    slot.state.kv_v[l][dst..dst + hd]
+                        .copy_from_slice(&v_new[head * hd..(head + 1) * hd]);
+                }
+                stats.t_upload_s += t0.elapsed().as_secs_f64();
+            }
+
+            // ---- batched routing: shared start-of-layer mask, per-session
+            // state ----
+            let mask = self.caches[l].mask(n_experts);
+            let sels: Vec<Selection> = if !any_override && !stateful && !use_fallback {
+                let mut inputs: Vec<BatchSelectInput> = slots
+                    .iter_mut()
+                    .zip(zs.iter())
+                    .map(|(slot, z)| BatchSelectInput {
+                        z: z.as_slice(),
+                        state: &mut slot.state.router_state,
+                    })
+                    .collect();
+                self.routing.select_batch(&mut inputs, &mask, l, top_k)
+            } else {
+                let mut out = Vec::with_capacity(b);
+                for (i, slot) in slots.iter_mut().enumerate() {
+                    let z = zs[i].as_slice();
+                    let sel = if let Some(p) = slot.routing.as_mut() {
+                        p.select(z, &mask, l, top_k, &mut slot.state.router_state)
+                    } else if use_fallback {
+                        self.routing_fallback
+                            .select(z, &mask, l, top_k, &mut slot.state.router_state)
+                    } else if stateful {
+                        match slot.state.policy_state.take() {
+                            Some(st) => self.routing.restore_session_state(&st),
+                            None => self.routing.reset_session_state(),
+                        }
+                        let s =
+                            self.routing.select(z, &mask, l, top_k, &mut slot.state.router_state);
+                        slot.state.policy_state = self.routing.session_state();
+                        s
+                    } else {
+                        self.routing.select(z, &mask, l, top_k, &mut slot.state.router_state)
+                    };
+                    out.push(sel);
+                }
+                out
+            };
+
+            // ---- prefetch hints for layer l+1 (previous token's per-slot
+            // predictions; cross-session duplicates coalesce in the
+            // store-owned pipeline and are counted as deduped) ----
+            if prefetch_on && l + 1 < n_layers {
+                for slot in slots.iter() {
+                    let pred = slot.state.last_sel.get(l + 1).map(Vec::as_slice).unwrap_or(&[]);
+                    for &e in pred {
+                        if !self.caches[l + 1].contains(e) {
+                            self.store.prefetch(l + 1, e);
+                        }
+                    }
+                }
+            }
+
+            // ---- invert: group the batch by distinct expert ----
+            let coefs: Vec<Vec<f32>> = sels
+                .iter()
+                .map(|s| routing::gate_coefficients(&s.weights, &s.experts, renorm))
+                .collect();
+            let expert_refs: Vec<&[u32]> = sels.iter().map(|s| s.experts.as_slice()).collect();
+            let coef_refs: Vec<&[f32]> = coefs.iter().map(|c| c.as_slice()).collect();
+            let weight_refs: Vec<&[f32]> = sels.iter().map(|s| s.weights.as_slice()).collect();
+            let groups = BatchGroups::build(&expert_refs, &coef_refs, &weight_refs, n_experts);
+
+            // Token-level attribution against start-of-layer residency
+            // (what a serial engine would have charged/fetched).
+            for (i, sel) in sels.iter().enumerate() {
+                for &e in &sel.experts {
+                    if self.caches[l].contains(e) {
+                        plan.per_slot[i].0 += 1;
+                    } else {
+                        plan.per_slot[i].1 += 1;
+                        plan.token_misses += 1;
+                    }
+                }
+            }
+
+            // ---- one shared cache access on the distinct union ----
+            let access = self.caches[l].access_batch(
+                &groups.distinct,
+                groups.token_accesses(),
+                self.token_counter,
+            );
+            stats.hits += access.hits;
+            stats.misses += access.missed.len() as u32;
+
+            // ---- arena placement + coalesced store fetch ----
+            let t0 = Instant::now();
+            // A batch can stream up to B*K transients when the cache is
+            // smaller than the distinct union; grow the overflow tail
+            // beyond the serial top_k sizing before planning.
+            self.arenas[l].ensure_overflow(b * top_k);
+            let miss_plan = self.arenas[l].plan_misses(
+                &access.missed,
+                &access.evicted,
+                &access.resident_after,
+                &groups.distinct,
+            )?;
+            let mut fetched: Vec<u32> = Vec::with_capacity(miss_plan.len());
+            let mut demand: Vec<(u32, usize)> = Vec::new();
+            for ms in &miss_plan {
+                let (w1, w3, w2) = self.arenas[l].slot_mut(ms.slot);
+                match self.store.take_prefetched(l, ms.expert, w1, w3, w2)? {
+                    Some(_) => {
+                        stats.prefetch_hits += 1;
+                        stats.flash_bytes += bytes_per;
+                        fetched.push(ms.expert);
+                    }
+                    None => demand.push((ms.expert, ms.slot)),
+                }
+            }
+            if !demand.is_empty() {
+                let slot_ids: Vec<usize> = demand.iter().map(|&(_, s)| s).collect();
+                let views = self.arenas[l].slot_views_mut(&slot_ids)?;
+                let mut dsts: Vec<FetchDst> = demand
+                    .iter()
+                    .zip(views)
+                    .map(|(&(e, _), (w1, w3, w2))| FetchDst { expert: e as usize, w1, w3, w2 })
+                    .collect();
+                let bytes = self.store.fetch_many(l, &mut dsts)?;
+                stats.flash_bytes += bytes;
+                fetched.extend(demand.iter().map(|&(e, _)| e));
+            }
+            // Distinct hits stream from the fast tier — once each.
+            self.store.charge_hit(access.hits as u64, bytes_per);
+            stats.t_fetch_s += t0.elapsed().as_secs_f64();
+            plan.fetches += fetched.len() as u64;
+
+            // ---- apply each staged expert to every token routed to it:
+            // per-session stacked dispatch out of the shared arena ----
+            for (i, sel) in sels.iter().enumerate() {
+                let t0 = Instant::now();
+                let copied = {
+                    let (staged, arena) = (&mut self.staged[l], &self.arenas[l]);
+                    staged.build(arena, &sel.experts, &coefs[i])?
+                };
+                stats.staged_slots_copied += copied;
+                if copied > 0 || self.staged_dev[l].is_none() {
+                    let staged = &self.staged[l];
+                    let w1 = self.rt.buf_f32(&staged.w1, &[e_cnt, d, d_ff])?;
+                    let w3 = self.rt.buf_f32(&staged.w3, &[e_cnt, d, d_ff])?;
+                    let w2 = self.rt.buf_f32(&staged.w2, &[e_cnt, d_ff, d])?;
+                    self.staged_dev[l] = Some((w1, w3, w2));
+                    stats.staged_uploads += 1;
+                }
+                let staged = &self.staged[l];
+                let coef_buf = self.rt.buf_f32(&staged.coef, &[e_cnt])?;
+                let xn_buf = self.rt.buf_f32(&xns[i], &[1, d])?;
+                stats.t_stage_s += t0.elapsed().as_secs_f64();
+
+                let t0 = Instant::now();
+                let (bw1, bw3, bw2) = self.staged_dev[l]
+                    .as_ref()
+                    .context("staged device buffers missing")?;
+                let outs = self
+                    .rt
+                    .run("experts", &[&xn_buf, bw1, bw3, bw2, &coef_buf])?;
+                let y: Vec<f32> = Runtime::lit_f32(&outs[0])?;
+                stats.t_compute_s += t0.elapsed().as_secs_f64();
+                for j in 0..d {
+                    hs[i][j] = h1s[i][j] + y[j];
+                }
+            }
+            // Deferred arena moves after ALL dispatches consumed the
+            // staged weights (the whole batch is "this step" now).
+            self.arenas[l].finish_step();
+
+            // ---- per-slot reuse signal for the next token ----
+            for (i, slot) in slots.iter_mut().enumerate() {
+                let last = &mut slot.state.last_sel[l];
+                last.clear();
+                if prefetch_on {
+                    let r = routing::ranking_topk(&sels[i].weights, 2 * top_k);
+                    last.extend_from_slice(&r);
+                } else {
+                    last.extend_from_slice(&sels[i].experts);
+                }
+            }
+
+            plan.layers.push(BatchLayerPlan {
+                distinct: groups.distinct,
+                users: groups.users,
+                fetched,
+                hits: access.hits,
+            });
+        }
+
+        // ---- head per slot ----
+        for (i, slot) in slots.iter_mut().enumerate() {
+            let t0 = Instant::now();
+            let h_buf = self.rt.buf_f32(&hs[i], &[1, d])?;
+            let outs = self
+                .rt
+                .run("lm_head", &[&h_buf, &self.statics.lnf, &self.statics.head])?;
+            slot.logits = Runtime::lit_f32(&outs[0])?;
+            stats.t_compute_s += t0.elapsed().as_secs_f64();
+            slot.state.pos += 1;
+        }
+
+        // Layer-0 hints for the NEXT batch step.
+        if prefetch_on {
+            for slot in slots.iter() {
+                let pred = slot.state.last_sel.first().map(Vec::as_slice).unwrap_or(&[]);
+                for &e in pred {
+                    if !self.caches[0].contains(e) {
+                        self.store.prefetch(0, e);
+                    }
+                }
+            }
+        }
+
+        // One generated token per slot: close B tokens on the store clock
+        // so aggregate time stays comparable with serial execution.
+        self.token_counter += b as u64;
+        let resident = self.resident_bytes();
+        for _ in 0..b {
+            self.store.end_token(resident);
+        }
+        self.last_step = stats.clone();
+        plan.stats = stats;
+        Ok(plan)
     }
 
     /// Teacher-forced scoring: returns (sum of -log p(next), token count).

@@ -21,7 +21,10 @@ pub mod engine;
 pub mod prefetch;
 pub mod sampler;
 
-pub use arena::{LayerArena, MissSlot, StagedLayer};
-pub use engine::{Engine, EngineBuilder, EngineOptions, EngineSnapshot, SessionState, StepStats};
+pub use arena::{BatchGroups, LayerArena, MissSlot, StagedLayer};
+pub use engine::{
+    BatchLayerPlan, BatchPlan, Engine, EngineBuilder, EngineOptions, EngineSnapshot, SessionSlot,
+    SessionState, StepStats,
+};
 pub use prefetch::Prefetcher;
 pub use sampler::Sampler;

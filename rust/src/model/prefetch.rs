@@ -43,6 +43,10 @@ pub struct Prefetcher {
     /// Fetches issued / fetches that served a demand miss (lifetime totals).
     pub issued: u64,
     pub used: u64,
+    /// Hints coalesced onto an already-in-flight fetch instead of issuing
+    /// a duplicate. Gang-scheduled sessions hint the same `(layer, expert)`
+    /// many times per round, so this is the pipeline's dedup win counter.
+    pub deduped: u64,
     max_pending: usize,
 }
 
@@ -54,6 +58,7 @@ impl Prefetcher {
             order: VecDeque::new(),
             issued: 0,
             used: 0,
+            deduped: 0,
             // Bounds both memory and the worst-case take() stall (a claim
             // can wait behind at most this many queued fetches).
             max_pending: workers.max(1) * 8,
@@ -61,11 +66,15 @@ impl Prefetcher {
     }
 
     /// Begin fetching `(layer, expert)` off-thread unless it is already in
-    /// flight. A full table evicts its oldest entry first (a stale
-    /// misprediction; dropping it only costs a demand fetch later), so
-    /// fresh predictions always get through.
+    /// flight. A duplicate hint — e.g. several gang-scheduled sessions
+    /// predicting the same expert within one round — coalesces onto the
+    /// in-flight fetch and is counted in [`Prefetcher::deduped`]. A full
+    /// table evicts its oldest entry first (a stale misprediction;
+    /// dropping it only costs a demand fetch later), so fresh predictions
+    /// always get through.
     pub fn issue(&mut self, image: &Arc<FlashImage>, layer: usize, expert: u32) {
         if self.pending.contains_key(&(layer, expert)) {
+            self.deduped += 1;
             return;
         }
         while self.pending.len() >= self.max_pending {
@@ -121,6 +130,7 @@ impl Prefetcher {
         self.order.clear();
         self.issued = 0;
         self.used = 0;
+        self.deduped = 0;
     }
 }
 
@@ -137,6 +147,6 @@ mod tests {
         let mut p = Prefetcher::new(1);
         assert!(p.take(0, 42).is_none());
         assert_eq!(p.in_flight(), 0);
-        assert_eq!((p.issued, p.used), (0, 0));
+        assert_eq!((p.issued, p.used, p.deduped), (0, 0, 0));
     }
 }

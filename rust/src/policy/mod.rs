@@ -61,6 +61,17 @@ use crate::util::json::Json;
 // Routing
 // ---------------------------------------------------------------------
 
+/// One session's inputs to a batched routing decision
+/// ([`RoutingPolicy::select_batch`]): its own router logits and its own
+/// mutable per-session [`RouterState`]; the cache mask is shared by the
+/// whole batch (every session sees the same start-of-layer residency).
+pub struct BatchSelectInput<'a> {
+    /// Raw router logits of this session's token.
+    pub z: &'a [f32],
+    /// This session's routing state (Δ_avg estimates, probe RNG).
+    pub state: &'a mut RouterState,
+}
+
 /// A training-free routing transformation (paper §3): re-ranks the
 /// router's ranking vector given the cache mask, never the gate weights.
 ///
@@ -86,6 +97,29 @@ pub trait RoutingPolicy: Send {
         k: usize,
         state: &mut RouterState,
     ) -> Selection;
+
+    /// Batched entry point for the fused batch step (gang scheduling):
+    /// one decision per session against a *shared* start-of-layer cache
+    /// mask, each with its own [`RouterState`]. The default loops
+    /// [`RoutingPolicy::select`], so per-session results are bit-identical
+    /// to token-at-a-time execution; a policy may override to vectorize —
+    /// but must preserve that equivalence (the gang/serial parity test
+    /// pins it). Stateful policies (non-`None`
+    /// [`RoutingPolicy::session_state`]) are driven per-session by the
+    /// engine instead, so overrides may assume the policy-internal state
+    /// is session-agnostic here.
+    fn select_batch(
+        &mut self,
+        inputs: &mut [BatchSelectInput<'_>],
+        cache_mask: &[bool],
+        layer: usize,
+        k: usize,
+    ) -> Vec<Selection> {
+        inputs
+            .iter_mut()
+            .map(|i| self.select(i.z, cache_mask, layer, k, i.state))
+            .collect()
+    }
 
     /// Canonical spec label; must round-trip through
     /// [`registry::parse_routing`].

@@ -8,6 +8,11 @@
 //! throughput line approaches as the hit rate goes to 1: with it, a
 //! sweep's throughput can be reported relative to a true upper bound
 //! instead of its own best point.
+//!
+//! Coalescing ([`super::ExpertStore::fetch_many`]) keeps the default
+//! looped implementation here: with everything DRAM-resident there is no
+//! slow-tier seek order to optimize, and each cache-level miss charges
+//! the same DRAM stream whether fetched alone or in a batch.
 
 use std::collections::HashMap;
 use std::sync::Arc;

@@ -64,6 +64,19 @@
 //!   reallocate backend resources (maps stay mapped, clocks just rewind).
 //!
 //! See `docs/STORAGE.md` for the add-a-backend walkthrough.
+//!
+//! ## Coalesced fetches (gang batching)
+//!
+//! [`ExpertStore::fetch_many`] services one layer's *distinct* missed
+//! experts of a whole fused batch step in a single call. The default
+//! implementation loops [`ExpertStore::fetch_into`] (so the accounting is
+//! exactly a sequence of demand fetches); backends override it when
+//! coalescing changes the cost model: [`MmapStore`] walks the requests in
+//! span-offset order (sequential access over the mapping), and
+//! [`SimStore`] charges each unique span once even if a caller passes
+//! duplicates. See `docs/BATCHING.md`.
+
+#![warn(clippy::unwrap_used)]
 
 pub mod mem;
 pub mod mmap;
@@ -153,6 +166,30 @@ pub struct SpanMeta {
     pub bytes: u64,
 }
 
+/// Totals of a store's async prefetch pipeline.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefetchStats {
+    /// Fetches actually handed to the worker pool.
+    pub issued: u64,
+    /// Issued fetches that went on to serve a demand miss.
+    pub used: u64,
+    /// Hints coalesced onto an already-in-flight fetch instead of being
+    /// re-issued — the cross-session dedup win under gang scheduling.
+    pub deduped: u64,
+    /// Fetches currently pending in the pipeline.
+    pub in_flight: usize,
+}
+
+/// One destination of a coalesced fetch: a distinct routed expert and the
+/// mutable arena-slot views its dequantized weights land in (see
+/// [`crate::model::LayerArena::slot_views_mut`]).
+pub struct FetchDst<'a> {
+    pub expert: usize,
+    pub w1: &'a mut [f32],
+    pub w3: &'a mut [f32],
+    pub w2: &'a mut [f32],
+}
+
 /// A storage backend serving (and accounting for) expert weights.
 ///
 /// Object-safe: the engine holds a `Box<dyn ExpertStore>` and drives the
@@ -176,6 +213,23 @@ pub trait ExpertStore: Send {
         w3: &mut [f32],
         w2: &mut [f32],
     ) -> Result<u64>;
+
+    /// Coalesced demand fetch: service one layer's distinct missed experts
+    /// of a whole fused batch step in a single call, returning the total
+    /// bytes the slow tier moved. The default loops
+    /// [`ExpertStore::fetch_into`], so totals are exactly a sequence of
+    /// demand fetches; backends override when batching changes the cost
+    /// (offset-sorted reads on `mmap`, unique-span charging on `sim`).
+    /// Callers must pass distinct experts — how duplicates are charged is
+    /// backend-defined (the engine's batch step always sends a distinct
+    /// list).
+    fn fetch_many(&mut self, layer: usize, dsts: &mut [FetchDst<'_>]) -> Result<u64> {
+        let mut total = 0u64;
+        for d in dsts.iter_mut() {
+            total += self.fetch_into(layer, d.expert, d.w1, d.w3, d.w2)?;
+        }
+        Ok(total)
+    }
 
     /// Async hint: begin staging `(layer, expert)` ahead of demand.
     /// Cancellable — [`ExpertStore::reset`] drops all pending hints, and
@@ -209,9 +263,9 @@ pub trait ExpertStore: Send {
         false
     }
 
-    /// (issued, used, in_flight) pipeline totals.
-    fn prefetch_stats(&self) -> (u64, u64, usize) {
-        (0, 0, 0)
+    /// Pipeline totals (issued / used / deduped hints / in-flight).
+    fn prefetch_stats(&self) -> PrefetchStats {
+        PrefetchStats::default()
     }
 
     /// Account `hits` cache hits streaming from the fast tier.
@@ -260,12 +314,17 @@ pub(crate) fn claim_prefetched(
     }
 }
 
-/// (issued, used, in_flight) totals of an optional pipeline.
-pub(crate) fn pipeline_stats(prefetcher: &Option<Prefetcher>) -> (u64, u64, usize) {
+/// Totals of an optional pipeline.
+pub(crate) fn pipeline_stats(prefetcher: &Option<Prefetcher>) -> PrefetchStats {
     prefetcher
         .as_ref()
-        .map(|p| (p.issued, p.used, p.in_flight()))
-        .unwrap_or((0, 0, 0))
+        .map(|p| PrefetchStats {
+            issued: p.issued,
+            used: p.used,
+            deduped: p.deduped,
+            in_flight: p.in_flight(),
+        })
+        .unwrap_or_default()
 }
 
 // ---------------------------------------------------------------------
@@ -390,6 +449,8 @@ pub fn registry_help() -> String {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
+
     use super::*;
 
     #[test]

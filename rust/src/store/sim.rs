@@ -17,7 +17,7 @@ use crate::flash::FlashSim;
 use crate::model::prefetch::Prefetcher;
 use crate::weights::FlashImage;
 
-use super::{ExpertStore, SpanMeta, TierStats};
+use super::{ExpertStore, FetchDst, PrefetchStats, SpanMeta, TierStats};
 
 pub struct SimStore {
     image: Arc<FlashImage>,
@@ -61,6 +61,29 @@ impl ExpertStore for SimStore {
         Ok(bytes)
     }
 
+    /// Coalesced fetch: each *unique* span is charged exactly once on the
+    /// virtual clock, and the returned byte total counts unique spans only
+    /// (they are what the simulated slow tier moved). A duplicate
+    /// destination still gets its weights dequantized, but shares the
+    /// first occurrence's flash charge — the engine's batch step always
+    /// sends a distinct list, for which the accounting is bit-identical
+    /// to looping [`ExpertStore::fetch_into`].
+    fn fetch_many(&mut self, layer: usize, dsts: &mut [FetchDst<'_>]) -> Result<u64> {
+        let mut seen: Vec<usize> = Vec::with_capacity(dsts.len());
+        let mut total = 0u64;
+        for d in dsts.iter_mut() {
+            let bytes = self
+                .image
+                .fetch_expert_into(layer, d.expert, false, d.w1, d.w3, d.w2)?;
+            if !seen.contains(&d.expert) {
+                seen.push(d.expert);
+                self.sim.read_flash(bytes);
+                total += bytes;
+            }
+        }
+        Ok(total)
+    }
+
     fn prefetch(&mut self, layer: usize, expert: u32) {
         if let Some(p) = self.prefetcher.as_mut() {
             p.issue(&self.image, layer, expert);
@@ -95,7 +118,7 @@ impl ExpertStore for SimStore {
         self.prefetcher.is_some()
     }
 
-    fn prefetch_stats(&self) -> (u64, u64, usize) {
+    fn prefetch_stats(&self) -> PrefetchStats {
         super::pipeline_stats(&self.prefetcher)
     }
 

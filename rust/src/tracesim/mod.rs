@@ -238,6 +238,111 @@ pub fn simulate_with_tier(
     )
 }
 
+/// Result of a lockstepped (gang) multi-trace replay.
+#[derive(Debug, Clone)]
+pub struct GangSimResult {
+    /// Cache totals under per-distinct-expert charging.
+    pub result: SimResult,
+    /// Token-level accesses the lockstep rounds covered — what a serial
+    /// replay of the same traces charges as `hits + misses`. The gang
+    /// saving is `token_accesses - (hits + misses)`.
+    pub token_accesses: u64,
+    /// Lockstep rounds replayed (the longest trace's length).
+    pub rounds: usize,
+}
+
+/// Batch-aware replay: run several traces in lockstep rounds, as the gang
+/// schedule would. At round `t`, layer `l`, the *distinct union* of every
+/// trace's selection is accessed once
+/// ([`crate::cache::ExpertCache::access_batch`]) — hits/misses charge per
+/// distinct expert per round, the accounting counterpart of fetching each
+/// expert once for the whole batch. Union order: traces in argument
+/// order, each selection kept weight-descending, first occurrence wins —
+/// deterministic, and equal to a single trace's own order when all traces
+/// agree. Traces shorter than the longest simply drop out of later
+/// rounds (their session completed).
+///
+/// Clairvoyant policies are rejected: a next-use oracle is ambiguous
+/// across lockstepped traces.
+pub fn simulate_gang(
+    traces: &[&Trace],
+    capacity: usize,
+    factory: &EvictionFactory,
+) -> anyhow::Result<GangSimResult> {
+    anyhow::ensure!(!traces.is_empty(), "gang replay needs at least one trace");
+    let (n_layers, n_experts) = (traces[0].n_layers, traces[0].n_experts);
+    for tr in traces {
+        anyhow::ensure!(
+            tr.n_layers == n_layers && tr.n_experts == n_experts,
+            "gang replay: trace shape mismatch ({}x{} vs {n_layers}x{n_experts})",
+            tr.n_layers,
+            tr.n_experts
+        );
+    }
+    anyhow::ensure!(
+        !factory.for_layer(0).needs_oracle(),
+        "gang replay does not support clairvoyant eviction ({:?}): next-use is \
+         ambiguous across lockstepped traces",
+        factory.label()
+    );
+    let mut caches: Vec<ExpertCache> = (0..n_layers)
+        .map(|l| ExpertCache::with_policy(capacity, factory.for_layer(l)))
+        .collect();
+    let rounds = traces.iter().map(|t| t.tokens()).max().unwrap_or(0);
+    let mut token_accesses = 0u64;
+    let mut in_union = vec![false; n_experts];
+    let mut now = 0u64;
+    for t in 0..rounds {
+        for (l, cache) in caches.iter_mut().enumerate() {
+            let mut distinct: Vec<u32> = Vec::new();
+            let mut step_tokens = 0u64;
+            for tr in traces {
+                let Some(per_layer) = tr.selections.get(t) else {
+                    continue;
+                };
+                for &e in &per_layer[l] {
+                    step_tokens += 1;
+                    if !in_union[e as usize] {
+                        in_union[e as usize] = true;
+                        distinct.push(e);
+                    }
+                }
+            }
+            for &e in &distinct {
+                in_union[e as usize] = false;
+            }
+            if !distinct.is_empty() {
+                cache.access_batch(&distinct, step_tokens, now);
+            }
+            token_accesses += step_tokens;
+        }
+        // The round advanced one token in every still-live trace.
+        now += traces.iter().filter(|tr| t < tr.tokens()).count() as u64;
+    }
+    let mut hits = 0;
+    let mut misses = 0;
+    let mut evictions = 0;
+    let mut lt = crate::util::stats::Welford::default();
+    for mut c in caches {
+        c.flush_lifetimes(now);
+        hits += c.stats.hits;
+        misses += c.stats.misses;
+        evictions += c.stats.evictions;
+        lt.push(c.stats.lifetimes.mean());
+    }
+    Ok(GangSimResult {
+        result: SimResult {
+            hits,
+            misses,
+            evictions,
+            lifetime_mean: lt.mean(),
+            lifetime_std: lt.std(),
+        },
+        token_accesses,
+        rounds,
+    })
+}
+
 /// Replay with exact pooled lifetime statistics (Table 9); legacy-enum
 /// shim over [`simulate_lifetimes_with`].
 pub fn simulate_lifetimes(trace: &Trace, capacity: usize, policy: Policy) -> (SimResult, Vec<f64>) {
@@ -449,5 +554,55 @@ mod tests {
         let b = simulate(&tr, 8, Policy::Lru);
         assert_eq!(a.hits, b.hits);
         assert_eq!(a.misses, b.misses);
+    }
+
+    #[test]
+    fn gang_replay_of_identical_traces_charges_distinct_once() {
+        use crate::policy::parse_eviction;
+        // B copies of one trace in lockstep: the distinct union each round
+        // IS the single trace's selection, so gang totals equal a solo
+        // replay while covering B times the token accesses.
+        let tr = random_trace(17, 90, 2, 16, 3);
+        let solo = simulate_with(&tr, 6, &parse_eviction("lru").unwrap());
+        let gang = simulate_gang(&[&tr, &tr, &tr], 6, &parse_eviction("lru").unwrap()).unwrap();
+        assert_eq!((gang.result.hits, gang.result.misses), (solo.hits, solo.misses));
+        assert_eq!(gang.token_accesses, 3 * (solo.hits + solo.misses));
+        assert_eq!(gang.rounds, tr.tokens());
+    }
+
+    #[test]
+    fn gang_replay_distinct_charges_bounded_and_deterministic() {
+        use crate::policy::parse_eviction;
+        let a = random_trace(31, 80, 2, 14, 3);
+        let b = random_trace(32, 60, 2, 14, 3); // shorter: drops out early
+        let c = random_trace(33, 80, 2, 14, 3);
+        let f = parse_eviction("lru").unwrap();
+        let g1 = simulate_gang(&[&a, &b, &c], 5, &f).unwrap();
+        let g2 = simulate_gang(&[&a, &b, &c], 5, &f).unwrap();
+        assert_eq!(
+            (g1.result.hits, g1.result.misses),
+            (g2.result.hits, g2.result.misses),
+            "gang replay must be deterministic"
+        );
+        // Per-distinct charging can only shrink the charge count.
+        assert!(g1.result.hits + g1.result.misses <= g1.token_accesses);
+        // With 3 sessions of top-3 over 14 experts, some round somewhere
+        // overlaps: strictly fewer charges than token accesses.
+        assert!(
+            g1.result.hits + g1.result.misses < g1.token_accesses,
+            "no cross-session overlap at all is implausible here"
+        );
+        assert_eq!(g1.rounds, 80);
+    }
+
+    #[test]
+    fn gang_replay_rejects_oracles_and_shape_mismatch() {
+        use crate::policy::parse_eviction;
+        let a = random_trace(41, 20, 2, 16, 2);
+        let err = simulate_gang(&[&a], 4, &parse_eviction("belady").unwrap());
+        assert!(err.is_err(), "clairvoyant policies must be rejected");
+        let b = random_trace(42, 20, 3, 16, 2); // different layer count
+        assert!(simulate_gang(&[&a, &b], 4, &parse_eviction("lru").unwrap()).is_err());
+        assert!(simulate_gang(&[], 4, &parse_eviction("lru").unwrap()).is_err());
     }
 }
