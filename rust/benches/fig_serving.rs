@@ -22,7 +22,9 @@
 //!
 //! Results land in `results/BENCH_serving.json`, plus a focused
 //! serial-vs-gang comparison (aggregate tps + store fetch counts at equal
-//! aggregate tokens) in `results/BENCH_batch.json`.
+//! aggregate tokens) in `results/BENCH_batch.json`, plus a
+//! healthy-vs-degraded comparison (the same workload at store error rate
+//! 0 vs 0.05, `docs/ROBUSTNESS.md`) in `results/BENCH_fault.json`.
 //!
 //! Run: `cargo bench --offline --bench fig_serving`
 
@@ -31,7 +33,7 @@ use moe_cache::config::{ModelConfig, Quant};
 use moe_cache::coordinator::{
     Coordinator, Event, Request, Schedule, ServerConfig,
 };
-use moe_cache::model::{Engine, EngineOptions};
+use moe_cache::model::{Engine, EngineBuilder, EngineOptions};
 use moe_cache::report::{results_dir, Table};
 use moe_cache::routing::{DeltaMode, Strategy};
 use moe_cache::util::json::Json;
@@ -75,6 +77,17 @@ struct Run {
     /// Storage-tier fetches over the whole run (coordinator shutdown
     /// totals) — the number gang scheduling exists to shrink.
     flash_reads: u64,
+    /// Sessions that terminated with `Event::Failed` (degraded runs only;
+    /// a healthy-store failure is a bench bug and asserts below).
+    failed: u64,
+    /// Degradation ledger from the coordinator shutdown metrics
+    /// (`docs/ROBUSTNESS.md`): injected store faults and how the engine
+    /// absorbed them.
+    faults: u64,
+    retries: u64,
+    fetch_failures: u64,
+    rerouted: u64,
+    dropped: u64,
 }
 
 fn run_schedule(
@@ -83,6 +96,7 @@ fn run_schedule(
     cache: usize,
     j: usize,
     reqs: Vec<Request>,
+    store: Option<&'static str>,
 ) -> Result<Run> {
     let arts = moe_cache::artifacts_dir();
     let model_owned = model.to_string();
@@ -92,7 +106,13 @@ fn run_schedule(
         ..EngineOptions::defaults(cache)
     };
     let coord = Coordinator::spawn(
-        move || Engine::load(&arts, &model_owned, opts),
+        move || match store {
+            None => Engine::load(&arts, &model_owned, opts),
+            Some(s) => EngineBuilder::new(&arts, &model_owned)
+                .options(opts)
+                .store_spec(s)?
+                .build(),
+        },
         ServerConfig {
             max_sessions: MAX_SESSIONS,
             schedule,
@@ -104,8 +124,20 @@ fn run_schedule(
 
     let t0 = std::time::Instant::now();
     let rxs = coord.submit_batch(reqs)?;
-    let mut run =
-        Run { ttft: Vec::new(), tokens: 0, hits: 0, misses: 0, wall_s: 0.0, flash_reads: 0 };
+    let mut run = Run {
+        ttft: Vec::new(),
+        tokens: 0,
+        hits: 0,
+        misses: 0,
+        wall_s: 0.0,
+        flash_reads: 0,
+        failed: 0,
+        faults: 0,
+        retries: 0,
+        fetch_failures: 0,
+        rerouted: 0,
+        dropped: 0,
+    };
     for rx in rxs {
         loop {
             match rx.recv() {
@@ -117,8 +149,11 @@ fn run_schedule(
                     run.misses += res.cache_misses;
                     break;
                 }
-                Ok(Event::Failed { id, error }) => {
-                    anyhow::bail!("request {id} failed: {error}")
+                Ok(Event::Failed { .. }) => {
+                    // Degraded termination — counted, never fatal to the
+                    // bench (healthy runs assert failed == 0 below).
+                    run.failed += 1;
+                    break;
                 }
                 Err(_) => anyhow::bail!("coordinator dropped reply"),
             }
@@ -127,6 +162,11 @@ fn run_schedule(
     run.wall_s = t0.elapsed().as_secs_f64();
     let metrics = coord.shutdown();
     run.flash_reads = metrics.flash_reads;
+    run.faults = metrics.store_faults;
+    run.retries = metrics.fetch_retries;
+    run.fetch_failures = metrics.fetch_failures;
+    run.rerouted = metrics.rerouted_experts;
+    run.dropped = metrics.dropped_experts;
     Ok(run)
 }
 
@@ -164,7 +204,8 @@ fn main() -> Result<()> {
     for schedule in
         [Schedule::Fcfs, Schedule::RoundRobin, Schedule::Affinity, Schedule::Gang]
     {
-        let r = run_schedule(&model, schedule, cache, j, reqs.clone())?;
+        let r = run_schedule(&model, schedule, cache, j, reqs.clone(), None)?;
+        anyhow::ensure!(r.failed == 0, "{}: healthy-store session failed", schedule.label());
         let tp90 = percentile(&r.ttft, 90.0);
         let hit_rate = r.hits as f64 / (r.hits + r.misses).max(1) as f64;
         table.row(vec![
@@ -228,8 +269,8 @@ fn main() -> Result<()> {
 
     // Reproducibility: the same schedule on a fresh engine produces
     // bit-identical shared-cache totals.
-    let a = run_schedule(&model, Schedule::RoundRobin, cache, j, reqs.clone())?;
-    let b = run_schedule(&model, Schedule::RoundRobin, cache, j, reqs)?;
+    let a = run_schedule(&model, Schedule::RoundRobin, cache, j, reqs.clone(), None)?;
+    let b = run_schedule(&model, Schedule::RoundRobin, cache, j, reqs, None)?;
     let deterministic = a.hits == b.hits && a.misses == b.misses;
     println!(
         "repro: round-robin hits/misses {}/{} vs {}/{} ({})",
@@ -261,8 +302,8 @@ fn main() -> Result<()> {
             r.routing_spec = Some("original".into());
         }
     }
-    let ma = run_schedule(&model, Schedule::RoundRobin, cache, j, mixed.clone())?;
-    let mb = run_schedule(&model, Schedule::RoundRobin, cache, j, mixed)?;
+    let ma = run_schedule(&model, Schedule::RoundRobin, cache, j, mixed.clone(), None)?;
+    let mb = run_schedule(&model, Schedule::RoundRobin, cache, j, mixed, None)?;
     println!(
         "mixed-policy run: {} tokens, hits/misses {}/{} (repeat {}/{})",
         ma.tokens, ma.hits, ma.misses, mb.hits, mb.misses
@@ -293,7 +334,7 @@ fn main() -> Result<()> {
     // Focused serial-vs-gang trajectory: aggregate tps + flash-fetch
     // counts at equal aggregate tokens (the CI batching smoke).
     let batch_json = Json::Object(vec![
-        ("model".into(), Json::str(model)),
+        ("model".into(), Json::str(model.clone())),
         ("aggregate_tokens".into(), Json::num(tokens["fcfs"] as f64)),
         (
             "serial_fcfs".into(),
@@ -317,5 +358,71 @@ fn main() -> Result<()> {
     let batch_path = dir.join("BENCH_batch.json");
     std::fs::write(&batch_path, format!("{batch_json}"))?;
     println!("wrote {}", batch_path.display());
+
+    // Healthy vs. degraded: the identical round-robin workload on a
+    // fault-injecting store (5% transient errors + 5% latency spikes,
+    // pinned seed). The point is graceful degradation, not raw numbers:
+    // every session must still terminate, the retry/reroute/drop ladder
+    // must absorb the injected faults, and the throughput/TTFT cost of
+    // doing so is what BENCH_fault.json tracks.
+    const FAULT_SPEC: &str = "fault:inner=sim:err=0.05:slow=0.05:seed=7";
+    let degraded = run_schedule(
+        &model,
+        Schedule::RoundRobin,
+        cache,
+        j,
+        requests(cfg.vocab, cfg.max_seq),
+        Some(FAULT_SPEC),
+    )?;
+    anyhow::ensure!(
+        degraded.ttft.len() as u64 + degraded.failed == N_REQ as u64,
+        "every degraded session must terminate"
+    );
+    anyhow::ensure!(degraded.faults > 0, "a 5% error rate must inject faults");
+    let healthy_tps = a.tokens as f64 / a.wall_s.max(1e-9);
+    let degraded_tps = degraded.tokens as f64 / degraded.wall_s.max(1e-9);
+    println!(
+        "fault tolerance: err=0.05 injected {} faults ({} retried, {} rerouted, {} dropped); \
+         agg tps {healthy_tps:.2} -> {degraded_tps:.2}, {} of {N_REQ} sessions completed",
+        degraded.faults,
+        degraded.retries,
+        degraded.rerouted,
+        degraded.dropped,
+        degraded.ttft.len(),
+    );
+    let fault_json = Json::Object(vec![
+        ("model".into(), Json::str(model)),
+        ("schedule".into(), Json::str("round-robin")),
+        ("requests".into(), Json::num(N_REQ as f64)),
+        ("fault_spec".into(), Json::str(FAULT_SPEC)),
+        (
+            "healthy".into(),
+            Json::Object(vec![
+                ("err_rate".into(), Json::num(0.0)),
+                ("agg_tps".into(), Json::num(healthy_tps)),
+                ("ttft_p90_s".into(), Json::num(percentile(&a.ttft, 90.0))),
+                ("completed".into(), Json::num(a.ttft.len() as f64)),
+                ("failed".into(), Json::num(a.failed as f64)),
+            ]),
+        ),
+        (
+            "degraded".into(),
+            Json::Object(vec![
+                ("err_rate".into(), Json::num(0.05)),
+                ("agg_tps".into(), Json::num(degraded_tps)),
+                ("ttft_p90_s".into(), Json::num(percentile(&degraded.ttft, 90.0))),
+                ("completed".into(), Json::num(degraded.ttft.len() as f64)),
+                ("failed".into(), Json::num(degraded.failed as f64)),
+                ("store_faults".into(), Json::num(degraded.faults as f64)),
+                ("fetch_retries".into(), Json::num(degraded.retries as f64)),
+                ("fetch_failures".into(), Json::num(degraded.fetch_failures as f64)),
+                ("rerouted_experts".into(), Json::num(degraded.rerouted as f64)),
+                ("dropped_experts".into(), Json::num(degraded.dropped as f64)),
+            ]),
+        ),
+    ]);
+    let fault_path = dir.join("BENCH_fault.json");
+    std::fs::write(&fault_path, format!("{fault_json}"))?;
+    println!("wrote {}", fault_path.display());
     Ok(())
 }

@@ -119,6 +119,10 @@ pub struct CacheStats {
     pub misses: u64,
     pub evictions: u64,
     pub lifetimes: Welford,
+    /// Entries force-removed through [`ExpertCache::invalidate`] (the
+    /// degraded path rolling back an insert whose fetch failed). Not
+    /// counted as evictions and excluded from the lifetime stats.
+    pub invalidations: u64,
     /// Batched (gang) accesses taken through [`ExpertCache::access_batch`].
     pub batch_steps: u64,
     /// Token-level selections those batched accesses covered (what a
@@ -360,6 +364,33 @@ impl ExpertCache {
         self.policy.victim(&self.scratch, now_token, next_use)
     }
 
+    /// Force-remove `expert` (degraded path: its insert's fetch failed and
+    /// its slot-arena weights were never valid). Unlike an eviction it is
+    /// not a policy decision and records no lifetime — the entry should
+    /// never have existed. Returns whether the expert was resident.
+    ///
+    /// ```
+    /// use moe_cache::cache::{ExpertCache, Policy};
+    ///
+    /// let mut c = ExpertCache::new(2, Policy::Lru);
+    /// c.access(&[1], 0, None);
+    /// assert!(c.invalidate(1, 0));
+    /// assert!(!c.contains(1));
+    /// assert!(!c.invalidate(1, 0)); // already gone
+    /// assert_eq!(c.stats.invalidations, 1);
+    /// assert_eq!(c.stats.evictions, 0);
+    /// ```
+    pub fn invalidate(&mut self, expert: u32, now_token: u64) -> bool {
+        if self.entries.remove(&expert).is_some() {
+            self.stats.invalidations += 1;
+            // Let the policy drop its bookkeeping for the entry.
+            self.policy.on_evict(expert, now_token);
+            true
+        } else {
+            false
+        }
+    }
+
     /// Account still-resident experts as living until `now_token` (called at
     /// end-of-sequence so Table 9 lifetimes include residents).
     pub fn flush_lifetimes(&mut self, now_token: u64) {
@@ -504,6 +535,21 @@ mod tests {
         assert_eq!(c.stats.hits + c.stats.misses, 0);
         let a = c.access(&[1], 0, None);
         assert_eq!(a.hits, 1);
+    }
+
+    #[test]
+    fn invalidate_removes_without_eviction_accounting() {
+        let mut c = lru(2);
+        c.access(&[1, 2], 0, None);
+        assert!(c.invalidate(2, 5));
+        assert!(!c.contains(2));
+        assert_eq!(c.stats.invalidations, 1);
+        assert_eq!(c.stats.evictions, 0);
+        assert_eq!(c.stats.lifetimes.count(), 0);
+        // The freed capacity is usable again without an eviction.
+        let a = c.access(&[3], 6, None);
+        assert!(a.evicted.is_empty());
+        assert_eq!(c.len(), 2);
     }
 
     #[test]

@@ -22,5 +22,5 @@
 pub mod server;
 pub mod session;
 
-pub use server::{Coordinator, ServerConfig, ServerMetrics};
+pub use server::{Coordinator, ServerConfig, ServerMetrics, WatchdogExpired};
 pub use session::{Event, FinishReason, Request, RequestResult, Schedule};

@@ -58,6 +58,12 @@ pub struct ServerConfig {
     /// Prompt tokens one session prefills per round (bounds how long a
     /// long prompt can delay other sessions' quanta).
     pub prefill_chunk: usize,
+    /// Per-quantum wall-clock watchdog: a session whose quantum runs
+    /// longer than this (e.g. a degraded store retrying every fetch)
+    /// *fails* with [`WatchdogExpired`] instead of starving the other
+    /// sessions; a gang round over the limit is cut short at the next
+    /// step boundary. `None` (the default) disables the watchdog.
+    pub quantum_deadline_s: Option<f64>,
 }
 
 impl Default for ServerConfig {
@@ -69,9 +75,31 @@ impl Default for ServerConfig {
             schedule: Schedule::RoundRobin,
             decode_quantum: 8,
             prefill_chunk: 32,
+            quantum_deadline_s: None,
         }
     }
 }
+
+/// Typed failure for a quantum that exceeded
+/// [`ServerConfig::quantum_deadline_s`]: the stuck session is failed (its
+/// caller gets [`Event::Failed`]) rather than allowed to hang the round.
+/// Counted in [`ServerMetrics::watchdog_failures`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WatchdogExpired {
+    pub limit_s: f64,
+}
+
+impl std::fmt::Display for WatchdogExpired {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "quantum watchdog expired: no timely progress within {:.3}s",
+            self.limit_s
+        )
+    }
+}
+
+impl std::error::Error for WatchdogExpired {}
 
 #[derive(Debug, Clone, Default)]
 pub struct ServerMetrics {
@@ -86,12 +114,27 @@ pub struct ServerMetrics {
     /// the serial-vs-gang benches compare it at equal aggregate tokens.
     pub flash_reads: u64,
     pub flash_bytes: u64,
+    /// Store faults injected/observed at the tier (nonzero only behind a
+    /// `fault:` backend — see [`crate::store::FaultStore`]).
+    pub store_faults: u64,
+    /// Fetch attempts the engine retried after a transient store fault.
+    pub fetch_retries: u64,
+    /// Fetches abandoned after the retry budget / fetch deadline ran out.
+    pub fetch_failures: u64,
+    /// Routed experts replaced by a cache-resident stand-in (degradation
+    /// ladder rung 1).
+    pub rerouted_experts: u64,
+    /// Routed experts dropped outright, gate renormalized over the
+    /// survivors (degradation ladder rung 2).
+    pub dropped_experts: u64,
+    /// Quanta killed by the [`ServerConfig::quantum_deadline_s`] watchdog.
+    pub watchdog_failures: u64,
 }
 
 impl ServerMetrics {
     pub fn summary(&self) -> String {
         format!(
-            "completed={} aborted={} rejected={} tokens={} ttft_mean={:.3}s ttft_p90={:.3}s tps_mean={:.2} tps_p10={:.2} flash_reads={}",
+            "completed={} aborted={} rejected={} tokens={} ttft_mean={:.3}s ttft_p90={:.3}s tps_mean={:.2} tps_p10={:.2} flash_reads={} faults={} retries={} fetch_failures={} rerouted={} dropped={} watchdog={}",
             self.completed,
             self.aborted,
             self.rejected,
@@ -101,6 +144,12 @@ impl ServerMetrics {
             mean(&self.decode_tps),
             percentile(&self.decode_tps, 10.0),
             self.flash_reads,
+            self.store_faults,
+            self.fetch_retries,
+            self.fetch_failures,
+            self.rerouted_experts,
+            self.dropped_experts,
+            self.watchdog_failures,
         )
     }
 }
@@ -355,6 +404,7 @@ fn engine_loop(engine: &mut Engine, rx: &Receiver<Msg>, cfg: &ServerConfig) -> S
                     finalize(sess, finish, &mut st.metrics);
                 }
                 Err(e) => {
+                    count_failure_cause(&mut st.metrics, &e);
                     let sess = st.active.remove(idx);
                     if st.resident == Some(seq) {
                         st.resident = None;
@@ -370,7 +420,21 @@ fn engine_loop(engine: &mut Engine, rx: &Receiver<Msg>, cfg: &ServerConfig) -> S
     let tier = engine.tier_stats();
     st.metrics.flash_reads = tier.flash_reads;
     st.metrics.flash_bytes = tier.flash_bytes;
+    st.metrics.store_faults = tier.faults;
+    st.metrics.fetch_retries = tier.fetch_retries;
+    st.metrics.fetch_failures = tier.fetch_failures;
+    st.metrics.rerouted_experts = tier.rerouted;
+    st.metrics.dropped_experts = tier.dropped;
     st.metrics
+}
+
+/// Attribute a quantum failure's root cause to the matching metric (only
+/// the watchdog has a dedicated counter; store-fault totals come from the
+/// tier snapshot at shutdown).
+fn count_failure_cause(metrics: &mut ServerMetrics, e: &anyhow::Error) {
+    if e.is::<WatchdogExpired>() {
+        metrics.watchdog_failures += 1;
+    }
 }
 
 fn handle_msg(msg: Msg, st: &mut LoopState, cfg: &ServerConfig) {
@@ -557,7 +621,43 @@ fn serial_quantum(
     match run_quantum(engine, &mut st.active[idx], quantum, chunk, cfg) {
         Ok(None) => {}
         Ok(Some(finish)) => remove_session(st, seq, finish),
-        Err(e) => fail_session(st, seq, &format!("{e:#}")),
+        Err(e) => {
+            count_failure_cause(&mut st.metrics, &e);
+            fail_session(st, seq, &format!("{e:#}"));
+        }
+    }
+}
+
+/// Replay one already-sampled token for `seq` serially after a fused gang
+/// step failed. Only the session whose step still fails gets
+/// [`Event::Failed`]; a session whose serial retry succeeds has advanced
+/// one token and stays in the gang for the next round.
+fn gang_retry_step(engine: &mut Engine, st: &mut LoopState, seq: u64, token: u32) {
+    let Some(idx) = st.active.iter().position(|s| s.seq == seq) else {
+        return;
+    };
+    make_resident(engine, &mut st.active, &mut st.resident, seq);
+    let res = {
+        let sess = &mut st.active[idx];
+        if let Some(p) = sess.routing.as_mut() {
+            engine.swap_routing(p);
+        }
+        let r = step_counted(engine, sess, token);
+        if let Some(p) = sess.routing.as_mut() {
+            engine.swap_routing(p);
+        }
+        r
+    };
+    match res {
+        Ok(logits) => {
+            let sess = &mut st.active[idx];
+            sess.logits = logits;
+            sess.last_topk = engine.last_selections().to_vec();
+        }
+        Err(e) => {
+            count_failure_cause(&mut st.metrics, &e);
+            fail_session(st, seq, &format!("{e:#}"));
+        }
     }
 }
 
@@ -624,7 +724,17 @@ fn gang_round(
     }
     engine.strategy_active = true;
 
+    // The gang watchdog bounds the whole lockstepped quantum: an over-limit
+    // round is cut short at the next step boundary (no session is singled
+    // out — a fused step has no per-session attribution for wall time).
+    let gang_t0 = Instant::now();
     for _ in 0..quantum {
+        if let Some(limit) = cfg.quantum_deadline_s {
+            if gang_t0.elapsed().as_secs_f64() > limit {
+                st.metrics.watchdog_failures += 1;
+                break;
+            }
+        }
         // ---- sample one token per live session; peel off finishers ----
         let mut seqs: Vec<u64> = Vec::with_capacity(live.len());
         let mut slots: Vec<SessionSlot> = Vec::with_capacity(live.len());
@@ -698,17 +808,25 @@ fn gang_round(
                     sess.dev_tokens += 1;
                 }
             }
-            Err(e) => {
-                // The whole batch shares the failure: restore each state,
-                // fail each request, keep the server serving.
-                let msg = format!("{e:#}");
+            Err(_) => {
+                // Failure isolation: one session's store fault must not
+                // poison the batch. The failed fused step made no
+                // per-session progress (positions only advance when a step
+                // completes), so restore every slot's state and replay each
+                // slot's token serially — the retry both gives the store a
+                // fresh chance and pins the failure on the one session that
+                // actually owns it; everyone else keeps the round.
+                let mut retry: Vec<(u64, u32)> = Vec::with_capacity(seqs.len());
                 for (seq, slot) in seqs.iter().zip(slots) {
                     if let Some(idx) = st.active.iter().position(|s| s.seq == *seq) {
                         let sess = &mut st.active[idx];
                         sess.state = slot.state;
                         sess.routing = slot.routing;
                     }
-                    fail_session(st, *seq, &msg);
+                    retry.push((*seq, slot.token));
+                }
+                for (seq, token) in retry {
+                    gang_retry_step(engine, st, seq, token);
                 }
                 break;
             }
@@ -759,10 +877,23 @@ fn run_quantum_inner(
     chunk: usize,
     cfg: &ServerConfig,
 ) -> Result<Option<FinishReason>> {
+    // Per-quantum watchdog: checked between steps (a single engine step is
+    // never interrupted), so a session stuck in store-retry loops fails at
+    // the next step boundary instead of starving every other session.
+    let watchdog = cfg.quantum_deadline_s.map(|limit| (Instant::now(), limit));
+    let check = |w: &Option<(Instant, f64)>| -> Result<()> {
+        if let Some((t0, limit)) = w {
+            if t0.elapsed().as_secs_f64() > *limit {
+                return Err(WatchdogExpired { limit_s: *limit }.into());
+            }
+        }
+        Ok(())
+    };
     if sess.is_prefilling() {
         engine.strategy_active = cfg.strategy_during_prefill;
         let end = sess.prompt.len().min(sess.fed.saturating_add(chunk));
         while sess.fed < end {
+            check(&watchdog)?;
             let tok = sess.prompt[sess.fed];
             sess.logits = step_counted(engine, sess, tok)?;
             sess.fed += 1;
@@ -783,6 +914,7 @@ fn run_quantum_inner(
     let mut finish = None;
     let mut steps = 0usize;
     while steps < quantum {
+        check(&watchdog)?;
         if sess.generated.len() >= sess.req.max_new {
             finish = Some(FinishReason::Length);
             break;
@@ -891,6 +1023,12 @@ mod tests {
             decode_tps: vec![10.0, 20.0],
             flash_reads: 5,
             flash_bytes: 4096,
+            store_faults: 3,
+            fetch_retries: 2,
+            fetch_failures: 1,
+            rerouted_experts: 1,
+            dropped_experts: 0,
+            watchdog_failures: 1,
         };
         let s = m.summary();
         assert!(s.contains("completed=2"));
@@ -898,6 +1036,23 @@ mod tests {
         assert!(s.contains("rejected=0"));
         assert!(s.contains("tokens=30"));
         assert!(s.contains("flash_reads=5"));
+        assert!(s.contains("faults=3"));
+        assert!(s.contains("retries=2"));
+        assert!(s.contains("fetch_failures=1"));
+        assert!(s.contains("rerouted=1"));
+        assert!(s.contains("dropped=0"));
+        assert!(s.contains("watchdog=1"));
+    }
+
+    #[test]
+    fn watchdog_error_is_typed_and_counted() {
+        let e: anyhow::Error = WatchdogExpired { limit_s: 0.25 }.into();
+        assert!(e.is::<WatchdogExpired>());
+        assert!(format!("{e}").contains("watchdog expired"));
+        let mut m = ServerMetrics::default();
+        count_failure_cause(&mut m, &e);
+        count_failure_cause(&mut m, &anyhow::anyhow!("unrelated"));
+        assert_eq!(m.watchdog_failures, 1);
     }
 
     #[test]

@@ -27,6 +27,8 @@
 //! nothing outside this module mutates (or even sees) individual fields,
 //! and [`crate::store::SimStore`] is the only decode-path caller.
 
+#![warn(clippy::unwrap_used)]
+
 use crate::config::DeviceProfile;
 use crate::store::TierStats;
 
@@ -78,6 +80,14 @@ impl FlashSim {
         self.overlap_budget_s -= hidden;
         self.stats.hidden_s += hidden;
         self.stats.time_s += cost - hidden;
+    }
+
+    /// Advance the clock by `seconds` without moving any bytes: retry
+    /// backoff waits and injected latency spikes on the degraded path.
+    /// Counted in `time_s` only — never in byte or pressure totals, and
+    /// never hidden behind the overlap window.
+    pub fn stall(&mut self, seconds: f64) {
+        self.stats.time_s += seconds;
     }
 
     /// Charge a DRAM stream of `bytes` (cache hit: weights flow DRAM->CPU).
@@ -133,6 +143,19 @@ mod tests {
         assert!((s.stats().time_s - (lat + 1000.0 / bw)).abs() < 1e-12);
         assert_eq!(s.stats().flash_bytes, 1000);
         assert_eq!(s.stats().flash_reads, 1);
+    }
+
+    #[test]
+    fn stall_charges_time_only() {
+        let mut s = sim();
+        s.stall(0.25);
+        assert!((s.stats().time_s - 0.25).abs() < 1e-12);
+        assert_eq!(s.stats().flash_bytes, 0);
+        assert_eq!(s.stats().flash_reads, 0);
+        assert_eq!(s.stats().pressure_s, 0.0);
+        // A stall never consumes the prefetch overlap window.
+        s.read_flash_prefetched(0);
+        assert!((s.stats().time_s - 0.25).abs() < 1e-12);
     }
 
     #[test]

@@ -37,6 +37,9 @@ COMMANDS:
                                             decode: distinct experts fetched
                                             once per round across sessions)
                         --prefill-chunk P --stream
+                        --quantum-deadline S  wall-clock watchdog per quantum
+                                            (0 = off): a stuck session fails
+                                            instead of starving the round
                         --strategies S1,S2  per-request routing overrides,
                                             assigned cyclically]
   eval-ppl   --model M [--cache C --strategy S --policy P --chunks N --chunk-len L]
@@ -55,7 +58,10 @@ Policy and store specs share one grammar: name[:arg]... with positional or
 key=value args ('_' and '-' interchangeable). Examples: cache-prior:0.5:2,
 cache_prior:lambda=0.5:j=2, belady:trace=results/trace.json, lfu-decay:64,
 sim:profile=device-12gb, mmap:path=weights.bin. Every subcommand that
-builds an engine accepts --store (default: the virtual-clock sim).
+builds an engine accepts --store (default: the virtual-clock sim). Wrap
+any store in the fault injector for chaos runs: fault:inner=sim:err=0.01
+(the inner spec's own args nest with ',', e.g.
+fault:inner=sim,profile=device-12gb:err=0.01; see docs/ROBUSTNESS.md).
 ";
 
 fn usage() -> String {
@@ -158,6 +164,10 @@ fn serve(args: &Args) -> Result<()> {
         schedule: Schedule::parse(args.get_or("schedule", "round-robin"))?,
         decode_quantum: args.usize_or("quantum", 8)?,
         prefill_chunk: args.usize_or("prefill-chunk", 32)?,
+        quantum_deadline_s: match args.f64_or("quantum-deadline", 0.0)? {
+            x if x > 0.0 => Some(x),
+            _ => None,
+        },
         ..ServerConfig::default()
     };
     let stream = args.bool("stream");

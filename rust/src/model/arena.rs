@@ -315,6 +315,25 @@ impl LayerArena {
         Ok(out)
     }
 
+    /// Roll one planned miss back out of the arena before its weights were
+    /// ever valid — the degraded path for a fetch that failed past the
+    /// retry/deadline budget. Cancels the miss's pending promotion/release,
+    /// releases its slot (cache slots return to the free list), and leaves
+    /// every other planned miss of the step untouched.
+    ///
+    /// Returns the expert whose *cache* eviction must be rolled back by the
+    /// caller: a conflict-diverted miss (`promote_to` set) had evicted a
+    /// still-dispatching victim from the cache while the victim kept its
+    /// arena slot — aborting the miss keeps the victim staged, so the
+    /// caller re-inserts it into the cache to restore cache/arena agreement.
+    pub fn abort_miss(&mut self, ms: &MissSlot) -> Option<u32> {
+        self.pending_promote
+            .retain(|p| !(p.expert == ms.expert && p.from == ms.slot));
+        self.pending_release.retain(|&e| e != ms.expert);
+        self.release(ms.expert);
+        ms.promote_to.and_then(|to| self.occupant[to])
+    }
+
     /// Apply the deferred moves once the dispatch has consumed the staged
     /// weights: promote conflict-diverted misses into their cache slot and
     /// drop transient (streamed) experts. This *is* the seed engine's
@@ -615,6 +634,49 @@ mod tests {
         assert_eq!(a.slot_of(10), None);
         assert_eq!(a.slot_of(21), Some(s10));
         assert_slot_holds(&a, s10, 21);
+        assert_eq!(a.slot_of(20), Some(s11));
+    }
+
+    #[test]
+    fn abort_miss_rolls_back_each_planned_slot_kind() {
+        // Free-slot miss: abort returns the slot to the free list.
+        let mut a = LayerArena::new(DF, FD, 2, 2);
+        let plan = a.plan_misses(&[7], &[], &[7], &[7]).unwrap();
+        assert_eq!(a.abort_miss(&plan[0]), None);
+        assert_eq!(a.slot_of(7), None);
+        // The freed slot is claimable again.
+        a.alloc_cache_slot(1).unwrap();
+        a.alloc_cache_slot(2).unwrap();
+
+        // Transient (overflow) miss: abort cancels the pending release too.
+        let mut a = LayerArena::new(DF, FD, 1, 2);
+        let plan = a.plan_misses(&[5, 6], &[5], &[6], &[5, 6]).unwrap();
+        assert_eq!(plan[0].expert, 5);
+        assert_eq!(a.abort_miss(&plan[0]), None);
+        assert_eq!(a.slot_of(5), None);
+        fill(&mut a, plan[1].slot, 6);
+        a.finish_step(); // must not stumble over the cancelled release
+        assert_eq!(a.slot_of(6), Some(plan[1].slot));
+
+        // Conflict-diverted miss: abort hands back the still-staged victim
+        // whose cache eviction the caller must undo.
+        let mut a = LayerArena::new(DF, FD, 2, 3);
+        let s10 = a.alloc_cache_slot(10).unwrap();
+        fill(&mut a, s10, 10);
+        let s11 = a.alloc_cache_slot(11).unwrap();
+        fill(&mut a, s11, 11);
+        let plan = a
+            .plan_misses(&[20, 21], &[11, 10], &[20, 21], &[10, 20, 21])
+            .unwrap();
+        assert_eq!(plan[1].promote_to, Some(s10));
+        assert_eq!(a.abort_miss(&plan[1]), Some(10));
+        assert_eq!(a.slot_of(21), None);
+        // The victim keeps its slot and weights; finish_step must not
+        // promote the aborted miss over it.
+        fill(&mut a, plan[0].slot, 20);
+        a.finish_step();
+        assert_eq!(a.slot_of(10), Some(s10));
+        assert_slot_holds(&a, s10, 10);
         assert_eq!(a.slot_of(20), Some(s11));
     }
 

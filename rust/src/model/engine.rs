@@ -37,7 +37,7 @@ use xla::PjRtBuffer;
 
 use crate::cache::{ExpertCache, Policy};
 use crate::config::{DeviceProfile, ModelConfig, Quant};
-use crate::model::arena::{BatchGroups, LayerArena, StagedLayer};
+use crate::model::arena::{BatchGroups, LayerArena, MissSlot, StagedLayer};
 use crate::model::sampler::{log_prob, Sampler};
 use crate::policy::{BatchSelectInput, EvictionFactory, OriginalPolicy, RoutingPolicy};
 use crate::routing::{self, RouterState, Selection, Strategy};
@@ -45,7 +45,12 @@ use crate::runtime::Runtime;
 use crate::store::{self, ExpertStore, FetchDst, PrefetchStats, TierStats};
 use crate::tracesim::Trace;
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 use crate::weights::FlashImage;
+
+/// Salt folded into [`EngineOptions::seed`] for the retry-jitter RNG, so
+/// the backoff stream is independent of the routing/probe RNG streams.
+const FAULT_RNG_SALT: u64 = 0x9e37_79b9_7f4a_7c15;
 
 struct LayerStatic {
     ln1: PjRtBuffer,
@@ -140,6 +145,7 @@ pub struct EngineBuilder {
     routing: Option<Box<dyn RoutingPolicy>>,
     eviction: Option<EvictionFactory>,
     store: Option<String>,
+    fetch_policy: Option<FetchPolicy>,
 }
 
 impl EngineBuilder {
@@ -153,6 +159,7 @@ impl EngineBuilder {
             routing: None,
             eviction: None,
             store: None,
+            fetch_policy: None,
         }
     }
 
@@ -235,6 +242,13 @@ impl EngineBuilder {
         Ok(self)
     }
 
+    /// Retry/deadline policy for transient store faults (defaults to
+    /// [`FetchPolicy::default`]).
+    pub fn fetch_policy(mut self, p: FetchPolicy) -> Self {
+        self.fetch_policy = Some(p);
+        self
+    }
+
     pub fn build(self) -> Result<Engine> {
         let rt = match self.runtime {
             Some(rt) => rt,
@@ -250,7 +264,7 @@ impl EngineBuilder {
         let eviction = self
             .eviction
             .unwrap_or_else(|| EvictionFactory::from_policy(opts.policy));
-        Engine::build_from_parts(
+        let mut engine = Engine::build_from_parts(
             rt,
             &self.artifacts,
             &self.model,
@@ -258,7 +272,11 @@ impl EngineBuilder {
             routing,
             eviction,
             self.store.as_deref(),
-        )
+        )?;
+        if let Some(p) = self.fetch_policy {
+            engine.set_fetch_policy(p);
+        }
+        Ok(engine)
     }
 }
 
@@ -283,6 +301,50 @@ pub struct StepStats {
     pub t_stage_s: f64,
     /// PJRT dispatches: embed, layer, experts, lm_head.
     pub t_compute_s: f64,
+}
+
+/// Retry/deadline policy for transient store faults on the fetch path
+/// (see `docs/ROBUSTNESS.md`).
+///
+/// A fetch that fails with a transient [`StoreError`](crate::store::StoreError)
+/// is retried with
+/// seeded exponential backoff (base × 2^attempt × jitter in [0.5, 1.5),
+/// charged to the tier clock as a stall) until either `retries` attempts
+/// are spent or the step's fetch-time budget `deadline_s` — measured on
+/// the store's own clock, virtual or wall — is exhausted. Exhaustion is
+/// not an error: the engine walks the degradation ladder instead
+/// (reroute to a resident expert, else drop and renormalize the gate).
+#[derive(Debug, Clone, Copy)]
+pub struct FetchPolicy {
+    /// Max retry attempts per expert fetch (after the first try).
+    pub retries: u32,
+    /// Backoff before retry k is `backoff_base_s * 2^k`, jittered.
+    pub backoff_base_s: f64,
+    /// Per-step fetch deadline: once a step has spent this much tier time
+    /// inside fetches (retries included), remaining failures degrade
+    /// immediately instead of retrying.
+    pub deadline_s: f64,
+}
+
+impl Default for FetchPolicy {
+    fn default() -> Self {
+        FetchPolicy { retries: 3, backoff_base_s: 5e-4, deadline_s: 0.25 }
+    }
+}
+
+/// Engine-side degradation counters (every rung of the ladder), overlaid
+/// onto [`TierStats`] by [`Engine::tier_stats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DegradeStats {
+    /// Transient-fault retries issued (each charged a backoff stall).
+    pub fetch_retries: u64,
+    /// Fetches abandoned after exhausting retries or the deadline.
+    pub fetch_failures: u64,
+    /// Failed selections rerouted to a cache-resident stand-in expert.
+    pub rerouted: u64,
+    /// Failed selections dropped outright (gate renormalized over the
+    /// survivors).
+    pub dropped: u64,
 }
 
 /// Snapshot of mutable session state (Fig. 12 oracle search needs
@@ -437,6 +499,13 @@ pub struct Engine {
     /// third pluggable axis next to routing and eviction. Read through
     /// [`Engine::tier_stats`].
     store: Box<dyn ExpertStore>,
+    /// Retry/deadline policy for transient store faults on the fetch path.
+    fetch_policy: FetchPolicy,
+    /// Degradation-ladder counters (overlaid by [`Engine::tier_stats`]).
+    degrade: DegradeStats,
+    /// Seeded jitter stream for retry backoff — deterministic per
+    /// [`EngineOptions::seed`], independent of the routing RNG.
+    fault_rng: Rng,
     /// The active routing policy (a [`crate::policy`] trait object; the
     /// legacy `opts.strategy` enum is only its construction-time seed).
     routing: Box<dyn RoutingPolicy>,
@@ -582,6 +651,9 @@ impl Engine {
         Ok(Engine {
             router_state: RouterState::new(cfg.n_layers, opts.seed),
             store,
+            fetch_policy: FetchPolicy::default(),
+            degrade: DegradeStats::default(),
+            fault_rng: Rng::new(opts.seed ^ FAULT_RNG_SALT),
             routing,
             routing_fallback: Box::new(OriginalPolicy),
             eviction,
@@ -687,14 +759,18 @@ impl Engine {
         // so the content remains bit-exact whenever those experts return.
         // The store rewinds its accounting and cancels pending prefetches.
         self.store.reset();
+        self.degrade = DegradeStats::default();
+        self.fault_rng = Rng::new(self.opts.seed ^ FAULT_RNG_SALT);
         self.token_counter = 0;
         self.router_state = RouterState::new(self.cfg.n_layers, self.opts.seed);
         self.trace = Trace::new(self.cfg.n_experts, self.cfg.n_layers);
     }
 
     /// Pre-fill every layer cache with a random expert set (Fig. 19).
+    /// An expert whose fetch degrades out (transient faults past the
+    /// retry/deadline budget) is simply left cold — warm-up is best-effort.
     pub fn warm_caches_random(&mut self, seed: u64) -> Result<()> {
-        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut rng = Rng::new(seed);
         for l in 0..self.cfg.n_layers {
             let mut all: Vec<u32> = (0..self.cfg.n_experts as u32).collect();
             rng.shuffle(&mut all);
@@ -702,8 +778,25 @@ impl Engine {
             self.caches[l].warm(&all, self.token_counter);
             for &e in &all {
                 let slot = self.arenas[l].alloc_cache_slot(e)?;
+                let budget_t0 = self.store.stats().time_s;
                 let (w1, w3, w2) = self.arenas[l].slot_mut(slot);
-                self.store.fetch_into(l, e as usize, w1, w3, w2)?;
+                let fetched = fetch_guarded(
+                    self.store.as_mut(),
+                    &self.fetch_policy,
+                    &mut self.degrade,
+                    &mut self.fault_rng,
+                    budget_t0,
+                    l,
+                    e as usize,
+                    w1,
+                    w3,
+                    w2,
+                )?;
+                if fetched.is_none() {
+                    let ms = MissSlot { expert: e, slot, promote_to: None };
+                    self.arenas[l].abort_miss(&ms);
+                    self.caches[l].invalidate(e, self.token_counter);
+                }
             }
         }
         Ok(())
@@ -844,15 +937,70 @@ impl Engine {
                 &access.resident_after,
                 &sel.experts,
             )?;
+            let budget_t0 = self.store.stats().time_s;
+            let mut failed: Vec<u32> = Vec::new();
             for ms in &plan {
                 let (w1, w3, w2) = self.arenas[l].slot_mut(ms.slot);
-                match self.store.take_prefetched(l, ms.expert, w1, w3, w2)? {
-                    Some(_) => step_stats.prefetch_hits += 1,
+                let claimed = match self.store.take_prefetched(l, ms.expert, w1, w3, w2) {
+                    Ok(c) => c,
+                    // A fault on the prefetched copy falls back to a demand
+                    // fetch (retried below); hard errors abort the step.
+                    Err(e) if e.is_transient() => None,
+                    Err(e) => return Err(e.into()),
+                };
+                match claimed {
+                    Some(_) => {
+                        step_stats.prefetch_hits += 1;
+                        step_stats.flash_bytes += bytes_per;
+                    }
                     None => {
-                        self.store.fetch_into(l, ms.expert as usize, w1, w3, w2)?;
+                        let fetched = fetch_guarded(
+                            self.store.as_mut(),
+                            &self.fetch_policy,
+                            &mut self.degrade,
+                            &mut self.fault_rng,
+                            budget_t0,
+                            l,
+                            ms.expert as usize,
+                            w1,
+                            w3,
+                            w2,
+                        )?;
+                        match fetched {
+                            Some(_) => step_stats.flash_bytes += bytes_per,
+                            None => failed.push(ms.expert),
+                        }
                     }
                 }
-                step_stats.flash_bytes += bytes_per;
+            }
+            let degraded = !failed.is_empty();
+            if degraded {
+                // Degradation ladder: roll the failed inserts back out of
+                // the cache/arena, then repair the selection against what
+                // is still resident (reroute, else drop).
+                for &e in &failed {
+                    self.caches[l].invalidate(e, self.token_counter);
+                    if let Some(ms) = plan.iter().find(|m| m.expert == e) {
+                        if let Some(victim) = self.arenas[l].abort_miss(ms) {
+                            self.caches[l].warm(&[victim], self.token_counter);
+                        }
+                    }
+                }
+                let extra_hits = degrade_selection(
+                    &mut sel,
+                    &failed,
+                    &self.caches[l],
+                    &self.arenas[l],
+                    &mut self.degrade,
+                );
+                anyhow::ensure!(
+                    !sel.experts.is_empty(),
+                    "layer {l}: every routed expert failed to fetch within the \
+                     {}s deadline and no resident stand-in exists",
+                    self.fetch_policy.deadline_s
+                );
+                // Rerouted stand-ins stream from the fast tier.
+                self.store.charge_hit(extra_hits, bytes_per);
             }
             // Hits stream from the fast tier.
             self.store.charge_hit(access.hits as u64, bytes_per);
@@ -860,7 +1008,11 @@ impl Engine {
 
             // ---- stacked experts dispatch (staged-set reuse) ----
             let t0 = Instant::now();
-            let coef = routing::gate_coefficients(&sel.weights, &sel.experts, renorm);
+            // A dropped expert leaves gate mass on the floor; renormalize
+            // over the survivors on the degraded path (paper semantics
+            // otherwise unchanged: `renorm` comes from the model config).
+            let coef =
+                routing::gate_coefficients(&sel.weights, &sel.experts, renorm || degraded);
             let copied = {
                 let (staged, arena) = (&mut self.staged[l], &self.arenas[l]);
                 staged.build(arena, &sel.experts, &coef)?
@@ -1097,7 +1249,7 @@ impl Engine {
             // ---- batched routing: shared start-of-layer mask, per-session
             // state ----
             let mask = self.caches[l].mask(n_experts);
-            let sels: Vec<Selection> = if !any_override && !stateful && !use_fallback {
+            let mut sels: Vec<Selection> = if !any_override && !stateful && !use_fallback {
                 let mut inputs: Vec<BatchSelectInput> = slots
                     .iter_mut()
                     .zip(zs.iter())
@@ -1148,7 +1300,7 @@ impl Engine {
             }
 
             // ---- invert: group the batch by distinct expert ----
-            let coefs: Vec<Vec<f32>> = sels
+            let mut coefs: Vec<Vec<f32>> = sels
                 .iter()
                 .map(|s| routing::gate_coefficients(&s.weights, &s.experts, renorm))
                 .collect();
@@ -1191,11 +1343,20 @@ impl Engine {
                 &access.resident_after,
                 &groups.distinct,
             )?;
+            let budget_t0 = self.store.stats().time_s;
             let mut fetched: Vec<u32> = Vec::with_capacity(miss_plan.len());
             let mut demand: Vec<(u32, usize)> = Vec::new();
+            let mut failed: Vec<u32> = Vec::new();
             for ms in &miss_plan {
                 let (w1, w3, w2) = self.arenas[l].slot_mut(ms.slot);
-                match self.store.take_prefetched(l, ms.expert, w1, w3, w2)? {
+                let claimed = match self.store.take_prefetched(l, ms.expert, w1, w3, w2) {
+                    Ok(c) => c,
+                    // Faulted prefetch copy: fall back to the coalesced
+                    // demand fetch; hard errors abort the batch step.
+                    Err(e) if e.is_transient() => None,
+                    Err(e) => return Err(e.into()),
+                };
+                match claimed {
                     Some(_) => {
                         stats.prefetch_hits += 1;
                         stats.flash_bytes += bytes_per;
@@ -1212,9 +1373,76 @@ impl Engine {
                     .zip(views)
                     .map(|(&(e, _), (w1, w3, w2))| FetchDst { expert: e as usize, w1, w3, w2 })
                     .collect();
-                let bytes = self.store.fetch_many(l, &mut dsts)?;
-                stats.flash_bytes += bytes;
-                fetched.extend(demand.iter().map(|&(e, _)| e));
+                let res = self.store.fetch_many(l, &mut dsts);
+                drop(dsts);
+                match res {
+                    Ok(bytes) => {
+                        stats.flash_bytes += bytes;
+                        fetched.extend(demand.iter().map(|&(e, _)| e));
+                    }
+                    // One faulted span aborts the coalesced call; retry each
+                    // demand miss alone under the shared deadline budget so
+                    // a single bad expert cannot fail the whole batch.
+                    Err(e) if e.is_transient() => {
+                        for &(e, slot) in &demand {
+                            let (w1, w3, w2) = self.arenas[l].slot_mut(slot);
+                            let got = fetch_guarded(
+                                self.store.as_mut(),
+                                &self.fetch_policy,
+                                &mut self.degrade,
+                                &mut self.fault_rng,
+                                budget_t0,
+                                l,
+                                e as usize,
+                                w1,
+                                w3,
+                                w2,
+                            )?;
+                            match got {
+                                Some(bytes) => {
+                                    stats.flash_bytes += bytes;
+                                    fetched.push(e);
+                                }
+                                None => failed.push(e),
+                            }
+                        }
+                    }
+                    Err(e) => return Err(e.into()),
+                }
+            }
+            if !failed.is_empty() {
+                // Degradation ladder, batch flavor: roll back the failed
+                // inserts, then repair every slot that selected a failed
+                // expert and refresh its gate coefficients (renormalized
+                // over the survivors).
+                for &e in &failed {
+                    self.caches[l].invalidate(e, self.token_counter);
+                    if let Some(ms) = miss_plan.iter().find(|m| m.expert == e) {
+                        if let Some(victim) = self.arenas[l].abort_miss(ms) {
+                            self.caches[l].warm(&[victim], self.token_counter);
+                        }
+                    }
+                }
+                let mut extra_hits = 0u64;
+                for (i, sel) in sels.iter_mut().enumerate() {
+                    if !sel.experts.iter().any(|e| failed.contains(e)) {
+                        continue;
+                    }
+                    extra_hits += degrade_selection(
+                        sel,
+                        &failed,
+                        &self.caches[l],
+                        &self.arenas[l],
+                        &mut self.degrade,
+                    );
+                    anyhow::ensure!(
+                        !sel.experts.is_empty(),
+                        "batch slot {i}, layer {l}: every routed expert failed to \
+                         fetch and no resident stand-in exists"
+                    );
+                    coefs[i] = routing::gate_coefficients(&sel.weights, &sel.experts, true);
+                }
+                self.store.charge_hit(extra_hits, bytes_per);
             }
             // Distinct hits stream from the fast tier — once each.
             self.store.charge_hit(access.hits as u64, bytes_per);
@@ -1401,9 +1629,33 @@ impl Engine {
 
     /// Snapshot of the storage tier's accounting (hit/miss bytes, virtual
     /// or measured time, prefetch totals) — the read surface that replaced
-    /// the old public `FlashSim` counters.
+    /// the old public `FlashSim` counters. The engine-side degradation
+    /// counters are overlaid so one snapshot tells the whole fault story
+    /// (`faults` itself is filled by the injecting store, e.g. `fault:`).
     pub fn tier_stats(&self) -> TierStats {
-        self.store.stats()
+        let mut t = self.store.stats();
+        t.fetch_retries += self.degrade.fetch_retries;
+        t.fetch_failures += self.degrade.fetch_failures;
+        t.rerouted += self.degrade.rerouted;
+        t.dropped += self.degrade.dropped;
+        t
+    }
+
+    /// The engine-side degradation counters alone (every rung of the
+    /// ladder; also overlaid onto [`Engine::tier_stats`]).
+    pub fn degrade_stats(&self) -> DegradeStats {
+        self.degrade
+    }
+
+    /// The active retry/deadline policy for transient store faults.
+    pub fn fetch_policy(&self) -> FetchPolicy {
+        self.fetch_policy
+    }
+
+    /// Replace the retry/deadline policy (normally set through
+    /// [`EngineBuilder::fetch_policy`]).
+    pub fn set_fetch_policy(&mut self, p: FetchPolicy) {
+        self.fetch_policy = p;
     }
 
     /// Canonical spec label of the active storage backend.
@@ -1501,4 +1753,105 @@ impl Engine {
         };
         (hits, misses, rate)
     }
+}
+
+/// Fetch one expert with retry-with-backoff under the step's fetch
+/// deadline (a free function over the engine's disjoint fields — the
+/// caller holds `&mut` arena views at the same time).
+///
+/// * `Ok(Some(bytes))` — fetched (possibly after retries).
+/// * `Ok(None)` — gave up on a *transient* fault after exhausting
+///   `policy.retries` or the `policy.deadline_s` budget (measured as tier
+///   time elapsed since `budget_t0`); the caller walks the degradation
+///   ladder. Every abandonment is counted in `degrade.fetch_failures`.
+/// * `Err(_)` — a non-transient [`StoreError`](crate::store::StoreError)
+///   (backend/config trouble retries cannot fix) propagates and fails the
+///   step.
+#[allow(clippy::too_many_arguments)]
+fn fetch_guarded(
+    store: &mut dyn ExpertStore,
+    policy: &FetchPolicy,
+    degrade: &mut DegradeStats,
+    rng: &mut Rng,
+    budget_t0: f64,
+    layer: usize,
+    expert: usize,
+    w1: &mut [f32],
+    w3: &mut [f32],
+    w2: &mut [f32],
+) -> Result<Option<u64>> {
+    let mut attempt = 0u32;
+    loop {
+        match store.fetch_into(layer, expert, w1, w3, w2) {
+            Ok(bytes) => return Ok(Some(bytes)),
+            Err(e) if !e.is_transient() => return Err(e.into()),
+            Err(_) => {
+                let spent = store.stats().time_s - budget_t0;
+                if attempt >= policy.retries || spent >= policy.deadline_s {
+                    degrade.fetch_failures += 1;
+                    return Ok(None);
+                }
+                // Exponential backoff with jitter in [0.5, 1.5), charged
+                // to the tier clock so the wait shows up in throughput.
+                let jitter = 0.5 + rng.f64();
+                let backoff = policy.backoff_base_s * f64::from(1u32 << attempt.min(16)) * jitter;
+                store.charge_stall(backoff);
+                degrade.fetch_retries += 1;
+                attempt += 1;
+            }
+        }
+    }
+}
+
+/// Repair a selection whose `failed` experts could not be fetched: each is
+/// rerouted to the highest-gate-weight expert that is cache-resident,
+/// arena-staged and not already selected (counted in `degrade.rerouted`,
+/// returned as extra fast-tier hits for the caller to charge), or dropped
+/// from the selection when no stand-in exists (`degrade.dropped`; the
+/// caller renormalizes the gate over the survivors). The repaired
+/// selection is re-sorted weight-descending — the order every downstream
+/// consumer (staging, eviction stamps, reuse signal) assumes.
+fn degrade_selection(
+    sel: &mut Selection,
+    failed: &[u32],
+    cache: &ExpertCache,
+    arena: &LayerArena,
+    degrade: &mut DegradeStats,
+) -> u64 {
+    let mut extra_hits = 0u64;
+    for &f in failed {
+        let Some(pos) = sel.experts.iter().position(|&e| e == f) else {
+            continue;
+        };
+        let mut best: Option<u32> = None;
+        for e in 0..sel.weights.len() as u32 {
+            if sel.experts.contains(&e) || failed.contains(&e) {
+                continue;
+            }
+            if !cache.contains(e) || arena.slot_of(e).is_none() {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(b) => sel.weights[e as usize] > sel.weights[b as usize],
+            };
+            if better {
+                best = Some(e);
+            }
+        }
+        match best {
+            Some(e) => {
+                sel.experts[pos] = e;
+                degrade.rerouted += 1;
+                extra_hits += 1;
+            }
+            None => {
+                sel.experts.remove(pos);
+                degrade.dropped += 1;
+            }
+        }
+    }
+    let w = sel.weights.clone();
+    sel.experts.sort_by(routing::weight_desc(&w));
+    extra_hits
 }

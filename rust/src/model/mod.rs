@@ -23,8 +23,8 @@ pub mod sampler;
 
 pub use arena::{BatchGroups, LayerArena, MissSlot, StagedLayer};
 pub use engine::{
-    BatchLayerPlan, BatchPlan, Engine, EngineBuilder, EngineOptions, EngineSnapshot, SessionSlot,
-    SessionState, StepStats,
+    BatchLayerPlan, BatchPlan, DegradeStats, Engine, EngineBuilder, EngineOptions,
+    EngineSnapshot, FetchPolicy, SessionSlot, SessionState, StepStats,
 };
 pub use prefetch::Prefetcher;
 pub use sampler::Sampler;

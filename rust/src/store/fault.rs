@@ -1,0 +1,249 @@
+//! `FaultStore`: deterministic fault injection over any inner store.
+//!
+//! Chaos-testing backend for the robustness layer (`docs/ROBUSTNESS.md`):
+//! wraps another [`ExpertStore`] and injects, per demand fetch and from a
+//! seeded [`Rng`] stream,
+//!
+//! * **transient errors** (`err=P`) — the fetch fails with
+//!   [`StoreError::Transient`] before touching the inner store;
+//! * **latency spikes** (`slow=P`, `slow-ms=MS`) — the inner store's
+//!   clock is stalled by `slow-ms` before the fetch proceeds;
+//! * **span corruption** (`corrupt=P`) — after a successful inner fetch
+//!   the span's bytes are re-read with one bit flipped and pushed through
+//!   the image's *real* checksum verification, so the injected corruption
+//!   is detected by the same machinery that guards genuine bit-rot, and
+//!   the fetch fails with [`StoreError::Corrupt`].
+//!
+//! With every rate at zero the wrapper delegates verbatim — stats, bytes
+//! and time are bit-identical to the inner store (pinned by
+//! `tests/store_parity.rs`). Fault draws depend only on the seed and the
+//! fetch sequence, so a fixed workload replays the exact same faults.
+//! Prefetch claims are *not* injection points: the demand path is where
+//! the engine's retry/degradation ladder engages, and a claimed prefetch
+//! that was never staged falls back to (injected) demand fetching anyway.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::util::rng::Rng;
+use crate::weights::FlashImage;
+
+use super::{
+    ExpertStore, FetchDst, PrefetchStats, SpanMeta, StoreError, StoreResult, TierStats,
+};
+
+/// Injection rates and determinism seed for a [`FaultStore`].
+#[derive(Debug, Clone)]
+pub struct FaultConfig {
+    /// Probability a demand fetch fails with a transient error.
+    pub err: f64,
+    /// Probability a demand fetch is preceded by a latency spike.
+    pub slow: f64,
+    /// Size of one injected latency spike, in milliseconds.
+    pub slow_ms: f64,
+    /// Probability a fetched span is corrupted (and detected).
+    pub corrupt: f64,
+    /// Seed of the injection stream.
+    pub seed: u64,
+}
+
+/// Counts of injected faults, by kind.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct InjectedFaults {
+    /// Transient fetch errors injected.
+    pub transient: u64,
+    /// Latency spikes injected.
+    pub slow: u64,
+    /// Span corruptions injected (each detected by checksum).
+    pub corrupt: u64,
+}
+
+impl InjectedFaults {
+    /// Faults that failed a fetch (spikes slow it down but succeed).
+    pub fn failing(&self) -> u64 {
+        self.transient + self.corrupt
+    }
+}
+
+pub struct FaultStore {
+    inner: Box<dyn ExpertStore>,
+    /// The engine's image: span metadata + the checksum machinery the
+    /// corruption injector drives.
+    image: Arc<FlashImage>,
+    cfg: FaultConfig,
+    rng: Rng,
+    injected: InjectedFaults,
+}
+
+impl FaultStore {
+    pub fn new(inner: Box<dyn ExpertStore>, image: Arc<FlashImage>, cfg: FaultConfig) -> Self {
+        let rng = Rng::new(cfg.seed);
+        FaultStore { inner, image, cfg, rng, injected: InjectedFaults::default() }
+    }
+
+    /// Counts of faults injected so far, by kind.
+    pub fn injected(&self) -> InjectedFaults {
+        self.injected
+    }
+
+    /// All rates zero: delegate verbatim (bit-identical to the inner
+    /// store, no RNG draws).
+    fn healthy(&self) -> bool {
+        self.cfg.err == 0.0 && self.cfg.slow == 0.0 && self.cfg.corrupt == 0.0
+    }
+
+    /// Re-read the span, flip one bit, and run it through the image's
+    /// real checksum verification; returns the detection message.
+    fn corrupt_span(&mut self, layer: usize, expert: usize) -> Result<String> {
+        let span = self.image.expert_span(layer, expert, false)?.clone();
+        let mut raw = self.image.read_span_bytes(&span)?;
+        anyhow::ensure!(!raw.is_empty(), "empty span");
+        let i = self.rng.below(raw.len());
+        raw[i] ^= 0x01;
+        match self.image.verify_span(layer, expert, false, &raw) {
+            Err(e) => Ok(format!("{e:#}")),
+            Ok(()) => anyhow::bail!("checksum failed to detect a flipped bit"),
+        }
+    }
+
+    /// One guarded demand fetch with the per-fetch fault draws. The draw
+    /// order (slow, err, corrupt) is fixed so a seed fully determines the
+    /// injection sequence; `chance(0.0)` never fires but still draws,
+    /// keeping the stream independent of which rates are enabled.
+    fn fetch_one(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        w1: &mut [f32],
+        w3: &mut [f32],
+        w2: &mut [f32],
+    ) -> StoreResult<u64> {
+        let slow = self.rng.chance(self.cfg.slow);
+        let err = self.rng.chance(self.cfg.err);
+        let corrupt = self.rng.chance(self.cfg.corrupt);
+        if slow {
+            self.injected.slow += 1;
+            self.inner.charge_stall(self.cfg.slow_ms / 1000.0);
+        }
+        if err {
+            self.injected.transient += 1;
+            return Err(StoreError::Transient { layer, expert });
+        }
+        let bytes = self.inner.fetch_into(layer, expert, w1, w3, w2)?;
+        if corrupt {
+            self.injected.corrupt += 1;
+            let detail = self
+                .corrupt_span(layer, expert)
+                .unwrap_or_else(|e| format!("injector error: {e:#}"));
+            // The fetched weights are suspect: scrub the slot so a caller
+            // that ignores the error cannot silently use them.
+            w1.fill(0.0);
+            w3.fill(0.0);
+            w2.fill(0.0);
+            return Err(StoreError::Corrupt { layer, expert, detail });
+        }
+        Ok(bytes)
+    }
+}
+
+impl ExpertStore for FaultStore {
+    fn label(&self) -> String {
+        // Round-trips through parse_store: the inner label swaps ':' for
+        // ',' (the spec grammar splits on ':').
+        format!(
+            "fault:inner={}:err={}:slow={}:slow-ms={}:corrupt={}:seed={}",
+            self.inner.label().replace(':', ","),
+            self.cfg.err,
+            self.cfg.slow,
+            self.cfg.slow_ms,
+            self.cfg.corrupt,
+            self.cfg.seed
+        )
+    }
+
+    fn span_meta(&self, layer: usize, expert: usize) -> Result<SpanMeta> {
+        self.inner.span_meta(layer, expert)
+    }
+
+    fn fetch_into(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        w1: &mut [f32],
+        w3: &mut [f32],
+        w2: &mut [f32],
+    ) -> StoreResult<u64> {
+        if self.healthy() {
+            return self.inner.fetch_into(layer, expert, w1, w3, w2);
+        }
+        self.fetch_one(layer, expert, w1, w3, w2)
+    }
+
+    /// Coalesced fetch: healthy wrappers delegate (bit-identical, the
+    /// inner backend keeps its coalescing win); with any rate nonzero the
+    /// batch is walked per expert so faults keep per-fetch granularity,
+    /// aborting at the first failure — the engine then falls back to
+    /// per-expert guarded fetches.
+    fn fetch_many(&mut self, layer: usize, dsts: &mut [FetchDst<'_>]) -> StoreResult<u64> {
+        if self.healthy() {
+            return self.inner.fetch_many(layer, dsts);
+        }
+        let mut total = 0u64;
+        for d in dsts.iter_mut() {
+            total += self.fetch_one(layer, d.expert, d.w1, d.w3, d.w2)?;
+        }
+        Ok(total)
+    }
+
+    fn prefetch(&mut self, layer: usize, expert: u32) {
+        self.inner.prefetch(layer, expert);
+    }
+
+    fn take_prefetched(
+        &mut self,
+        layer: usize,
+        expert: u32,
+        w1: &mut [f32],
+        w3: &mut [f32],
+        w2: &mut [f32],
+    ) -> StoreResult<Option<u64>> {
+        self.inner.take_prefetched(layer, expert, w1, w3, w2)
+    }
+
+    fn enable_prefetch(&mut self, workers: usize) -> bool {
+        self.inner.enable_prefetch(workers)
+    }
+
+    fn prefetch_enabled(&self) -> bool {
+        self.inner.prefetch_enabled()
+    }
+
+    fn prefetch_stats(&self) -> PrefetchStats {
+        self.inner.prefetch_stats()
+    }
+
+    fn charge_hit(&mut self, hits: u64, bytes_per_expert: u64) {
+        self.inner.charge_hit(hits, bytes_per_expert);
+    }
+
+    fn charge_stall(&mut self, seconds: f64) {
+        self.inner.charge_stall(seconds);
+    }
+
+    fn end_token(&mut self, resident_bytes: u64) {
+        self.inner.end_token(resident_bytes);
+    }
+
+    fn stats(&self) -> TierStats {
+        let mut s = self.inner.stats();
+        s.faults += self.injected.failing();
+        s
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset();
+        self.rng = Rng::new(self.cfg.seed);
+        self.injected = InjectedFaults::default();
+    }
+}

@@ -22,7 +22,7 @@ use anyhow::Result;
 use crate::config::DeviceProfile;
 use crate::weights::{ExpertWeights, FlashImage};
 
-use super::{ExpertStore, SpanMeta, TierStats};
+use super::{ExpertStore, SpanMeta, StoreResult, TierStats};
 
 pub struct MemStore {
     image: Arc<FlashImage>,
@@ -60,13 +60,16 @@ impl ExpertStore for MemStore {
         w1: &mut [f32],
         w3: &mut [f32],
         w2: &mut [f32],
-    ) -> Result<u64> {
+    ) -> StoreResult<u64> {
         let bytes = self.image.expert_span(layer, expert, false)?.bytes;
         if !self.resident.contains_key(&(layer, expert)) {
             // First touch: materialize into the resident set. Not charged —
             // it models the one-off load of a model that fits DRAM whole,
             // not steady-state serving traffic.
-            let w = self.image.fetch_expert(layer, expert, false)?;
+            let w = self
+                .image
+                .fetch_expert(layer, expert, false)
+                .map_err(|e| super::classify_fetch_err(layer, expert, e))?;
             self.resident.insert((layer, expert), w);
         }
         let w = &self.resident[&(layer, expert)];
@@ -84,6 +87,10 @@ impl ExpertStore for MemStore {
         let bytes = hits * bytes_per_expert;
         self.stats.dram_bytes += bytes;
         self.stats.time_s += bytes as f64 / self.profile.dram_bw_bytes_per_s;
+    }
+
+    fn charge_stall(&mut self, seconds: f64) {
+        self.stats.time_s += seconds;
     }
 
     fn end_token(&mut self, _resident_bytes: u64) {

@@ -29,7 +29,7 @@ use anyhow::{Context, Result};
 use crate::model::prefetch::Prefetcher;
 use crate::weights::FlashImage;
 
-use super::{ExpertStore, FetchDst, PrefetchStats, SpanMeta, TierStats};
+use super::{ExpertStore, FetchDst, PrefetchStats, SpanMeta, StoreResult, TierStats};
 
 extern "C" {
     fn mmap(
@@ -164,12 +164,13 @@ impl ExpertStore for MmapStore {
         w1: &mut [f32],
         w3: &mut [f32],
         w2: &mut [f32],
-    ) -> Result<u64> {
+    ) -> StoreResult<u64> {
         let t0 = Instant::now();
         let span = self.image.expert_span(layer, expert, false)?.clone();
         let raw = self.span_slice(span.offset, span.bytes)?;
         self.image
-            .dequant_expert_span(layer, expert, false, raw, span.offset, w1, w3, w2)?;
+            .dequant_expert_span(layer, expert, false, raw, span.offset, w1, w3, w2)
+            .map_err(|e| super::classify_fetch_err(layer, expert, e))?;
         let dt = t0.elapsed().as_secs_f64();
         self.stats.time_s += dt;
         self.stats.fetch_wall_s += dt;
@@ -183,7 +184,7 @@ impl ExpertStore for MmapStore {
     /// page-in instead of the request order's random walk). Byte and
     /// read totals are identical to looping [`ExpertStore::fetch_into`];
     /// only the measured wall time changes.
-    fn fetch_many(&mut self, layer: usize, dsts: &mut [FetchDst<'_>]) -> Result<u64> {
+    fn fetch_many(&mut self, layer: usize, dsts: &mut [FetchDst<'_>]) -> StoreResult<u64> {
         let t0 = Instant::now();
         let mut order: Vec<(usize, u64, u64)> = Vec::with_capacity(dsts.len());
         for (i, d) in dsts.iter().enumerate() {
@@ -195,9 +196,9 @@ impl ExpertStore for MmapStore {
         for &(i, offset, bytes) in &order {
             let d = &mut dsts[i];
             let raw = self.span_slice(offset, bytes)?;
-            self.image.dequant_expert_span(
-                layer, d.expert, false, raw, offset, d.w1, d.w3, d.w2,
-            )?;
+            self.image
+                .dequant_expert_span(layer, d.expert, false, raw, offset, d.w1, d.w3, d.w2)
+                .map_err(|e| super::classify_fetch_err(layer, d.expert, e))?;
             total += bytes;
         }
         let dt = t0.elapsed().as_secs_f64();
@@ -221,12 +222,14 @@ impl ExpertStore for MmapStore {
         w1: &mut [f32],
         w3: &mut [f32],
         w2: &mut [f32],
-    ) -> Result<Option<u64>> {
+    ) -> StoreResult<Option<u64>> {
         // Measured backend: the charge is the *blocking* part only — the
         // wall time this thread waits for the worker plus the copy; the
         // overlapped fetch itself ran off-thread.
         let t0 = Instant::now();
-        match super::claim_prefetched(&mut self.prefetcher, layer, expert, w1, w3, w2)? {
+        let claimed = super::claim_prefetched(&mut self.prefetcher, layer, expert, w1, w3, w2)
+            .map_err(|e| super::classify_fetch_err(layer, expert as usize, e))?;
+        match claimed {
             None => Ok(None),
             Some(bytes) => {
                 let dt = t0.elapsed().as_secs_f64();
@@ -260,6 +263,12 @@ impl ExpertStore for MmapStore {
         // Hits cost a slot lookup, not a byte move — record the streamed
         // bytes for cross-backend comparability, charge no time.
         self.stats.dram_bytes += hits * bytes_per_expert;
+    }
+
+    fn charge_stall(&mut self, seconds: f64) {
+        // Measured backend: backoff waits and injected spikes are modelled
+        // time, folded into the tier clock but not the fetch wall time.
+        self.stats.time_s += seconds;
     }
 
     fn end_token(&mut self, _resident_bytes: u64) {

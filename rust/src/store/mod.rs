@@ -30,7 +30,13 @@
 //! sim | sim:profile=device-12gb      virtual clock on a device profile
 //! mmap | mmap:path=FILE              memory-mapped image, measured latency
 //! mem  | mem:profile=device-16gb     all experts resident (upper bound)
+//! fault:inner=SPEC:err=P:...         fault-injecting wrapper (chaos testing)
 //! ```
+//!
+//! The `fault:` wrapper nests another store spec in its `inner` arg; the
+//! grammar splits on `:`, so the nested spec swaps `:` for `,`
+//! (`fault:inner=mmap,path=weights.bin:err=0.01:seed=7`). With every rate
+//! at zero the wrapper is bit-identical to its inner store.
 //!
 //! Unlike policy specs, building a store needs runtime context (the opened
 //! flash image, the device profile), so parsing happens in two steps:
@@ -45,6 +51,17 @@
 //! assert!(validate_store_spec("sim:profile=device_12gb").is_ok());
 //! assert!(validate_store_spec("bogus").is_err()); // enumerates the registry
 //! ```
+//!
+//! ## Fallible fetches (the robustness contract)
+//!
+//! Fetches return typed [`StoreError`]s instead of panicking or hanging:
+//! [`StoreError::Transient`] and [`StoreError::Corrupt`] are *retryable* —
+//! the engine retries them with seeded exponential backoff under a
+//! per-step deadline, then walks a degradation ladder (reroute the failed
+//! selection to a cache-resident expert, else drop it and renormalize the
+//! gate weights). Everything else is [`StoreError::Backend`]: a hard
+//! error that fails the step. Every rung is counted in the [`TierStats`]
+//! degradation fields. See `docs/ROBUSTNESS.md`.
 //!
 //! ## Accounting invariants (the trait contract)
 //!
@@ -78,10 +95,12 @@
 
 #![warn(clippy::unwrap_used)]
 
+pub mod fault;
 pub mod mem;
 pub mod mmap;
 pub mod sim;
 
+pub use fault::{FaultConfig, FaultStore};
 pub use mem::MemStore;
 pub use mmap::MmapStore;
 pub use sim::SimStore;
@@ -94,7 +113,58 @@ use anyhow::{Context, Result};
 use crate::config::DeviceProfile;
 use crate::model::prefetch::Prefetcher;
 use crate::policy::SpecArgs;
-use crate::weights::FlashImage;
+use crate::weights::{ChecksumMismatch, FlashImage};
+
+// ---------------------------------------------------------------------
+// StoreError
+// ---------------------------------------------------------------------
+
+/// Typed failure of a store fetch.
+///
+/// [`StoreError::Transient`] and [`StoreError::Corrupt`] are *retryable*:
+/// the engine retries them with seeded exponential backoff under its
+/// per-step fetch deadline, then walks the degradation ladder
+/// (`docs/ROBUSTNESS.md`). [`StoreError::Backend`] wraps everything else
+/// (I/O failures, bad span metadata) and fails the step immediately.
+#[derive(Debug, thiserror::Error)]
+pub enum StoreError {
+    /// The fetch failed but a retry may succeed (flaky tier, injected).
+    #[error("transient store fault fetching expert {expert} (layer {layer})")]
+    Transient { layer: usize, expert: usize },
+    /// The span's bytes failed checksum verification; a retry re-reads
+    /// and re-verifies.
+    #[error("corrupt span for expert {expert} (layer {layer}): {detail}")]
+    Corrupt { layer: usize, expert: usize, detail: String },
+    /// A hard backend error; never retried.
+    #[error(transparent)]
+    Backend(#[from] anyhow::Error),
+}
+
+impl StoreError {
+    /// Whether the engine should retry / degrade rather than abort.
+    pub fn is_transient(&self) -> bool {
+        matches!(self, StoreError::Transient { .. } | StoreError::Corrupt { .. })
+    }
+}
+
+/// Result alias for the fallible store fetch path.
+pub type StoreResult<T> = Result<T, StoreError>;
+
+/// Classify a backend-level fetch error: a detected [`ChecksumMismatch`]
+/// anywhere in the chain becomes a retryable [`StoreError::Corrupt`] (the
+/// retry re-reads the span and re-verifies); anything else stays a hard
+/// [`StoreError::Backend`].
+pub(crate) fn classify_fetch_err(
+    layer: usize,
+    expert: usize,
+    e: anyhow::Error,
+) -> StoreError {
+    if e.is::<ChecksumMismatch>() {
+        StoreError::Corrupt { layer, expert, detail: format!("{e:#}") }
+    } else {
+        StoreError::Backend(e)
+    }
+}
 
 // ---------------------------------------------------------------------
 // TierStats
@@ -130,6 +200,17 @@ pub struct TierStats {
     /// Real wall-clock seconds spent inside fetches (measured backends;
     /// 0 for purely virtual clocks).
     pub fetch_wall_s: f64,
+    /// Fetch faults the store layer injected or detected ([`FaultStore`]
+    /// injections, checksum mismatches surfaced by the wrapper).
+    pub faults: u64,
+    /// Engine retries after a transient fetch fault.
+    pub fetch_retries: u64,
+    /// Fetches abandoned after the retry/deadline budget was exhausted.
+    pub fetch_failures: u64,
+    /// Failed selections rerouted to a cache-resident expert.
+    pub rerouted: u64,
+    /// Failed selections dropped (gate weights renormalized over the rest).
+    pub dropped: u64,
 }
 
 impl TierStats {
@@ -204,7 +285,9 @@ pub trait ExpertStore: Send {
 
     /// Demand-fetch one routed expert, dequantized straight into the
     /// caller's arena-slot views, charging one miss. Returns the bytes
-    /// the slow tier moved.
+    /// the slow tier moved, or a typed [`StoreError`] — retryable faults
+    /// leave the destination slices in an unspecified state the caller
+    /// must not use.
     fn fetch_into(
         &mut self,
         layer: usize,
@@ -212,7 +295,7 @@ pub trait ExpertStore: Send {
         w1: &mut [f32],
         w3: &mut [f32],
         w2: &mut [f32],
-    ) -> Result<u64>;
+    ) -> StoreResult<u64>;
 
     /// Coalesced demand fetch: service one layer's distinct missed experts
     /// of a whole fused batch step in a single call, returning the total
@@ -222,8 +305,10 @@ pub trait ExpertStore: Send {
     /// (offset-sorted reads on `mmap`, unique-span charging on `sim`).
     /// Callers must pass distinct experts — how duplicates are charged is
     /// backend-defined (the engine's batch step always sends a distinct
-    /// list).
-    fn fetch_many(&mut self, layer: usize, dsts: &mut [FetchDst<'_>]) -> Result<u64> {
+    /// list). On error some destinations may already hold fetched
+    /// weights; a retryable error means the caller should fall back to
+    /// per-expert guarded fetches.
+    fn fetch_many(&mut self, layer: usize, dsts: &mut [FetchDst<'_>]) -> StoreResult<u64> {
         let mut total = 0u64;
         for d in dsts.iter_mut() {
             total += self.fetch_into(layer, d.expert, d.w1, d.w3, d.w2)?;
@@ -248,7 +333,7 @@ pub trait ExpertStore: Send {
         _w1: &mut [f32],
         _w3: &mut [f32],
         _w2: &mut [f32],
-    ) -> Result<Option<u64>> {
+    ) -> StoreResult<Option<u64>> {
         Ok(None)
     }
 
@@ -270,6 +355,13 @@ pub trait ExpertStore: Send {
 
     /// Account `hits` cache hits streaming from the fast tier.
     fn charge_hit(&mut self, hits: u64, bytes_per_expert: u64);
+
+    /// Charge `seconds` of tier time that passed outside any fetch —
+    /// retry backoff waits and injected latency spikes. Virtual-clock
+    /// backends advance the clock; measured backends fold it into
+    /// `stats().time_s` so degraded-path time stays visible. No-op by
+    /// default.
+    fn charge_stall(&mut self, _seconds: f64) {}
 
     /// Close one token: per-token compute plus the backend's
     /// memory-pressure model for a resident set of `resident_bytes`.
@@ -381,6 +473,34 @@ fn build_mem(a: &SpecArgs, ctx: &StoreCtx) -> Result<Box<dyn ExpertStore>> {
     Ok(Box::new(MemStore::new(ctx.image.clone(), profile_arg(a, ctx)?)))
 }
 
+/// A probability arg in [0, 1] (default 0: fault kind disabled).
+fn rate_arg(a: &SpecArgs, idx: usize, key: &str) -> Result<f64> {
+    let v = a.f64_or(idx, key, 0.0)?;
+    anyhow::ensure!((0.0..=1.0).contains(&v), "{key} must be in [0, 1], got {v}");
+    Ok(v)
+}
+
+fn build_fault(a: &SpecArgs, ctx: &StoreCtx) -> Result<Box<dyn ExpertStore>> {
+    // The spec grammar splits on ':', so the nested inner spec swaps ':'
+    // for ',' (`fault:inner=mmap,path=weights.bin:err=0.01`); the label
+    // round-trips by reversing the swap.
+    let inner_spec = match a.get(0, "inner") {
+        Some(s) => s.replace(',', ":"),
+        None => "sim".to_string(),
+    };
+    let inner = parse_store(&inner_spec, ctx)
+        .with_context(|| format!("in fault inner spec {inner_spec:?}"))?;
+    let cfg = FaultConfig {
+        err: rate_arg(a, 1, "err")?,
+        slow: rate_arg(a, 2, "slow")?,
+        slow_ms: a.f64_or(3, "slow-ms", 5.0)?,
+        corrupt: rate_arg(a, 4, "corrupt")?,
+        seed: a.usize_or(5, "seed", 0)? as u64,
+    };
+    anyhow::ensure!(cfg.slow_ms >= 0.0, "slow-ms must be >= 0, got {}", cfg.slow_ms);
+    Ok(Box::new(FaultStore::new(inner, ctx.image.clone(), cfg)))
+}
+
 const STORE_ENTRIES: &[StoreEntry] = &[
     StoreEntry {
         name: "sim",
@@ -402,6 +522,13 @@ const STORE_ENTRIES: &[StoreEntry] = &[
         summary: "all experts DRAM-resident: the unbounded-memory upper bound (Fig. 8 asymptote)",
         example: "mem",
         build: build_mem,
+    },
+    StoreEntry {
+        name: "fault",
+        aliases: &["chaos"],
+        summary: "fault-injecting wrapper over an inner store (inner=SPEC with ',' for ':', err=, slow=, slow-ms=, corrupt=, seed=)",
+        example: "fault:inner=sim",
+        build: build_fault,
     },
 ];
 
@@ -473,9 +600,25 @@ mod tests {
         assert!(validate_store_spec("mmap:path=weights.bin").is_ok());
         assert!(validate_store_spec("mem").is_ok());
         assert!(validate_store_spec("resident").is_ok());
+        assert!(validate_store_spec("fault:inner=sim:err=0.01:seed=7").is_ok());
+        assert!(validate_store_spec("chaos").is_ok());
         let err = format!("{:#}", validate_store_spec("bogus").unwrap_err());
         assert!(err.contains("sim") && err.contains("mmap") && err.contains("mem"), "{err}");
         assert!(validate_store_spec("").is_err());
+    }
+
+    #[test]
+    fn store_error_classification() {
+        assert!(StoreError::Transient { layer: 0, expert: 1 }.is_transient());
+        let c = StoreError::Corrupt { layer: 0, expert: 1, detail: "x".into() };
+        assert!(c.is_transient());
+        assert!(!StoreError::Backend(anyhow::anyhow!("io")).is_transient());
+        // A ChecksumMismatch anywhere in the chain classifies as Corrupt.
+        let e = anyhow::Error::new(ChecksumMismatch { layer: 2, expert: 3, shared: false })
+            .context("fetching expert");
+        assert!(matches!(classify_fetch_err(2, 3, e), StoreError::Corrupt { .. }));
+        let hard = classify_fetch_err(0, 0, anyhow::anyhow!("disk on fire"));
+        assert!(matches!(hard, StoreError::Backend(_)));
     }
 
     #[test]

@@ -17,7 +17,7 @@ use crate::flash::FlashSim;
 use crate::model::prefetch::Prefetcher;
 use crate::weights::FlashImage;
 
-use super::{ExpertStore, FetchDst, PrefetchStats, SpanMeta, TierStats};
+use super::{ExpertStore, FetchDst, PrefetchStats, SpanMeta, StoreResult, TierStats};
 
 pub struct SimStore {
     image: Arc<FlashImage>,
@@ -55,8 +55,11 @@ impl ExpertStore for SimStore {
         w1: &mut [f32],
         w3: &mut [f32],
         w2: &mut [f32],
-    ) -> Result<u64> {
-        let bytes = self.image.fetch_expert_into(layer, expert, false, w1, w3, w2)?;
+    ) -> StoreResult<u64> {
+        let bytes = self
+            .image
+            .fetch_expert_into(layer, expert, false, w1, w3, w2)
+            .map_err(|e| super::classify_fetch_err(layer, expert, e))?;
         self.sim.read_flash(bytes);
         Ok(bytes)
     }
@@ -68,13 +71,14 @@ impl ExpertStore for SimStore {
     /// first occurrence's flash charge — the engine's batch step always
     /// sends a distinct list, for which the accounting is bit-identical
     /// to looping [`ExpertStore::fetch_into`].
-    fn fetch_many(&mut self, layer: usize, dsts: &mut [FetchDst<'_>]) -> Result<u64> {
+    fn fetch_many(&mut self, layer: usize, dsts: &mut [FetchDst<'_>]) -> StoreResult<u64> {
         let mut seen: Vec<usize> = Vec::with_capacity(dsts.len());
         let mut total = 0u64;
         for d in dsts.iter_mut() {
             let bytes = self
                 .image
-                .fetch_expert_into(layer, d.expert, false, d.w1, d.w3, d.w2)?;
+                .fetch_expert_into(layer, d.expert, false, d.w1, d.w3, d.w2)
+                .map_err(|e| super::classify_fetch_err(layer, d.expert, e))?;
             if !seen.contains(&d.expert) {
                 seen.push(d.expert);
                 self.sim.read_flash(bytes);
@@ -97,8 +101,10 @@ impl ExpertStore for SimStore {
         w1: &mut [f32],
         w3: &mut [f32],
         w2: &mut [f32],
-    ) -> Result<Option<u64>> {
-        match super::claim_prefetched(&mut self.prefetcher, layer, expert, w1, w3, w2)? {
+    ) -> StoreResult<Option<u64>> {
+        let claimed = super::claim_prefetched(&mut self.prefetcher, layer, expert, w1, w3, w2)
+            .map_err(|e| super::classify_fetch_err(layer, expert as usize, e))?;
+        match claimed {
             None => Ok(None),
             Some(bytes) => {
                 self.sim.read_flash_prefetched(bytes);
@@ -124,6 +130,10 @@ impl ExpertStore for SimStore {
 
     fn charge_hit(&mut self, hits: u64, bytes_per_expert: u64) {
         self.sim.read_dram(hits * bytes_per_expert);
+    }
+
+    fn charge_stall(&mut self, seconds: f64) {
+        self.sim.stall(seconds);
     }
 
     fn end_token(&mut self, resident_bytes: u64) {

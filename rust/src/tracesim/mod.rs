@@ -8,6 +8,13 @@
 //!
 //! A [`Trace`] is the per-token, per-layer ordered selection (plus router
 //! logits when recorded, for offline strategy replay).
+//!
+//! [`simulate_chaos`] is the trace-level counterpart of the engine's
+//! `fault:` store: seeded per-miss fetch failures degraded with the same
+//! reroute-to-resident-else-drop ladder, so ladder behaviour can be
+//! studied across policies without running the model.
+
+#![warn(clippy::unwrap_used)]
 
 use std::path::Path;
 
@@ -17,6 +24,7 @@ use crate::flash::FlashSim;
 use crate::policy::EvictionFactory;
 use crate::store::TierStats;
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 
 /// Router trace: `selections[token][layer]` = experts ordered weight-desc.
 #[derive(Debug, Clone, Default)]
@@ -343,6 +351,82 @@ pub fn simulate_gang(
     })
 }
 
+/// Fault injection for [`simulate_chaos`]: each *missed* expert fetch
+/// independently fails with `err_rate` under a seeded deterministic RNG.
+#[derive(Debug, Clone, Copy)]
+pub struct ChaosConfig {
+    pub err_rate: f64,
+    pub seed: u64,
+}
+
+/// Counters from a fault-injected replay. `faults == rerouted + dropped`
+/// always holds: every injected failure lands on exactly one ladder rung.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChaosResult {
+    pub hits: u64,
+    pub misses: u64,
+    /// Injected fetch failures (each rolled back before caching).
+    pub faults: u64,
+    /// Failures degraded to a cache-resident stand-in expert.
+    pub rerouted: u64,
+    /// Failures with no resident stand-in: the expert is dropped.
+    pub dropped: u64,
+}
+
+/// Deterministic fault-injected replay — the trace-level counterpart of
+/// running the engine behind a `fault:` store (see `docs/ROBUSTNESS.md`).
+/// Each missed expert fails with [`ChaosConfig::err_rate`]; a failed fetch
+/// is rolled back ([`ExpertCache::invalidate`], the expert never becomes
+/// resident) and the step degrades exactly like the engine's ladder:
+/// reroute to a cache-resident expert outside the selection when one
+/// exists (charged as an extra hit), else drop the expert. Same seed and
+/// trace → identical counters; `err_rate = 0` draws nothing and matches
+/// [`simulate_with`] exactly.
+pub fn simulate_chaos(
+    trace: &Trace,
+    capacity: usize,
+    factory: &EvictionFactory,
+    chaos: ChaosConfig,
+) -> ChaosResult {
+    let mut caches: Vec<ExpertCache> = (0..trace.n_layers)
+        .map(|l| ExpertCache::with_policy(capacity, factory.for_layer(l)))
+        .collect();
+    let mut rng = Rng::new(chaos.seed);
+    let mut out = ChaosResult::default();
+    for (t, per_layer) in trace.selections.iter().enumerate() {
+        for (l, sel) in per_layer.iter().enumerate() {
+            let acc = caches[l].access(sel, t as u64, None);
+            if chaos.err_rate <= 0.0 {
+                continue;
+            }
+            let failed: Vec<u32> = acc
+                .missed
+                .iter()
+                .copied()
+                .filter(|_| rng.chance(chaos.err_rate))
+                .collect();
+            for &e in &failed {
+                caches[l].invalidate(e, t as u64);
+                out.faults += 1;
+                let stand_in = (0..trace.n_experts as u32)
+                    .find(|r| !sel.contains(r) && !failed.contains(r) && caches[l].contains(*r));
+                match stand_in {
+                    Some(r) => {
+                        caches[l].access(&[r], t as u64, None);
+                        out.rerouted += 1;
+                    }
+                    None => out.dropped += 1,
+                }
+            }
+        }
+    }
+    for c in &caches {
+        out.hits += c.stats.hits;
+        out.misses += c.stats.misses;
+    }
+    out
+}
+
 /// Replay with exact pooled lifetime statistics (Table 9); legacy-enum
 /// shim over [`simulate_lifetimes_with`].
 pub fn simulate_lifetimes(trace: &Trace, capacity: usize, policy: Policy) -> (SimResult, Vec<f64>) {
@@ -400,9 +484,10 @@ pub fn simulate_lifetimes_with(
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
+
     use super::*;
     use crate::util::prop::prop_check;
-    use crate::util::rng::Rng;
 
     fn random_trace(seed: u64, tokens: usize, layers: usize, n: usize, k: usize) -> Trace {
         let mut rng = Rng::new(seed);
@@ -593,6 +678,33 @@ mod tests {
             "no cross-session overlap at all is implausible here"
         );
         assert_eq!(g1.rounds, 80);
+    }
+
+    #[test]
+    fn chaos_zero_rate_matches_healthy_replay() {
+        use crate::policy::parse_eviction;
+        let tr = random_trace(51, 100, 2, 16, 3);
+        let f = parse_eviction("lru").unwrap();
+        let healthy = simulate_with(&tr, 6, &f);
+        let chaos = simulate_chaos(&tr, 6, &f, ChaosConfig { err_rate: 0.0, seed: 9 });
+        assert_eq!((chaos.hits, chaos.misses), (healthy.hits, healthy.misses));
+        assert_eq!((chaos.faults, chaos.rerouted, chaos.dropped), (0, 0, 0));
+    }
+
+    #[test]
+    fn chaos_replay_is_deterministic_and_ladder_accounts_every_fault() {
+        use crate::policy::parse_eviction;
+        let tr = random_trace(52, 150, 2, 16, 3);
+        let f = parse_eviction("lru").unwrap();
+        let cfg = ChaosConfig { err_rate: 0.2, seed: 13 };
+        let a = simulate_chaos(&tr, 6, &f, cfg);
+        let b = simulate_chaos(&tr, 6, &f, cfg);
+        assert_eq!(a, b, "same seed must replay identically");
+        assert!(a.faults > 0, "20% over 150x2x3 accesses must inject something");
+        assert_eq!(a.faults, a.rerouted + a.dropped);
+        // A different seed lands faults elsewhere.
+        let c = simulate_chaos(&tr, 6, &f, ChaosConfig { seed: 14, ..cfg });
+        assert!(c.faults > 0);
     }
 
     #[test]

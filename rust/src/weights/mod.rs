@@ -4,11 +4,21 @@
 //! actual `pread` of the expert's contiguous quantized span, followed by
 //! dequantization into f32 — the same bytes a real device would move over
 //! UFS. The [`crate::flash::FlashSim`] charges virtual time for those bytes.
+//!
+//! Robustness contract (`docs/ROBUSTNESS.md`): [`FlashImage::open`]
+//! validates the header and every tensor/span bound against the file, so
+//! a truncated or garbage image returns a typed error instead of UB or a
+//! panic; and every span read is guarded by a trusted-first-read checksum
+//! ([`FlashImage::verify_span`]) so corruption after open is *detected*
+//! (as [`ChecksumMismatch`]) rather than silently dequantized.
+
+#![warn(clippy::unwrap_used)]
 
 use std::collections::HashMap;
 use std::fs::File;
 use std::os::unix::fs::FileExt;
 use std::path::Path;
+use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
@@ -18,6 +28,49 @@ use crate::util::json::{self, Json};
 
 pub const MAGIC: &[u8; 8] = b"MOEFLSH1";
 pub const ALIGN: u64 = 64;
+
+/// A span's bytes no longer match the checksum recorded on their first
+/// read — bit-rot, a torn write, or injected corruption
+/// ([`crate::store::FaultStore`]). Typed so the store layer can classify
+/// it as a retryable [`crate::store::StoreError::Corrupt`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChecksumMismatch {
+    pub layer: usize,
+    pub expert: usize,
+    pub shared: bool,
+}
+
+impl std::fmt::Display for ChecksumMismatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "span checksum mismatch for expert {} (layer {}, shared={})",
+            self.expert, self.layer, self.shared
+        )
+    }
+}
+
+impl std::error::Error for ChecksumMismatch {}
+
+/// FNV-1a 64-bit over a span's bytes: tiny, dependency-free, and
+/// order-sensitive — adequate for integrity checking (not an adversarial
+/// MAC).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Little-endian f32s out of a byte buffer (trailing partial chunk, if
+/// any, is dropped — offsets are validated at open).
+fn le_f32s(raw: &[u8]) -> Vec<f32> {
+    raw.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorMeta {
@@ -66,6 +119,10 @@ pub struct FlashImage {
     /// (layer, expert, is_shared) -> span index
     spans: HashMap<(usize, usize, bool), ExpertSpan>,
     pub file_bytes: u64,
+    /// Trusted-first-read span checksums: (layer, expert, is_shared) ->
+    /// FNV-1a of the span bytes, recorded on first read and verified on
+    /// every later one (shared with prefetch workers through the `Arc`).
+    checksums: Mutex<HashMap<(usize, usize, bool), u64>>,
 }
 
 /// Dequantized expert weights ready for upload: w1, w3 [D*F], w2 [F*D].
@@ -84,17 +141,31 @@ impl FlashImage {
             .with_context(|| format!("open flash image {}", path.display()))?;
         let file_bytes = file.metadata()?.len();
         let mut head = [0u8; 12];
-        file.read_exact_at(&mut head, 0)?;
+        file.read_exact_at(&mut head, 0)
+            .with_context(|| format!("{}: shorter than the 12-byte head", path.display()))?;
         if &head[..8] != MAGIC {
             bail!("{}: bad magic", path.display());
         }
-        let hlen = u32::from_le_bytes(head[8..12].try_into().unwrap()) as u64;
+        let hlen = u32::from_le_bytes([head[8], head[9], head[10], head[11]]) as u64;
+        // Bound the header before allocating for it: a garbage length in a
+        // truncated image must fail typed, not attempt a huge read.
+        anyhow::ensure!(
+            12 + hlen <= file_bytes,
+            "{}: header claims {hlen} bytes but the file holds {file_bytes}",
+            path.display()
+        );
         let mut hbuf = vec![0u8; hlen as usize];
         file.read_exact_at(&mut hbuf, 12)?;
         let header: Json = json::parse(std::str::from_utf8(&hbuf)?)
             .map_err(|e| anyhow::anyhow!("header json: {e}"))?;
         let mut payload_start = 12 + hlen;
         payload_start += (ALIGN - payload_start % ALIGN) % ALIGN;
+        anyhow::ensure!(
+            payload_start <= file_bytes,
+            "{}: payload starts at {payload_start}, past the {file_bytes}-byte file",
+            path.display()
+        );
+        let payload_bytes = file_bytes - payload_start;
 
         let config = ModelConfig::from_json(header.req("config")?)?;
         let quant = Quant::parse(header.req("quant")?.as_str().context("quant")?)?;
@@ -121,6 +192,33 @@ impl FlashImage {
                 part: t.req("part")?.as_str().context("part")?.to_string(),
             });
         }
+        // Every tensor (payload + scales) must land inside the payload
+        // region the file actually holds — a truncated or garbage image
+        // fails here, typed, instead of as a short read (or worse, an
+        // out-of-bounds slice on the mmap path) at fetch time.
+        for t in &tensors {
+            let end = t
+                .offset
+                .checked_add(t.bytes)
+                .with_context(|| format!("tensor {}: offset overflow", t.name))?;
+            anyhow::ensure!(
+                end <= payload_bytes,
+                "tensor {}: [{}, {end}) outside the {payload_bytes}-byte payload",
+                t.name,
+                t.offset
+            );
+            if t.scales_offset >= 0 {
+                let send = (t.scales_offset as u64)
+                    .checked_add(t.scales_bytes)
+                    .with_context(|| format!("tensor {}: scales overflow", t.name))?;
+                anyhow::ensure!(
+                    send <= payload_bytes,
+                    "tensor {}: scales [{}, {send}) outside the {payload_bytes}-byte payload",
+                    t.name,
+                    t.scales_offset
+                );
+            }
+        }
         let by_name = tensors
             .iter()
             .enumerate()
@@ -135,6 +233,19 @@ impl FlashImage {
                 offset: s.req("offset")?.as_i64().context("offset")? as u64,
                 bytes: s.req("bytes")?.as_i64().context("bytes")? as u64,
             };
+            let end = span
+                .offset
+                .checked_add(span.bytes)
+                .with_context(|| {
+                    format!("span ({}, {}): offset overflow", span.layer, span.expert)
+                })?;
+            anyhow::ensure!(
+                end <= payload_bytes,
+                "span ({}, {}): [{}, {end}) outside the {payload_bytes}-byte payload",
+                span.layer,
+                span.expert,
+                span.offset
+            );
             spans.insert((span.layer, span.expert, span.kind == "shared"), span);
         }
         Ok(FlashImage {
@@ -146,6 +257,7 @@ impl FlashImage {
             by_name,
             spans,
             file_bytes,
+            checksums: Mutex::new(HashMap::new()),
         })
     }
 
@@ -186,10 +298,7 @@ impl FlashImage {
 
     fn read_scales(&self, t: &TensorMeta) -> Result<Vec<f32>> {
         let raw = self.read_raw(t.scales_offset as u64, t.scales_bytes)?;
-        Ok(raw
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect())
+        Ok(le_f32s(&raw))
     }
 
     /// Read + dequantize one tensor to f32 (row-major).
@@ -197,10 +306,7 @@ impl FlashImage {
         let t = self.tensor(name)?.clone();
         let raw = self.read_raw(t.offset, t.bytes)?;
         match t.dtype.as_str() {
-            "f32" => Ok(raw
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                .collect()),
+            "f32" => Ok(le_f32s(&raw)),
             "i8" => {
                 let scales = self.read_scales(&t)?;
                 let mut out = Vec::new();
@@ -229,6 +335,36 @@ impl FlashImage {
     /// source span bytes some other way (tests, mappings).
     pub fn read_span_bytes(&self, span: &ExpertSpan) -> Result<Vec<u8>> {
         self.read_raw(span.offset, span.bytes)
+    }
+
+    /// Verify `raw` (one expert span's bytes) against the checksum
+    /// recorded the first time this span was read. Trusted-first-read: the
+    /// initial read records the reference, every later read must match —
+    /// this detects divergence *after* open (bit-rot, torn rewrites,
+    /// injected corruption), not a fixture corrupted before its first
+    /// read. Shared across threads through the image `Arc` (prefetch
+    /// workers verify too).
+    pub fn verify_span(
+        &self,
+        layer: usize,
+        expert: usize,
+        shared: bool,
+        raw: &[u8],
+    ) -> Result<(), ChecksumMismatch> {
+        use std::collections::hash_map::Entry;
+        let sum = fnv1a64(raw);
+        let mut map = self
+            .checksums
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        match map.entry((layer, expert, shared)) {
+            Entry::Vacant(v) => {
+                v.insert(sum);
+                Ok(())
+            }
+            Entry::Occupied(o) if *o.get() == sum => Ok(()),
+            Entry::Occupied(_) => Err(ChecksumMismatch { layer, expert, shared }),
+        }
     }
 
     /// Fetch one expert: ONE contiguous flash read of its span, then
@@ -293,6 +429,9 @@ impl FlashImage {
         w3: &mut [f32],
         w2: &mut [f32],
     ) -> Result<()> {
+        // Integrity gate: every span read — pread or mmap — verifies
+        // against the first-read checksum before any byte is dequantized.
+        self.verify_span(layer, expert, shared, raw)?;
         let prefix = if shared { "shared" } else { "experts" };
         let dequant_part = |part: &str, dst: &mut [f32]| -> Result<()> {
             let name = format!("layers.{layer}.{prefix}.{expert}.{part}");
@@ -309,16 +448,15 @@ impl FlashImage {
             );
             let data = &raw[(t.offset - base) as usize..(t.offset - base + t.bytes) as usize];
             let scales = |t: &TensorMeta| -> Vec<f32> {
-                raw[(t.scales_offset as u64 - base) as usize
-                    ..(t.scales_offset as u64 - base + t.scales_bytes) as usize]
-                    .chunks_exact(4)
-                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                    .collect()
+                le_f32s(
+                    &raw[(t.scales_offset as u64 - base) as usize
+                        ..(t.scales_offset as u64 - base + t.scales_bytes) as usize],
+                )
             };
             match t.dtype.as_str() {
                 "f32" => {
                     for (o, c) in dst.iter_mut().zip(data.chunks_exact(4)) {
-                        *o = f32::from_le_bytes(c.try_into().unwrap());
+                        *o = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
                     }
                 }
                 "i8" => quant::dequant_i8_into(data, &scales(&t), dst),
@@ -371,10 +509,79 @@ impl FlashImage {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
+
     // The reader is exercised end-to-end (against images produced by
-    // python/compile/export.py) in rust/tests/weights_roundtrip.rs; here we
-    // only test pure helpers.
+    // python/compile/export.py) in rust/tests/weights_roundtrip.rs, and
+    // open-time validation against a full synthetic image in
+    // rust/tests/weights_validation.rs; here we test pure helpers and the
+    // corrupted-fixture rejections that need no valid payload.
     use super::*;
+
+    fn fixture(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir()
+            .join(format!("moe_cache_weights_{}_{name}.bin", std::process::id()));
+        std::fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn open_rejects_bad_magic() {
+        let p = fixture("bad_magic", b"NOTMAGIC\x00\x00\x00\x00garbage");
+        let err = format!("{:#}", FlashImage::open(&p).unwrap_err());
+        assert!(err.contains("bad magic"), "{err}");
+    }
+
+    #[test]
+    fn open_rejects_truncated_file() {
+        let p = fixture("truncated", b"MOEFL"); // shorter than the head
+        let err = format!("{:#}", FlashImage::open(&p).unwrap_err());
+        assert!(err.contains("12-byte head"), "{err}");
+    }
+
+    #[test]
+    fn open_rejects_oversized_header_length() {
+        // Magic + a 4 GB-ish header length on a 16-byte file: must fail
+        // typed before allocating or reading.
+        let mut img = Vec::new();
+        img.extend_from_slice(MAGIC);
+        img.extend_from_slice(&u32::MAX.to_le_bytes());
+        img.extend_from_slice(b"tail");
+        let p = fixture("huge_hlen", &img);
+        let err = format!("{:#}", FlashImage::open(&p).unwrap_err());
+        assert!(err.contains("header claims"), "{err}");
+    }
+
+    #[test]
+    fn open_rejects_garbage_header_json() {
+        let body = b"{not json";
+        let mut img = Vec::new();
+        img.extend_from_slice(MAGIC);
+        img.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        img.extend_from_slice(body);
+        let p = fixture("garbage_json", &img);
+        let err = format!("{:#}", FlashImage::open(&p).unwrap_err());
+        assert!(err.contains("header json"), "{err}");
+    }
+
+    #[test]
+    fn fnv1a64_is_deterministic_and_sensitive() {
+        let a = fnv1a64(b"expert span bytes");
+        assert_eq!(a, fnv1a64(b"expert span bytes"));
+        assert_ne!(a, fnv1a64(b"expert span byteZ"));
+        assert_ne!(fnv1a64(b""), fnv1a64(b"\x00"));
+        // One flipped bit anywhere must change the sum.
+        let mut flipped = b"expert span bytes".to_vec();
+        flipped[7] ^= 0x01;
+        assert_ne!(a, fnv1a64(&flipped));
+    }
+
+    #[test]
+    fn le_f32s_round_trip() {
+        let vals = [0.0f32, -1.5, 3.25e7];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        assert_eq!(le_f32s(&bytes), vals);
+    }
 
     #[test]
     fn tensor_meta_helpers() {

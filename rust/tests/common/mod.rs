@@ -1,0 +1,79 @@
+//! Shared test fixtures: a tiny self-contained F32 flash image built
+//! byte-by-byte, so store- and weights-level robustness tests run without
+//! `make artifacts`.
+
+#![allow(dead_code)] // each test crate uses its own subset of the helpers
+
+use std::path::PathBuf;
+
+/// d_model == d_ff == head_dim of the synthetic config.
+pub const D: usize = 4;
+pub const N_LAYERS: usize = 2;
+pub const N_EXPERTS: usize = 4;
+/// Bytes of one f32 expert part (w1 / w3 / w2, each `D x D`).
+pub const PART_BYTES: u64 = (D * D * 4) as u64;
+/// Bytes of one contiguous expert span (w1 + w3 + w2).
+pub const SPAN_BYTES: u64 = 3 * PART_BYTES;
+
+/// Deterministic fill value for element `i` of part `p` of expert `e` in
+/// layer `l` — distinct everywhere, so a misplaced read is caught by value.
+pub fn val(l: usize, e: usize, p: usize, i: usize) -> f32 {
+    (l * 10_000 + e * 1_000 + p * 100 + i) as f32
+}
+
+/// Serialize a tiny valid flash image (2 layers x 4 experts, f32, no
+/// shared experts, no scales) in the `MOEFLSH1` format
+/// `python/compile/export.py` produces: magic + header length + JSON
+/// header + 64-byte-aligned payload of contiguous expert spans.
+pub fn synth_image_bytes() -> Vec<u8> {
+    let mut tensors = String::new();
+    let mut spans = String::new();
+    let mut payload: Vec<u8> = Vec::new();
+    for l in 0..N_LAYERS {
+        for e in 0..N_EXPERTS {
+            let span_off = payload.len() as u64;
+            for (p, part) in ["w1", "w3", "w2"].iter().enumerate() {
+                let off = payload.len() as u64;
+                for i in 0..D * D {
+                    payload.extend_from_slice(&val(l, e, p, i).to_le_bytes());
+                }
+                if !tensors.is_empty() {
+                    tensors.push(',');
+                }
+                tensors.push_str(&format!(
+                    r#"{{"name":"layers.{l}.experts.{e}.{part}","dtype":"f32","shape":[{D},{D}],"offset":{off},"bytes":{PART_BYTES},"scales_offset":-1,"scales_bytes":0,"kind":"expert","layer":{l},"expert":{e},"part":"{part}"}}"#
+                ));
+            }
+            if !spans.is_empty() {
+                spans.push(',');
+            }
+            spans.push_str(&format!(
+                r#"{{"layer":{l},"expert":{e},"kind":"expert","offset":{span_off},"bytes":{SPAN_BYTES}}}"#
+            ));
+        }
+    }
+    let config = format!(
+        r#"{{"name":"synth-tiny","vocab":8,"d_model":{D},"n_layers":{N_LAYERS},"n_heads":1,"head_dim":{D},"max_seq":16,"n_experts":{N_EXPERTS},"top_k":2,"n_shared":0,"d_ff":{D},"renorm_topk":false,"rms_eps":1e-5}}"#
+    );
+    let header = format!(
+        r#"{{"config":{config},"quant":"f32","tensors":[{tensors}],"expert_spans":[{spans}]}}"#
+    );
+    let mut img: Vec<u8> = Vec::new();
+    img.extend_from_slice(moe_cache::weights::MAGIC);
+    img.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    img.extend_from_slice(header.as_bytes());
+    while (img.len() as u64) % moe_cache::weights::ALIGN != 0 {
+        img.push(0);
+    }
+    img.extend_from_slice(&payload);
+    img
+}
+
+/// Write the synthetic image to a per-process temp file and return its
+/// path. `tag` keeps concurrent tests in one binary from clobbering each
+/// other's fixtures.
+pub fn synth_image(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("moe_cache_synth_{}_{tag}.bin", std::process::id()));
+    std::fs::write(&p, synth_image_bytes()).expect("write synth image");
+    p
+}

@@ -3,7 +3,8 @@
 //! 1. Property tests (artifact-free): the `FlashSim` accounting behind
 //!    `SimStore` reproduces the seed engine's virtual-clock formulas
 //!    bit-identically over random operation sequences.
-//! 2. Artifact-gated: `sim:`-backed engine runs reproduce the default
+//! 2. Artifact-gated: `sim:`-backed engine runs — and zero-rate
+//!    `fault:inner=sim` wrappers around them — reproduce the default
 //!    engine's hit/miss totals, `flash_bytes` and virtual `time_s`
 //!    bit-identically across the default sweep grid; `MmapStore` fetches
 //!    round-trip against the `read_f32` reference for every expert part
@@ -190,6 +191,22 @@ fn sim_store_reproduces_default_accounting_across_sweep_grid() {
             tier_a.time_s.to_bits(),
             tier_b.time_s.to_bits(),
             "{spec}: virtual time diverged"
+        );
+        // A zero-rate fault wrapper is pure delegation: same grid, same
+        // bits — the chaos layer provably costs nothing when disabled.
+        let (nll_c, h_c, m_c, tier_c) = run(Some("fault:inner=sim,profile=device-16gb"));
+        assert_eq!(nll_a.to_bits(), nll_c.to_bits(), "{spec}: zero-rate fault nll diverged");
+        assert_eq!((h_a, m_a), (h_c, m_c), "{spec}: zero-rate fault hit/miss diverged");
+        assert_eq!(tier_a.flash_bytes, tier_c.flash_bytes, "{spec}: zero-rate fault bytes");
+        assert_eq!(
+            tier_a.time_s.to_bits(),
+            tier_c.time_s.to_bits(),
+            "{spec}: zero-rate fault virtual time diverged"
+        );
+        assert_eq!(
+            (tier_c.faults, tier_c.fetch_retries, tier_c.fetch_failures),
+            (0, 0, 0),
+            "{spec}: zero-rate wrapper must not count faults"
         );
         // And the totals decompose exactly per the accounting contract.
         let bytes_per = tier_a.flash_bytes / tier_a.flash_reads.max(1);

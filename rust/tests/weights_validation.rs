@@ -1,0 +1,117 @@
+//! Flash-image validation regressions (`docs/ROBUSTNESS.md`): a
+//! hand-built synthetic image proves `FlashImage::open` accepts a valid
+//! file and rejects corrupted ones with *typed* errors at open time, and
+//! that the trusted-first-read span checksums catch bytes that diverge
+//! *after* open. Runs without `make artifacts`.
+
+mod common;
+
+use std::io::{Seek, SeekFrom, Write};
+
+use moe_cache::weights::{ChecksumMismatch, FlashImage, MAGIC};
+
+#[test]
+fn valid_synth_image_opens_and_fetches_exact_values() {
+    let path = common::synth_image("valid");
+    let img = FlashImage::open(&path).expect("valid image opens");
+    assert_eq!(img.config.name, "synth-tiny");
+    assert_eq!(img.config.n_experts, common::N_EXPERTS);
+    assert_eq!(img.config.n_layers, common::N_LAYERS);
+
+    // Named-tensor reads land byte-exact.
+    let w3 = img.read_f32("layers.1.experts.2.w3").expect("read w3");
+    let want: Vec<f32> = (0..common::D * common::D).map(|i| common::val(1, 2, 1, i)).collect();
+    assert_eq!(w3, want);
+
+    // The span fetch path dequantizes all three parts from one read.
+    for (l, e) in [(0usize, 0usize), (1, 3)] {
+        let w = img.fetch_expert(l, e, false).expect("fetch expert");
+        assert_eq!(w.flash_bytes, common::SPAN_BYTES);
+        for (p, part) in [&w.w1, &w.w3, &w.w2].into_iter().enumerate() {
+            let want: Vec<f32> = (0..common::D * common::D).map(|i| common::val(l, e, p, i)).collect();
+            assert_eq!(part, &want, "layer {l} expert {e} part {p}");
+        }
+    }
+}
+
+#[test]
+fn open_rejects_bad_magic() {
+    let mut bytes = common::synth_image_bytes();
+    bytes[0] ^= 0xFF;
+    let p = std::env::temp_dir()
+        .join(format!("moe_cache_synth_{}_badmagic.bin", std::process::id()));
+    std::fs::write(&p, bytes).unwrap();
+    let err = FlashImage::open(&p).expect_err("bad magic must fail");
+    assert!(format!("{err:#}").contains("bad magic"), "got: {err:#}");
+}
+
+#[test]
+fn open_rejects_header_length_past_eof() {
+    let mut bytes = common::synth_image_bytes();
+    // Garbage header length claiming far more bytes than the file holds
+    // must fail the bounds check, not attempt a huge read.
+    bytes[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+    let p = std::env::temp_dir().join(format!("moe_cache_synth_{}_hlen.bin", std::process::id()));
+    std::fs::write(&p, bytes).unwrap();
+    let err = FlashImage::open(&p).expect_err("oversized header must fail");
+    assert!(format!("{err:#}").contains("header claims"), "got: {err:#}");
+}
+
+#[test]
+fn open_rejects_truncated_payload() {
+    let mut bytes = common::synth_image_bytes();
+    // Drop the tail: the header still promises every tensor and span, so
+    // the open-time bounds validation must reject the file — before any
+    // fetch could take a short read or slice out of bounds.
+    bytes.truncate(bytes.len() - common::SPAN_BYTES as usize);
+    let p = std::env::temp_dir().join(format!("moe_cache_synth_{}_trunc.bin", std::process::id()));
+    std::fs::write(&p, bytes).unwrap();
+    let err = FlashImage::open(&p).expect_err("truncated payload must fail");
+    assert!(
+        format!("{err:#}").contains("outside the"),
+        "expected a payload-bounds error, got: {err:#}"
+    );
+}
+
+#[test]
+fn open_rejects_garbage_header_json() {
+    let mut img: Vec<u8> = Vec::new();
+    let garbage = b"this is not json at all";
+    img.extend_from_slice(MAGIC);
+    img.extend_from_slice(&(garbage.len() as u32).to_le_bytes());
+    img.extend_from_slice(garbage);
+    let p = std::env::temp_dir().join(format!("moe_cache_synth_{}_json.bin", std::process::id()));
+    std::fs::write(&p, img).unwrap();
+    let err = FlashImage::open(&p).expect_err("garbage header must fail");
+    assert!(format!("{err:#}").contains("header json"), "got: {err:#}");
+}
+
+#[test]
+fn checksum_detects_corruption_after_open() {
+    let path = common::synth_image("bitrot");
+    let img = FlashImage::open(&path).expect("open");
+
+    // First read records the trusted reference checksum.
+    let clean = img.fetch_expert(0, 1, false).expect("first fetch");
+    assert_eq!(clean.w1[0], common::val(0, 1, 0, 0));
+
+    // Flip one payload bit on disk inside expert (0, 1)'s span.
+    let span_off = img.expert_span(0, 1, false).expect("span").offset;
+    let abs = img.payload_start() + span_off + 5;
+    let mut f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+    f.seek(SeekFrom::Start(abs)).unwrap();
+    f.write_all(&[0xAA]).unwrap();
+    f.sync_all().unwrap();
+
+    // Every later read re-verifies: the divergence is a typed error the
+    // store layer classifies as retryable corruption.
+    let err = img.fetch_expert(0, 1, false).expect_err("bit-rot must be detected");
+    let mismatch = err
+        .downcast_ref::<ChecksumMismatch>()
+        .expect("error should be a typed ChecksumMismatch");
+    assert_eq!((mismatch.layer, mismatch.expert, mismatch.shared), (0, 1, false));
+
+    // An untouched expert still fetches fine.
+    let ok = img.fetch_expert(1, 0, false).expect("untouched expert still reads");
+    assert_eq!(ok.w1[0], common::val(1, 0, 0, 0));
+}
