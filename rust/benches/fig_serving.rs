@@ -26,16 +26,34 @@
 //! healthy-vs-degraded comparison (the same workload at store error rate
 //! 0 vs 0.05, `docs/ROBUSTNESS.md`) in `results/BENCH_fault.json`.
 //!
+//! The **open-loop SLO stage** (`results/BENCH_slo.json`) replaces
+//! submit-everything-then-drain with seeded Poisson arrivals and compares
+//! gang vs continuous batching at three arrival rates. It has two halves:
+//! wall-clock arms on the real engine (reported; service time is
+//! machine-dependent) and virtual-clock arms on `tracesim::serving`,
+//! where flash time is charged deterministically — the acceptance
+//! assertion (continuous improves TTFT p99 over gang at equal aggregate
+//! tokens under backlog) runs on the virtual arms, since on a
+//! compute-bound CPU host both schedules see near-identical wall
+//! throughput while the device clock exposes the fetches the continuous
+//! distinct-union actually deduplicates.
+//!
 //! Run: `cargo bench --offline --bench fig_serving`
 
 use anyhow::Result;
-use moe_cache::config::{ModelConfig, Quant};
+use moe_cache::cache::Policy;
+use moe_cache::config::{DeviceProfile, ModelConfig, Quant};
 use moe_cache::coordinator::{
-    Coordinator, Event, Request, Schedule, ServerConfig,
+    Coordinator, Event, Request, Schedule, ServerConfig, ServerMetrics,
 };
 use moe_cache::model::{Engine, EngineBuilder, EngineOptions};
+use moe_cache::policy::EvictionFactory;
 use moe_cache::report::{results_dir, Table};
 use moe_cache::routing::{DeltaMode, Strategy};
+use moe_cache::tracesim::serving::{
+    poisson_arrivals, simulate_serving, synthetic_workload, ServingConfig, SimSchedule,
+    WorkloadSpec,
+};
 use moe_cache::util::json::Json;
 use moe_cache::util::rng::Rng;
 use moe_cache::util::stats::{mean, percentile};
@@ -167,6 +185,128 @@ fn run_schedule(
     run.fetch_failures = metrics.fetch_failures;
     run.rerouted = metrics.rerouted_experts;
     run.dropped = metrics.dropped_experts;
+    Ok(run)
+}
+
+const SLO_N: usize = 8;
+const SLO_MAX_NEW: usize = 10;
+const SLO_ARRIVAL_SEED: u64 = 42;
+
+fn slo_requests(vocab: usize, max_seq: usize) -> Vec<Request> {
+    // Shorter than the closed-loop mix: the open-loop stage runs five arms
+    // and the low-rate arm spends most of its wall time idle between
+    // arrivals, so per-request work has to stay small.
+    let lens = [8usize, 16, 10, 14, 8, 12, 16, 10];
+    (0..SLO_N)
+        .map(|i| {
+            let mut rng = Rng::new(900 + i as u64);
+            let len =
+                lens[i % lens.len()].min(max_seq.saturating_sub(SLO_MAX_NEW + 1)).max(1);
+            Request {
+                id: 0x5100 + i as u64,
+                prompt: (0..len)
+                    .map(|_| 4 + (rng.below(vocab.saturating_sub(4))) as u32)
+                    .collect(),
+                max_new: SLO_MAX_NEW,
+                temperature: 0.7,
+                // No stop token: equal aggregate tokens across schedules.
+                stop_token: None,
+                routing_spec: None,
+            }
+        })
+        .collect()
+}
+
+struct OpenLoopRun {
+    ttft: Vec<f64>,
+    tokens: u64,
+    /// Requests shed by SLO-aware admission (`Event::Failed` whose error
+    /// starts with `shed:`).
+    shed: u64,
+    /// Any other failure — a bench bug, asserted zero by every arm.
+    failed: u64,
+    wall_s: f64,
+    metrics: ServerMetrics,
+}
+
+/// Open-loop run: requests are submitted one at a time at the given
+/// arrival instants (seconds from the first submission), sleeping out the
+/// gaps, instead of `submit_batch`'s everything-at-once closed loop. TTFT
+/// therefore includes real queue delay, and SLO-aware admission (which
+/// only applies to individually submitted requests) can shed.
+fn run_open_loop(
+    model: &str,
+    schedule: Schedule,
+    cache: usize,
+    j: usize,
+    reqs: Vec<Request>,
+    arrivals: &[f64],
+    slo_ttft_s: Option<f64>,
+) -> Result<OpenLoopRun> {
+    // Gang gets its natural round length; continuous admits per step, so
+    // its quantum is irrelevant.
+    let quantum = if matches!(schedule, Schedule::Gang) { 4 } else { 1 };
+    anyhow::ensure!(reqs.len() == arrivals.len(), "one arrival instant per request");
+    let arts = moe_cache::artifacts_dir();
+    let model_owned = model.to_string();
+    let opts = EngineOptions {
+        strategy: Strategy::CachePrior { lambda: 0.5, j, delta: DeltaMode::RunningAvg },
+        quant: Quant::Int4,
+        ..EngineOptions::defaults(cache)
+    };
+    let coord = Coordinator::spawn(
+        move || Engine::load(&arts, &model_owned, opts),
+        ServerConfig {
+            max_sessions: MAX_SESSIONS,
+            schedule,
+            decode_quantum: quantum,
+            prefill_chunk: 16,
+            slo_ttft_s,
+            ..ServerConfig::default()
+        },
+    )?;
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    let n = reqs.len();
+    let t0 = std::time::Instant::now();
+    for (req, &at) in reqs.into_iter().zip(arrivals) {
+        let wait = at - t0.elapsed().as_secs_f64();
+        if wait > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+        }
+        coord.submit_with(req, tx.clone())?;
+    }
+
+    let mut run = OpenLoopRun {
+        ttft: Vec::new(),
+        tokens: 0,
+        shed: 0,
+        failed: 0,
+        wall_s: 0.0,
+        metrics: ServerMetrics::default(),
+    };
+    let mut terminal = 0usize;
+    while terminal < n {
+        match rx.recv() {
+            Ok(Event::Token { .. }) => continue,
+            Ok(Event::Done(res)) => {
+                run.ttft.push(res.ttft_s);
+                run.tokens += res.generated.len() as u64;
+                terminal += 1;
+            }
+            Ok(Event::Failed { error, .. }) => {
+                if error.starts_with("shed:") {
+                    run.shed += 1;
+                } else {
+                    run.failed += 1;
+                }
+                terminal += 1;
+            }
+            Err(_) => anyhow::bail!("coordinator dropped open-loop reply"),
+        }
+    }
+    run.wall_s = t0.elapsed().as_secs_f64();
+    run.metrics = coord.shutdown();
     Ok(run)
 }
 
@@ -391,7 +531,7 @@ fn main() -> Result<()> {
         degraded.ttft.len(),
     );
     let fault_json = Json::Object(vec![
-        ("model".into(), Json::str(model)),
+        ("model".into(), Json::str(model.clone())),
         ("schedule".into(), Json::str("round-robin")),
         ("requests".into(), Json::num(N_REQ as f64)),
         ("fault_spec".into(), Json::str(FAULT_SPEC)),
@@ -424,5 +564,297 @@ fn main() -> Result<()> {
     let fault_path = dir.join("BENCH_fault.json");
     std::fs::write(&fault_path, format!("{fault_json}"))?;
     println!("wrote {}", fault_path.display());
+
+    // ── Open-loop SLO stage: gang vs continuous under Poisson load ──────
+    //
+    // Wall-clock arms run the real engine; their service rate is
+    // machine-dependent, so arrival rates are calibrated from a solo run
+    // and the gang/continuous comparison is *reported*. The deterministic
+    // acceptance assertion (continuous improves TTFT p99 at equal
+    // aggregate tokens under backlog) runs on the virtual-clock arms
+    // below, where the device profile charges flash time reproducibly.
+    println!("\n== open-loop SLO (gang vs continuous) ==");
+    let mut slo_table = Table::new(
+        "fig_serving_slo",
+        &[
+            "clock", "schedule", "rate_per_s", "slo_s", "ttft_p50_s", "ttft_p99_s",
+            "tpot_p50_s", "qdelay_p90_s", "shed_rate", "agg_tokens",
+        ],
+    );
+    let mut slo_arms: Vec<Json> = Vec::new();
+
+    // Calibrate: one solo continuous request gives the wall service time.
+    let solo = run_open_loop(
+        &model,
+        Schedule::Continuous,
+        cache,
+        j,
+        vec![slo_requests(cfg.vocab, cfg.max_seq).remove(0)],
+        &[0.0],
+        None,
+    )?;
+    anyhow::ensure!(solo.failed == 0 && solo.shed == 0, "solo calibration must complete");
+    let service_s = solo.wall_s.max(1e-3);
+    println!("wall service estimate: {service_s:.3}s per request");
+
+    // Underloaded (arrivals slower than service) and overloaded (3x the
+    // solo service rate — a standing queue forms) wall arms.
+    let wall_rates = [0.5 / service_s, 3.0 / service_s];
+    let mut wall_hi: Vec<(&str, f64, u64)> = Vec::new();
+    for (ri, &rate) in wall_rates.iter().enumerate() {
+        let arrivals = poisson_arrivals(SLO_N, rate, SLO_ARRIVAL_SEED);
+        for schedule in [Schedule::Gang, Schedule::Continuous] {
+            let r = run_open_loop(
+                &model,
+                schedule,
+                cache,
+                j,
+                slo_requests(cfg.vocab, cfg.max_seq),
+                &arrivals,
+                None,
+            )?;
+            anyhow::ensure!(
+                r.failed == 0 && r.shed == 0,
+                "{}: SLO-off open-loop arm must complete every request",
+                schedule.label()
+            );
+            anyhow::ensure!(
+                r.tokens as usize == SLO_N * SLO_MAX_NEW,
+                "{}: open-loop arms must process equal aggregate tokens",
+                schedule.label()
+            );
+            let p50 = percentile(&r.ttft, 50.0);
+            let p99 = percentile(&r.ttft, 99.0);
+            slo_table.row(vec![
+                "wall".into(),
+                schedule.label().into(),
+                format!("{rate:.2}"),
+                "-".into(),
+                format!("{p50:.4}"),
+                format!("{p99:.4}"),
+                format!("{:.4}", r.metrics.tpot_percentile(50.0)),
+                format!("{:.4}", r.metrics.queue_delay_percentile(90.0)),
+                format!("{:.3}", r.metrics.shed_rate()),
+                r.tokens.to_string(),
+            ]);
+            slo_arms.push(Json::Object(vec![
+                ("clock".into(), Json::str("wall")),
+                ("schedule".into(), Json::str(schedule.label())),
+                ("rate_per_s".into(), Json::num(rate)),
+                ("ttft_p50_s".into(), Json::num(p50)),
+                ("ttft_p99_s".into(), Json::num(p99)),
+                ("tpot_p50_s".into(), Json::num(r.metrics.tpot_percentile(50.0))),
+                ("queue_delay_p90_s".into(), Json::num(r.metrics.queue_delay_percentile(90.0))),
+                ("shed_rate".into(), Json::num(r.metrics.shed_rate())),
+                ("completed".into(), Json::num(r.ttft.len() as f64)),
+                ("aggregate_tokens".into(), Json::num(r.tokens as f64)),
+            ]));
+            if ri == wall_rates.len() - 1 {
+                wall_hi.push((schedule.label(), p99, r.tokens));
+            }
+        }
+    }
+
+    // One tight-SLO continuous arm at the overloaded rate: exercises the
+    // whole shed path end-to-end (predictor -> Failed("shed: ...") ->
+    // ServerMetrics::shed) on the real engine.
+    let wall_slo = 2.0 * service_s;
+    let shed_arm = run_open_loop(
+        &model,
+        Schedule::Continuous,
+        cache,
+        j,
+        slo_requests(cfg.vocab, cfg.max_seq),
+        &poisson_arrivals(SLO_N, wall_rates[1], SLO_ARRIVAL_SEED),
+        Some(wall_slo),
+    )?;
+    anyhow::ensure!(shed_arm.failed == 0, "tight-SLO arm must only shed, not fail");
+    anyhow::ensure!(
+        shed_arm.ttft.len() as u64 + shed_arm.shed == SLO_N as u64,
+        "every offered request must complete or shed"
+    );
+    anyhow::ensure!(
+        shed_arm.metrics.shed == shed_arm.shed,
+        "coordinator shed counter must match shed Failed events"
+    );
+    println!(
+        "tight SLO ({wall_slo:.3}s) at {:.2} req/s: {} completed, {} shed",
+        wall_rates[1],
+        shed_arm.ttft.len(),
+        shed_arm.shed,
+    );
+    slo_table.row(vec![
+        "wall".into(),
+        "continuous".into(),
+        format!("{:.2}", wall_rates[1]),
+        format!("{wall_slo:.3}"),
+        format!("{:.4}", percentile(&shed_arm.ttft, 50.0)),
+        format!("{:.4}", percentile(&shed_arm.ttft, 99.0)),
+        format!("{:.4}", shed_arm.metrics.tpot_percentile(50.0)),
+        format!("{:.4}", shed_arm.metrics.queue_delay_percentile(90.0)),
+        format!("{:.3}", shed_arm.metrics.shed_rate()),
+        shed_arm.tokens.to_string(),
+    ]);
+    slo_arms.push(Json::Object(vec![
+        ("clock".into(), Json::str("wall")),
+        ("schedule".into(), Json::str("continuous")),
+        ("rate_per_s".into(), Json::num(wall_rates[1])),
+        ("slo_ttft_s".into(), Json::num(wall_slo)),
+        ("ttft_p50_s".into(), Json::num(percentile(&shed_arm.ttft, 50.0))),
+        ("ttft_p99_s".into(), Json::num(percentile(&shed_arm.ttft, 99.0))),
+        ("tpot_p50_s".into(), Json::num(shed_arm.metrics.tpot_percentile(50.0))),
+        (
+            "queue_delay_p90_s".into(),
+            Json::num(shed_arm.metrics.queue_delay_percentile(90.0)),
+        ),
+        ("shed_rate".into(), Json::num(shed_arm.metrics.shed_rate())),
+        ("completed".into(), Json::num(shed_arm.ttft.len() as f64)),
+        ("shed".into(), Json::num(shed_arm.shed as f64)),
+        ("aggregate_tokens".into(), Json::num(shed_arm.tokens as f64)),
+    ]));
+
+    // Virtual-clock arms: the same comparison on `tracesim::serving`,
+    // where the FlashSim device clock makes TTFT deterministic. Capacity
+    // is probed with a saturating burst, then three arrival rates span
+    // underload / near-capacity / deep backlog.
+    let lru = EvictionFactory::from_policy(Policy::Lru);
+    let profile = DeviceProfile::device_16gb();
+    const V_REQS: usize = 48;
+    const V_PROMPT: usize = 8;
+    const V_DECODE: usize = 4;
+    let vspec = |rate: f64| WorkloadSpec {
+        n_requests: V_REQS,
+        rate_per_s: rate,
+        seed: 7,
+        n_layers: 4,
+        n_experts: 16,
+        top_k: 2,
+        prompt_tokens: V_PROMPT,
+        decode_tokens: V_DECODE,
+    };
+    let vcfg = |schedule: SimSchedule, slo: Option<f64>| ServingConfig {
+        schedule,
+        max_sessions: MAX_SESSIONS,
+        capacity: 8,
+        bytes_per_expert: 4096,
+        slo_ttft_s: slo,
+    };
+    let probe = simulate_serving(
+        &synthetic_workload(&vspec(1e6)),
+        &lru,
+        profile,
+        &vcfg(SimSchedule::Continuous, None),
+    )?;
+    let tok_per_s = probe.tier.tokens as f64 / probe.busy_s.max(1e-12);
+    let cap_req_s = tok_per_s / (V_PROMPT + V_DECODE) as f64;
+    // 25 per-token times: admits a solo request (8 prompt tokens of
+    // predicted work) but sheds once the standing queue is a few requests
+    // deep.
+    let virt_slo = 25.0 / tok_per_s;
+    let vrates = [0.3 * cap_req_s, 1.5 * cap_req_s, 50.0 * cap_req_s];
+    println!(
+        "virtual capacity: {tok_per_s:.1} tok/s ({cap_req_s:.2} req/s); rates {:.2}/{:.2}/{:.2}",
+        vrates[0], vrates[1], vrates[2],
+    );
+    let mut virt_hi: Vec<(&str, f64, u64)> = Vec::new();
+    for (ri, &rate) in vrates.iter().enumerate() {
+        let wl = synthetic_workload(&vspec(rate));
+        let arms = [
+            ("gang", SimSchedule::Gang { quantum: 4, chunk: 8 }, None),
+            ("continuous", SimSchedule::Continuous, None),
+            ("continuous", SimSchedule::Continuous, Some(virt_slo)),
+        ];
+        for (label, schedule, slo) in arms {
+            let r = simulate_serving(&wl, &lru, profile, &vcfg(schedule, slo))?;
+            anyhow::ensure!(
+                r.completed + r.shed.len() as u64 == V_REQS as u64,
+                "virtual arm must resolve every request"
+            );
+            if slo.is_none() {
+                anyhow::ensure!(r.shed.is_empty(), "SLO-off virtual arm must not shed");
+            }
+            let p50 = r.ttft_percentile(50.0);
+            let p99 = r.ttft_percentile(99.0);
+            slo_table.row(vec![
+                "virtual".into(),
+                label.into(),
+                format!("{rate:.2}"),
+                slo.map_or("-".into(), |s| format!("{s:.3}")),
+                format!("{p50:.4}"),
+                format!("{p99:.4}"),
+                format!("{:.4}", r.tpot_percentile(50.0)),
+                format!("{:.4}", r.queue_delay_percentile(90.0)),
+                format!("{:.3}", r.shed_rate()),
+                r.tier.tokens.to_string(),
+            ]);
+            let mut arm = vec![
+                ("clock".into(), Json::str("virtual")),
+                ("schedule".into(), Json::str(label)),
+                ("rate_per_s".into(), Json::num(rate)),
+                ("ttft_p50_s".into(), Json::num(p50)),
+                ("ttft_p99_s".into(), Json::num(p99)),
+                ("tpot_p50_s".into(), Json::num(r.tpot_percentile(50.0))),
+                ("queue_delay_p90_s".into(), Json::num(r.queue_delay_percentile(90.0))),
+                ("shed_rate".into(), Json::num(r.shed_rate())),
+                ("completed".into(), Json::num(r.completed as f64)),
+                ("shed".into(), Json::num(r.shed.len() as f64)),
+                ("aggregate_tokens".into(), Json::num(r.tier.tokens as f64)),
+                ("flash_reads".into(), Json::num(r.tier.flash_reads as f64)),
+            ];
+            if let Some(s) = slo {
+                arm.push(("slo_ttft_s".into(), Json::num(s)));
+            }
+            slo_arms.push(Json::Object(arm));
+            if ri == vrates.len() - 1 && slo.is_none() {
+                virt_hi.push((label, p99, r.tier.tokens));
+            }
+        }
+    }
+    slo_table.print();
+
+    // The acceptance gate: under deep backlog, at equal aggregate tokens,
+    // continuous batching beats gang on TTFT p99 (per-step admission plus
+    // prefill fetches deduplicated into the fused union, vs gang's serial
+    // prefill and round-boundary admission).
+    let (g_p99, g_tok) = (virt_hi[0].1, virt_hi[0].2);
+    let (c_p99, c_tok) = (virt_hi[1].1, virt_hi[1].2);
+    anyhow::ensure!(
+        c_tok == g_tok,
+        "virtual comparison arms must process equal aggregate tokens ({c_tok} vs {g_tok})"
+    );
+    let virt_improves = c_p99 < g_p99;
+    println!(
+        "virtual TTFT p99 under backlog: gang {g_p99:.4}s -> continuous {c_p99:.4}s ({})",
+        if virt_improves { "improves" } else { "REGRESSION" },
+    );
+    anyhow::ensure!(
+        virt_improves,
+        "continuous TTFT p99 {c_p99:.4}s must beat gang {g_p99:.4}s at equal aggregate tokens"
+    );
+    let wall_improves = wall_hi[1].1 < wall_hi[0].1;
+    println!(
+        "wall TTFT p99 under overload: gang {:.4}s -> continuous {:.4}s ({}, reported only)",
+        wall_hi[0].1,
+        wall_hi[1].1,
+        if wall_improves { "improves" } else { "no win on this host" },
+    );
+
+    let slo_json = Json::Object(vec![
+        ("model".into(), Json::str(model)),
+        ("requests_wall".into(), Json::num(SLO_N as f64)),
+        ("max_new_wall".into(), Json::num(SLO_MAX_NEW as f64)),
+        ("requests_virtual".into(), Json::num(V_REQS as f64)),
+        ("max_sessions".into(), Json::num(MAX_SESSIONS as f64)),
+        ("arrival_seed".into(), Json::num(SLO_ARRIVAL_SEED as f64)),
+        ("wall_service_estimate_s".into(), Json::num(service_s)),
+        ("virtual_capacity_req_s".into(), Json::num(cap_req_s)),
+        ("arms".into(), Json::Array(slo_arms)),
+        ("continuous_improves_ttft_p99".into(), Json::Bool(virt_improves)),
+        ("continuous_improves_ttft_p99_wall".into(), Json::Bool(wall_improves)),
+    ]);
+    let slo_path = dir.join("BENCH_slo.json");
+    std::fs::write(&slo_path, format!("{slo_json}"))?;
+    slo_table.write_csv(&dir)?;
+    println!("wrote {}", slo_path.display());
     Ok(())
 }

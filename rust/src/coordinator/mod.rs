@@ -7,12 +7,15 @@
 //! and interleaves their prefill chunks and decode quanta in rounds.
 //! *Batching*: the gang schedule locksteps decoding sessions through fused
 //! batch steps that fetch each distinct selected expert once for the whole
-//! round (see `docs/BATCHING.md`). Four policies ([`Schedule`]): the FCFS
-//! run-to-completion baseline, fair round-robin, a cache-affinity order
-//! that runs the session whose last top-K selections best overlap the
-//! resident expert set — the paper's §3 expert-locality idea extended
-//! across requests — and gang. Per-session KV and
-//! routing state swap in/out of the engine in O(1)
+//! round, and the continuous schedule makes every fused step its own
+//! admission boundary — sessions join and leave the cohort mid-flight,
+//! prefill piggybacks alongside decode, and admission sheds by predicted
+//! TTFT against an SLO (see `docs/BATCHING.md`). Five policies
+//! ([`Schedule`]): the FCFS run-to-completion baseline, fair round-robin,
+//! a cache-affinity order that runs the session whose last top-K
+//! selections best overlap the resident expert set — the paper's §3
+//! expert-locality idea extended across requests — gang, and continuous.
+//! Per-session KV and routing state swap in/out of the engine in O(1)
 //! ([`crate::model::SessionState`]); the expert DRAM cache is shared by
 //! all interleaved streams. Generated tokens stream back per token
 //! ([`Event::Token`]), so TTFT is decoupled from whole-generation latency.
@@ -22,5 +25,5 @@
 pub mod server;
 pub mod session;
 
-pub use server::{Coordinator, ServerConfig, ServerMetrics, WatchdogExpired};
+pub use server::{predict_ttft_s, Coordinator, ServerConfig, ServerMetrics, WatchdogExpired};
 pub use session::{Event, FinishReason, Request, RequestResult, Schedule};

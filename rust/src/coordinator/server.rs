@@ -22,6 +22,13 @@
 //! interleaved: every decoding session advances one token per fused batch
 //! step (`Engine::step_batch`), so sessions that route to the same expert
 //! in the same round share one store fetch (see `docs/BATCHING.md`).
+//!
+//! Under [`Schedule::Continuous`] the round disappears entirely: every
+//! fused step is an admission boundary, sessions join and leave the
+//! cohort mid-flight, prefill tokens are piggybacked alongside decode
+//! tokens in the same fused step, and — with
+//! [`ServerConfig::slo_ttft_s`] set — admission sheds requests whose
+//! predicted TTFT ([`predict_ttft_s`]) is already blown.
 
 #![warn(clippy::unwrap_used)]
 
@@ -36,6 +43,7 @@ use super::session::{
     round_order, Event, FinishReason, Phase, Request, RequestResult, Schedule, Session,
 };
 use crate::model::{Engine, SessionSlot, SessionState};
+use crate::policy::OriginalPolicy;
 use crate::util::stats::{mean, percentile};
 
 #[derive(Debug, Clone)]
@@ -64,6 +72,15 @@ pub struct ServerConfig {
     /// sessions; a gang round over the limit is cut short at the next
     /// step boundary. `None` (the default) disables the watchdog.
     pub quantum_deadline_s: Option<f64>,
+    /// TTFT service-level objective (seconds). Under
+    /// [`Schedule::Continuous`] per-request submissions whose *predicted*
+    /// TTFT (measured per-step latency × backlog depth, see
+    /// [`predict_ttft_s`]) already exceeds this are shed at enqueue with
+    /// [`Event::Failed`] instead of queued to miss it anyway; counted in
+    /// [`ServerMetrics::shed`]. Batch submissions are never shed (they
+    /// carry a reproducible-admission contract). `None` (the default)
+    /// disables shedding.
+    pub slo_ttft_s: Option<f64>,
 }
 
 impl Default for ServerConfig {
@@ -76,6 +93,7 @@ impl Default for ServerConfig {
             decode_quantum: 8,
             prefill_chunk: 32,
             quantum_deadline_s: None,
+            slo_ttft_s: None,
         }
     }
 }
@@ -106,9 +124,19 @@ pub struct ServerMetrics {
     pub completed: u64,
     pub aborted: u64,
     pub rejected: u64,
+    /// Requests shed by SLO-aware admission (predicted TTFT over
+    /// [`ServerConfig::slo_ttft_s`]) — distinct from `rejected`, which is
+    /// the hard `queue_depth` cut.
+    pub shed: u64,
     pub tokens_generated: u64,
     pub ttft_s: Vec<f64>,
     pub decode_tps: Vec<f64>,
+    /// Per-completed-request time-per-output-token (s/token, wall clock,
+    /// decode phase only).
+    pub tpot_s: Vec<f64>,
+    /// Per-admitted-request wait from submission to admission (s, wall
+    /// clock): the queueing component of TTFT.
+    pub queue_delay_s: Vec<f64>,
     /// Storage-tier totals at shutdown: slow-tier reads (= store fetches)
     /// and bytes. This is the number gang scheduling exists to shrink —
     /// the serial-vs-gang benches compare it at equal aggregate tokens.
@@ -132,15 +160,52 @@ pub struct ServerMetrics {
 }
 
 impl ServerMetrics {
+    /// TTFT percentile over completed requests (seconds). Delegates to
+    /// [`crate::util::stats::percentile`]: linear interpolation, 0.0 on an
+    /// empty vector.
+    pub fn ttft_percentile(&self, p: f64) -> f64 {
+        percentile(&self.ttft_s, p)
+    }
+
+    pub fn ttft_mean(&self) -> f64 {
+        mean(&self.ttft_s)
+    }
+
+    /// Time-per-output-token percentile over completed requests (s/token).
+    pub fn tpot_percentile(&self, p: f64) -> f64 {
+        percentile(&self.tpot_s, p)
+    }
+
+    /// Queue-delay (submission → admission) percentile over admitted
+    /// requests (seconds).
+    pub fn queue_delay_percentile(&self, p: f64) -> f64 {
+        percentile(&self.queue_delay_s, p)
+    }
+
+    /// Fraction of offered requests shed by SLO-aware admission. Offered =
+    /// completed + aborted + rejected + shed; 0.0 when nothing was offered.
+    pub fn shed_rate(&self) -> f64 {
+        let offered = self.completed + self.aborted + self.rejected + self.shed;
+        if offered == 0 {
+            0.0
+        } else {
+            self.shed as f64 / offered as f64
+        }
+    }
+
     pub fn summary(&self) -> String {
         format!(
-            "completed={} aborted={} rejected={} tokens={} ttft_mean={:.3}s ttft_p90={:.3}s tps_mean={:.2} tps_p10={:.2} flash_reads={} faults={} retries={} fetch_failures={} rerouted={} dropped={} watchdog={}",
+            "completed={} aborted={} rejected={} shed={} tokens={} ttft_mean={:.3}s ttft_p50={:.3}s ttft_p99={:.3}s tpot_p50={:.4}s qdelay_p90={:.3}s tps_mean={:.2} tps_p10={:.2} flash_reads={} faults={} retries={} fetch_failures={} rerouted={} dropped={} watchdog={}",
             self.completed,
             self.aborted,
             self.rejected,
+            self.shed,
             self.tokens_generated,
-            mean(&self.ttft_s),
-            percentile(&self.ttft_s, 90.0),
+            self.ttft_mean(),
+            self.ttft_percentile(50.0),
+            self.ttft_percentile(99.0),
+            self.tpot_percentile(50.0),
+            self.queue_delay_percentile(90.0),
             mean(&self.decode_tps),
             percentile(&self.decode_tps, 10.0),
             self.flash_reads,
@@ -152,6 +217,17 @@ impl ServerMetrics {
             self.watchdog_failures,
         )
     }
+}
+
+/// Predicted TTFT (seconds) for a request joining the queue now: measured
+/// per-step latency × the number of fused steps expected before its first
+/// sampled token. Under continuous batching every active session advances
+/// one token per step, so `own_prompt_tokens` steps of its own prefill
+/// plus `backlog_tokens` steps of queue-ahead prompts and slot wait is the
+/// backlog-depth estimate the SLO admission check uses. Returns 0.0 until
+/// the first step latency has been measured (warm-up never sheds).
+pub fn predict_ttft_s(step_s: f64, own_prompt_tokens: usize, backlog_tokens: usize) -> f64 {
+    step_s * (own_prompt_tokens + backlog_tokens) as f64
 }
 
 enum Msg {
@@ -321,6 +397,49 @@ struct LoopState {
     next_seq: u64,
     metrics: ServerMetrics,
     shutdown: bool,
+    /// EWMA of measured per-token step latency (s), fed by continuous
+    /// steps; the input signal of [`predict_ttft_s`]. 0.0 until measured.
+    step_ewma_s: f64,
+}
+
+/// Fused steps expected before a newly queued request's first sampled
+/// token, beyond its own prefill: prompts queued ahead of it, active
+/// sessions' unfinished prefill, and — when every slot is taken — the
+/// shortest remaining work across the cohort (the soonest slot release).
+/// Deliberately coarse: a load signal for shedding, not a simulation.
+fn backlog_tokens(st: &LoopState, max_sessions: usize) -> usize {
+    let queued: usize = st.queue.iter().map(|(r, _, _)| r.prompt.len()).sum();
+    let prefill: usize = st
+        .active
+        .iter()
+        .map(|s| s.prompt.len().saturating_sub(s.fed))
+        .sum();
+    let slot_wait = if st.active.len() >= max_sessions.max(1) {
+        st.active
+            .iter()
+            .map(|s| {
+                s.prompt.len().saturating_sub(s.fed)
+                    + s.req.max_new.saturating_sub(s.generated.len())
+            })
+            .min()
+            .unwrap_or(0)
+    } else {
+        0
+    };
+    queued + prefill + slot_wait
+}
+
+/// Fold one measured step into the per-token latency EWMA.
+fn update_step_ewma(st: &mut LoopState, wall_s: f64, tokens: usize) {
+    if tokens == 0 || wall_s <= 0.0 {
+        return;
+    }
+    let per = wall_s / tokens as f64;
+    st.step_ewma_s = if st.step_ewma_s == 0.0 {
+        per
+    } else {
+        0.8 * st.step_ewma_s + 0.2 * per
+    };
 }
 
 fn engine_loop(engine: &mut Engine, rx: &Receiver<Msg>, cfg: &ServerConfig) -> ServerMetrics {
@@ -332,6 +451,7 @@ fn engine_loop(engine: &mut Engine, rx: &Receiver<Msg>, cfg: &ServerConfig) -> S
         next_seq: 0,
         metrics: ServerMetrics::default(),
         shutdown: false,
+        step_ewma_s: 0.0,
     };
     // FCFS is the pre-session baseline: one request admitted at a time and
     // run to completion before the next starts, so queued callers wait
@@ -376,6 +496,12 @@ fn engine_loop(engine: &mut Engine, rx: &Receiver<Msg>, cfg: &ServerConfig) -> S
         }
 
         // ---- one round: every active session gets one quantum ----
+        if cfg.schedule == Schedule::Continuous {
+            // One fused step per loop iteration: every step boundary is an
+            // intake/admission boundary, so the cohort mutates mid-flight.
+            continuous_step(engine, &mut st, cfg);
+            continue;
+        }
         if cfg.schedule == Schedule::Gang {
             gang_round(engine, &mut st, quantum, chunk, cfg);
             continue;
@@ -469,6 +595,27 @@ fn enqueue(
         });
         return;
     }
+    // SLO-aware admission (continuous batching only): shed a request whose
+    // predicted TTFT is already blown rather than queue it to miss the SLO
+    // anyway. Batch submissions (`enforce_depth == false`) bypass this the
+    // same way they bypass the depth cut — reproducible whole-batch
+    // admission is their contract.
+    if enforce_depth && cfg.schedule == Schedule::Continuous {
+        if let Some(slo) = cfg.slo_ttft_s {
+            let backlog = backlog_tokens(st, cfg.max_sessions);
+            let predicted = predict_ttft_s(st.step_ewma_s, req.prompt.len(), backlog);
+            if predicted > slo {
+                st.metrics.shed += 1;
+                let _ = reply.send(Event::Failed {
+                    id: req.id,
+                    error: format!(
+                        "shed: predicted TTFT {predicted:.3}s exceeds SLO {slo:.3}s"
+                    ),
+                });
+                return;
+            }
+        }
+    }
     st.queue.push_back((req, reply, submitted));
 }
 
@@ -533,6 +680,7 @@ fn admit(
     let state = engine.new_session_state(engine.opts.seed ^ req.id);
     let seq = st.next_seq;
     st.next_seq += 1;
+    st.metrics.queue_delay_s.push(submitted.elapsed().as_secs_f64());
     let mut sess = Session::new(req, reply, state, prompt, submitted, seq);
     sess.routing = routing;
     st.active.push(sess);
@@ -846,6 +994,258 @@ fn gang_round(
     }
 }
 
+/// One continuous-batching step: every active session — prefilling or
+/// decoding alike — advances exactly one token through a single fused
+/// [`Engine::step_batch`] call, then control returns to the intake loop.
+/// Every step boundary is therefore an admission boundary: sessions join
+/// and leave the cohort mid-flight, with no gang-style drain-to-empty
+/// barrier and no round-granular bubble after a completion. Prefill
+/// tokens are piggybacked alongside decode tokens in the same fused step;
+/// a non-final prompt token's slot skips the lm_head dispatch
+/// ([`SessionSlot::need_logits`]) since nobody samples its logits.
+///
+/// A lone session takes the serial one-token quantum instead: identical
+/// math (`step_batch` is bit-identical to [`Engine::step`]), but the
+/// resident fast path skips the per-step KV re-upload — this is what pins
+/// single-session continuous output to serial fcfs in `serving_parity`.
+///
+/// Failure isolation matches the gang contract: a failed fused step made
+/// no per-session progress, so every slot's state is restored and each
+/// token is replayed serially; only the session whose retry still fails
+/// gets [`Event::Failed`], freeing its slot for the next admission.
+fn continuous_step(engine: &mut Engine, st: &mut LoopState, cfg: &ServerConfig) {
+    if st.active.len() == 1 {
+        let seq = st.active[0].seq;
+        let before = st.active[0].fed + st.active[0].generated.len();
+        let t0 = Instant::now();
+        // quantum = chunk = 1 keeps the admission boundary token-granular
+        // even on the serial path (a prefill completion still falls
+        // through to its first decode token, exactly like fcfs).
+        serial_quantum(engine, st, seq, 1, 1, cfg);
+        let tokens = st
+            .active
+            .iter()
+            .find(|s| s.seq == seq)
+            .map(|s| (s.fed + s.generated.len()).saturating_sub(before))
+            .unwrap_or(1);
+        update_step_ewma(st, t0.elapsed().as_secs_f64(), tokens.max(1));
+        return;
+    }
+
+    // The batch step works entirely on the slots, so the engine must hold
+    // no live session: swap the resident one back to its owner first.
+    if let Some(old) = st.resident.take() {
+        if let Some(s) = st.active.iter_mut().find(|s| s.seq == old) {
+            engine.swap_session(&mut s.state);
+        }
+    }
+
+    let wall_t0 = Instant::now();
+
+    // ---- build the cohort: one input token per session ----
+    // Decoding sessions sample from last step's logits first (finishers
+    // peel off before the step, freeing their slots immediately);
+    // prefilling sessions feed their next prompt token.
+    let order: Vec<u64> = st.active.iter().map(|s| s.seq).collect();
+    let mut seqs: Vec<u64> = Vec::with_capacity(order.len());
+    let mut slots: Vec<SessionSlot> = Vec::with_capacity(order.len());
+    let mut prefill_step: Vec<bool> = Vec::with_capacity(order.len());
+    let mut synthetic_routing: Vec<bool> = Vec::with_capacity(order.len());
+    let mut finished: Vec<(u64, FinishReason)> = Vec::new();
+    for &seq in &order {
+        let Some(i) = st.active.iter().position(|s| s.seq == seq) else {
+            continue;
+        };
+        let sess = &mut st.active[i];
+        let is_prefill = sess.is_prefilling();
+        let token = if is_prefill {
+            if sess.state.pos() >= engine.cfg.max_seq {
+                finished.push((seq, FinishReason::Overflow));
+                continue;
+            }
+            sess.prompt[sess.fed]
+        } else {
+            // Same finish-reason precedence as the serial quantum: length
+            // before overflow before stop.
+            if sess.generated.len() >= sess.req.max_new {
+                finished.push((seq, FinishReason::Length));
+                continue;
+            }
+            if sess.state.pos() >= engine.cfg.max_seq {
+                finished.push((seq, FinishReason::Overflow));
+                continue;
+            }
+            let next = sess.sampler.sample(&sess.logits);
+            if sess.generated.is_empty() {
+                sess.ttft_s = sess.submitted.elapsed().as_secs_f64();
+            }
+            if Some(next) == sess.req.stop_token {
+                finished.push((seq, FinishReason::Stop));
+                continue;
+            }
+            sess.generated.push(next);
+            let delivered = sess.reply.send(Event::Token {
+                id: sess.id(),
+                index: sess.generated.len() - 1,
+                token: next,
+            });
+            if delivered.is_err() {
+                finished.push((seq, FinishReason::Aborted));
+                continue;
+            }
+            next
+        };
+        let state = std::mem::replace(&mut sess.state, SessionState::new(0, 0, 0));
+        let mut slot = SessionSlot::new(state, token);
+        slot.routing = sess.routing.take();
+        // `strategy_during_prefill == false` is a global engine switch in
+        // the serial path; a mixed cohort expresses it per-slot instead:
+        // prefill slots without their own override run plain top-K.
+        let synth = is_prefill && slot.routing.is_none() && !cfg.strategy_during_prefill;
+        if synth {
+            slot.routing = Some(Box::new(OriginalPolicy));
+        }
+        slot.need_logits = !is_prefill || sess.fed + 1 == sess.prompt.len();
+        seqs.push(seq);
+        slots.push(slot);
+        prefill_step.push(is_prefill);
+        synthetic_routing.push(synth);
+    }
+    for (seq, finish) in finished {
+        remove_session(st, seq, finish);
+    }
+    if slots.is_empty() {
+        return;
+    }
+
+    // ---- one fused step for the whole cohort ----
+    engine.strategy_active = true;
+    let vtime0 = engine.tier_stats().time_s;
+    match engine.step_batch(&mut slots) {
+        Ok(plan) => {
+            let vshare = (engine.tier_stats().time_s - vtime0) / seqs.len() as f64;
+            for (i, (seq, slot)) in seqs.iter().zip(slots).enumerate() {
+                let Some(idx) = st.active.iter().position(|s| s.seq == *seq) else {
+                    continue;
+                };
+                let sess = &mut st.active[idx];
+                sess.state = slot.state;
+                if !synthetic_routing[i] {
+                    sess.routing = slot.routing;
+                }
+                if slot.need_logits {
+                    sess.logits = slot.logits;
+                }
+                sess.last_topk = sess.state.last_selections().to_vec();
+                if let Some(&(h, m)) = plan.per_slot.get(i) {
+                    sess.hits += h;
+                    sess.misses += m;
+                }
+                sess.dev_time_s += vshare;
+                sess.dev_tokens += 1;
+                if prefill_step[i] {
+                    sess.fed += 1;
+                    if sess.fed == sess.prompt.len() {
+                        sess.phase = Phase::Decode;
+                        sess.decode_t0 = Some(Instant::now());
+                    }
+                }
+            }
+        }
+        Err(_) => {
+            // Restore every slot's lent state, then replay each token
+            // serially — the failure pins on the one session that owns it.
+            let mut retry: Vec<(u64, u32, bool)> = Vec::with_capacity(seqs.len());
+            for (i, (seq, slot)) in seqs.iter().zip(slots).enumerate() {
+                if let Some(idx) = st.active.iter().position(|s| s.seq == *seq) {
+                    let sess = &mut st.active[idx];
+                    sess.state = slot.state;
+                    if !synthetic_routing[i] {
+                        sess.routing = slot.routing;
+                    }
+                }
+                retry.push((*seq, slot.token, prefill_step[i]));
+            }
+            for (seq, token, was_prefill) in retry {
+                continuous_retry_step(engine, st, seq, token, was_prefill, cfg);
+            }
+        }
+    }
+
+    // Timely completion: length-finishers resolve now, freeing their
+    // slots for admissions at the very next step boundary.
+    let done: Vec<u64> = st
+        .active
+        .iter()
+        .filter(|s| !s.is_prefilling() && s.generated.len() >= s.req.max_new)
+        .map(|s| s.seq)
+        .collect();
+    for seq in done {
+        remove_session(st, seq, FinishReason::Length);
+    }
+
+    // A fused step cannot be cut mid-dispatch; an over-limit step is
+    // counted like an over-limit gang round (no session singled out).
+    let wall = wall_t0.elapsed().as_secs_f64();
+    if let Some(limit) = cfg.quantum_deadline_s {
+        if wall > limit {
+            st.metrics.watchdog_failures += 1;
+        }
+    }
+    update_step_ewma(st, wall, seqs.len());
+}
+
+/// Replay one token for `seq` serially after a fused continuous step
+/// failed. Like [`gang_retry_step`], but also advances the prefill
+/// bookkeeping the fused step would have done (`fed`, the prefill→decode
+/// transition) and honors `strategy_during_prefill` on the serial path.
+fn continuous_retry_step(
+    engine: &mut Engine,
+    st: &mut LoopState,
+    seq: u64,
+    token: u32,
+    was_prefill: bool,
+    cfg: &ServerConfig,
+) {
+    let Some(idx) = st.active.iter().position(|s| s.seq == seq) else {
+        return;
+    };
+    make_resident(engine, &mut st.active, &mut st.resident, seq);
+    engine.strategy_active = !was_prefill || cfg.strategy_during_prefill;
+    let res = {
+        let sess = &mut st.active[idx];
+        if let Some(p) = sess.routing.as_mut() {
+            engine.swap_routing(p);
+        }
+        let r = step_counted(engine, sess, token);
+        if let Some(p) = sess.routing.as_mut() {
+            engine.swap_routing(p);
+        }
+        r
+    };
+    engine.strategy_active = true;
+    match res {
+        Ok(logits) => {
+            let sess = &mut st.active[idx];
+            if !was_prefill || sess.fed + 1 == sess.prompt.len() {
+                sess.logits = logits;
+            }
+            sess.last_topk = engine.last_selections().to_vec();
+            if was_prefill {
+                sess.fed += 1;
+                if sess.fed == sess.prompt.len() {
+                    sess.phase = Phase::Decode;
+                    sess.decode_t0 = Some(Instant::now());
+                }
+            }
+        }
+        Err(e) => {
+            count_failure_cause(&mut st.metrics, &e);
+            fail_session(st, seq, &format!("{e:#}"));
+        }
+    }
+}
+
 /// Run one quantum for `sess`: a prefill chunk, or up to `quantum` decode
 /// tokens. Returns `Some(finish)` when the request completed.
 ///
@@ -982,6 +1382,9 @@ fn finalize(sess: Session, finish: FinishReason, metrics: &mut ServerMetrics) {
         metrics.completed += 1;
         metrics.ttft_s.push(result.ttft_s);
         metrics.decode_tps.push(result.decode_tps);
+        if decode_s > 0.0 && !result.generated.is_empty() {
+            metrics.tpot_s.push(decode_s / result.generated.len() as f64);
+        }
     }
     metrics.tokens_generated += result.generated.len() as u64;
     let _ = sess.reply.send(Event::Done(result));
@@ -1018,9 +1421,12 @@ mod tests {
             completed: 2,
             aborted: 1,
             rejected: 0,
+            shed: 4,
             tokens_generated: 30,
             ttft_s: vec![0.1, 0.2],
             decode_tps: vec![10.0, 20.0],
+            tpot_s: vec![0.01, 0.02],
+            queue_delay_s: vec![0.05],
             flash_reads: 5,
             flash_bytes: 4096,
             store_faults: 3,
@@ -1034,7 +1440,12 @@ mod tests {
         assert!(s.contains("completed=2"));
         assert!(s.contains("aborted=1"));
         assert!(s.contains("rejected=0"));
+        assert!(s.contains("shed=4"));
         assert!(s.contains("tokens=30"));
+        assert!(s.contains("ttft_p50="));
+        assert!(s.contains("ttft_p99="));
+        assert!(s.contains("tpot_p50="));
+        assert!(s.contains("qdelay_p90="));
         assert!(s.contains("flash_reads=5"));
         assert!(s.contains("faults=3"));
         assert!(s.contains("retries=2"));
@@ -1042,6 +1453,76 @@ mod tests {
         assert!(s.contains("rerouted=1"));
         assert!(s.contains("dropped=0"));
         assert!(s.contains("watchdog=1"));
+    }
+
+    // The percentile/mean helpers now feed SLO claims (BENCH_slo.json and
+    // the shed predictor), so their semantics are pinned here: empty
+    // vector, single element, and p50/p90/p99 against hand-computed
+    // linear-interpolation references.
+
+    #[test]
+    fn percentile_helpers_empty_vector_is_zero() {
+        let m = ServerMetrics::default();
+        assert_eq!(m.ttft_percentile(50.0), 0.0);
+        assert_eq!(m.ttft_percentile(99.0), 0.0);
+        assert_eq!(m.ttft_mean(), 0.0);
+        assert_eq!(m.tpot_percentile(50.0), 0.0);
+        assert_eq!(m.queue_delay_percentile(90.0), 0.0);
+        assert_eq!(m.shed_rate(), 0.0);
+    }
+
+    #[test]
+    fn percentile_helpers_single_element() {
+        let m = ServerMetrics {
+            ttft_s: vec![0.25],
+            tpot_s: vec![0.03],
+            queue_delay_s: vec![1.5],
+            ..Default::default()
+        };
+        for p in [0.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(m.ttft_percentile(p), 0.25);
+        }
+        assert_eq!(m.ttft_mean(), 0.25);
+        assert_eq!(m.tpot_percentile(99.0), 0.03);
+        assert_eq!(m.queue_delay_percentile(50.0), 1.5);
+    }
+
+    #[test]
+    fn percentile_helpers_match_hand_computed_reference() {
+        // Sorted: [1, 2, 3, 4, 10]; rank r = p/100 * (n-1).
+        let m = ServerMetrics {
+            ttft_s: vec![3.0, 1.0, 10.0, 2.0, 4.0],
+            ..Default::default()
+        };
+        assert_eq!(m.ttft_percentile(50.0), 3.0); // r = 2 exactly
+        // p90: r = 3.6 → 4 + 0.6 * (10 - 4) = 7.6
+        assert!((m.ttft_percentile(90.0) - 7.6).abs() < 1e-12);
+        // p99: r = 3.96 → 4 + 0.96 * 6 = 9.76
+        assert!((m.ttft_percentile(99.0) - 9.76).abs() < 1e-12);
+        assert!((m.ttft_mean() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shed_rate_counts_offered_requests() {
+        let m = ServerMetrics {
+            completed: 6,
+            aborted: 1,
+            rejected: 1,
+            shed: 2,
+            ..Default::default()
+        };
+        assert!((m.shed_rate() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ttft_predictor_scales_with_backlog_and_warms_up_silent() {
+        // No latency measured yet → predicts 0 (warm-up never sheds).
+        assert_eq!(predict_ttft_s(0.0, 100, 1000), 0.0);
+        // 2 ms/step, 32-token prompt, 168 backlog tokens → 0.4 s.
+        assert!((predict_ttft_s(0.002, 32, 168) - 0.4).abs() < 1e-12);
+        // Monotone in both prompt length and backlog.
+        assert!(predict_ttft_s(0.002, 64, 168) > predict_ttft_s(0.002, 32, 168));
+        assert!(predict_ttft_s(0.002, 32, 500) > predict_ttft_s(0.002, 32, 168));
     }
 
     #[test]

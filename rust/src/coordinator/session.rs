@@ -25,6 +25,12 @@
 //!   of the same expert are fetched from the store once instead of once
 //!   per session (see `docs/BATCHING.md`). Falls back to the serial
 //!   quantum path whenever fewer than two sessions are decoding.
+//! * [`Schedule::Continuous`] — continuous batching: every fused step is
+//!   its own admission boundary, so sessions join and leave the cohort
+//!   mid-flight (no drain-to-empty barrier) and prefill tokens are
+//!   piggybacked alongside decode tokens in the same fused step. With an
+//!   SLO configured, admission sheds requests whose predicted TTFT
+//!   (measured per-step latency × backlog depth) is already blown.
 
 use std::sync::mpsc::Sender;
 use std::time::Instant;
@@ -96,6 +102,7 @@ pub enum Event {
 /// assert_eq!(Schedule::parse("affinity").unwrap().label(), "affinity");
 /// assert_eq!(Schedule::parse("rr").unwrap(), Schedule::RoundRobin);
 /// assert_eq!(Schedule::parse("gang").unwrap().label(), "gang");
+/// assert_eq!(Schedule::parse("continuous").unwrap(), Schedule::Continuous);
 /// assert!(Schedule::parse("sjf").is_err());
 /// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -105,6 +112,9 @@ pub enum Schedule {
     Affinity,
     /// Lockstepped fused-batch decode (`Engine::step_batch`).
     Gang,
+    /// Continuous batching: per-step admission, mid-flight join/leave,
+    /// prefill piggybacked into the fused decode step.
+    Continuous,
 }
 
 impl Schedule {
@@ -114,7 +124,10 @@ impl Schedule {
             "round-robin" | "rr" => Ok(Schedule::RoundRobin),
             "affinity" => Ok(Schedule::Affinity),
             "gang" => Ok(Schedule::Gang),
-            _ => anyhow::bail!("unknown schedule {s:?} (fcfs|round-robin|affinity|gang)"),
+            "continuous" | "cont" => Ok(Schedule::Continuous),
+            _ => anyhow::bail!(
+                "unknown schedule {s:?} (fcfs|round-robin|affinity|gang|continuous)"
+            ),
         }
     }
 
@@ -124,6 +137,7 @@ impl Schedule {
             Schedule::RoundRobin => "round-robin",
             Schedule::Affinity => "affinity",
             Schedule::Gang => "gang",
+            Schedule::Continuous => "continuous",
         }
     }
 }
@@ -255,10 +269,11 @@ pub fn round_order(
         return Vec::new();
     }
     match schedule {
-        // Gang rounds are driven whole-batch by the server (`gang_round`);
-        // when this ordering is consulted anyway (e.g. a serial fallback),
-        // admission order is the deterministic choice.
-        Schedule::Fcfs | Schedule::Gang => (0..n).collect(),
+        // Gang rounds and continuous steps are driven whole-batch by the
+        // server (`gang_round` / `continuous_step`); when this ordering is
+        // consulted anyway (e.g. a serial fallback), admission order is the
+        // deterministic choice.
+        Schedule::Fcfs | Schedule::Gang | Schedule::Continuous => (0..n).collect(),
         Schedule::RoundRobin => (0..n).map(|i| (i + rr_cursor) % n).collect(),
         Schedule::Affinity => {
             let mut order: Vec<usize> = (0..n).collect();
@@ -321,10 +336,11 @@ mod tests {
 
     #[test]
     fn schedule_parse_roundtrip() {
-        for s in ["fcfs", "round-robin", "affinity", "gang"] {
+        for s in ["fcfs", "round-robin", "affinity", "gang", "continuous"] {
             assert_eq!(Schedule::parse(s).unwrap().label(), s);
         }
         assert_eq!(Schedule::parse("rr").unwrap(), Schedule::RoundRobin);
+        assert_eq!(Schedule::parse("cont").unwrap(), Schedule::Continuous);
         assert!(Schedule::parse("sjf").is_err());
     }
 

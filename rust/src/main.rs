@@ -32,14 +32,26 @@ COMMANDS:
   info                              artifact + model inventory
   serve      --model M [--cache C --strategy S --policy P --prompts N
                         --max-new T --max-sessions S --quantum Q
-                        --schedule fcfs|round-robin|affinity|gang
+                        --schedule fcfs|round-robin|affinity|gang|continuous
                                             (gang = lockstepped fused-batch
                                             decode: distinct experts fetched
-                                            once per round across sessions)
+                                            once per round across sessions;
+                                            continuous = per-step admission,
+                                            prefill piggybacked in the fused
+                                            step, slots freed mid-flight)
                         --prefill-chunk P --stream
                         --quantum-deadline S  wall-clock watchdog per quantum
                                             (0 = off): a stuck session fails
                                             instead of starving the round
+                        --slo-ttft S        shed admission when predicted
+                                            TTFT exceeds S seconds
+                                            (continuous only, 0 = off; only
+                                            open-loop submissions shed)
+                        --arrival-rate R    open-loop load: submit requests
+                                            at seeded Poisson arrivals of R
+                                            req/s instead of one atomic
+                                            batch (0 = closed loop)
+                        --arrival-seed N    Poisson arrival seed (default 42)
                         --strategies S1,S2  per-request routing overrides,
                                             assigned cyclically]
   eval-ppl   --model M [--cache C --strategy S --policy P --chunks N --chunk-len L]
@@ -168,6 +180,10 @@ fn serve(args: &Args) -> Result<()> {
             x if x > 0.0 => Some(x),
             _ => None,
         },
+        slo_ttft_s: match args.f64_or("slo-ttft", 0.0)? {
+            x if x > 0.0 => Some(x),
+            _ => None,
+        },
         ..ServerConfig::default()
     };
     let stream = args.bool("stream");
@@ -197,8 +213,6 @@ fn serve(args: &Args) -> Result<()> {
         moe_cache::policy::parse_routing(spec)
             .with_context(|| format!("--strategies entry {spec:?}"))?;
     }
-    // All requests enter the queue together so the scheduler — not
-    // submission timing — decides the interleaving.
     let reqs: Vec<Request> = data
         .prompts_short
         .iter()
@@ -219,13 +233,32 @@ fn serve(args: &Args) -> Result<()> {
         })
         .collect();
     let prompt_lens: Vec<usize> = reqs.iter().map(|r| r.prompt.len()).collect();
-    // One atomic batch on one shared event channel: the batch pins the
-    // admission order (the schedule — not submission timing — decides the
-    // interleaving, reproducibly), and tokens print in the engine's true
-    // emission order, making that interleaving visible.
+    // Closed loop (default): one atomic batch on one shared event channel
+    // — the batch pins the admission order (the schedule, not submission
+    // timing, decides the interleaving, reproducibly), and tokens print in
+    // the engine's true emission order, making that interleaving visible.
+    // Open loop (--arrival-rate R): requests are submitted one at a time
+    // at seeded Poisson instants, so TTFT includes real queue delay and
+    // SLO-aware admission (--slo-ttft, continuous only) can shed.
+    let arrival_rate = args.f64_or("arrival-rate", 0.0)?;
     let (tx, rx) = std::sync::mpsc::channel();
     let n_submitted = reqs.len();
-    coord.submit_batch_with(reqs, tx)?;
+    if arrival_rate > 0.0 {
+        let seed = args.usize_or("arrival-seed", 42)? as u64;
+        let arrivals =
+            moe_cache::tracesim::serving::poisson_arrivals(n_submitted, arrival_rate, seed);
+        println!("open-loop arrivals: {arrival_rate} req/s, seed {seed}");
+        let t0 = std::time::Instant::now();
+        for (req, at) in reqs.into_iter().zip(arrivals) {
+            let wait = at - t0.elapsed().as_secs_f64();
+            if wait > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+            }
+            coord.submit_with(req, tx.clone())?;
+        }
+    } else {
+        coord.submit_batch_with(reqs, tx)?;
+    }
     let mut results: Vec<Option<moe_cache::coordinator::RequestResult>> =
         vec![None; n_submitted];
     let mut done = 0usize;

@@ -703,6 +703,32 @@ mod tests {
     }
 
     #[test]
+    fn variable_cohort_resizes_overflow_across_steps() {
+        // Continuous batching resizes the cohort every fused step, so the
+        // engine calls ensure_overflow(b * top_k) with a different b each
+        // time. The tail must grow monotonically and stay addressable
+        // through repeated plan/finish cycles as the cohort churns.
+        let mut a = LayerArena::new(DF, FD, 1, 1);
+        let mut peak = 1usize;
+        for (step, b) in [1usize, 3, 2, 4, 1].into_iter().enumerate() {
+            a.ensure_overflow(b);
+            peak = peak.max(b);
+            // b transient misses, none retained: all divert to overflow.
+            let missed: Vec<u32> = (0..b as u32).map(|e| 100 + step as u32 * 10 + e).collect();
+            let plan = a.plan_misses(&missed, &[], &[], &missed).unwrap();
+            assert_eq!(plan.len(), b);
+            assert!(plan.iter().all(|m| m.slot >= 1 && m.slot < 1 + peak));
+            for m in &plan {
+                fill(&mut a, m.slot, m.expert);
+            }
+            a.finish_step();
+            // Transients drop after the step; nothing leaks into later,
+            // smaller cohorts.
+            assert!(missed.iter().all(|&e| a.slot_of(e).is_none()));
+        }
+    }
+
+    #[test]
     fn slot_views_mut_returns_disjoint_views_in_request_order() {
         let mut a = LayerArena::new(DF, FD, 3, 1);
         {

@@ -434,11 +434,17 @@ pub struct SessionSlot {
     pub routing: Option<Box<dyn RoutingPolicy>>,
     /// Next-token logits, filled by [`Engine::step_batch`].
     pub logits: Vec<f32>,
+    /// Whether this slot needs the lm_head dispatch. Continuous batching
+    /// piggybacks prefill tokens into the fused step; a non-final prompt
+    /// token's logits are never sampled, so its slot skips the head (KV
+    /// state and routing still advance exactly as in a serial prefill
+    /// step — the trunk math is identical). Defaults to `true`.
+    pub need_logits: bool,
 }
 
 impl SessionSlot {
     pub fn new(state: SessionState, token: u32) -> Self {
-        SessionSlot { state, token, routing: None, logits: Vec::new() }
+        SessionSlot { state, token, routing: None, logits: Vec::new(), need_logits: true }
     }
 }
 
@@ -472,6 +478,10 @@ pub struct BatchPlan {
     /// per-session attribution the coordinator reports (the shared cache's
     /// own stats charge per *distinct* expert instead).
     pub per_slot: Vec<(u64, u64)>,
+    /// Slots that skipped the lm_head dispatch
+    /// ([`SessionSlot::need_logits`] == false): piggybacked prefill tokens
+    /// in a mixed prefill+decode cohort.
+    pub heads_skipped: u32,
     /// Aggregate per-stage stats (also left in [`Engine::last_step`]).
     pub stats: StepStats,
 }
@@ -1189,6 +1199,7 @@ impl Engine {
             fetches: 0,
             token_misses: 0,
             per_slot: vec![(0u64, 0u64); b],
+            heads_skipped: 0,
             stats: StepStats::default(),
         };
         let mut stats = StepStats::default();
@@ -1508,15 +1519,21 @@ impl Engine {
             });
         }
 
-        // ---- head per slot ----
+        // ---- head per slot (skipped for piggybacked prefill slots whose
+        // logits nobody samples) ----
         for (i, slot) in slots.iter_mut().enumerate() {
-            let t0 = Instant::now();
-            let h_buf = self.rt.buf_f32(&hs[i], &[1, d])?;
-            let outs = self
-                .rt
-                .run("lm_head", &[&h_buf, &self.statics.lnf, &self.statics.head])?;
-            slot.logits = Runtime::lit_f32(&outs[0])?;
-            stats.t_compute_s += t0.elapsed().as_secs_f64();
+            if slot.need_logits {
+                let t0 = Instant::now();
+                let h_buf = self.rt.buf_f32(&hs[i], &[1, d])?;
+                let outs = self
+                    .rt
+                    .run("lm_head", &[&h_buf, &self.statics.lnf, &self.statics.head])?;
+                slot.logits = Runtime::lit_f32(&outs[0])?;
+                stats.t_compute_s += t0.elapsed().as_secs_f64();
+            } else {
+                slot.logits.clear();
+                plan.heads_skipped += 1;
+            }
             slot.state.pos += 1;
         }
 

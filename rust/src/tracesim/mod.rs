@@ -13,8 +13,16 @@
 //! `fault:` store: seeded per-miss fetch failures degraded with the same
 //! reroute-to-resident-else-drop ladder, so ladder behaviour can be
 //! studied across policies without running the model.
+//!
+//! [`serving`] replays *open-loop* multi-request workloads (seeded Poisson
+//! or explicit arrival traces) under the gang and continuous schedules on
+//! the same virtual clock, producing deterministic TTFT / queue-delay /
+//! shed metrics — the reproducible counterpart of the coordinator's
+//! wall-clock SLO accounting.
 
 #![warn(clippy::unwrap_used)]
+
+pub mod serving;
 
 use std::path::Path;
 

@@ -1,0 +1,679 @@
+//! Open-loop serving replay on the virtual device clock.
+//!
+//! The coordinator's wall-clock metrics can never be bit-identical across
+//! runs, so SLO behaviour — TTFT percentiles, queue delay, shed decisions —
+//! is pinned here instead, where time is the deterministic
+//! [`crate::flash::FlashSim`] clock. Requests arrive on an *open-loop*
+//! schedule (seeded Poisson or an explicit trace of arrival instants), not
+//! submit-everything-then-drain: arrival instants are fixed in advance, so
+//! a slow server builds a queue instead of slowing the workload down.
+//!
+//! Two schedules mirror the coordinator:
+//!
+//! - [`SimSchedule::Gang`]: rounds. Admission only at round boundaries;
+//!   prefill runs serially in per-session chunks; the sessions that were
+//!   decoding at round start lockstep through a fused decode quantum
+//!   charging each distinct expert once per step (the accounting of
+//!   [`super::simulate_gang`]). A session finishing mid-round holds its
+//!   slot until the round ends.
+//! - [`SimSchedule::Continuous`]: every fused step is an admission
+//!   boundary. Prefill and decode tokens share the step, the distinct
+//!   union spans *all* phases, and a completed session frees its slot for
+//!   the next queued request one step later.
+//!
+//! Shed decisions (continuous only, like the coordinator) reuse
+//! [`crate::coordinator::predict_ttft_s`] with an EWMA of per-token
+//! virtual time and the same backlog model: queued prompt tokens, active
+//! prefill remainders, and the minimum remaining work across slots when
+//! the cohort is full. The EWMA starts cold, so the first request is
+//! never shed.
+
+use std::collections::VecDeque;
+
+use crate::cache::ExpertCache;
+use crate::config::DeviceProfile;
+use crate::flash::FlashSim;
+use crate::policy::EvictionFactory;
+use crate::store::TierStats;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+use super::Trace;
+
+/// One offered request: an arrival instant on the open-loop axis plus the
+/// routing trace that drives its cache behaviour. The first
+/// `prompt_tokens` entries of the trace are prefill, the rest decode.
+#[derive(Debug, Clone)]
+pub struct RequestSpec {
+    /// Arrival instant (virtual seconds from replay start).
+    pub arrival_s: f64,
+    /// Leading trace tokens that count as prefill (TTFT is recorded when
+    /// the last of these has been processed).
+    pub prompt_tokens: usize,
+    /// Per-token, per-layer expert selections for prefill + decode.
+    pub trace: Trace,
+}
+
+impl RequestSpec {
+    /// Trace tokens after the prompt — the generated stream.
+    pub fn decode_tokens(&self) -> usize {
+        self.trace.tokens().saturating_sub(self.prompt_tokens)
+    }
+}
+
+/// Seeded Poisson arrival instants: `n` cumulative sums of Exp(rate) gaps.
+/// Deterministic for a fixed `(n, rate_per_s, seed)` triple.
+///
+/// ```
+/// let a = moe_cache::tracesim::serving::poisson_arrivals(16, 4.0, 7);
+/// let b = moe_cache::tracesim::serving::poisson_arrivals(16, 4.0, 7);
+/// assert_eq!(a, b);
+/// assert!(a.windows(2).all(|w| w[0] <= w[1]));
+/// ```
+pub fn poisson_arrivals(n: usize, rate_per_s: f64, seed: u64) -> Vec<f64> {
+    assert!(rate_per_s > 0.0, "arrival rate must be positive");
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        // Inverse-CDF exponential gap; rng.f64() < 1.0 so the log is finite.
+        t += -(1.0 - rng.f64()).ln() / rate_per_s;
+        out.push(t);
+    }
+    out
+}
+
+/// Shape of a synthetic open-loop workload (see [`synthetic_workload`]).
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub n_requests: usize,
+    /// Poisson arrival rate (requests per virtual second).
+    pub rate_per_s: f64,
+    pub seed: u64,
+    pub n_layers: usize,
+    pub n_experts: usize,
+    /// Experts selected per token per layer.
+    pub top_k: usize,
+    pub prompt_tokens: usize,
+    pub decode_tokens: usize,
+}
+
+/// Build a seeded synthetic workload: Poisson arrivals plus uniform-random
+/// top-k routing traces. The trace stream depends only on `(seed, shape)`,
+/// never on `rate_per_s`, so sweeping the arrival rate replays the *same*
+/// requests faster or slower — the fixture the shed-monotonicity property
+/// needs.
+pub fn synthetic_workload(spec: &WorkloadSpec) -> Vec<RequestSpec> {
+    let arrivals = poisson_arrivals(spec.n_requests, spec.rate_per_s, spec.seed ^ 0x00a4_41a1);
+    let mut rng = Rng::new(spec.seed);
+    let mut out = Vec::with_capacity(spec.n_requests);
+    for arrival_s in arrivals {
+        let mut trace = Trace::new(spec.n_experts, spec.n_layers);
+        for _ in 0..spec.prompt_tokens + spec.decode_tokens {
+            let mut per_layer = Vec::with_capacity(spec.n_layers);
+            for _ in 0..spec.n_layers {
+                let mut ids: Vec<u32> = (0..spec.n_experts as u32).collect();
+                rng.shuffle(&mut ids);
+                ids.truncate(spec.top_k);
+                per_layer.push(ids);
+            }
+            trace.push_token(per_layer, None);
+        }
+        out.push(RequestSpec { arrival_s, prompt_tokens: spec.prompt_tokens, trace });
+    }
+    out
+}
+
+/// Which serving schedule the replay models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimSchedule {
+    /// Round-based gang: serial prefill chunks, lockstep decode quantum,
+    /// admission only between rounds.
+    Gang { quantum: usize, chunk: usize },
+    /// Continuous batching: per-step admission, prefill piggybacked in the
+    /// fused step, per-step slot release.
+    Continuous,
+}
+
+/// Knobs of one serving replay.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    pub schedule: SimSchedule,
+    /// Cohort slots (the coordinator's `max_sessions`).
+    pub max_sessions: usize,
+    /// Expert cache capacity per layer.
+    pub capacity: usize,
+    /// Bytes moved per expert miss/hit.
+    pub bytes_per_expert: u64,
+    /// Shed admission when predicted TTFT exceeds this (continuous only;
+    /// `None` admits everything).
+    pub slo_ttft_s: Option<f64>,
+}
+
+/// Metrics of one open-loop replay. All vectors are in deterministic
+/// recording order, so two runs of the same seeded workload compare with
+/// `==`.
+#[derive(Debug, Clone, Default)]
+pub struct ServingSimResult {
+    /// Per-request TTFT, recorded the instant prefill completes.
+    pub ttft_s: Vec<f64>,
+    /// Arrival-to-admission wait per admitted request.
+    pub queue_delay_s: Vec<f64>,
+    /// Time per output token: (finish - first token) / decode tokens, for
+    /// completed requests with at least one decode token.
+    pub tpot_s: Vec<f64>,
+    /// Indices (into the request slice) of requests shed at arrival.
+    pub shed: Vec<usize>,
+    pub completed: u64,
+    /// Virtual instant the last request finished (includes idle gaps
+    /// waiting for arrivals).
+    pub makespan_s: f64,
+    /// Device-busy virtual time (the FlashSim clock alone).
+    pub busy_s: f64,
+    /// Flash/DRAM byte and timing counters of the shared device.
+    pub tier: TierStats,
+}
+
+impl ServingSimResult {
+    pub fn ttft_percentile(&self, p: f64) -> f64 {
+        stats::percentile(&self.ttft_s, p)
+    }
+
+    pub fn tpot_percentile(&self, p: f64) -> f64 {
+        stats::percentile(&self.tpot_s, p)
+    }
+
+    pub fn queue_delay_percentile(&self, p: f64) -> f64 {
+        stats::percentile(&self.queue_delay_s, p)
+    }
+
+    /// Shed requests over offered requests (0.0 when nothing was offered).
+    pub fn shed_rate(&self) -> f64 {
+        let offered = self.completed as usize + self.shed.len();
+        if offered == 0 {
+            0.0
+        } else {
+            self.shed.len() as f64 / offered as f64
+        }
+    }
+}
+
+/// A request occupying a cohort slot.
+struct LiveSession {
+    req: usize,
+    /// Trace tokens processed (prefill + decode unified).
+    fed: usize,
+    /// Set the instant `fed` reaches the prompt length.
+    ttft_s: f64,
+    /// Set the instant `fed` reaches the trace length.
+    finish_s: f64,
+}
+
+/// Record the token `s` just consumed: TTFT at prefill completion, finish
+/// instant at trace exhaustion.
+fn note_progress(s: &mut LiveSession, r: &RequestSpec, now_s: f64, ttft_out: &mut Vec<f64>) {
+    s.fed += 1;
+    if s.fed == r.prompt_tokens {
+        s.ttft_s = now_s - r.arrival_s;
+        ttft_out.push(s.ttft_s);
+    }
+    if s.fed == r.trace.tokens() {
+        s.finish_s = now_s;
+    }
+}
+
+/// Backlog ahead of a new arrival, in tokens — the sim-side twin of the
+/// coordinator's admission model: queued prompts, active prefill
+/// remainders, plus the shortest remaining stream when no slot is free.
+fn backlog_tokens(
+    reqs: &[RequestSpec],
+    queue: &VecDeque<usize>,
+    active: &[LiveSession],
+    max_sessions: usize,
+) -> usize {
+    let queued: usize = queue.iter().map(|&i| reqs[i].prompt_tokens).sum();
+    let prefill: usize =
+        active.iter().map(|s| reqs[s.req].prompt_tokens.saturating_sub(s.fed)).sum();
+    let slot_wait = if active.len() >= max_sessions {
+        active.iter().map(|s| reqs[s.req].trace.tokens() - s.fed).min().unwrap_or(0)
+    } else {
+        0
+    };
+    queued + prefill + slot_wait
+}
+
+fn blend_ewma(ewma: f64, sample: f64) -> f64 {
+    if sample <= 0.0 {
+        ewma
+    } else if ewma == 0.0 {
+        sample
+    } else {
+        0.8 * ewma + 0.2 * sample
+    }
+}
+
+/// Replay an open-loop workload under one schedule. Requests must be
+/// sorted by arrival instant; traces must share one shape. Clairvoyant
+/// eviction is rejected for the same reason as [`super::simulate_gang`].
+pub fn simulate_serving(
+    reqs: &[RequestSpec],
+    factory: &EvictionFactory,
+    profile: DeviceProfile,
+    cfg: &ServingConfig,
+) -> anyhow::Result<ServingSimResult> {
+    anyhow::ensure!(!reqs.is_empty(), "serving replay needs at least one request");
+    anyhow::ensure!(cfg.max_sessions >= 1, "serving replay needs max_sessions >= 1");
+    if let SimSchedule::Gang { quantum, chunk } = cfg.schedule {
+        anyhow::ensure!(quantum >= 1 && chunk >= 1, "gang quantum and chunk must be >= 1");
+    }
+    let (n_layers, n_experts) = (reqs[0].trace.n_layers, reqs[0].trace.n_experts);
+    let mut prev_arrival = 0.0f64;
+    for (i, r) in reqs.iter().enumerate() {
+        anyhow::ensure!(
+            r.trace.n_layers == n_layers && r.trace.n_experts == n_experts,
+            "request {i}: trace shape mismatch ({}x{} vs {n_layers}x{n_experts})",
+            r.trace.n_layers,
+            r.trace.n_experts
+        );
+        anyhow::ensure!(
+            r.prompt_tokens >= 1 && r.prompt_tokens <= r.trace.tokens(),
+            "request {i}: prompt must cover 1..=trace tokens ({} of {})",
+            r.prompt_tokens,
+            r.trace.tokens()
+        );
+        anyhow::ensure!(
+            r.arrival_s >= prev_arrival,
+            "request {i}: arrivals must be sorted ({} after {prev_arrival})",
+            r.arrival_s
+        );
+        prev_arrival = r.arrival_s;
+    }
+    anyhow::ensure!(
+        !factory.for_layer(0).needs_oracle(),
+        "serving replay does not support clairvoyant eviction ({:?}): next-use is \
+         ambiguous across interleaved requests",
+        factory.label()
+    );
+
+    let mut caches: Vec<ExpertCache> = (0..n_layers)
+        .map(|l| ExpertCache::with_policy(cfg.capacity, factory.for_layer(l)))
+        .collect();
+    let mut sim = FlashSim::new(profile);
+    let mut in_union = vec![false; n_experts];
+    // Wall time = device-busy time + idle gaps spent waiting for arrivals.
+    let mut idle_s = 0.0f64;
+    let mut next_arrival = 0usize;
+    let mut queue: VecDeque<usize> = VecDeque::new();
+    let mut active: Vec<LiveSession> = Vec::new();
+    // Cache timestamp: trace tokens processed so far across all sessions.
+    let mut step_clock = 0u64;
+    let mut step_ewma_s = 0.0f64;
+    let mut out = ServingSimResult::default();
+
+    loop {
+        let now_s = idle_s + sim.stats().time_s;
+        // Intake: open-loop arrivals due at the current instant. Shed
+        // decisions are made here, at arrival, from predicted TTFT.
+        while next_arrival < reqs.len() && reqs[next_arrival].arrival_s <= now_s {
+            let i = next_arrival;
+            next_arrival += 1;
+            let mut shed = false;
+            if cfg.schedule == SimSchedule::Continuous {
+                if let Some(slo) = cfg.slo_ttft_s {
+                    let backlog = backlog_tokens(reqs, &queue, &active, cfg.max_sessions);
+                    let predicted = crate::coordinator::predict_ttft_s(
+                        step_ewma_s,
+                        reqs[i].prompt_tokens,
+                        backlog,
+                    );
+                    // A cold EWMA predicts 0.0 — never shed before the
+                    // first measurement, same as the coordinator.
+                    if predicted > slo {
+                        out.shed.push(i);
+                        shed = true;
+                    }
+                }
+            }
+            if !shed {
+                queue.push_back(i);
+            }
+        }
+        // Admission: fill free slots in arrival order.
+        while active.len() < cfg.max_sessions {
+            let Some(i) = queue.pop_front() else { break };
+            out.queue_delay_s.push(now_s - reqs[i].arrival_s);
+            active.push(LiveSession { req: i, fed: 0, ttft_s: f64::NAN, finish_s: f64::NAN });
+        }
+        if active.is_empty() {
+            if next_arrival >= reqs.len() {
+                break;
+            }
+            // Idle until the next arrival: wall time passes, the device
+            // clock does not. The arrival is strictly in the future or the
+            // intake loop above would have taken it.
+            idle_s += reqs[next_arrival].arrival_s - now_s;
+            continue;
+        }
+
+        match cfg.schedule {
+            SimSchedule::Continuous => {
+                // One fused step: every active session advances one token;
+                // each layer charges the distinct union across *all*
+                // phases once (prefill piggybacks on the decoders' fetch).
+                let t0 = sim.stats().time_s;
+                let batch = active.len();
+                for (l, cache) in caches.iter_mut().enumerate() {
+                    let mut distinct: Vec<u32> = Vec::new();
+                    let mut step_tokens = 0u64;
+                    for s in &active {
+                        for &e in &reqs[s.req].trace.selections[s.fed][l] {
+                            step_tokens += 1;
+                            if !in_union[e as usize] {
+                                in_union[e as usize] = true;
+                                distinct.push(e);
+                            }
+                        }
+                    }
+                    for &e in &distinct {
+                        in_union[e as usize] = false;
+                    }
+                    if !distinct.is_empty() {
+                        let acc = cache.access_batch(&distinct, step_tokens, step_clock);
+                        for _ in &acc.missed {
+                            sim.read_flash(cfg.bytes_per_expert);
+                        }
+                        sim.read_dram(u64::from(acc.hits) * cfg.bytes_per_expert);
+                    }
+                }
+                for _ in 0..batch {
+                    sim.end_token(0);
+                }
+                step_clock += batch as u64;
+                step_ewma_s =
+                    blend_ewma(step_ewma_s, (sim.stats().time_s - t0) / batch as f64);
+                let now_after = idle_s + sim.stats().time_s;
+                for s in &mut active {
+                    note_progress(s, &reqs[s.req], now_after, &mut out.ttft_s);
+                }
+            }
+            SimSchedule::Gang { quantum, chunk } => {
+                // Round: serial prefill chunks, then the sessions that were
+                // decoding at round start lockstep through the quantum.
+                let was_decoding: Vec<bool> =
+                    active.iter().map(|s| s.fed >= reqs[s.req].prompt_tokens).collect();
+                for (i, s) in active.iter_mut().enumerate() {
+                    if was_decoding[i] {
+                        continue;
+                    }
+                    let r = &reqs[s.req];
+                    let end = r.prompt_tokens.min(s.fed + chunk);
+                    while s.fed < end {
+                        for (l, cache) in caches.iter_mut().enumerate() {
+                            let acc =
+                                cache.access(&r.trace.selections[s.fed][l], step_clock, None);
+                            for _ in &acc.missed {
+                                sim.read_flash(cfg.bytes_per_expert);
+                            }
+                            sim.read_dram(u64::from(acc.hits) * cfg.bytes_per_expert);
+                        }
+                        sim.end_token(0);
+                        step_clock += 1;
+                        note_progress(s, r, idle_s + sim.stats().time_s, &mut out.ttft_s);
+                    }
+                }
+                for _ in 0..quantum {
+                    let live: Vec<usize> = (0..active.len())
+                        .filter(|&i| {
+                            was_decoding[i]
+                                && active[i].fed < reqs[active[i].req].trace.tokens()
+                        })
+                        .collect();
+                    if live.is_empty() {
+                        break;
+                    }
+                    for (l, cache) in caches.iter_mut().enumerate() {
+                        let mut distinct: Vec<u32> = Vec::new();
+                        let mut step_tokens = 0u64;
+                        for &i in &live {
+                            let s = &active[i];
+                            for &e in &reqs[s.req].trace.selections[s.fed][l] {
+                                step_tokens += 1;
+                                if !in_union[e as usize] {
+                                    in_union[e as usize] = true;
+                                    distinct.push(e);
+                                }
+                            }
+                        }
+                        for &e in &distinct {
+                            in_union[e as usize] = false;
+                        }
+                        if !distinct.is_empty() {
+                            let acc = cache.access_batch(&distinct, step_tokens, step_clock);
+                            for _ in &acc.missed {
+                                sim.read_flash(cfg.bytes_per_expert);
+                            }
+                            sim.read_dram(u64::from(acc.hits) * cfg.bytes_per_expert);
+                        }
+                    }
+                    for _ in 0..live.len() {
+                        sim.end_token(0);
+                    }
+                    step_clock += live.len() as u64;
+                    let now_after = idle_s + sim.stats().time_s;
+                    for &i in &live {
+                        let req = active[i].req;
+                        note_progress(&mut active[i], &reqs[req], now_after, &mut out.ttft_s);
+                    }
+                }
+            }
+        }
+
+        // Completion sweep: finished sessions free their slots (continuous
+        // re-admits next step; gang only at the next round boundary, which
+        // is also the next loop iteration here — the slot-holding penalty
+        // gang pays is the round *length*, charged above).
+        let mut still = Vec::with_capacity(active.len());
+        for s in active.drain(..) {
+            let r = &reqs[s.req];
+            if s.fed >= r.trace.tokens() {
+                out.completed += 1;
+                let decode = r.decode_tokens();
+                if decode > 0 {
+                    out.tpot_s.push((s.finish_s - (r.arrival_s + s.ttft_s)) / decode as f64);
+                }
+            } else {
+                still.push(s);
+            }
+        }
+        active = still;
+    }
+
+    out.busy_s = sim.stats().time_s;
+    out.makespan_s = idle_s + sim.stats().time_s;
+    out.tier = sim.stats().clone();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used)]
+
+    use super::*;
+    use crate::cache::Policy;
+
+    fn lru() -> EvictionFactory {
+        EvictionFactory::from_policy(Policy::Lru)
+    }
+
+    fn cfg(schedule: SimSchedule, slo: Option<f64>) -> ServingConfig {
+        ServingConfig {
+            schedule,
+            max_sessions: 3,
+            capacity: 8,
+            bytes_per_expert: 4096,
+            slo_ttft_s: slo,
+        }
+    }
+
+    fn workload(rate: f64) -> Vec<RequestSpec> {
+        synthetic_workload(&WorkloadSpec {
+            n_requests: 24,
+            rate_per_s: rate,
+            seed: 11,
+            n_layers: 2,
+            n_experts: 16,
+            top_k: 2,
+            prompt_tokens: 4,
+            decode_tokens: 4,
+        })
+    }
+
+    #[test]
+    fn poisson_gaps_scale_with_rate() {
+        let slow = poisson_arrivals(200, 1.0, 3);
+        let fast = poisson_arrivals(200, 100.0, 3);
+        assert!(slow.windows(2).all(|w| w[0] <= w[1]));
+        // Same seed: identical gap shape, 100x compressed.
+        assert!((slow[199] / fast[199] - 100.0).abs() < 1e-6);
+        // Mean gap within loose bounds of 1/rate.
+        let mean = slow[199] / 200.0;
+        assert!(mean > 0.5 && mean < 2.0, "mean gap {mean}");
+    }
+
+    #[test]
+    fn rate_sweep_replays_identical_traces() {
+        let a = workload(5.0);
+        let b = workload(500.0);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.trace.selections, y.trace.selections);
+        }
+        assert!(a[23].arrival_s > b[23].arrival_s);
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let reqs = workload(50.0);
+        for schedule in
+            [SimSchedule::Continuous, SimSchedule::Gang { quantum: 4, chunk: 4 }]
+        {
+            let c = cfg(schedule, Some(0.05));
+            let a =
+                simulate_serving(&reqs, &lru(), DeviceProfile::device_16gb(), &c).unwrap();
+            let b =
+                simulate_serving(&reqs, &lru(), DeviceProfile::device_16gb(), &c).unwrap();
+            assert_eq!(a.ttft_s, b.ttft_s);
+            assert_eq!(a.queue_delay_s, b.queue_delay_s);
+            assert_eq!(a.tpot_s, b.tpot_s);
+            assert_eq!(a.shed, b.shed);
+            assert_eq!(a.tier.flash_reads, b.tier.flash_reads);
+            assert_eq!(a.makespan_s, b.makespan_s);
+        }
+    }
+
+    #[test]
+    fn lone_request_identical_under_both_schedules() {
+        // With one request the continuous fused step degenerates to the
+        // serial token and the gang round to serial prefill + solo decode:
+        // the charge sequences are identical operation-for-operation.
+        let mut reqs = workload(1.0);
+        reqs.truncate(1);
+        let cont = simulate_serving(
+            &reqs,
+            &lru(),
+            DeviceProfile::device_16gb(),
+            &cfg(SimSchedule::Continuous, None),
+        )
+        .unwrap();
+        let gang = simulate_serving(
+            &reqs,
+            &lru(),
+            DeviceProfile::device_16gb(),
+            &cfg(SimSchedule::Gang { quantum: 4, chunk: 4 }, None),
+        )
+        .unwrap();
+        assert_eq!(cont.ttft_s, gang.ttft_s);
+        assert_eq!(cont.tpot_s, gang.tpot_s);
+        assert_eq!(cont.tier.flash_reads, gang.tier.flash_reads);
+        assert_eq!(cont.tier.time_s, gang.tier.time_s);
+        assert_eq!(cont.completed, 1);
+    }
+
+    #[test]
+    fn every_request_completes_without_slo() {
+        for rate in [5.0, 500.0] {
+            let reqs = workload(rate);
+            for schedule in
+                [SimSchedule::Continuous, SimSchedule::Gang { quantum: 4, chunk: 4 }]
+            {
+                let r = simulate_serving(
+                    &reqs,
+                    &lru(),
+                    DeviceProfile::device_16gb(),
+                    &cfg(schedule, None),
+                )
+                .unwrap();
+                assert_eq!(r.completed, 24);
+                assert!(r.shed.is_empty());
+                assert_eq!(r.ttft_s.len(), 24);
+                assert_eq!(r.tpot_s.len(), 24);
+                assert_eq!(r.queue_delay_s.len(), 24);
+                assert!(r.makespan_s >= r.busy_s);
+            }
+        }
+    }
+
+    #[test]
+    fn gang_never_sheds_even_under_tight_slo() {
+        let reqs = workload(500.0);
+        let r = simulate_serving(
+            &reqs,
+            &lru(),
+            DeviceProfile::device_16gb(),
+            &cfg(SimSchedule::Gang { quantum: 4, chunk: 4 }, Some(1e-6)),
+        )
+        .unwrap();
+        assert!(r.shed.is_empty());
+        assert_eq!(r.completed, 24);
+    }
+
+    #[test]
+    fn first_request_never_shed_cold_ewma() {
+        let reqs = workload(100_000.0); // everything arrives ~instantly
+        let r = simulate_serving(
+            &reqs,
+            &lru(),
+            DeviceProfile::device_16gb(),
+            &cfg(SimSchedule::Continuous, Some(1e-9)),
+        )
+        .unwrap();
+        assert!(!r.shed.contains(&0), "cold EWMA must admit the first request");
+        assert!(!r.shed.is_empty(), "a 1ns SLO must shed once warmed");
+    }
+
+    #[test]
+    fn rejects_mismatched_shapes_and_bad_prompts() {
+        let mut reqs = workload(10.0);
+        reqs[1].trace.n_layers = 7;
+        let err = simulate_serving(
+            &reqs,
+            &lru(),
+            DeviceProfile::device_16gb(),
+            &cfg(SimSchedule::Continuous, None),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("shape mismatch"), "{err}");
+
+        let mut reqs = workload(10.0);
+        reqs[2].prompt_tokens = 99;
+        let err = simulate_serving(
+            &reqs,
+            &lru(),
+            DeviceProfile::device_16gb(),
+            &cfg(SimSchedule::Continuous, None),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("prompt must cover"), "{err}");
+    }
+}

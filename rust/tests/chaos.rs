@@ -5,8 +5,8 @@
 //! to their inner store, injection is typed and seed-deterministic, and
 //! every injected fault is visible in the accounting. Coordinator soaks
 //! (gated on the generated artifacts) push real sessions through a faulty
-//! store under the fcfs and gang schedules and check the degradation
-//! ladder's end-to-end invariants: every session terminates, nothing
+//! store under the fcfs, gang, and continuous schedules and check the
+//! degradation ladder's end-to-end invariants: every session terminates, nothing
 //! panics, counters reconcile with the injected faults, and a fixed seed
 //! replays the exact same outcome.
 
@@ -306,6 +306,25 @@ fn gang_soak_terminates_every_session_and_reconciles_faults() {
     assert!(o.rerouted + o.dropped <= o.fetch_failures, "{o:?}");
 }
 
+/// Continuous batching composes with the fault tier: a session failing
+/// mid-cohort (its serial replay still erroring) frees its slot — every
+/// later session still terminates — and the ledger reconciles like gang's
+/// (the aborted fused step's first fault is uncounted by the engine, so
+/// injected faults dominate retries + failures).
+#[test]
+fn continuous_soak_terminates_every_session_and_reconciles_faults() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let o = soak(Schedule::Continuous, 6, 3);
+    assert_eq!(o.completed + o.failed, 6, "every session must terminate: {o:?}");
+    assert!(o.tokens > 0, "degraded serving still generates: {o:?}");
+    assert!(o.faults > 0, "nonzero rates over 6 sessions should inject faults: {o:?}");
+    assert!(o.faults >= o.retries + o.fetch_failures, "{o:?}");
+    assert!(o.rerouted + o.dropped <= o.fetch_failures, "{o:?}");
+}
+
 /// Fixed seeds replay the exact same chaos. `max_sessions: 1` pins the
 /// admission interleaving (multi-session admission depends on wall-clock
 /// arrival vs. quantum boundaries), so the whole fetch/fault sequence —
@@ -316,7 +335,7 @@ fn chaos_soak_is_deterministic_for_a_fixed_seed() {
         eprintln!("skipping: artifacts missing (run `make artifacts`)");
         return;
     }
-    for schedule in [Schedule::Fcfs, Schedule::Gang] {
+    for schedule in [Schedule::Fcfs, Schedule::Gang, Schedule::Continuous] {
         let a = soak(schedule, 4, 1);
         let b = soak(schedule, 4, 1);
         assert_eq!(a, b, "{schedule:?} soak diverged across identical runs");
@@ -375,4 +394,76 @@ fn watchdog_deadline_fails_sessions_typed_instead_of_hanging() {
     let m = coord.shutdown();
     assert_eq!(m.completed, 0);
     assert_eq!(m.watchdog_failures, 2);
+}
+
+/// The watchdog composes with continuous batching. A fused step cannot be
+/// cut mid-dispatch, so an over-limit *cohort* step is counted without
+/// singling a session out and the cohort keeps making progress; a session
+/// running the lone-session serial path instead fails typed, exactly like
+/// fcfs. Either way every session terminates — nothing hangs, failures
+/// carry the watchdog message, and the counter records the overruns.
+#[test]
+fn watchdog_composes_with_continuous_batching() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let arts = moe_cache::artifacts_dir();
+    let data = EvalData::load(&arts.join("data")).expect("eval data");
+    let cfg = ServerConfig {
+        max_sessions: 3,
+        schedule: Schedule::Continuous,
+        quantum_deadline_s: Some(0.0),
+        ..ServerConfig::default()
+    };
+    let coord = Coordinator::spawn(
+        move || {
+            EngineBuilder::new(&arts, "qwen-tiny")
+                .quant(Quant::Int4)
+                .cache_capacity(30)
+                .seed(1)
+                .build()
+        },
+        cfg,
+    )
+    .expect("spawn");
+    let rxs = coord
+        .submit_batch(
+            (0..3u64)
+                .map(|i| Request {
+                    id: i,
+                    prompt: data.prompts_short[0].clone(),
+                    max_new: 3,
+                    temperature: 0.0,
+                    stop_token: None,
+                    routing_spec: None,
+                })
+                .collect(),
+        )
+        .expect("submit");
+    let (mut completed, mut failed) = (0u64, 0u64);
+    for rx in rxs {
+        loop {
+            match rx.recv().expect("engine thread must not die") {
+                Event::Token { .. } => continue,
+                Event::Done(_) => {
+                    completed += 1;
+                    break;
+                }
+                Event::Failed { error, .. } => {
+                    assert!(error.contains("watchdog expired"), "untyped failure: {error}");
+                    failed += 1;
+                    break;
+                }
+            }
+        }
+    }
+    let m = coord.shutdown();
+    assert_eq!(completed + failed, 3, "every session must terminate");
+    assert_eq!(m.completed, completed);
+    assert!(
+        m.watchdog_failures >= 1,
+        "a zero deadline must record overruns (saw {})",
+        m.watchdog_failures
+    );
 }

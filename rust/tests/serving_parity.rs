@@ -1,0 +1,321 @@
+//! Serving conformance suite for continuous batching.
+//!
+//! Two layers, mirroring how the serving stack splits determinism:
+//!
+//! - **Virtual clock** (always runs): open-loop replay on
+//!   `tracesim::serving` — seeded Poisson workloads are bit-reproducible,
+//!   shed rate is monotone in arrival rate, and under backlog the
+//!   continuous schedule beats gang on tail TTFT at equal aggregate
+//!   tokens. Wall-clock TTFT can never be bit-identical across runs, so
+//!   the SLO properties are pinned here.
+//! - **Real engine** (gated on `make artifacts`): the continuous cohort's
+//!   *token streams* are bit-identical to serial fcfs — a lone session
+//!   trivially, and N sessions joining/leaving the cohort mid-flight each
+//!   match their solo run (`Engine::step_batch` is pinned to serial
+//!   `Engine::step` by `batch_parity`; routing uses `Strategy::Original`
+//!   so selection is timing-independent and any divergence is a
+//!   cohort-mutation bug).
+
+use moe_cache::cache::Policy;
+use moe_cache::config::{DeviceProfile, Quant};
+use moe_cache::coordinator::{Coordinator, Event, Request, Schedule, ServerConfig};
+use moe_cache::eval::EvalData;
+use moe_cache::model::{Engine, EngineOptions};
+use moe_cache::policy::EvictionFactory;
+use moe_cache::routing::{DeltaMode, Strategy};
+use moe_cache::tracesim::serving::{
+    simulate_serving, synthetic_workload, ServingConfig, SimSchedule, WorkloadSpec,
+};
+use moe_cache::util::prop::prop_check;
+
+// ---------------------------------------------------------------------------
+// Virtual-clock properties (no artifacts needed).
+// ---------------------------------------------------------------------------
+
+fn workload(seed: u64, rate: f64) -> Vec<moe_cache::tracesim::serving::RequestSpec> {
+    synthetic_workload(&WorkloadSpec {
+        n_requests: 24,
+        rate_per_s: rate,
+        seed,
+        n_layers: 2,
+        n_experts: 16,
+        top_k: 2,
+        prompt_tokens: 4,
+        decode_tokens: 8,
+    })
+}
+
+fn sim_cfg(schedule: SimSchedule, slo: Option<f64>) -> ServingConfig {
+    ServingConfig {
+        schedule,
+        max_sessions: 3,
+        capacity: 8,
+        bytes_per_expert: 4096,
+        slo_ttft_s: slo,
+    }
+}
+
+/// Satellite: same Poisson seed + schedule => identical metrics across two
+/// runs — the TTFT vector, the shed set, and the flash-read count — over
+/// random seeds, rates, and schedules.
+#[test]
+fn prop_open_loop_replay_is_deterministic() {
+    prop_check("open-loop replay is deterministic", 12, |g| {
+        let seed = g.below(1 << 30) as u64;
+        let rate = 1.0 + g.f64() * 400.0;
+        let schedule = if g.bool() {
+            SimSchedule::Continuous
+        } else {
+            SimSchedule::Gang { quantum: g.range(1, 5), chunk: g.range(1, 9) }
+        };
+        let slo = if g.bool() { Some(0.02 + g.f64() * 0.2) } else { None };
+        let reqs = workload(seed, rate);
+        let cfg = sim_cfg(schedule, slo);
+        let lru = EvictionFactory::from_policy(Policy::Lru);
+        let a = simulate_serving(&reqs, &lru, DeviceProfile::device_16gb(), &cfg)
+            .map_err(|e| e.to_string())?;
+        let b = simulate_serving(&reqs, &lru, DeviceProfile::device_16gb(), &cfg)
+            .map_err(|e| e.to_string())?;
+        if a.ttft_s != b.ttft_s {
+            return Err(format!("TTFT vector diverged under {schedule:?}"));
+        }
+        if a.shed != b.shed {
+            return Err(format!("shed set diverged under {schedule:?}"));
+        }
+        if a.tier.flash_reads != b.tier.flash_reads {
+            return Err(format!("flash reads diverged under {schedule:?}"));
+        }
+        if a.queue_delay_s != b.queue_delay_s || a.tpot_s != b.tpot_s {
+            return Err(format!("latency vectors diverged under {schedule:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Satellite: shed rate is monotone in the arrival rate. The workload's
+/// traces depend only on the seed, so sweeping the rate replays the same
+/// requests compressed in time; a tighter arrival stream can only grow the
+/// backlog each request sees at admission.
+#[test]
+fn shed_rate_monotone_in_arrival_rate() {
+    let lru = EvictionFactory::from_policy(Policy::Lru);
+    for seed in [11u64, 23] {
+        let mut rates_sheds = Vec::new();
+        for rate in [2.0, 20.0, 200.0] {
+            let reqs = workload(seed, rate);
+            let r = simulate_serving(
+                &reqs,
+                &lru,
+                DeviceProfile::device_16gb(),
+                &sim_cfg(SimSchedule::Continuous, Some(0.05)),
+            )
+            .unwrap();
+            // Every offered request is accounted for: completed or shed.
+            assert_eq!(r.completed as usize + r.shed.len(), 24, "seed {seed} rate {rate}");
+            rates_sheds.push(r.shed.len());
+        }
+        assert_eq!(rates_sheds[0], 0, "seed {seed}: idle arrivals must never shed");
+        assert!(
+            rates_sheds[0] <= rates_sheds[1] && rates_sheds[1] <= rates_sheds[2],
+            "seed {seed}: shed counts not monotone in arrival rate: {rates_sheds:?}"
+        );
+        assert!(rates_sheds[2] > 0, "seed {seed}: a 100x-overloaded stream must shed");
+    }
+}
+
+/// Acceptance mirror: at equal aggregate tokens under Poisson arrivals,
+/// continuous improves tail TTFT over gang. Under backlog the tail is
+/// queue-drain bound; continuous drains faster (prefill fetches are
+/// deduplicated into the fused step's distinct union instead of running
+/// serially) and admits at step rather than round boundaries.
+#[test]
+fn continuous_beats_gang_ttft_p99_under_backlog() {
+    let reqs = synthetic_workload(&WorkloadSpec {
+        n_requests: 32,
+        rate_per_s: 2000.0, // everything arrives almost at once: pure drain race
+        seed: 7,
+        n_layers: 4,
+        n_experts: 16,
+        top_k: 2,
+        prompt_tokens: 8,
+        decode_tokens: 4,
+    });
+    let lru = EvictionFactory::from_policy(Policy::Lru);
+    let cfg = |schedule| ServingConfig {
+        schedule,
+        max_sessions: 4,
+        capacity: 8,
+        bytes_per_expert: 4096,
+        slo_ttft_s: None,
+    };
+    let cont = simulate_serving(
+        &reqs,
+        &lru,
+        DeviceProfile::device_16gb(),
+        &cfg(SimSchedule::Continuous),
+    )
+    .unwrap();
+    let gang = simulate_serving(
+        &reqs,
+        &lru,
+        DeviceProfile::device_16gb(),
+        &cfg(SimSchedule::Gang { quantum: 4, chunk: 8 }),
+    )
+    .unwrap();
+    // Equal aggregate tokens: both schedules process every request fully.
+    assert_eq!(cont.completed, 32);
+    assert_eq!(gang.completed, 32);
+    assert_eq!(cont.tier.tokens, gang.tier.tokens);
+    let (cp99, gp99) = (cont.ttft_percentile(99.0), gang.ttft_percentile(99.0));
+    assert!(
+        cp99 < gp99,
+        "continuous TTFT p99 {cp99:.4}s should beat gang {gp99:.4}s under backlog"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Real-engine stream conformance (needs `make artifacts`; skips on a bare
+// checkout so the tier-1 gate stays green).
+// ---------------------------------------------------------------------------
+
+fn artifacts_ready() -> bool {
+    let arts = moe_cache::artifacts_dir();
+    arts.join("qwen-tiny").join("manifest.json").exists()
+        && arts.join("qwen-tiny").join("weights_int4.bin").exists()
+        && arts.join("data").is_dir()
+}
+
+fn spawn_with(strategy: Strategy, cfg: ServerConfig) -> Coordinator {
+    let arts = moe_cache::artifacts_dir();
+    Coordinator::spawn(
+        move || {
+            Engine::load(
+                &arts,
+                "qwen-tiny",
+                EngineOptions {
+                    quant: Quant::Int4,
+                    cache_capacity: 30,
+                    policy: Policy::Lru,
+                    strategy,
+                    device: DeviceProfile::device_16gb(),
+                    seed: 1,
+                    record_trace: false,
+                    record_logits: false,
+                },
+            )
+        },
+        cfg,
+    )
+    .expect("spawn")
+}
+
+fn req(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
+    Request { id, prompt, max_new, temperature: 0.8, stop_token: None, routing_spec: None }
+}
+
+/// Satellite: a continuous cohort of one session is bit-identical to
+/// serial fcfs — the lone-session path takes the same serial quantum, so
+/// the streams must match token for token (same request id => same
+/// sampler and router seeds).
+#[test]
+fn single_session_continuous_matches_serial_fcfs() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let data = EvalData::load(&moe_cache::artifacts_dir().join("data")).unwrap();
+    let prompt = data.prompts_short[0].clone();
+
+    let fcfs = spawn_with(
+        Strategy::CachePrior { lambda: 0.5, j: 2, delta: DeltaMode::RunningAvg },
+        ServerConfig { schedule: Schedule::Fcfs, ..ServerConfig::default() },
+    );
+    let serial = fcfs.submit(req(5, prompt.clone(), 12)).unwrap();
+    fcfs.shutdown();
+
+    let cont = spawn_with(
+        Strategy::CachePrior { lambda: 0.5, j: 2, delta: DeltaMode::RunningAvg },
+        ServerConfig { schedule: Schedule::Continuous, ..ServerConfig::default() },
+    );
+    let continuous = cont.submit(req(5, prompt, 12)).unwrap();
+    let m = cont.shutdown();
+
+    assert_eq!(continuous.generated, serial.generated, "lone continuous session diverged");
+    assert_eq!(continuous.generated.len(), 12);
+    assert_eq!(m.completed, 1);
+    assert_eq!(m.shed, 0);
+}
+
+/// Satellite: sessions admitted *mid-flight* into a running continuous
+/// cohort produce streams identical to their solo runs, through join and
+/// leave churn. `Strategy::Original` makes routing timing-independent, so
+/// any divergence is a cohort-mutation bug (state swap, slot reuse,
+/// piggybacked-prefill or logits bookkeeping).
+#[test]
+fn midflight_join_and_leave_match_solo_streams() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let data = EvalData::load(&moe_cache::artifacts_dir().join("data")).unwrap();
+    let prompt = data.prompts_short[0].clone();
+    // Identical prompts; max_new staggers the leave order (2 first, 0 last).
+    let lens = [32usize, 10, 6];
+
+    let coord = spawn_with(
+        Strategy::Original,
+        ServerConfig { max_sessions: 3, schedule: Schedule::Continuous, ..ServerConfig::default() },
+    );
+    let (tx, rx) = std::sync::mpsc::channel();
+    coord.submit_with(req(0, prompt.clone(), lens[0]), tx.clone()).unwrap();
+
+    // Let session 0 get genuinely mid-decode before the others join.
+    let mut r0_tokens_seen = 0usize;
+    let mut joined = false;
+    let mut done_order: Vec<u64> = Vec::new();
+    let mut streams: Vec<Vec<u32>> = vec![Vec::new(); 3];
+    let mut r0_tokens_at_last_done = 0usize;
+    while done_order.len() < 3 {
+        match rx.recv().unwrap() {
+            Event::Token { id: 0, .. } => {
+                r0_tokens_seen += 1;
+                if r0_tokens_seen == 2 && !joined {
+                    joined = true;
+                    coord.submit_with(req(1, prompt.clone(), lens[1]), tx.clone()).unwrap();
+                    coord.submit_with(req(2, prompt.clone(), lens[2]), tx.clone()).unwrap();
+                }
+            }
+            Event::Token { .. } => {}
+            Event::Done(r) => {
+                done_order.push(r.id);
+                if r.id != 0 {
+                    r0_tokens_at_last_done = r0_tokens_seen;
+                }
+                streams[r.id as usize] = r.generated;
+            }
+            Event::Failed { error, .. } => panic!("{error}"),
+        }
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.completed, 3);
+    assert!(joined, "session 0 finished before the others could join mid-flight");
+    assert_eq!(done_order.last(), Some(&0), "the long session must finish last");
+    assert!(
+        r0_tokens_at_last_done > 0 && r0_tokens_at_last_done < lens[0],
+        "sessions 1/2 should leave while session 0 is mid-decode \
+         (saw {r0_tokens_at_last_done} of its {} tokens)",
+        lens[0]
+    );
+
+    // Solo twins: same ids (same sampler/router seeds), serial fcfs.
+    let solo = spawn_with(Strategy::Original, ServerConfig::default());
+    for (id, &n) in lens.iter().enumerate() {
+        let r = solo.submit(req(id as u64, prompt.clone(), n)).unwrap();
+        assert_eq!(
+            streams[id], r.generated,
+            "session {id} diverged from its solo run under cohort churn"
+        );
+        assert_eq!(streams[id].len(), n);
+    }
+    solo.shutdown();
+}
