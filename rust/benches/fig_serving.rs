@@ -38,6 +38,13 @@
 //! throughput while the device clock exposes the fetches the continuous
 //! distinct-union actually deduplicates.
 //!
+//! The **fleet stage** (`results/BENCH_fleet.json`) replays the same
+//! clustered workload through `tracesim::fleet` under each placement
+//! policy (random / least-loaded / affinity, ± stealing) on the virtual
+//! clock, and gates on the fleet acceptance criterion: at equal aggregate
+//! tokens, expert-affinity placement issues strictly fewer total store
+//! fetches than random (`docs/FLEET.md`).
+//!
 //! Run: `cargo bench --offline --bench fig_serving`
 
 use anyhow::Result;
@@ -50,6 +57,9 @@ use moe_cache::model::{Engine, EngineBuilder, EngineOptions};
 use moe_cache::policy::EvictionFactory;
 use moe_cache::report::{results_dir, Table};
 use moe_cache::routing::{DeltaMode, Strategy};
+use moe_cache::tracesim::fleet::{
+    clustered_workload, simulate_fleet, ClusteredWorkloadSpec, FleetSimConfig,
+};
 use moe_cache::tracesim::serving::{
     poisson_arrivals, simulate_serving, synthetic_workload, ServingConfig, SimSchedule,
     WorkloadSpec,
@@ -840,7 +850,7 @@ fn main() -> Result<()> {
     );
 
     let slo_json = Json::Object(vec![
-        ("model".into(), Json::str(model)),
+        ("model".into(), Json::str(model.clone())),
         ("requests_wall".into(), Json::num(SLO_N as f64)),
         ("max_new_wall".into(), Json::num(SLO_MAX_NEW as f64)),
         ("requests_virtual".into(), Json::num(V_REQS as f64)),
@@ -856,5 +866,126 @@ fn main() -> Result<()> {
     std::fs::write(&slo_path, format!("{slo_json}"))?;
     slo_table.write_csv(&dir)?;
     println!("wrote {}", slo_path.display());
+
+    // ── Fleet stage: placement policies on the virtual clock ────────────
+    //
+    // N replicas, each with its own cache, over one shared read-only
+    // store, replayed on `tracesim::fleet`'s virtual clock so the
+    // comparison is bit-reproducible across hosts. Traffic is clustered
+    // (disjoint expert bands — the locality expert-affinity placement
+    // exists for); no stop tokens, so every arm processes the same
+    // aggregate tokens and total store fetches are directly comparable.
+    println!("\n== fleet (placement policies, virtual clock) ==");
+    const F_REPLICAS: usize = 2;
+    const F_REQS: usize = 32;
+    let fleet_wl = clustered_workload(&ClusteredWorkloadSpec {
+        n_requests: F_REQS,
+        rate_per_s: 200.0,
+        seed: 23,
+        n_layers: 2,
+        n_experts: 64,
+        top_k: 4,
+        prompt_tokens: 6,
+        decode_tokens: 10,
+        clusters: F_REPLICAS,
+    });
+    let fcfg = |placement: &str, steal: bool| FleetSimConfig {
+        replicas: F_REPLICAS,
+        placement: placement.into(),
+        max_sessions: MAX_SESSIONS,
+        capacity: 32,
+        bytes_per_expert: 4096,
+        steal,
+        signal_tokens: 8,
+    };
+    let mut fleet_table = Table::new(
+        "fig_serving_fleet",
+        &[
+            "placement", "steal", "flash_reads", "fleet_hit_rate", "replica_hit_rates",
+            "steals", "ttft_p90_s", "makespan_s",
+        ],
+    );
+    let mut fleet_arms: Vec<Json> = Vec::new();
+    let mut fleet_by = std::collections::HashMap::new();
+    for (spec, steal) in
+        [("random:seed=1", false), ("least-loaded", false), ("affinity", false), ("affinity", true)]
+    {
+        let r = simulate_fleet(&fleet_wl, &lru, profile, &fcfg(spec, steal))?;
+        anyhow::ensure!(
+            r.completed() == F_REQS as u64,
+            "{spec}: fleet arm must serve every request"
+        );
+        let agg_tokens: u64 = r.per_replica.iter().map(|m| m.tier.tokens).sum();
+        let rates: Vec<f64> = r.per_replica.iter().map(|m| m.hit_rate()).collect();
+        fleet_table.row(vec![
+            r.placement_label.clone(),
+            steal.to_string(),
+            r.total_flash_reads().to_string(),
+            format!("{:.4}", r.fleet_hit_rate()),
+            rates.iter().map(|x| format!("{x:.3}")).collect::<Vec<_>>().join("/"),
+            r.steals.to_string(),
+            format!("{:.4}", r.ttft_percentile(90.0)),
+            format!("{:.4}", r.makespan_s),
+        ]);
+        fleet_arms.push(Json::Object(vec![
+            ("placement".into(), Json::str(r.placement_label.clone())),
+            ("steal".into(), Json::Bool(steal)),
+            ("flash_reads".into(), Json::num(r.total_flash_reads() as f64)),
+            ("flash_bytes".into(), Json::num(r.total_flash_bytes() as f64)),
+            ("fleet_hit_rate".into(), Json::num(r.fleet_hit_rate())),
+            (
+                "replica_hit_rates".into(),
+                Json::Array(rates.iter().map(|&x| Json::num(x)).collect()),
+            ),
+            (
+                "placements".into(),
+                Json::Array(r.placements.iter().map(|&p| Json::num(p as f64)).collect()),
+            ),
+            ("steals".into(), Json::num(r.steals as f64)),
+            ("migrations".into(), Json::num(r.migrations as f64)),
+            ("ttft_p50_s".into(), Json::num(r.ttft_percentile(50.0))),
+            ("ttft_p90_s".into(), Json::num(r.ttft_percentile(90.0))),
+            ("makespan_s".into(), Json::num(r.makespan_s)),
+            ("aggregate_tokens".into(), Json::num(agg_tokens as f64)),
+        ]));
+        fleet_by.insert((spec, steal), (r.total_flash_reads(), r.fleet_hit_rate(), agg_tokens));
+    }
+    fleet_table.print();
+
+    // The fleet acceptance gate: at equal aggregate tokens, affinity
+    // placement issues strictly fewer total store fetches than random
+    // (stealing off in both arms so the comparison is pure placement).
+    let (aff_fetch, aff_hit, aff_tok) = fleet_by[&("affinity", false)];
+    let (rnd_fetch, rnd_hit, rnd_tok) = fleet_by[&("random:seed=1", false)];
+    anyhow::ensure!(
+        aff_tok == rnd_tok,
+        "fleet comparison arms must process equal aggregate tokens ({aff_tok} vs {rnd_tok})"
+    );
+    let aff_fewer = aff_fetch < rnd_fetch;
+    println!(
+        "fleet fetches at {aff_tok} aggregate tokens: random {rnd_fetch} -> affinity \
+         {aff_fetch} ({}); fleet hit rate {rnd_hit:.3} -> {aff_hit:.3}",
+        if aff_fewer { "fewer" } else { "NOT FEWER" },
+    );
+    anyhow::ensure!(
+        aff_fewer,
+        "affinity placement must issue strictly fewer store fetches than random \
+         ({aff_fetch} vs {rnd_fetch})"
+    );
+
+    let fleet_json = Json::Object(vec![
+        ("model".into(), Json::str(model)),
+        ("clock".into(), Json::str("virtual")),
+        ("replicas".into(), Json::num(F_REPLICAS as f64)),
+        ("requests".into(), Json::num(F_REQS as f64)),
+        ("clusters".into(), Json::num(F_REPLICAS as f64)),
+        ("max_sessions".into(), Json::num(MAX_SESSIONS as f64)),
+        ("arms".into(), Json::Array(fleet_arms)),
+        ("affinity_fewer_fetches_than_random".into(), Json::Bool(aff_fewer)),
+    ]);
+    let fleet_path = dir.join("BENCH_fleet.json");
+    std::fs::write(&fleet_path, format!("{fleet_json}"))?;
+    fleet_table.write_csv(&dir)?;
+    println!("wrote {}", fleet_path.display());
     Ok(())
 }

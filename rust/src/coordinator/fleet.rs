@@ -1,0 +1,646 @@
+//! Multi-replica fleet tier: N serving replicas behind one router.
+//!
+//! A [`FleetServer`] owns `replicas` independent [`Coordinator`]s — one
+//! engine + expert cache + arena each, on its own thread — and fronts
+//! them with a router thread that admits requests and places them via a
+//! pluggable [`PlacementPolicy`] (`random`, `least-loaded`, `affinity`;
+//! the crate's fourth axis, after routing × eviction × store). Replicas
+//! are expected to share one read-only expert store: build each engine
+//! over a [`crate::store::MmapStore::share`] /
+//! [`crate::store::SimStore::share`] of a common backend so the flash
+//! image is opened (and mapped) exactly once across the fleet while
+//! `TierStats` accounting stays strictly per-replica.
+//!
+//! Placement reads each replica's published [`ReplicaStatus`] — queue
+//! and cohort depth plus the per-layer resident-expert summary the
+//! engine loop refreshes every step — so `affinity:` can score a
+//! request's recent top-K routing signal against what is actually hot in
+//! each replica's cache (see `docs/FLEET.md` for the protocol).
+//!
+//! Two submission paths with different contracts, mirroring the solo
+//! coordinator:
+//!
+//! * **Closed-loop** ([`FleetServer::submit_batch_with`]): the batch is
+//!   placed and dispatched atomically — each replica receives its whole
+//!   group in one [`Coordinator::submit_batch_with`], so admission order
+//!   per replica is reproducible run-to-run and a 1-replica fleet is
+//!   bit-identical to a solo server (`tests/fleet_parity.rs` pins it).
+//!   No fleet-level queueing, no stealing.
+//! * **Open-loop** ([`FleetServer::submit_with`] /
+//!   [`FleetServer::submit_with_signal`]): requests beyond a replica's
+//!   dispatch window (`max_sessions`) wait in a fleet-level per-replica
+//!   queue; when a replica drains its own queue it **steals** the oldest
+//!   request from the longest other queue. A stolen request simply
+//!   dispatches to the idle replica — sessions are engine-thread state
+//!   ([`crate::model::SessionState`], swapped in O(1)), so migration
+//!   before admission is a pure re-placement, counted in
+//!   [`FleetMetrics::steals`]/[`FleetMetrics::migrations`].
+//!
+//! The router forwards every replica event to the submitting caller by
+//! request id, so ids must be unique among in-flight requests (a
+//! duplicate is failed at submission — unlike the solo coordinator,
+//! which never routes by id).
+
+#![warn(clippy::unwrap_used)]
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use super::server::{Coordinator, ReplicaStatus, ServerConfig, ServerMetrics, StatusCell};
+use super::session::{Event, Request, RequestResult};
+use crate::model::Engine;
+use crate::policy::{parse_placement, PlacementPolicy, ReplicaView};
+use crate::util::stats::percentile;
+
+/// An engine constructor shipped to one replica's thread (PJRT handles
+/// are not `Send`, so engines are built inside their owning threads).
+pub type EngineFactory = Box<dyn FnOnce() -> Result<Engine> + Send + 'static>;
+
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Engine replicas (threads; one engine + cache + arena each).
+    pub replicas: usize,
+    /// Placement spec in the registry grammar
+    /// ([`crate::policy::parse_placement`]), e.g. `"affinity"` or
+    /// `"random:seed=7"`.
+    pub placement: String,
+    /// Per-replica serving config (every replica runs the same one).
+    pub server: ServerConfig,
+    /// Work stealing on the open-loop path: hold overflow in fleet-level
+    /// queues and let a drained replica steal from the longest one.
+    /// `false` dispatches straight to the placed replica's own queue.
+    pub steal: bool,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            replicas: 2,
+            placement: "least-loaded".to_string(),
+            server: ServerConfig::default(),
+            steal: true,
+        }
+    }
+}
+
+/// Fleet-level counters plus every replica's full [`ServerMetrics`] —
+/// aggregate and per-replica views of the same run, so placement quality
+/// (hit-rate spread, steal traffic) is visible instead of averaged away.
+#[derive(Debug, Clone, Default)]
+pub struct FleetMetrics {
+    pub per_replica: Vec<ServerMetrics>,
+    /// Requests initially placed on each replica by the policy
+    /// (open-loop and closed-loop alike).
+    pub placements: Vec<u64>,
+    /// Dispatches that popped another replica's fleet queue.
+    pub steals: u64,
+    /// Requests that ran on a different replica than first placed. Equal
+    /// to `steals` today (migration happens only by stealing), kept
+    /// separate so a future mid-flight migration path extends it.
+    pub migrations: u64,
+    /// Requests rejected by the fleet-level queue-depth cut (the
+    /// per-replica `rejected` counters cover replica-local cuts).
+    pub rejected: u64,
+    /// Canonical label of the placement policy that produced this run.
+    pub placement_label: String,
+}
+
+impl FleetMetrics {
+    pub fn completed(&self) -> u64 {
+        self.per_replica.iter().map(|m| m.completed).sum()
+    }
+
+    pub fn tokens_generated(&self) -> u64 {
+        self.per_replica.iter().map(|m| m.tokens_generated).sum()
+    }
+
+    /// Total slow-tier reads across the fleet — the number affinity
+    /// placement exists to shrink at equal aggregate tokens.
+    pub fn flash_reads(&self) -> u64 {
+        self.per_replica.iter().map(|m| m.flash_reads).sum()
+    }
+
+    pub fn flash_bytes(&self) -> u64 {
+        self.per_replica.iter().map(|m| m.flash_bytes).sum()
+    }
+
+    /// One replica's expert-cache hit rate (0.0 out of range or cold).
+    pub fn replica_hit_rate(&self, k: usize) -> f64 {
+        self.per_replica.get(k).map(ServerMetrics::cache_hit_rate).unwrap_or(0.0)
+    }
+
+    /// Fleet-wide hit rate: summed hits over summed accesses — weighted
+    /// by traffic, not a mean of per-replica rates.
+    pub fn fleet_hit_rate(&self) -> f64 {
+        let hits: u64 = self.per_replica.iter().map(|m| m.cache_hits).sum();
+        let misses: u64 = self.per_replica.iter().map(|m| m.cache_misses).sum();
+        let total = hits + misses;
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+
+    /// TTFT percentile over *all* completed requests, merged across
+    /// replicas (a per-replica mean of percentiles would hide stragglers).
+    pub fn ttft_percentile(&self, p: f64) -> f64 {
+        let merged: Vec<f64> =
+            self.per_replica.iter().flat_map(|m| m.ttft_s.iter().copied()).collect();
+        percentile(&merged, p)
+    }
+
+    /// Merged time-per-output-token percentile (s/token).
+    pub fn tpot_percentile(&self, p: f64) -> f64 {
+        let merged: Vec<f64> =
+            self.per_replica.iter().flat_map(|m| m.tpot_s.iter().copied()).collect();
+        percentile(&merged, p)
+    }
+
+    /// Merged submission→admission delay percentile (seconds).
+    pub fn queue_delay_percentile(&self, p: f64) -> f64 {
+        let merged: Vec<f64> =
+            self.per_replica.iter().flat_map(|m| m.queue_delay_s.iter().copied()).collect();
+        percentile(&merged, p)
+    }
+
+    pub fn summary(&self) -> String {
+        let rates: Vec<String> = (0..self.per_replica.len())
+            .map(|k| format!("{:.3}", self.replica_hit_rate(k)))
+            .collect();
+        let placed: Vec<String> = self.placements.iter().map(|p| p.to_string()).collect();
+        format!(
+            "replicas={} placement={} completed={} tokens={} fleet_hit_rate={:.3} replica_hit_rates=[{}] placements=[{}] steals={} migrations={} rejected={} ttft_p50={:.3}s ttft_p99={:.3}s tpot_p50={:.4}s flash_reads={}",
+            self.per_replica.len(),
+            self.placement_label,
+            self.completed(),
+            self.tokens_generated(),
+            self.fleet_hit_rate(),
+            rates.join(","),
+            placed.join(","),
+            self.steals,
+            self.migrations,
+            self.rejected,
+            self.ttft_percentile(50.0),
+            self.ttft_percentile(99.0),
+            self.tpot_percentile(50.0),
+            self.flash_reads(),
+        )
+    }
+}
+
+/// Router control messages. Every replica event also funnels through
+/// here (tagged with its replica index by a forwarder thread), giving
+/// the router a single serialized view of submissions and completions.
+enum Ctl {
+    Submit(Request, Vec<Vec<u32>>, Sender<Event>),
+    /// Atomic placement + dispatch of a whole batch (closed-loop path).
+    SubmitBatch(Vec<(Request, Vec<Vec<u32>>)>, Sender<Event>),
+    Ev(usize, Event),
+    Shutdown,
+}
+
+pub struct FleetServer {
+    ctl: Sender<Ctl>,
+    pump: Option<JoinHandle<FleetMetrics>>,
+    replicas: usize,
+}
+
+impl FleetServer {
+    /// Spawn `cfg.replicas` coordinators (one engine factory each, built
+    /// inside their threads) plus the router. Fails fast if any engine
+    /// fails to construct or the placement spec does not parse.
+    pub fn spawn(factories: Vec<EngineFactory>, cfg: FleetConfig) -> Result<Self> {
+        anyhow::ensure!(cfg.replicas >= 1, "fleet needs at least one replica");
+        anyhow::ensure!(
+            factories.len() == cfg.replicas,
+            "fleet wants {} replicas but {} engine factories were given",
+            cfg.replicas,
+            factories.len()
+        );
+        let policy = parse_placement(&cfg.placement)?;
+        let (ctl_tx, ctl_rx) = mpsc::channel::<Ctl>();
+        let mut coords = Vec::with_capacity(cfg.replicas);
+        let mut status = Vec::with_capacity(cfg.replicas);
+        let mut ev_tx = Vec::with_capacity(cfg.replicas);
+        let mut forwarders = Vec::with_capacity(cfg.replicas);
+        for (k, factory) in factories.into_iter().enumerate() {
+            let cell = Arc::new(StatusCell::default());
+            let coord =
+                Coordinator::spawn_with_status(factory, cfg.server.clone(), Some(cell.clone()))
+                    .with_context(|| format!("spawning fleet replica {k}"))?;
+            // Replica k's events all flow over one channel; the forwarder
+            // tags them with k so the router can account completions.
+            let (tx, rx) = mpsc::channel::<Event>();
+            let ctl = ctl_tx.clone();
+            forwarders.push(std::thread::spawn(move || {
+                for ev in rx {
+                    if ctl.send(Ctl::Ev(k, ev)).is_err() {
+                        break;
+                    }
+                }
+            }));
+            coords.push(coord);
+            status.push(cell);
+            ev_tx.push(tx);
+        }
+        let mut pump = Pump {
+            coords,
+            status,
+            ev_tx,
+            fleet_q: (0..cfg.replicas).map(|_| VecDeque::new()).collect(),
+            in_flight: vec![0; cfg.replicas],
+            routes: HashMap::new(),
+            policy,
+            limit: cfg.server.max_sessions.max(1),
+            steal: cfg.steal,
+            queue_depth: cfg.server.queue_depth.max(1),
+            metrics: FleetMetrics {
+                placements: vec![0; cfg.replicas],
+                ..FleetMetrics::default()
+            },
+            closing: false,
+        };
+        let handle = std::thread::spawn(move || pump.run(&ctl_rx, forwarders));
+        Ok(FleetServer { ctl: ctl_tx, pump: Some(handle), replicas: cfg.replicas })
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// Open-loop submission with an explicit routing signal: recent
+    /// per-layer top-K expert ids for this request/session (e.g. the tail
+    /// of a previous turn), which `affinity:` placement scores against
+    /// each replica's resident summary. An empty signal is always valid —
+    /// affinity then degrades to its least-loaded tie-break.
+    pub fn submit_with_signal(
+        &self,
+        req: Request,
+        signal: Vec<Vec<u32>>,
+        reply: Sender<Event>,
+    ) -> Result<()> {
+        self.ctl
+            .send(Ctl::Submit(req, signal, reply))
+            .map_err(|_| anyhow::anyhow!("fleet stopped"))
+    }
+
+    /// Open-loop submission without a routing signal (cold request).
+    pub fn submit_with(&self, req: Request, reply: Sender<Event>) -> Result<()> {
+        self.submit_with_signal(req, Vec::new(), reply)
+    }
+
+    /// Submit and stream events over a fresh channel, like
+    /// [`Coordinator::submit_stream`].
+    pub fn submit_stream(&self, req: Request) -> Result<Receiver<Event>> {
+        let (tx, rx) = mpsc::channel();
+        self.submit_with(req, tx)?;
+        Ok(rx)
+    }
+
+    /// Submit and wait for completion, discarding the token stream.
+    pub fn submit(&self, req: Request) -> Result<RequestResult> {
+        let rx = self.submit_stream(req)?;
+        loop {
+            match rx.recv() {
+                Ok(Event::Token { .. }) => continue,
+                Ok(Event::Done(r)) => return Ok(r),
+                Ok(Event::Failed { error, .. }) => anyhow::bail!(error),
+                Err(_) => anyhow::bail!("fleet dropped reply"),
+            }
+        }
+    }
+
+    /// Closed-loop batch: every request is placed, then each replica
+    /// receives its whole group in one atomic
+    /// [`Coordinator::submit_batch_with`] — per-replica admission order
+    /// is the batch order, reproducible run-to-run, bypassing fleet
+    /// queues, stealing, and depth cuts (the solo batch contract, lifted
+    /// to the fleet). All events arrive on the one `reply` channel.
+    pub fn submit_batch_with(
+        &self,
+        reqs: Vec<(Request, Vec<Vec<u32>>)>,
+        reply: Sender<Event>,
+    ) -> Result<()> {
+        self.ctl
+            .send(Ctl::SubmitBatch(reqs, reply))
+            .map_err(|_| anyhow::anyhow!("fleet stopped"))
+    }
+
+    /// Stop intake, drain every queued and in-flight request, shut the
+    /// replicas down, and collect the merged metrics.
+    pub fn shutdown(mut self) -> FleetMetrics {
+        let _ = self.ctl.send(Ctl::Shutdown);
+        self.pump.take().map(|h| h.join().unwrap_or_default()).unwrap_or_default()
+    }
+}
+
+impl Drop for FleetServer {
+    fn drop(&mut self) {
+        let _ = self.ctl.send(Ctl::Shutdown);
+        if let Some(h) = self.pump.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Router thread
+// ---------------------------------------------------------------------
+
+struct Pump {
+    coords: Vec<Coordinator>,
+    status: Vec<Arc<StatusCell>>,
+    /// Master per-replica event senders; every dispatch hands the replica
+    /// a clone, and dropping these after the drain releases forwarders.
+    ev_tx: Vec<Sender<Event>>,
+    /// Open-loop overflow, per placed replica — the pool stealing drains.
+    fleet_q: Vec<VecDeque<Request>>,
+    /// Dispatched-but-unfinished requests per replica (the open-loop
+    /// dispatch window is `limit`; closed-loop batches may exceed it).
+    in_flight: Vec<usize>,
+    /// In-flight request id → the submitting caller's event channel.
+    routes: HashMap<u64, Sender<Event>>,
+    policy: Box<dyn PlacementPolicy>,
+    limit: usize,
+    steal: bool,
+    queue_depth: usize,
+    metrics: FleetMetrics,
+    closing: bool,
+}
+
+impl Pump {
+    fn run(&mut self, rx: &Receiver<Ctl>, forwarders: Vec<JoinHandle<()>>) -> FleetMetrics {
+        loop {
+            if self.closing && self.routes.is_empty() {
+                break;
+            }
+            let Ok(msg) = rx.recv() else { break };
+            match msg {
+                Ctl::Submit(req, signal, reply) => self.submit_one(req, &signal, reply),
+                Ctl::SubmitBatch(pairs, reply) => self.submit_batch(pairs, &reply),
+                Ctl::Ev(k, ev) => self.on_event(k, ev),
+                Ctl::Shutdown => self.closing = true,
+            }
+        }
+        // Drain order: replicas first (shutdown completes anything their
+        // own queues still hold), then the master event senders, so every
+        // forwarder sees channel-closed and exits.
+        self.metrics.placement_label = self.policy.label();
+        self.metrics.per_replica =
+            self.coords.drain(..).map(Coordinator::shutdown).collect();
+        self.ev_tx.clear();
+        for f in forwarders {
+            let _ = f.join();
+        }
+        std::mem::take(&mut self.metrics)
+    }
+
+    /// Snapshot every replica's published status and let the policy pick.
+    /// `queued` per view folds in what the replica cannot see yet: its
+    /// fleet-level queue and dispatched-but-unadmitted requests.
+    /// One placement decision. `pending` holds per-replica requests placed
+    /// earlier in the *same* batch — their dispatch hasn't updated any
+    /// load counter yet, so without it a load-aware policy would send a
+    /// whole closed-loop batch to one replica.
+    fn place(&mut self, signal: &[Vec<u32>], pending: &[usize]) -> usize {
+        let snaps: Vec<ReplicaStatus> = self
+            .status
+            .iter()
+            .map(|c| match c.lock() {
+                Ok(g) => g.clone(),
+                Err(poisoned) => poisoned.into_inner().clone(),
+            })
+            .collect();
+        let views: Vec<ReplicaView<'_>> = snaps
+            .iter()
+            .enumerate()
+            .map(|(k, s)| ReplicaView {
+                queued: self.fleet_q[k].len()
+                    + pending.get(k).copied().unwrap_or(0)
+                    + self.in_flight[k].saturating_sub(s.active),
+                active: s.active,
+                resident: &s.resident,
+            })
+            .collect();
+        // Defensive clamp: a misbehaving policy must not panic the router.
+        self.policy.place(signal, &views).min(self.coords.len() - 1)
+    }
+
+    fn submit_one(&mut self, req: Request, signal: &[Vec<u32>], reply: Sender<Event>) {
+        if self.closing {
+            let _ = reply.send(Event::Failed { id: req.id, error: "fleet shutting down".into() });
+            return;
+        }
+        if self.routes.contains_key(&req.id) {
+            let _ = reply.send(Event::Failed {
+                id: req.id,
+                error: format!("duplicate request id {} in flight", req.id),
+            });
+            return;
+        }
+        let k = self.place(signal, &[]);
+        self.metrics.placements[k] += 1;
+        if !self.steal || self.in_flight[k] < self.limit {
+            self.routes.insert(req.id, reply);
+            self.dispatch(k, req);
+        } else if self.fleet_q[k].len() >= self.queue_depth {
+            self.metrics.rejected += 1;
+            let _ = reply.send(Event::Failed {
+                id: req.id,
+                error: format!("queue full ({} waiting)", self.fleet_q[k].len()),
+            });
+        } else {
+            self.routes.insert(req.id, reply);
+            self.fleet_q[k].push_back(req);
+        }
+    }
+
+    fn submit_batch(&mut self, pairs: Vec<(Request, Vec<Vec<u32>>)>, reply: &Sender<Event>) {
+        if self.closing {
+            for (req, _) in pairs {
+                let _ =
+                    reply.send(Event::Failed { id: req.id, error: "fleet shutting down".into() });
+            }
+            return;
+        }
+        // Place all first (admission order = batch order per replica),
+        // then dispatch each group in one atomic enqueue.
+        let mut groups: Vec<Vec<Request>> = (0..self.coords.len()).map(|_| Vec::new()).collect();
+        let mut pending = vec![0usize; self.coords.len()];
+        for (req, signal) in pairs {
+            if self.routes.contains_key(&req.id) {
+                let _ = reply.send(Event::Failed {
+                    id: req.id,
+                    error: format!("duplicate request id {} in flight", req.id),
+                });
+                continue;
+            }
+            let k = self.place(&signal, &pending);
+            pending[k] += 1;
+            self.metrics.placements[k] += 1;
+            self.routes.insert(req.id, reply.clone());
+            groups[k].push(req);
+        }
+        for (k, group) in groups.into_iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            let n = group.len();
+            let ids: Vec<u64> = group.iter().map(|r| r.id).collect();
+            if self.coords[k].submit_batch_with(group, self.ev_tx[k].clone()).is_ok() {
+                self.in_flight[k] += n;
+            } else {
+                for id in ids {
+                    if let Some(r) = self.routes.remove(&id) {
+                        let _ = r.send(Event::Failed {
+                            id,
+                            error: "replica coordinator stopped".into(),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    /// Hand one request to replica `k`'s coordinator. The caller's reply
+    /// channel stays in `routes`; the replica reports over its own
+    /// forwarder channel.
+    fn dispatch(&mut self, k: usize, req: Request) {
+        let id = req.id;
+        if self.coords[k].submit_with(req, self.ev_tx[k].clone()).is_ok() {
+            self.in_flight[k] += 1;
+        } else if let Some(reply) = self.routes.remove(&id) {
+            let _ =
+                reply.send(Event::Failed { id, error: "replica coordinator stopped".into() });
+        }
+    }
+
+    fn on_event(&mut self, k: usize, ev: Event) {
+        let (id, finished) = match &ev {
+            Event::Token { id, .. } => (*id, false),
+            Event::Done(r) => (r.id, true),
+            Event::Failed { id, .. } => (*id, true),
+        };
+        if let Some(reply) = self.routes.get(&id) {
+            // A caller that dropped its receiver just stops observing;
+            // the replica-side abort path already accounts the request.
+            let _ = reply.send(ev);
+        }
+        if finished {
+            self.routes.remove(&id);
+            self.in_flight[k] = self.in_flight[k].saturating_sub(1);
+            self.refill(k);
+        }
+    }
+
+    /// Refill replica `k`'s dispatch window: its own fleet queue first,
+    /// then — with stealing on — the *oldest* request from the longest
+    /// other queue (oldest bounds queue delay; longest evens load).
+    fn refill(&mut self, k: usize) {
+        while self.in_flight[k] < self.limit {
+            if let Some(req) = self.fleet_q[k].pop_front() {
+                self.dispatch(k, req);
+                continue;
+            }
+            if !self.steal {
+                break;
+            }
+            let victim = (0..self.fleet_q.len())
+                .filter(|&j| j != k && !self.fleet_q[j].is_empty())
+                .max_by_key(|&j| self.fleet_q[j].len());
+            let Some(j) = victim else { break };
+            let Some(req) = self.fleet_q[j].pop_front() else { break };
+            self.metrics.steals += 1;
+            self.metrics.migrations += 1;
+            self.dispatch(k, req);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used)]
+
+    use super::*;
+
+    fn replica_metrics(hits: u64, misses: u64, ttft: Vec<f64>) -> ServerMetrics {
+        ServerMetrics {
+            completed: ttft.len() as u64,
+            tokens_generated: 10 * ttft.len() as u64,
+            cache_hits: hits,
+            cache_misses: misses,
+            flash_reads: misses,
+            flash_bytes: misses * 64,
+            ttft_s: ttft,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fleet_metrics_aggregate_and_per_replica_views() {
+        let m = FleetMetrics {
+            per_replica: vec![
+                replica_metrics(9, 1, vec![0.1, 0.2]),
+                replica_metrics(1, 9, vec![0.4]),
+            ],
+            placements: vec![2, 1],
+            steals: 1,
+            migrations: 1,
+            rejected: 0,
+            placement_label: "affinity".to_string(),
+        };
+        assert_eq!(m.completed(), 3);
+        assert_eq!(m.tokens_generated(), 30);
+        assert_eq!(m.flash_reads(), 10);
+        // Per-replica rates stay visible; the fleet rate is access-weighted.
+        assert!((m.replica_hit_rate(0) - 0.9).abs() < 1e-12);
+        assert!((m.replica_hit_rate(1) - 0.1).abs() < 1e-12);
+        assert_eq!(m.replica_hit_rate(2), 0.0);
+        assert!((m.fleet_hit_rate() - 0.5).abs() < 1e-12);
+        // Merged percentiles span all replicas' samples: p100 comes from
+        // replica 1 even though replica 0 has more requests.
+        assert!((m.ttft_percentile(100.0) - 0.4).abs() < 1e-12);
+        assert!((m.ttft_percentile(0.0) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fleet_summary_reports_both_hit_rate_views() {
+        let m = FleetMetrics {
+            per_replica: vec![
+                replica_metrics(3, 1, vec![0.1]),
+                replica_metrics(1, 3, vec![0.2]),
+            ],
+            placements: vec![1, 1],
+            placement_label: "least-loaded".to_string(),
+            ..Default::default()
+        };
+        let s = m.summary();
+        assert!(s.contains("replicas=2"));
+        assert!(s.contains("placement=least-loaded"));
+        assert!(s.contains("fleet_hit_rate=0.500"));
+        assert!(s.contains("replica_hit_rates=[0.750,0.250]"));
+        assert!(s.contains("placements=[1,1]"));
+        assert!(s.contains("steals=0"));
+    }
+
+    #[test]
+    fn empty_fleet_metrics_are_all_zero() {
+        let m = FleetMetrics::default();
+        assert_eq!(m.completed(), 0);
+        assert_eq!(m.fleet_hit_rate(), 0.0);
+        assert_eq!(m.ttft_percentile(50.0), 0.0);
+    }
+
+    #[test]
+    fn default_config_is_a_stealing_pair() {
+        let c = FleetConfig::default();
+        assert_eq!(c.replicas, 2);
+        assert!(c.steal);
+        crate::policy::validate_placement_spec(&c.placement).unwrap();
+    }
+}

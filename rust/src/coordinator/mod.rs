@@ -21,9 +21,20 @@
 //! ([`Event::Token`]), so TTFT is decoupled from whole-generation latency.
 //! Metrics per request: TTFT (from submission), decode tok/s, virtual
 //! device tok/s, per-session cache hits/misses.
+//!
+//! Above the single server sits the *fleet* tier ([`fleet`]): N replica
+//! coordinators — one engine + cache each, sharing one read-only expert
+//! store — behind a router that places sessions with a pluggable
+//! [`crate::policy::PlacementPolicy`] (the fourth axis) and steals work
+//! from the longest queue when a replica drains (see `docs/FLEET.md`).
 
+pub mod fleet;
 pub mod server;
 pub mod session;
 
-pub use server::{predict_ttft_s, Coordinator, ServerConfig, ServerMetrics, WatchdogExpired};
+pub use fleet::{EngineFactory, FleetConfig, FleetMetrics, FleetServer};
+pub use server::{
+    predict_ttft_s, Coordinator, ReplicaStatus, ServerConfig, ServerMetrics, StatusCell,
+    WatchdogExpired,
+};
 pub use session::{Event, FinishReason, Request, RequestResult, Schedule};

@@ -34,6 +34,7 @@
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -142,6 +143,11 @@ pub struct ServerMetrics {
     /// the serial-vs-gang benches compare it at equal aggregate tokens.
     pub flash_reads: u64,
     pub flash_bytes: u64,
+    /// Shared expert-cache totals at shutdown (`Engine::cache_totals`):
+    /// hits and misses across every session this server interleaved. The
+    /// fleet tier folds these into per-replica and fleet-wide hit rates.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
     /// Store faults injected/observed at the tier (nonzero only behind a
     /// `fault:` backend — see [`crate::store::FaultStore`]).
     pub store_faults: u64,
@@ -180,6 +186,17 @@ impl ServerMetrics {
     /// requests (seconds).
     pub fn queue_delay_percentile(&self, p: f64) -> f64 {
         percentile(&self.queue_delay_s, p)
+    }
+
+    /// Expert-cache hit rate over the server's whole lifetime (0.0 when
+    /// no accesses were recorded).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
     }
 
     /// Fraction of offered requests shed by SLO-aware admission. Offered =
@@ -230,6 +247,31 @@ pub fn predict_ttft_s(step_s: f64, own_prompt_tokens: usize, backlog_tokens: usi
     step_s * (own_prompt_tokens + backlog_tokens) as f64
 }
 
+/// Load + residency snapshot one engine thread publishes for the fleet
+/// router, refreshed once per engine-loop iteration (≈ every fused step
+/// under continuous batching). Placement policies read it through
+/// [`crate::policy::ReplicaView`]; `docs/FLEET.md` specifies the protocol.
+#[derive(Debug, Clone, Default)]
+pub struct ReplicaStatus {
+    /// Requests queued behind admission on this replica.
+    pub queued: usize,
+    /// Sessions currently interleaving in the cohort.
+    pub active: usize,
+    /// Backlog estimate in tokens (the same signal the SLO shed check
+    /// feeds into [`predict_ttft_s`]).
+    pub backlog_tokens: usize,
+    /// Sorted resident expert ids per layer (`ExpertCache::resident`) —
+    /// the summary affinity placement scores routing signals against.
+    pub resident: Vec<Vec<u32>>,
+    /// Requests this replica has completed so far (monotone).
+    pub completed: u64,
+}
+
+/// Shared cell a status-publishing coordinator writes and the fleet
+/// router reads. A plain mutex: the write is tiny (a few counters plus
+/// per-layer id lists) and happens once per engine-loop iteration.
+pub type StatusCell = std::sync::Mutex<ReplicaStatus>;
+
 enum Msg {
     Run(Request, Sender<Event>, Instant),
     /// Atomic enqueue of many requests: admission order is the batch order
@@ -253,6 +295,21 @@ impl Coordinator {
     where
         F: FnOnce() -> Result<Engine> + Send + 'static,
     {
+        Self::spawn_with_status(factory, cfg, None)
+    }
+
+    /// [`Coordinator::spawn`] that additionally publishes a
+    /// [`ReplicaStatus`] snapshot into `status` at every engine-loop
+    /// iteration. The fleet router reads the cell to place sessions by
+    /// load and cache affinity; a solo coordinator never needs one.
+    pub fn spawn_with_status<F>(
+        factory: F,
+        cfg: ServerConfig,
+        status: Option<Arc<StatusCell>>,
+    ) -> Result<Self>
+    where
+        F: FnOnce() -> Result<Engine> + Send + 'static,
+    {
         let (tx, rx): (Sender<Msg>, Receiver<Msg>) = mpsc::channel();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
         let handle = std::thread::spawn(move || {
@@ -266,7 +323,7 @@ impl Coordinator {
                     return ServerMetrics::default();
                 }
             };
-            engine_loop(&mut engine, &rx, &cfg)
+            engine_loop(&mut engine, &rx, &cfg, status.as_deref())
         });
         match ready_rx.recv() {
             Ok(Ok(())) => Ok(Coordinator { tx, handle: Some(handle) }),
@@ -429,20 +486,39 @@ fn backlog_tokens(st: &LoopState, max_sessions: usize) -> usize {
     queued + prefill + slot_wait
 }
 
-/// Fold one measured step into the per-token latency EWMA.
+/// Fold one measured step into the per-token latency EWMA
+/// ([`crate::util::stats::blend_ewma`] — shared with the virtual-clock
+/// serving replay so both predictors age identically).
 fn update_step_ewma(st: &mut LoopState, wall_s: f64, tokens: usize) {
-    if tokens == 0 || wall_s <= 0.0 {
+    if tokens == 0 {
         return;
     }
-    let per = wall_s / tokens as f64;
-    st.step_ewma_s = if st.step_ewma_s == 0.0 {
-        per
-    } else {
-        0.8 * st.step_ewma_s + 0.2 * per
-    };
+    st.step_ewma_s = crate::util::stats::blend_ewma(st.step_ewma_s, wall_s / tokens as f64);
 }
 
-fn engine_loop(engine: &mut Engine, rx: &Receiver<Msg>, cfg: &ServerConfig) -> ServerMetrics {
+/// Refresh the fleet-visible snapshot: queue/cohort depth, the token
+/// backlog, and each layer's resident expert ids. A poisoned lock (a
+/// panicked reader) just means we keep writing through it — the data is
+/// plain counters, always internally consistent.
+fn publish_status(cell: &StatusCell, engine: &Engine, st: &LoopState, max_sessions: usize) {
+    let mut s = match cell.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    s.queued = st.queue.len();
+    s.active = st.active.len();
+    s.backlog_tokens = backlog_tokens(st, max_sessions);
+    s.completed = st.metrics.completed;
+    s.resident.clear();
+    s.resident.extend(engine.caches.iter().map(|c| c.resident()));
+}
+
+fn engine_loop(
+    engine: &mut Engine,
+    rx: &Receiver<Msg>,
+    cfg: &ServerConfig,
+    status: Option<&StatusCell>,
+) -> ServerMetrics {
     let mut st = LoopState {
         queue: VecDeque::new(),
         active: Vec::new(),
@@ -490,6 +566,10 @@ fn engine_loop(engine: &mut Engine, rx: &Receiver<Msg>, cfg: &ServerConfig) -> S
                 break;
             };
             admit(engine, &mut st, req, reply, submitted);
+        }
+        // ---- publish load + residency for the fleet router ----
+        if let Some(cell) = status {
+            publish_status(cell, engine, &st, max_active);
         }
         if st.active.is_empty() {
             continue;
@@ -543,6 +623,14 @@ fn engine_loop(engine: &mut Engine, rx: &Receiver<Msg>, cfg: &ServerConfig) -> S
             }
         }
     }
+    // Final snapshot so the fleet router never sees stale load from a
+    // replica that has already drained.
+    if let Some(cell) = status {
+        publish_status(cell, engine, &st, max_active);
+    }
+    let (hits, misses, _miss_rate) = engine.cache_totals();
+    st.metrics.cache_hits = hits;
+    st.metrics.cache_misses = misses;
     let tier = engine.tier_stats();
     st.metrics.flash_reads = tier.flash_reads;
     st.metrics.flash_bytes = tier.flash_bytes;
@@ -1429,6 +1517,8 @@ mod tests {
             queue_delay_s: vec![0.05],
             flash_reads: 5,
             flash_bytes: 4096,
+            cache_hits: 9,
+            cache_misses: 3,
             store_faults: 3,
             fetch_retries: 2,
             fetch_failures: 1,
@@ -1512,6 +1602,14 @@ mod tests {
             ..Default::default()
         };
         assert!((m.shed_rate() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_hit_rate_handles_zero_and_mixed_totals() {
+        let m = ServerMetrics::default();
+        assert_eq!(m.cache_hit_rate(), 0.0);
+        let m = ServerMetrics { cache_hits: 9, cache_misses: 3, ..Default::default() };
+        assert!((m.cache_hit_rate() - 0.75).abs() < 1e-12);
     }
 
     #[test]

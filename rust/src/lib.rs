@@ -25,19 +25,24 @@
 //! * [`routing`] — routing primitives (softmax/ranking/promote) and the
 //!   label-only `Strategy`/`DeltaMode` enums
 //! * [`policy`] — the pluggable policy stack: `RoutingPolicy` +
-//!   `EvictionPolicy` traits, the unified spec registry
-//!   (`cache-prior:0.5:2`, `lru`, `belady:trace=FILE`, `lfu-decay:64`),
-//!   and all built-in implementations
+//!   `EvictionPolicy` + `PlacementPolicy` traits (routing × eviction ×
+//!   store × placement, the four pluggable axes), the unified spec
+//!   registry (`cache-prior:0.5:2`, `lru`, `belady:trace=FILE`,
+//!   `lfu-decay:64`, `affinity:tie=random`), and all built-in
+//!   implementations
 //! * [`runtime`] — PJRT executable registry (HLO-text artifacts; raw
 //!   components keep their output device-resident)
 //! * [`model`] — the token-generation engine composing the AOT components,
 //!   with the slot-arena expert staging and the async flash prefetcher
-//! * [`tracesim`] — trace-driven cache simulation (Belady bound, Fig. 10/11)
+//! * [`tracesim`] — trace-driven cache simulation (Belady bound,
+//!   Fig. 10/11) plus the virtual-clock serving and fleet replays
 //! * [`eval`] — perplexity / SynthQA / SynthMath harnesses + sweeps
 //! * [`coordinator`] — the multi-session serving loop: admission, session
 //!   swap, FCFS / round-robin / cache-affinity / gang decode rounds
 //!   (gang = lockstepped fused-batch decode with per-distinct-expert
-//!   fetch coalescing), streaming delivery, per-request metrics
+//!   fetch coalescing), streaming delivery, per-request metrics; and the
+//!   multi-replica fleet tier — placement-routed replicas over one
+//!   shared read-only expert store, with work stealing (`docs/FLEET.md`)
 //! * [`report`] — CSV/markdown emitters shared by the benches
 
 pub mod cache;

@@ -14,7 +14,9 @@ use std::path::Path;
 use anyhow::{Context, Result};
 use moe_cache::cli::Args;
 use moe_cache::config::{DeviceProfile, Quant, CONFIG_NAMES};
-use moe_cache::coordinator::{Coordinator, Event, Request, Schedule, ServerConfig};
+use moe_cache::coordinator::{
+    Coordinator, Event, FleetConfig, FleetServer, Request, Schedule, ServerConfig,
+};
 use moe_cache::eval::sweep::{run_point_spec, EvalBudget, Task};
 use moe_cache::eval::{eval_math, eval_ppl, eval_qa, EvalData};
 use moe_cache::model::{Engine, EngineBuilder};
@@ -53,7 +55,17 @@ COMMANDS:
                                             batch (0 = closed loop)
                         --arrival-seed N    Poisson arrival seed (default 42)
                         --strategies S1,S2  per-request routing overrides,
-                                            assigned cyclically]
+                                            assigned cyclically
+                        --replicas N        fleet mode: N replica servers
+                                            (one engine + cache each, one
+                                            shared read-only expert store)
+                                            behind a placement router
+                                            (default 1 = single server)
+                        --placement SPEC    fleet placement policy (random |
+                                            least-loaded | affinity, default
+                                            least-loaded; see below)
+                        --no-steal          disable work stealing between
+                                            replica queues]
   eval-ppl   --model M [--cache C --strategy S --policy P --chunks N --chunk-len L]
   eval-qa    --model M [--cache C --strategy S --policy P --items N]
   eval-math  --model M [--cache C --strategy S --policy P --items N]
@@ -78,8 +90,9 @@ fault:inner=sim,profile=device-12gb:err=0.01; see docs/ROBUSTNESS.md).
 
 fn usage() -> String {
     format!(
-        "{USAGE}\n{}{}",
+        "{USAGE}\n{}{}{}",
         moe_cache::policy::registry_help(),
+        moe_cache::policy::placement_registry_help(),
         moe_cache::store::registry_help()
     )
 }
@@ -187,14 +200,6 @@ fn serve(args: &Args) -> Result<()> {
         ..ServerConfig::default()
     };
     let stream = args.bool("stream");
-    let args2 = args.clone();
-    let coord = Coordinator::spawn(move || engine_from_args(&args2), cfg.clone())?;
-    println!(
-        "serving {n_req} requests (schedule={} max_sessions={} quantum={})",
-        cfg.schedule.label(),
-        cfg.max_sessions,
-        cfg.decode_quantum,
-    );
     let temperature = args.f64_or("temperature", 0.8)? as f32;
     // Per-request routing overrides, assigned cyclically: e.g.
     // `--strategies original,cache-prior:0.9:2` pins request 0 to plain
@@ -233,6 +238,19 @@ fn serve(args: &Args) -> Result<()> {
         })
         .collect();
     let prompt_lens: Vec<usize> = reqs.iter().map(|r| r.prompt.len()).collect();
+    // Fleet mode: N replica servers behind the placement router.
+    let replicas = args.usize_or("replicas", 1)?;
+    if replicas > 1 {
+        return serve_fleet(args, cfg, reqs, prompt_lens, stream, replicas);
+    }
+    let args2 = args.clone();
+    let coord = Coordinator::spawn(move || engine_from_args(&args2), cfg.clone())?;
+    println!(
+        "serving {n_req} requests (schedule={} max_sessions={} quantum={})",
+        cfg.schedule.label(),
+        cfg.max_sessions,
+        cfg.decode_quantum,
+    );
     // Closed loop (default): one atomic batch on one shared event channel
     // — the batch pins the admission order (the schedule, not submission
     // timing, decides the interleaving, reproducibly), and tokens print in
@@ -259,6 +277,21 @@ fn serve(args: &Args) -> Result<()> {
     } else {
         coord.submit_batch_with(reqs, tx)?;
     }
+    drain_events(&rx, n_submitted, &prompt_lens, stream)?;
+    let m = coord.shutdown();
+    println!("{}", m.summary());
+    Ok(())
+}
+
+/// Receive tokens/results for `n_submitted` requests off the shared event
+/// channel, then print one line per completed request — identical output
+/// in solo and fleet mode.
+fn drain_events(
+    rx: &std::sync::mpsc::Receiver<Event>,
+    n_submitted: usize,
+    prompt_lens: &[usize],
+    stream: bool,
+) -> Result<()> {
     let mut results: Vec<Option<moe_cache::coordinator::RequestResult>> =
         vec![None; n_submitted];
     let mut done = 0usize;
@@ -295,9 +328,120 @@ fn serve(args: &Args) -> Result<()> {
             res.cache_hits as f64 / (res.cache_hits + res.cache_misses).max(1) as f64,
         );
     }
-    let m = coord.shutdown();
+    Ok(())
+}
+
+/// Fleet mode (`--replicas N`): N replica servers — one engine + expert
+/// cache each, every one fetching from a share of the same read-only
+/// store — behind a placement router. Live prompts carry no routing
+/// history, so requests are submitted with an empty placement signal and
+/// `affinity` falls back to its tie-break; signal-driven placement
+/// comparisons live in the deterministic replay (`tracesim::fleet`,
+/// `BENCH_fleet.json`).
+fn serve_fleet(
+    args: &Args,
+    server: ServerConfig,
+    reqs: Vec<Request>,
+    prompt_lens: Vec<usize>,
+    stream: bool,
+    replicas: usize,
+) -> Result<()> {
+    let cfg = FleetConfig {
+        replicas,
+        placement: args.get_or("placement", "least-loaded").to_string(),
+        server,
+        steal: !args.bool("no-steal"),
+    };
+    let fleet = FleetServer::spawn(fleet_factories(args, replicas)?, cfg.clone())?;
+    println!(
+        "fleet serving {} requests (replicas={} placement={} steal={} schedule={} max_sessions={})",
+        reqs.len(),
+        replicas,
+        cfg.placement,
+        cfg.steal,
+        cfg.server.schedule.label(),
+        cfg.server.max_sessions,
+    );
+    let (tx, rx) = std::sync::mpsc::channel();
+    let n_submitted = reqs.len();
+    let arrival_rate = args.f64_or("arrival-rate", 0.0)?;
+    if arrival_rate > 0.0 {
+        let seed = args.usize_or("arrival-seed", 42)? as u64;
+        let arrivals =
+            moe_cache::tracesim::serving::poisson_arrivals(n_submitted, arrival_rate, seed);
+        println!("open-loop arrivals: {arrival_rate} req/s, seed {seed}");
+        let t0 = std::time::Instant::now();
+        for (req, at) in reqs.into_iter().zip(arrivals) {
+            let wait = at - t0.elapsed().as_secs_f64();
+            if wait > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+            }
+            fleet.submit_with(req, tx.clone())?;
+        }
+    } else {
+        fleet.submit_batch_with(reqs.into_iter().map(|r| (r, Vec::new())).collect(), tx)?;
+    }
+    drain_events(&rx, n_submitted, &prompt_lens, stream)?;
+    let m = fleet.shutdown();
     println!("{}", m.summary());
     Ok(())
+}
+
+/// Per-replica engine factories for fleet mode. The `--store` spec is
+/// built ONCE; when the backend supports read-only sharing
+/// ([`moe_cache::store::ExpertStore::try_share`]: sim, mmap, mem) every
+/// replica engine gets a view over the same bytes with its own
+/// `TierStats`. Backends that cannot share (the fault wrapper's seeded
+/// RNG) fall back to one independent store per replica.
+fn fleet_factories(
+    args: &Args,
+    replicas: usize,
+) -> Result<Vec<moe_cache::coordinator::EngineFactory>> {
+    let spec = args.get_or("store", "sim").to_string();
+    let model = args.get("model").context("--model required")?.to_string();
+    let arts = artifacts_dir();
+    let quant = Quant::parse(args.get_or("quant", "int4"))?;
+    let image = std::sync::Arc::new(FlashImage::open_artifact(&arts, &model, quant)?);
+    let image_path = FlashImage::artifact_path(&arts, &model, quant);
+    let device = DeviceProfile::by_name(args.get_or("device", "device-16gb"))?;
+    let ctx = moe_cache::store::StoreCtx { image: &image, image_path, device };
+    let base = moe_cache::store::parse_store(&spec, &ctx)?;
+    (0..replicas)
+        .map(|_| {
+            let shared = base.try_share();
+            let args2 = args.clone();
+            let f: moe_cache::coordinator::EngineFactory = Box::new(move || match shared {
+                Some(store) => engine_with_store(&args2, store),
+                None => engine_from_args(&args2),
+            });
+            Ok(f)
+        })
+        .collect()
+}
+
+/// [`engine_from_args`], but fetching through a pre-built store (a shared
+/// fleet view) instead of parsing `--store` per engine.
+fn engine_with_store(
+    args: &Args,
+    store: Box<dyn moe_cache::store::ExpertStore>,
+) -> Result<Engine> {
+    let model = args.get("model").context("--model required")?;
+    let arts = artifacts_dir();
+    let manifest = moe_cache::runtime::Runtime::load(&arts.join(model))?;
+    let n = manifest.config.n_experts;
+    let j = manifest.config.default_top_j();
+    let default_strategy = format!("cache-prior:0.5:{j}");
+    EngineBuilder::new(&arts, model)
+        .runtime(manifest)
+        .quant(Quant::parse(args.get_or("quant", "int4"))?)
+        .cache_capacity(args.usize_or("cache", n / 2)?)
+        .device(DeviceProfile::by_name(args.get_or("device", "device-16gb"))?)
+        .seed(args.usize_or("seed", 7)? as u64)
+        .record_trace(args.bool("record-trace"))
+        .routing_spec(args.get_or("strategy", &default_strategy))?
+        .eviction_spec(args.get_or("policy", "lru"))?
+        .store(store)
+        .build()
 }
 
 fn eval_ppl_cmd(args: &Args) -> Result<()> {

@@ -145,6 +145,7 @@ pub struct EngineBuilder {
     routing: Option<Box<dyn RoutingPolicy>>,
     eviction: Option<EvictionFactory>,
     store: Option<String>,
+    store_built: Option<Box<dyn ExpertStore>>,
     fetch_policy: Option<FetchPolicy>,
 }
 
@@ -159,6 +160,7 @@ impl EngineBuilder {
             routing: None,
             eviction: None,
             store: None,
+            store_built: None,
             fetch_policy: None,
         }
     }
@@ -242,6 +244,18 @@ impl EngineBuilder {
         Ok(self)
     }
 
+    /// Storage backend as a pre-built trait object — the fleet path:
+    /// every replica engine receives a `share()` of one read-only
+    /// backend (e.g. [`crate::store::MmapStore::share`]), so the mapped
+    /// image is opened exactly once across the fleet while `TierStats`
+    /// accounting stays strictly per-replica. Takes precedence over
+    /// [`EngineBuilder::store_spec`]; the caller is responsible for the
+    /// backend matching the engine's model config.
+    pub fn store(mut self, store: Box<dyn ExpertStore>) -> Self {
+        self.store_built = Some(store);
+        self
+    }
+
     /// Retry/deadline policy for transient store faults (defaults to
     /// [`FetchPolicy::default`]).
     pub fn fetch_policy(mut self, p: FetchPolicy) -> Self {
@@ -272,6 +286,7 @@ impl EngineBuilder {
             routing,
             eviction,
             self.store.as_deref(),
+            self.store_built,
         )?;
         if let Some(p) = self.fetch_policy {
             engine.set_fetch_policy(p);
@@ -568,10 +583,11 @@ impl Engine {
     ) -> Result<Self> {
         let routing = crate::policy::from_strategy(&opts.strategy);
         let eviction = EvictionFactory::from_policy(opts.policy);
-        Self::build_from_parts(rt, artifacts, cfg_name, opts, routing, eviction, None)
+        Self::build_from_parts(rt, artifacts, cfg_name, opts, routing, eviction, None, None)
     }
 
     /// The one real constructor: everything above funnels here.
+    #[allow(clippy::too_many_arguments)]
     fn build_from_parts(
         rt: Runtime,
         artifacts: &Path,
@@ -580,6 +596,7 @@ impl Engine {
         routing: Box<dyn RoutingPolicy>,
         eviction: EvictionFactory,
         store_spec: Option<&str>,
+        store_built: Option<Box<dyn ExpertStore>>,
     ) -> Result<Self> {
         // A live engine never supplies the next-use closure, so an
         // oracle-requiring policy (plain `belady`) would panic at the
@@ -598,12 +615,18 @@ impl Engine {
         // The storage tier: built against the opened image so spec
         // defaults (mmap path, device profile) come from this engine's
         // configuration. Default is the seed-parity virtual-clock sim.
-        let store_ctx = store::StoreCtx {
-            image: &image,
-            image_path: FlashImage::artifact_path(artifacts, cfg_name, opts.quant),
-            device: opts.device.clone(),
+        let store = match store_built {
+            // Fleet path: a pre-built (usually shared) backend wins.
+            Some(s) => s,
+            None => {
+                let store_ctx = store::StoreCtx {
+                    image: &image,
+                    image_path: FlashImage::artifact_path(artifacts, cfg_name, opts.quant),
+                    device: opts.device.clone(),
+                };
+                store::parse_store(store_spec.unwrap_or("sim"), &store_ctx)?
+            }
         };
-        let store = store::parse_store(store_spec.unwrap_or("sim"), &store_ctx)?;
 
         // Upload static weights once (DRAM-resident per the paper §2.2).
         let d = cfg.d_model;

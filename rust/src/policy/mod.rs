@@ -14,6 +14,10 @@
 //!   (`cache-prior:0.5:2`, `cache_prior:lambda=0.5,j=2`, `lru`,
 //!   `belady:trace=results/trace.json`) replacing the three divergent
 //!   `parse()` paths that used to live in `routing`, `cache` and the CLI.
+//! * [`placement`] — replica-placement policies for the fleet tier
+//!   (`random`, `least-loaded`, `affinity`): the fourth pluggable axis,
+//!   same grammar, consumed by `coordinator::fleet` and
+//!   `tracesim::fleet`.
 //!
 //! Adding a policy is now an additive file drop: implement one trait,
 //! append one registry entry. Nothing in the engine hot path, the sweep
@@ -39,11 +43,17 @@
 //! ```
 
 pub mod evictors;
+pub mod placement;
 pub mod registry;
 pub mod routers;
 
 pub use evictors::{
     BeladyExternal, BeladyTrace, EvictionFactory, LfuDecay, LfuEviction, LruEviction,
+};
+pub use placement::{
+    parse_placement, placement_entries, placement_overlap, placement_registry_help,
+    validate_placement_spec, AffinityPlacement, AffinityTie, LeastLoadedPlacement,
+    PlacementEntry, PlacementPolicy, RandomPlacement, ReplicaView,
 };
 pub use registry::{
     eviction_entries, parse_eviction, parse_routing, registry_help, routing_entries,

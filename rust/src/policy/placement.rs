@@ -1,0 +1,395 @@
+//! Placement policies: the fourth pluggable axis (routing × eviction ×
+//! store × **placement**).
+//!
+//! A fleet front-end admits a request and must pick the engine replica it
+//! runs on. The paper's cache-aware routing exploits expert reuse *within*
+//! one decode stream; placement lifts that locality one level up — put the
+//! session on the replica whose *resident expert set* it overlaps most, so
+//! expert residency becomes a fleet property instead of a per-engine one
+//! (MoE-Infinity / ExpertFlow's working-set grouping, see PAPERS.md).
+//!
+//! Policies are object-safe trait objects behind the same spec-registry
+//! grammar as the other three axes (`name[:arg|key=value]...`, `_` ≡ `-`):
+//!
+//! ```text
+//! random | random:seed=7       seeded uniform pick (the null baseline)
+//! least-loaded                 fewest queued+active sessions, lowest index on ties
+//! affinity | affinity:tie=random   max Σ_l |signal_l ∩ resident_l|, ties by load
+//! ```
+//!
+//! A policy sees two things per decision (the residency-summary protocol,
+//! `docs/FLEET.md`):
+//!
+//! * the request's **routing signal** — its recent per-layer top-K expert
+//!   selections (a session's trace tail, or a prompt-prefix prediction).
+//!   May be empty for a brand-new request, in which case `affinity`
+//!   degrades to its tie-break.
+//! * one [`ReplicaView`] per replica — queued/active load plus the
+//!   per-layer **resident-expert summary** each replica publishes at step
+//!   granularity (sorted, from `ExpertCache::resident`).
+//!
+//! Decisions must be pure functions of those inputs plus the policy's own
+//! seeded state: the virtual-clock fleet replay (`tracesim::fleet`) relies
+//! on bit-reproducible placement to compare policies.
+//!
+//! ```
+//! use moe_cache::policy::{parse_placement, ReplicaView};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut p = parse_placement("affinity")?;
+//! let views = [
+//!     ReplicaView { queued: 1, active: 1, resident: &[vec![0, 1]] },
+//!     ReplicaView { queued: 0, active: 1, resident: &[vec![2, 3]] },
+//! ];
+//! // Signal overlaps replica 1's residency -> placed there.
+//! assert_eq!(p.place(&[vec![2]], &views), 1);
+//! # Ok(())
+//! # }
+//! ```
+
+use anyhow::{Context, Result};
+
+use crate::util::rng::Rng;
+
+use super::SpecArgs;
+
+/// One replica's published state, as seen by a placement decision.
+///
+/// `resident[l]` is the replica's layer-`l` resident-expert summary
+/// (sorted ascending, the direct output of `ExpertCache::resident`); an
+/// empty outer slice means the replica has not published yet (cold) and
+/// scores zero overlap everywhere.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaView<'a> {
+    /// Requests waiting on this replica (fleet-level queue + admitted
+    /// but unfinished submissions).
+    pub queued: usize,
+    /// Sessions currently decoding or prefilling.
+    pub active: usize,
+    /// Per-layer resident-expert summary, sorted ascending per layer.
+    pub resident: &'a [Vec<u32>],
+}
+
+impl ReplicaView<'_> {
+    /// Load proxy used by `least-loaded` and tie-breaks.
+    pub fn load(&self) -> usize {
+        self.queued + self.active
+    }
+}
+
+/// Σ over layers of |signal_l ∩ resident_l| — the placement-level
+/// counterpart of the coordinator's per-engine `affinity_overlap`. Layers
+/// beyond either side's length contribute zero.
+pub fn placement_overlap(signal: &[Vec<u32>], resident: &[Vec<u32>]) -> usize {
+    signal
+        .iter()
+        .zip(resident.iter())
+        .map(|(sig, res)| sig.iter().filter(|e| res.binary_search(e).is_ok()).count())
+        .sum()
+}
+
+/// An object-safe replica-placement policy (the fourth pluggable axis).
+///
+/// `place` returns the index of the chosen replica in `replicas` (callers
+/// guarantee `replicas` is non-empty). Policies may keep seeded internal
+/// state (e.g. `random`'s RNG) but must be deterministic given the same
+/// construction spec and the same call sequence.
+pub trait PlacementPolicy: Send {
+    /// Canonical spec label; must round-trip through [`parse_placement`].
+    fn label(&self) -> String;
+
+    /// Pick a replica for a request with routing signal `signal` (recent
+    /// per-layer top-K selections; may be empty for a cold request).
+    fn place(&mut self, signal: &[Vec<u32>], replicas: &[ReplicaView<'_>]) -> usize;
+}
+
+// ---------------------------------------------------------------------
+// Built-in policies
+// ---------------------------------------------------------------------
+
+/// Seeded uniform-random placement — the null baseline every affinity
+/// claim is measured against.
+#[derive(Debug)]
+pub struct RandomPlacement {
+    seed: u64,
+    rng: Rng,
+}
+
+impl RandomPlacement {
+    pub fn new(seed: u64) -> Self {
+        RandomPlacement { seed, rng: Rng::new(seed ^ 0x9e37_79b9_7f4a_7c15) }
+    }
+}
+
+impl PlacementPolicy for RandomPlacement {
+    fn label(&self) -> String {
+        format!("random:seed={}", self.seed)
+    }
+
+    fn place(&mut self, _signal: &[Vec<u32>], replicas: &[ReplicaView<'_>]) -> usize {
+        self.rng.below(replicas.len())
+    }
+}
+
+/// Fewest queued+active sessions; lowest index on ties (deterministic).
+#[derive(Debug)]
+pub struct LeastLoadedPlacement;
+
+impl PlacementPolicy for LeastLoadedPlacement {
+    fn label(&self) -> String {
+        "least-loaded".to_string()
+    }
+
+    fn place(&mut self, _signal: &[Vec<u32>], replicas: &[ReplicaView<'_>]) -> usize {
+        least_loaded(replicas)
+    }
+}
+
+fn least_loaded(replicas: &[ReplicaView<'_>]) -> usize {
+    let mut best = 0usize;
+    for (k, r) in replicas.iter().enumerate().skip(1) {
+        if r.load() < replicas[best].load() {
+            best = k;
+        }
+    }
+    best
+}
+
+/// How `affinity` breaks exact ties (equal overlap *and* equal load).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AffinityTie {
+    /// Lowest replica index (fully deterministic, the default).
+    Index,
+    /// Seeded random among the tied set.
+    Random,
+}
+
+/// Expert-affinity placement: maximize the overlap of the request's
+/// routing signal against each replica's resident-expert summary
+/// ([`placement_overlap`]); equal overlaps fall back to the lighter load,
+/// then to [`AffinityTie`]. An empty signal (cold request) scores zero
+/// everywhere and degrades to least-loaded.
+#[derive(Debug)]
+pub struct AffinityPlacement {
+    tie: AffinityTie,
+    seed: u64,
+    rng: Rng,
+}
+
+impl AffinityPlacement {
+    pub fn new(tie: AffinityTie, seed: u64) -> Self {
+        AffinityPlacement { tie, seed, rng: Rng::new(seed ^ 0x00af_f1_71) }
+    }
+}
+
+impl PlacementPolicy for AffinityPlacement {
+    fn label(&self) -> String {
+        match self.tie {
+            AffinityTie::Index => "affinity".to_string(),
+            AffinityTie::Random => format!("affinity:tie=random:seed={}", self.seed),
+        }
+    }
+
+    fn place(&mut self, signal: &[Vec<u32>], replicas: &[ReplicaView<'_>]) -> usize {
+        let scores: Vec<usize> =
+            replicas.iter().map(|r| placement_overlap(signal, r.resident)).collect();
+        let best_score = scores.iter().copied().max().unwrap_or(0);
+        let min_load = replicas
+            .iter()
+            .zip(&scores)
+            .filter(|(_, &s)| s == best_score)
+            .map(|(r, _)| r.load())
+            .min()
+            .unwrap_or(0);
+        let tied: Vec<usize> = (0..replicas.len())
+            .filter(|&k| scores[k] == best_score && replicas[k].load() == min_load)
+            .collect();
+        match self.tie {
+            AffinityTie::Index => tied[0],
+            AffinityTie::Random => tied[self.rng.below(tied.len())],
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------
+
+/// One registered placement policy.
+pub struct PlacementEntry {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub summary: &'static str,
+    /// A spec string that builds with defaults (registry smoke test).
+    pub example: &'static str,
+    pub build: fn(&SpecArgs) -> Result<Box<dyn PlacementPolicy>>,
+}
+
+fn build_random(a: &SpecArgs) -> Result<Box<dyn PlacementPolicy>> {
+    let seed = a.usize_or(0, "seed", 0)? as u64;
+    Ok(Box::new(RandomPlacement::new(seed)))
+}
+
+fn build_least_loaded(a: &SpecArgs) -> Result<Box<dyn PlacementPolicy>> {
+    a.no_args()?;
+    Ok(Box::new(LeastLoadedPlacement))
+}
+
+fn build_affinity(a: &SpecArgs) -> Result<Box<dyn PlacementPolicy>> {
+    let tie = match a.get(0, "tie") {
+        None | Some("index") => AffinityTie::Index,
+        Some("random") => AffinityTie::Random,
+        Some(other) => anyhow::bail!("unknown affinity tie-break {other:?} (index | random)"),
+    };
+    let seed = a.usize_or(1, "seed", 0)? as u64;
+    Ok(Box::new(AffinityPlacement::new(tie, seed)))
+}
+
+const PLACEMENT_ENTRIES: &[PlacementEntry] = &[
+    PlacementEntry {
+        name: "random",
+        aliases: &[],
+        summary: "seeded uniform-random replica pick, the null baseline (seed=)",
+        example: "random",
+        build: build_random,
+    },
+    PlacementEntry {
+        name: "least-loaded",
+        aliases: &["ll"],
+        summary: "fewest queued+active sessions; lowest index on ties",
+        example: "least-loaded",
+        build: build_least_loaded,
+    },
+    PlacementEntry {
+        name: "affinity",
+        aliases: &["expert-affinity"],
+        summary: "max overlap of the routing signal vs replica resident sets (tie=index|random, seed=)",
+        example: "affinity",
+        build: build_affinity,
+    },
+];
+
+pub fn placement_entries() -> &'static [PlacementEntry] {
+    PLACEMENT_ENTRIES
+}
+
+fn placement_names() -> String {
+    PLACEMENT_ENTRIES
+        .iter()
+        .map(|e| e.example)
+        .collect::<Vec<_>>()
+        .join(" | ")
+}
+
+/// Build a placement policy from a registry spec.
+pub fn parse_placement(spec: &str) -> Result<Box<dyn PlacementPolicy>> {
+    let args = SpecArgs::parse(spec)?;
+    let entry = PLACEMENT_ENTRIES
+        .iter()
+        .find(|e| e.name == args.name() || e.aliases.contains(&args.name()))
+        .with_context(|| {
+            format!("unknown placement {:?}; registered: {}", args.name(), placement_names())
+        })?;
+    (entry.build)(&args).with_context(|| format!("in placement spec {spec:?}"))
+}
+
+/// Grammar + name check (configuration-time validation).
+pub fn validate_placement_spec(spec: &str) -> Result<()> {
+    parse_placement(spec).map(|_| ())
+}
+
+/// Human-readable registry listing for `--help` output.
+pub fn placement_registry_help() -> String {
+    let mut out = String::from("PLACEMENT POLICIES (--placement):\n");
+    for e in PLACEMENT_ENTRIES {
+        out.push_str(&format!("  {:<24} {}\n", e.example, e.summary));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used)]
+
+    use super::*;
+
+    fn views<'a>(loads: &[(usize, usize)], resident: &'a [Vec<Vec<u32>>]) -> Vec<ReplicaView<'a>> {
+        loads
+            .iter()
+            .zip(resident.iter())
+            .map(|(&(queued, active), res)| ReplicaView { queued, active, resident: res })
+            .collect()
+    }
+
+    #[test]
+    fn every_entry_example_builds_and_roundtrips() {
+        for e in placement_entries() {
+            let p = parse_placement(e.example).unwrap();
+            let back = parse_placement(&p.label()).unwrap();
+            assert_eq!(p.label(), back.label(), "label of {} does not round-trip", e.name);
+        }
+    }
+
+    #[test]
+    fn unknown_names_enumerate_registry() {
+        let err = format!("{:#}", parse_placement("bogus").unwrap_err());
+        assert!(
+            err.contains("random") && err.contains("least-loaded") && err.contains("affinity"),
+            "{err}"
+        );
+        assert!(validate_placement_spec("").is_err());
+        assert!(validate_placement_spec("affinity:tie=bogus").is_err());
+    }
+
+    #[test]
+    fn help_lists_every_entry() {
+        let h = placement_registry_help();
+        for e in placement_entries() {
+            assert!(h.contains(e.name), "help missing {}", e.name);
+        }
+    }
+
+    #[test]
+    fn overlap_counts_per_layer_intersection() {
+        let signal = vec![vec![0, 2], vec![1, 3]];
+        let resident = vec![vec![0, 1, 2], vec![0, 2]];
+        // Layer 0: {0,2} ∩ {0,1,2} = 2; layer 1: {1,3} ∩ {0,2} = 0.
+        assert_eq!(placement_overlap(&signal, &resident), 2);
+        assert_eq!(placement_overlap(&[], &resident), 0);
+        assert_eq!(placement_overlap(&signal, &[]), 0);
+    }
+
+    #[test]
+    fn least_loaded_prefers_light_then_low_index() {
+        let res = vec![Vec::new(), Vec::new(), Vec::new()];
+        let mut p = parse_placement("least-loaded").unwrap();
+        let v = views(&[(2, 1), (0, 1), (1, 0)], &res);
+        assert_eq!(p.place(&[], &v), 1);
+        let v = views(&[(0, 1), (1, 0), (0, 1)], &res);
+        assert_eq!(p.place(&[], &v), 0, "tie breaks to lowest index");
+    }
+
+    #[test]
+    fn affinity_places_on_max_overlap() {
+        let res = vec![vec![vec![0, 1]], vec![vec![2, 3]], vec![vec![4, 5]]];
+        let mut p = parse_placement("affinity").unwrap();
+        let v = views(&[(0, 0), (5, 5), (0, 0)], &res);
+        // Overlap wins even against a heavily loaded replica.
+        assert_eq!(p.place(&[vec![2, 3]], &v), 1);
+        // Cold signal degrades to least-loaded (lowest index on tie).
+        assert_eq!(p.place(&[], &v), 0);
+    }
+
+    #[test]
+    fn seeded_policies_replay_deterministically() {
+        let res = vec![Vec::new(), Vec::new(), Vec::new(), Vec::new()];
+        let v = views(&[(0, 0), (0, 0), (0, 0), (0, 0)], &res);
+        let run = |spec: &str| {
+            let mut p = parse_placement(spec).unwrap();
+            (0..64).map(|_| p.place(&[], &v)).collect::<Vec<_>>()
+        };
+        assert_eq!(run("random:seed=7"), run("random:seed=7"));
+        assert_ne!(run("random:seed=7"), run("random:seed=8"));
+        assert_eq!(run("affinity:tie=random:seed=3"), run("affinity:tie=random:seed=3"));
+    }
+}

@@ -48,6 +48,10 @@ impl ExpertStore for MemStore {
         format!("mem:profile={}", self.profile.name)
     }
 
+    fn try_share(&self) -> Option<Box<dyn ExpertStore>> {
+        Some(Box::new(MemStore::new(self.image.clone(), self.profile.clone())))
+    }
+
     fn span_meta(&self, layer: usize, expert: usize) -> Result<SpanMeta> {
         let s = self.image.expert_span(layer, expert, false)?;
         Ok(SpanMeta { offset: s.offset, bytes: s.bytes })

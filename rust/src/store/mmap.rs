@@ -46,15 +46,21 @@ extern "C" {
 const PROT_READ: c_int = 1;
 const MAP_PRIVATE: c_int = 2;
 
-/// A read-only private mapping of one file. Unmapped on drop.
+/// A read-only private mapping of one file. Unmapped when the last owner
+/// drops it (fleet replicas share one mapping behind an [`Arc`]).
 struct Mapping {
     ptr: *mut c_void,
     len: usize,
 }
 
-// The mapping is read-only and owned exclusively by the store; raw-pointer
-// reads from another thread would only ever see the immutable file bytes.
+// SAFETY: the mapping is PROT_READ + MAP_PRIVATE and nothing ever writes
+// through `ptr` after `map` returns, so raw-pointer reads from any number
+// of threads only ever observe the immutable file bytes. Both bounds are
+// required for the fleet path, where N replica stores hold one mapping
+// through an `Arc` and fetch from it concurrently (each replica keeps its
+// own `TierStats`, so accounting never crosses threads).
 unsafe impl Send for Mapping {}
+unsafe impl Sync for Mapping {}
 
 impl Mapping {
     fn map(file: &File) -> Result<Self> {
@@ -95,7 +101,7 @@ pub struct MmapStore {
     /// Reader for the same file: header metadata, span table, dequant —
     /// and the pread path the async prefetch workers use.
     image: Arc<FlashImage>,
-    map: Mapping,
+    map: Arc<Mapping>,
     payload_start: u64,
     /// The mapped file, kept for the round-tripping spec label.
     path: std::path::PathBuf,
@@ -112,7 +118,7 @@ impl MmapStore {
         );
         let file = File::open(path)
             .with_context(|| format!("mmap store image {}", path.display()))?;
-        let map = Mapping::map(&file)?;
+        let map = Arc::new(Mapping::map(&file)?);
         anyhow::ensure!(
             map.len as u64 >= image.file_bytes,
             "mapping shorter than the image header claims"
@@ -126,6 +132,23 @@ impl MmapStore {
             stats: TierStats::default(),
             prefetcher: None,
         })
+    }
+
+    /// A new store over the *same* mapping (and image reader) with fresh,
+    /// independent accounting — the fleet path: N replicas share one
+    /// read-only `mmap` of the flash image while `TierStats` clocks and
+    /// byte counters stay strictly per-replica. The clone starts with
+    /// prefetch disabled; a replica that wants the pipeline opts in with
+    /// its own worker pool.
+    pub fn share(&self) -> MmapStore {
+        MmapStore {
+            image: self.image.clone(),
+            map: self.map.clone(),
+            payload_start: self.payload_start,
+            path: self.path.clone(),
+            stats: TierStats::default(),
+            prefetcher: None,
+        }
     }
 
     /// The underlying image metadata (config/span validation).
@@ -150,6 +173,10 @@ impl ExpertStore for MmapStore {
         // colon cannot round-trip — the artifact layout never produces
         // one, and such a path is only reachable via MmapStore::open.
         format!("mmap:path={}", self.path.display())
+    }
+
+    fn try_share(&self) -> Option<Box<dyn ExpertStore>> {
+        Some(Box::new(self.share()))
     }
 
     fn span_meta(&self, layer: usize, expert: usize) -> Result<SpanMeta> {

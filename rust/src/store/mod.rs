@@ -5,7 +5,8 @@
 //! expert weights fits DRAM, and decode throughput is governed by which
 //! tier each selected expert is served from (§3, Fig. 8). This module
 //! turns that hierarchy into an API, the system's third pluggable axis
-//! next to routing and eviction policies:
+//! next to routing and eviction policies (replica placement, the fourth,
+//! lives in [`crate::policy::placement`]):
 //!
 //! * [`ExpertStore`] — owns the full lifecycle of expert bytes: span
 //!   metadata, demand [`ExpertStore::fetch_into`] (dequantized, straight
@@ -279,6 +280,17 @@ pub struct FetchDst<'a> {
 pub trait ExpertStore: Send {
     /// Canonical spec label; must round-trip through [`parse_store`].
     fn label(&self) -> String;
+
+    /// Clone a read-only view over the same backing bytes with fresh
+    /// accounting — how a fleet ([`crate::coordinator::FleetServer`])
+    /// hands every replica the *same* expert store while keeping
+    /// per-replica [`TierStats`]. `sim` and `mem` share their image
+    /// `Arc`; `mmap` shares the mapping itself. Backends whose fetch
+    /// path carries mutable cross-fetch state (the `fault` wrapper's
+    /// seeded RNG) return `None` and the fleet builds one per replica.
+    fn try_share(&self) -> Option<Box<dyn ExpertStore>> {
+        None
+    }
 
     /// Span metadata for a routed expert.
     fn span_meta(&self, layer: usize, expert: usize) -> Result<SpanMeta>;

@@ -36,11 +36,23 @@ impl SimStore {
     pub fn profile(&self) -> &DeviceProfile {
         self.sim.profile()
     }
+
+    /// A new store over the *same* image with the same device profile and
+    /// a fresh virtual clock — the fleet path: N replicas share one
+    /// `Arc<FlashImage>` reader while each keeps its own `FlashSim`, so
+    /// per-replica `TierStats` never interleave.
+    pub fn share(&self) -> SimStore {
+        SimStore::new(self.image.clone(), self.profile().clone())
+    }
 }
 
 impl ExpertStore for SimStore {
     fn label(&self) -> String {
         format!("sim:profile={}", self.sim.profile().name)
+    }
+
+    fn try_share(&self) -> Option<Box<dyn ExpertStore>> {
+        Some(Box::new(self.share()))
     }
 
     fn span_meta(&self, layer: usize, expert: usize) -> Result<SpanMeta> {

@@ -1,0 +1,711 @@
+//! Virtual-clock fleet replay: N replicas, pluggable placement, work
+//! stealing — bit-reproducible placement comparisons.
+//!
+//! The live fleet ([`crate::coordinator::fleet`]) routes on wall-clock
+//! load, so two runs never produce identical numbers. This replay is its
+//! deterministic twin: each replica is an independent continuous-batching
+//! server on its own [`FlashSim`] clock (the per-step accounting is
+//! exactly [`super::serving::simulate_serving`]'s `Continuous` arm — a
+//! 1-replica fleet is asserted equal to it), and the router advances
+//! whichever replica's local clock is furthest behind, placing arrivals
+//! through the same [`crate::policy::PlacementPolicy`] registry the live
+//! router uses. Same seeded workload + same placement spec ⇒ identical
+//! [`FleetSimResult`], so "affinity issues strictly fewer store fetches
+//! than random at equal aggregate tokens" is a pinnable claim
+//! (`tests/fleet_parity.rs`, `results/BENCH_fleet.json`), not a flaky
+//! benchmark.
+//!
+//! The placement signal of a request is the per-layer union of its first
+//! few trace selections ([`placement_signal`]) — the stand-in for "this
+//! session's recent top-K" that a live multi-turn client would carry.
+//! [`clustered_workload`] builds the workload affinity placement exists
+//! for: requests drawing from disjoint expert bands, so colocating a
+//! band's requests shrinks each step's distinct-expert union while
+//! mixing bands (random placement) churns every replica's cache.
+
+use std::collections::VecDeque;
+
+use crate::cache::ExpertCache;
+use crate::config::DeviceProfile;
+use crate::flash::FlashSim;
+use crate::policy::{parse_placement, EvictionFactory, ReplicaView};
+use crate::store::TierStats;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+use super::serving::{poisson_arrivals, RequestSpec};
+use super::Trace;
+
+/// Knobs of one fleet replay (continuous batching only — the fleet tier
+/// targets open-loop serving, where gang rounds already lost to
+/// continuous in `BENCH_serving.json`).
+#[derive(Debug, Clone)]
+pub struct FleetSimConfig {
+    pub replicas: usize,
+    /// Placement spec in the registry grammar
+    /// ([`crate::policy::parse_placement`]).
+    pub placement: String,
+    /// Cohort slots per replica.
+    pub max_sessions: usize,
+    /// Expert cache capacity per layer, per replica.
+    pub capacity: usize,
+    /// Bytes moved per expert miss/hit.
+    pub bytes_per_expert: u64,
+    /// Work stealing: a replica whose queue drained pulls the oldest
+    /// request from the longest other queue before admitting.
+    pub steal: bool,
+    /// Leading trace tokens folded into the placement signal.
+    pub signal_tokens: usize,
+}
+
+impl Default for FleetSimConfig {
+    fn default() -> Self {
+        FleetSimConfig {
+            replicas: 2,
+            placement: "affinity".to_string(),
+            max_sessions: 4,
+            capacity: 8,
+            bytes_per_expert: 4096,
+            steal: true,
+            signal_tokens: 8,
+        }
+    }
+}
+
+/// One virtual replica's accounting, in deterministic recording order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ReplicaSimStats {
+    /// The replica's device counters (its private `FlashSim`).
+    pub tier: TierStats,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub completed: u64,
+    pub ttft_s: Vec<f64>,
+    pub queue_delay_s: Vec<f64>,
+    pub tpot_s: Vec<f64>,
+}
+
+impl ReplicaSimStats {
+    /// This replica's expert-cache hit rate (0.0 when cold).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+}
+
+/// Replay output. Two runs of the same seeded workload with the same
+/// config compare with `==` (the determinism pin).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FleetSimResult {
+    pub per_replica: Vec<ReplicaSimStats>,
+    /// Requests initially placed on each replica by the policy.
+    pub placements: Vec<u64>,
+    /// Requests a draining replica pulled from another's queue.
+    pub steals: u64,
+    /// Requests that ran on a different replica than first placed
+    /// (equal to `steals` — migration happens only by stealing).
+    pub migrations: u64,
+    /// Virtual instant the last replica finished (includes idle gaps).
+    pub makespan_s: f64,
+    /// Canonical label of the placement policy that ran.
+    pub placement_label: String,
+}
+
+impl FleetSimResult {
+    pub fn completed(&self) -> u64 {
+        self.per_replica.iter().map(|r| r.completed).sum()
+    }
+
+    /// Total slow-tier fetches across the fleet — the acceptance metric
+    /// affinity placement must strictly beat random on.
+    pub fn total_flash_reads(&self) -> u64 {
+        self.per_replica.iter().map(|r| r.tier.flash_reads).sum()
+    }
+
+    pub fn total_flash_bytes(&self) -> u64 {
+        self.per_replica.iter().map(|r| r.tier.flash_bytes).sum()
+    }
+
+    /// Access-weighted hit rate across all replicas.
+    pub fn fleet_hit_rate(&self) -> f64 {
+        let hits: u64 = self.per_replica.iter().map(|r| r.cache_hits).sum();
+        let misses: u64 = self.per_replica.iter().map(|r| r.cache_misses).sum();
+        let total = hits + misses;
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+
+    /// TTFT percentile over all replicas' completed requests.
+    pub fn ttft_percentile(&self, p: f64) -> f64 {
+        let merged: Vec<f64> =
+            self.per_replica.iter().flat_map(|r| r.ttft_s.iter().copied()).collect();
+        stats::percentile(&merged, p)
+    }
+}
+
+/// A request's placement signal: the per-layer union of its first
+/// `tokens` trace selections, sorted + deduped — what
+/// [`crate::policy::placement_overlap`] scores against each replica's
+/// resident summary.
+pub fn placement_signal(trace: &Trace, tokens: usize) -> Vec<Vec<u32>> {
+    let n = trace.tokens().min(tokens.max(1));
+    (0..trace.n_layers)
+        .map(|l| {
+            let mut v: Vec<u32> = (0..n)
+                .flat_map(|t| trace.selections[t][l].iter().copied())
+                .collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        })
+        .collect()
+}
+
+/// Shape of a clustered open-loop workload (see [`clustered_workload`]).
+#[derive(Debug, Clone)]
+pub struct ClusteredWorkloadSpec {
+    pub n_requests: usize,
+    /// Poisson arrival rate (requests per virtual second).
+    pub rate_per_s: f64,
+    pub seed: u64,
+    pub n_layers: usize,
+    pub n_experts: usize,
+    /// Experts selected per token per layer.
+    pub top_k: usize,
+    pub prompt_tokens: usize,
+    pub decode_tokens: usize,
+    /// Disjoint contiguous expert bands; request `i` draws all its
+    /// selections from band `i % clusters`.
+    pub clusters: usize,
+}
+
+/// Build a seeded workload whose requests route inside disjoint expert
+/// bands — the traffic shape affinity placement exists for. Like
+/// [`super::serving::synthetic_workload`], the trace stream depends only
+/// on `(seed, shape)`, never on `rate_per_s`.
+pub fn clustered_workload(spec: &ClusteredWorkloadSpec) -> Vec<RequestSpec> {
+    assert!(spec.clusters >= 1, "need at least one cluster");
+    let band = spec.n_experts / spec.clusters;
+    assert!(
+        band >= spec.top_k && band >= 1,
+        "cluster band ({band} experts) must fit top_k ({})",
+        spec.top_k
+    );
+    let arrivals = poisson_arrivals(spec.n_requests, spec.rate_per_s, spec.seed ^ 0x00c1_05f3);
+    let mut rng = Rng::new(spec.seed);
+    arrivals
+        .into_iter()
+        .enumerate()
+        .map(|(i, arrival_s)| {
+            let lo = ((i % spec.clusters) * band) as u32;
+            let mut trace = Trace::new(spec.n_experts, spec.n_layers);
+            for _ in 0..spec.prompt_tokens + spec.decode_tokens {
+                let mut per_layer = Vec::with_capacity(spec.n_layers);
+                for _ in 0..spec.n_layers {
+                    let mut ids: Vec<u32> = (lo..lo + band as u32).collect();
+                    rng.shuffle(&mut ids);
+                    ids.truncate(spec.top_k);
+                    per_layer.push(ids);
+                }
+                trace.push_token(per_layer, None);
+            }
+            RequestSpec { arrival_s, prompt_tokens: spec.prompt_tokens, trace }
+        })
+        .collect()
+}
+
+/// A request occupying one replica's cohort slot.
+struct Live {
+    req: usize,
+    fed: usize,
+    ttft_s: f64,
+    finish_s: f64,
+}
+
+/// Record the token just consumed: TTFT at prefill completion, finish
+/// instant at trace exhaustion (same bookkeeping as the serving replay).
+fn note(s: &mut Live, r: &RequestSpec, now_s: f64, ttft_out: &mut Vec<f64>) {
+    s.fed += 1;
+    if s.fed == r.prompt_tokens {
+        s.ttft_s = now_s - r.arrival_s;
+        ttft_out.push(s.ttft_s);
+    }
+    if s.fed == r.trace.tokens() {
+        s.finish_s = now_s;
+    }
+}
+
+struct Rep {
+    caches: Vec<ExpertCache>,
+    sim: FlashSim,
+    /// Wall time spent idle waiting for arrivals (wall = idle + device).
+    idle_s: f64,
+    /// Placed-but-unadmitted requests, oldest first.
+    queue: VecDeque<usize>,
+    active: Vec<Live>,
+    /// Cache timestamp: trace tokens this replica has processed.
+    step_clock: u64,
+}
+
+impl Rep {
+    fn now(&self) -> f64 {
+        self.idle_s + self.sim.stats().time_s
+    }
+
+    fn has_work(&self) -> bool {
+        !self.active.is_empty() || !self.queue.is_empty()
+    }
+}
+
+/// Replay an open-loop workload across `cfg.replicas` virtual replicas.
+/// Requests must be sorted by arrival; traces must share one shape.
+/// Placement happens at arrival, against each replica's *current* queue
+/// depth, cohort size, and per-layer resident summary — the same view
+/// the live router snapshots from [`crate::coordinator::ReplicaStatus`].
+pub fn simulate_fleet(
+    reqs: &[RequestSpec],
+    factory: &EvictionFactory,
+    profile: DeviceProfile,
+    cfg: &FleetSimConfig,
+) -> anyhow::Result<FleetSimResult> {
+    anyhow::ensure!(!reqs.is_empty(), "fleet replay needs at least one request");
+    anyhow::ensure!(cfg.replicas >= 1, "fleet replay needs at least one replica");
+    anyhow::ensure!(cfg.max_sessions >= 1, "fleet replay needs max_sessions >= 1");
+    let (n_layers, n_experts) = (reqs[0].trace.n_layers, reqs[0].trace.n_experts);
+    let mut prev_arrival = 0.0f64;
+    for (i, r) in reqs.iter().enumerate() {
+        anyhow::ensure!(
+            r.trace.n_layers == n_layers && r.trace.n_experts == n_experts,
+            "request {i}: trace shape mismatch ({}x{} vs {n_layers}x{n_experts})",
+            r.trace.n_layers,
+            r.trace.n_experts
+        );
+        anyhow::ensure!(
+            r.prompt_tokens >= 1 && r.prompt_tokens <= r.trace.tokens(),
+            "request {i}: prompt must cover 1..=trace tokens ({} of {})",
+            r.prompt_tokens,
+            r.trace.tokens()
+        );
+        anyhow::ensure!(
+            r.arrival_s >= prev_arrival,
+            "request {i}: arrivals must be sorted ({} after {prev_arrival})",
+            r.arrival_s
+        );
+        prev_arrival = r.arrival_s;
+    }
+    anyhow::ensure!(
+        !factory.for_layer(0).needs_oracle(),
+        "fleet replay does not support clairvoyant eviction ({:?}): next-use is ambiguous \
+         across interleaved requests",
+        factory.label()
+    );
+    let mut policy = parse_placement(&cfg.placement)?;
+
+    let mut reps: Vec<Rep> = (0..cfg.replicas)
+        .map(|_| Rep {
+            caches: (0..n_layers)
+                .map(|l| ExpertCache::with_policy(cfg.capacity, factory.for_layer(l)))
+                .collect(),
+            sim: FlashSim::new(profile.clone()),
+            idle_s: 0.0,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            step_clock: 0,
+        })
+        .collect();
+    let signals: Vec<Vec<Vec<u32>>> =
+        reqs.iter().map(|r| placement_signal(&r.trace, cfg.signal_tokens)).collect();
+    let mut in_union = vec![false; n_experts];
+    let mut next_arrival = 0usize;
+    let mut out = FleetSimResult {
+        per_replica: vec![ReplicaSimStats::default(); cfg.replicas],
+        placements: vec![0; cfg.replicas],
+        ..Default::default()
+    };
+
+    loop {
+        // The replica to advance: smallest local clock among those with
+        // work (strict < keeps the lowest index on ties — deterministic).
+        let mut chosen: Option<usize> = None;
+        for r in 0..reps.len() {
+            if !reps[r].has_work() {
+                continue;
+            }
+            let better = match chosen {
+                None => true,
+                Some(b) => reps[r].now() < reps[b].now(),
+            };
+            if better {
+                chosen = Some(r);
+            }
+        }
+        let Some(r) = chosen else {
+            // Whole fleet idle: jump to the next arrival instant.
+            if next_arrival >= reqs.len() {
+                break;
+            }
+            let due = reqs[next_arrival].arrival_s;
+            place_arrivals(
+                due,
+                reqs,
+                &signals,
+                &mut next_arrival,
+                &mut *policy,
+                &mut reps,
+                &mut out,
+            );
+            continue;
+        };
+        // Arrivals due by the stepping replica's clock are placed first,
+        // so placement always sees them in global arrival order.
+        place_arrivals(
+            reps[r].now(),
+            reqs,
+            &signals,
+            &mut next_arrival,
+            &mut *policy,
+            &mut reps,
+            &mut out,
+        );
+        advance_replica(r, reqs, cfg, &mut reps, &mut in_union, n_layers, &mut out);
+    }
+
+    for (r, rep) in reps.iter().enumerate() {
+        out.per_replica[r].tier = rep.sim.stats().clone();
+    }
+    out.makespan_s = reps.iter().map(Rep::now).fold(0.0, f64::max);
+    out.placement_label = policy.label();
+    Ok(out)
+}
+
+/// Place every arrival due at or before `t` onto a replica queue, one
+/// policy decision per request against the fleet's current state.
+fn place_arrivals(
+    t: f64,
+    reqs: &[RequestSpec],
+    signals: &[Vec<Vec<u32>>],
+    next_arrival: &mut usize,
+    policy: &mut dyn crate::policy::PlacementPolicy,
+    reps: &mut [Rep],
+    out: &mut FleetSimResult,
+) {
+    while *next_arrival < reqs.len() && reqs[*next_arrival].arrival_s <= t {
+        let i = *next_arrival;
+        *next_arrival += 1;
+        let resident: Vec<Vec<Vec<u32>>> = reps
+            .iter()
+            .map(|rep| rep.caches.iter().map(ExpertCache::resident).collect())
+            .collect();
+        let views: Vec<ReplicaView<'_>> = reps
+            .iter()
+            .zip(&resident)
+            .map(|(rep, res)| ReplicaView {
+                queued: rep.queue.len(),
+                active: rep.active.len(),
+                resident: res,
+            })
+            .collect();
+        let k = policy.place(&signals[i], &views).min(reps.len() - 1);
+        out.placements[k] += 1;
+        reps[k].queue.push_back(i);
+    }
+}
+
+/// One continuous-batching iteration for replica `r`: steal if drained,
+/// admit, run one fused step, sweep completions — the per-step math of
+/// [`super::serving::simulate_serving`]'s `Continuous` arm, verbatim.
+fn advance_replica(
+    r: usize,
+    reqs: &[RequestSpec],
+    cfg: &FleetSimConfig,
+    reps: &mut [Rep],
+    in_union: &mut [bool],
+    n_layers: usize,
+    out: &mut FleetSimResult,
+) {
+    // ---- work stealing: own queue drained, slots free ----
+    if cfg.steal && reps[r].queue.is_empty() {
+        let free = cfg.max_sessions.saturating_sub(reps[r].active.len());
+        for _ in 0..free {
+            let victim = (0..reps.len())
+                .filter(|&j| j != r && !reps[j].queue.is_empty())
+                .max_by_key(|&j| reps[j].queue.len());
+            let Some(j) = victim else { break };
+            let Some(i) = reps[j].queue.pop_front() else { break };
+            out.steals += 1;
+            out.migrations += 1;
+            reps[r].queue.push_back(i);
+        }
+    }
+
+    // ---- admission (front of queue is always the oldest arrival) ----
+    let mut now_r = reps[r].now();
+    while reps[r].active.len() < cfg.max_sessions {
+        let Some(&i) = reps[r].queue.front() else { break };
+        if reqs[i].arrival_s > now_r {
+            if !reps[r].active.is_empty() {
+                break;
+            }
+            // Idle until the queued request arrives: wall time passes,
+            // the device clock does not.
+            reps[r].idle_s += reqs[i].arrival_s - now_r;
+            now_r = reqs[i].arrival_s;
+        }
+        reps[r].queue.pop_front();
+        out.per_replica[r].queue_delay_s.push(now_r - reqs[i].arrival_s);
+        reps[r].active.push(Live { req: i, fed: 0, ttft_s: f64::NAN, finish_s: f64::NAN });
+    }
+    if reps[r].active.is_empty() {
+        return;
+    }
+
+    // ---- one fused step: each layer charges the distinct union once ----
+    let rep = &mut reps[r];
+    let batch = rep.active.len();
+    for l in 0..n_layers {
+        let mut distinct: Vec<u32> = Vec::new();
+        let mut step_tokens = 0u64;
+        for s in &rep.active {
+            for &e in &reqs[s.req].trace.selections[s.fed][l] {
+                step_tokens += 1;
+                if !in_union[e as usize] {
+                    in_union[e as usize] = true;
+                    distinct.push(e);
+                }
+            }
+        }
+        for &e in &distinct {
+            in_union[e as usize] = false;
+        }
+        if !distinct.is_empty() {
+            let acc = rep.caches[l].access_batch(&distinct, step_tokens, rep.step_clock);
+            out.per_replica[r].cache_hits += u64::from(acc.hits);
+            out.per_replica[r].cache_misses += acc.missed.len() as u64;
+            for _ in &acc.missed {
+                rep.sim.read_flash(cfg.bytes_per_expert);
+            }
+            rep.sim.read_dram(u64::from(acc.hits) * cfg.bytes_per_expert);
+        }
+    }
+    for _ in 0..batch {
+        rep.sim.end_token(0);
+    }
+    rep.step_clock += batch as u64;
+    let now_after = rep.idle_s + rep.sim.stats().time_s;
+    for s in &mut rep.active {
+        note(s, &reqs[s.req], now_after, &mut out.per_replica[r].ttft_s);
+    }
+
+    // ---- completion sweep: finished sessions free their slots ----
+    let mut still = Vec::with_capacity(rep.active.len());
+    for s in rep.active.drain(..) {
+        let rq = &reqs[s.req];
+        if s.fed >= rq.trace.tokens() {
+            out.per_replica[r].completed += 1;
+            let decode = rq.decode_tokens();
+            if decode > 0 {
+                out.per_replica[r]
+                    .tpot_s
+                    .push((s.finish_s - (rq.arrival_s + s.ttft_s)) / decode as f64);
+            }
+        } else {
+            still.push(s);
+        }
+    }
+    rep.active = still;
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used)]
+
+    use super::super::serving::{
+        simulate_serving, synthetic_workload, ServingConfig, SimSchedule, WorkloadSpec,
+    };
+    use super::*;
+    use crate::cache::Policy;
+
+    fn lru() -> EvictionFactory {
+        EvictionFactory::from_policy(Policy::Lru)
+    }
+
+    fn clustered(clusters: usize, rate: f64) -> Vec<RequestSpec> {
+        clustered_workload(&ClusteredWorkloadSpec {
+            n_requests: 24,
+            rate_per_s: rate,
+            seed: 17,
+            n_layers: 2,
+            n_experts: 64,
+            top_k: 4,
+            prompt_tokens: 6,
+            decode_tokens: 10,
+            clusters,
+        })
+    }
+
+    fn fleet_cfg(placement: &str, replicas: usize, steal: bool) -> FleetSimConfig {
+        FleetSimConfig {
+            replicas,
+            placement: placement.to_string(),
+            max_sessions: 4,
+            capacity: 32,
+            bytes_per_expert: 4096,
+            steal,
+            signal_tokens: 8,
+        }
+    }
+
+    #[test]
+    fn clustered_workload_draws_inside_disjoint_bands() {
+        let reqs = clustered(2, 50.0);
+        for (i, r) in reqs.iter().enumerate() {
+            let lo = ((i % 2) * 32) as u32;
+            for tok in &r.trace.selections {
+                for layer in tok {
+                    for &e in layer {
+                        assert!(e >= lo && e < lo + 32, "request {i}: expert {e} off-band");
+                    }
+                }
+            }
+        }
+        let again = clustered(2, 50.0);
+        assert_eq!(again.len(), reqs.len());
+        for (a, b) in again.iter().zip(&reqs) {
+            assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits(), "arrivals must be seeded");
+            assert_eq!(a.trace.selections, b.trace.selections, "traces must be seeded");
+        }
+    }
+
+    #[test]
+    fn placement_signal_is_sorted_deduped_per_layer() {
+        let reqs = clustered(2, 50.0);
+        let sig = placement_signal(&reqs[0].trace, 4);
+        assert_eq!(sig.len(), 2);
+        for layer in &sig {
+            assert!(!layer.is_empty());
+            assert!(layer.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn replay_is_deterministic_for_every_registered_policy() {
+        let reqs = clustered(2, 100.0);
+        for spec in ["random:seed=7", "least-loaded", "affinity", "affinity:tie=random:seed=3"] {
+            let cfg = fleet_cfg(spec, 2, true);
+            let a = simulate_fleet(&reqs, &lru(), DeviceProfile::device_16gb(), &cfg).unwrap();
+            let b = simulate_fleet(&reqs, &lru(), DeviceProfile::device_16gb(), &cfg).unwrap();
+            assert_eq!(a, b, "placement {spec} must replay bit-identically");
+            assert_eq!(a.completed(), 24);
+        }
+    }
+
+    #[test]
+    fn single_replica_fleet_matches_serving_continuous_exactly() {
+        let reqs = synthetic_workload(&WorkloadSpec {
+            n_requests: 24,
+            rate_per_s: 50.0,
+            seed: 11,
+            n_layers: 2,
+            n_experts: 16,
+            top_k: 2,
+            prompt_tokens: 4,
+            decode_tokens: 4,
+        });
+        let solo = simulate_serving(
+            &reqs,
+            &lru(),
+            DeviceProfile::device_16gb(),
+            &ServingConfig {
+                schedule: SimSchedule::Continuous,
+                max_sessions: 4,
+                capacity: 8,
+                bytes_per_expert: 4096,
+                slo_ttft_s: None,
+            },
+        )
+        .unwrap();
+        let mut cfg = fleet_cfg("least-loaded", 1, true);
+        cfg.capacity = 8;
+        let fleet = simulate_fleet(&reqs, &lru(), DeviceProfile::device_16gb(), &cfg).unwrap();
+        assert_eq!(fleet.per_replica.len(), 1);
+        let rep = &fleet.per_replica[0];
+        // Same per-step math, same clock: every counter is bit-identical.
+        assert_eq!(rep.tier, solo.tier);
+        assert_eq!(rep.ttft_s, solo.ttft_s);
+        assert_eq!(rep.queue_delay_s, solo.queue_delay_s);
+        assert_eq!(rep.tpot_s, solo.tpot_s);
+        assert_eq!(rep.completed, solo.completed);
+        assert!((fleet.makespan_s - solo.makespan_s).abs() < 1e-12);
+        assert_eq!(fleet.steals, 0, "a 1-replica fleet has nobody to steal from");
+    }
+
+    #[test]
+    fn affinity_beats_random_on_clustered_traffic() {
+        // Disjoint expert bands + per-band cache capacity: colocating a
+        // band's requests converges each replica to its band's working
+        // set, while random placement mixes bands and churns both caches.
+        // Stealing is off in both arms so the comparison is pure placement.
+        let reqs = clustered(2, 100.0);
+        let affinity = simulate_fleet(
+            &reqs,
+            &lru(),
+            DeviceProfile::device_16gb(),
+            &fleet_cfg("affinity", 2, false),
+        )
+        .unwrap();
+        let random = simulate_fleet(
+            &reqs,
+            &lru(),
+            DeviceProfile::device_16gb(),
+            &fleet_cfg("random:seed=1", 2, false),
+        )
+        .unwrap();
+        assert_eq!(affinity.completed(), 24);
+        assert_eq!(random.completed(), 24);
+        assert!(
+            affinity.total_flash_reads() < random.total_flash_reads(),
+            "affinity must issue strictly fewer store fetches ({} vs {})",
+            affinity.total_flash_reads(),
+            random.total_flash_reads()
+        );
+        assert!(affinity.fleet_hit_rate() > random.fleet_hit_rate());
+        // Both per-replica and fleet-wide hit rates are reported.
+        assert!(affinity.per_replica.iter().all(|r| r.cache_hits + r.cache_misses > 0));
+    }
+
+    #[test]
+    fn stealing_drains_a_skewed_placement() {
+        // One cluster: affinity concentrates everything on one replica;
+        // with stealing on, the idle replica pulls work over and the
+        // counters record it.
+        let reqs = clustered(1, 1000.0);
+        let stolen = simulate_fleet(
+            &reqs,
+            &lru(),
+            DeviceProfile::device_16gb(),
+            &fleet_cfg("affinity", 2, true),
+        )
+        .unwrap();
+        assert_eq!(stolen.completed(), 24);
+        assert!(stolen.steals > 0, "idle replica must steal from the hot one");
+        assert_eq!(stolen.steals, stolen.migrations);
+        // Both replicas ended up doing real work.
+        assert!(stolen.per_replica.iter().all(|r| r.completed > 0));
+        // And stealing strictly improves makespan over no-stealing.
+        let pinned = simulate_fleet(
+            &reqs,
+            &lru(),
+            DeviceProfile::device_16gb(),
+            &fleet_cfg("affinity", 2, false),
+        )
+        .unwrap();
+        assert!(stolen.makespan_s < pinned.makespan_s);
+    }
+}

@@ -19,9 +19,15 @@
 //! the same virtual clock, producing deterministic TTFT / queue-delay /
 //! shed metrics — the reproducible counterpart of the coordinator's
 //! wall-clock SLO accounting.
+//!
+//! [`fleet`] lifts the serving replay to N replicas behind a pluggable
+//! placement policy with work stealing — the deterministic twin of
+//! [`crate::coordinator::FleetServer`], used to compare placement specs
+//! (`random` vs `least-loaded` vs `affinity`) bit-reproducibly.
 
 #![warn(clippy::unwrap_used)]
 
+pub mod fleet;
 pub mod serving;
 
 use std::path::Path;

@@ -242,15 +242,6 @@ fn backlog_tokens(
     queued + prefill + slot_wait
 }
 
-fn blend_ewma(ewma: f64, sample: f64) -> f64 {
-    if sample <= 0.0 {
-        ewma
-    } else if ewma == 0.0 {
-        sample
-    } else {
-        0.8 * ewma + 0.2 * sample
-    }
-}
 
 /// Replay an open-loop workload under one schedule. Requests must be
 /// sorted by arrival instant; traces must share one shape. Clairvoyant
@@ -390,7 +381,7 @@ pub fn simulate_serving(
                 }
                 step_clock += batch as u64;
                 step_ewma_s =
-                    blend_ewma(step_ewma_s, (sim.stats().time_s - t0) / batch as f64);
+                    stats::blend_ewma(step_ewma_s, (sim.stats().time_s - t0) / batch as f64);
                 let now_after = idle_s + sim.stats().time_s;
                 for s in &mut active {
                     note_progress(s, &reqs[s.req], now_after, &mut out.ttft_s);

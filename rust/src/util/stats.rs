@@ -40,6 +40,23 @@ pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
 
+/// One step of the step-latency EWMA shared by the wall-clock coordinator
+/// and the virtual-clock serving/fleet replays (0.8 old / 0.2 new).
+///
+/// Two guards keep the TTFT predictor honest on both clocks: a
+/// non-positive sample is ignored (a zero-duration virtual step carries
+/// no signal), and a cold EWMA (0.0: nothing measured yet) snaps to the
+/// first sample instead of blending against the cold zero.
+pub fn blend_ewma(ewma: f64, sample: f64) -> f64 {
+    if sample <= 0.0 {
+        ewma
+    } else if ewma == 0.0 {
+        sample
+    } else {
+        0.8 * ewma + 0.2 * sample
+    }
+}
+
 /// Numerically stable streaming mean (used for the paper's Δ_avg, Eq. 10).
 #[derive(Debug, Clone, Default)]
 pub struct RunningAvg {
@@ -140,6 +157,33 @@ mod tests {
         assert_eq!(percentile(&xs, 100.0), 4.0);
         assert_eq!(median(&xs), 2.5);
         assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        // Empty: every percentile is 0.
+        assert_eq!(percentile(&[], 0.0), 0.0);
+        assert_eq!(percentile(&[], 100.0), 0.0);
+        // Single sample: every percentile is that sample.
+        assert_eq!(percentile(&[7.5], 0.0), 7.5);
+        assert_eq!(percentile(&[7.5], 50.0), 7.5);
+        assert_eq!(percentile(&[7.5], 100.0), 7.5);
+        // p0/p100 are min/max regardless of input order.
+        let xs = [9.0, 1.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 9.0);
+    }
+
+    #[test]
+    fn ewma_cold_start_and_guards() {
+        // Cold EWMA snaps to the first sample.
+        assert_eq!(blend_ewma(0.0, 0.5), 0.5);
+        // Non-positive samples never perturb the estimate.
+        assert_eq!(blend_ewma(0.5, 0.0), 0.5);
+        assert_eq!(blend_ewma(0.5, -1.0), 0.5);
+        assert_eq!(blend_ewma(0.0, 0.0), 0.0);
+        // Warm blend is 0.8 old / 0.2 new.
+        assert!((blend_ewma(1.0, 2.0) - 1.2).abs() < 1e-12);
     }
 
     #[test]

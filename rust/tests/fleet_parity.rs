@@ -1,0 +1,361 @@
+//! Fleet conformance suite.
+//!
+//! Three layers, mirroring `serving_parity`'s split:
+//!
+//! - **Virtual clock** (always runs): the `tracesim::fleet` replay is
+//!   bit-reproducible per placement spec, and — the PR's acceptance
+//!   criterion — on a clustered workload at equal aggregate tokens,
+//!   `affinity` placement issues *strictly fewer* total store fetches
+//!   than `random`.
+//! - **Shared store** (always runs): two shares of one `MmapStore` serve
+//!   concurrent fetch streams from two threads with bit-identical bytes
+//!   and fully independent `TierStats` — the contract that lets N replica
+//!   engines sit on one read-only expert store.
+//! - **Real engine** (gated on `make artifacts`): a 1-replica fleet is
+//!   bit-identical to a solo continuous server (same token streams, same
+//!   completion counts), and disjoint sessions spread over 2 replicas
+//!   each reproduce their solo streams.
+
+mod common;
+
+use moe_cache::cache::Policy;
+use moe_cache::config::{DeviceProfile, Quant};
+use moe_cache::coordinator::{
+    Coordinator, Event, FleetConfig, FleetMetrics, FleetServer, Request, Schedule, ServerConfig,
+    ServerMetrics,
+};
+use moe_cache::eval::EvalData;
+use moe_cache::model::{Engine, EngineOptions};
+use moe_cache::policy::EvictionFactory;
+use moe_cache::routing::{DeltaMode, Strategy};
+use moe_cache::store::{ExpertStore, MmapStore};
+use moe_cache::tracesim::fleet::{
+    clustered_workload, simulate_fleet, ClusteredWorkloadSpec, FleetSimConfig,
+};
+
+// ---------------------------------------------------------------------------
+// Virtual-clock properties (no artifacts needed).
+// ---------------------------------------------------------------------------
+
+fn lru() -> EvictionFactory {
+    EvictionFactory::from_policy(Policy::Lru)
+}
+
+/// Two disjoint expert bands (32 experts each): the traffic shape
+/// affinity placement exists for.
+fn clustered(rate: f64) -> Vec<moe_cache::tracesim::serving::RequestSpec> {
+    clustered_workload(&ClusteredWorkloadSpec {
+        n_requests: 24,
+        rate_per_s: rate,
+        seed: 29,
+        n_layers: 2,
+        n_experts: 64,
+        top_k: 4,
+        prompt_tokens: 6,
+        decode_tokens: 10,
+        clusters: 2,
+    })
+}
+
+fn fleet_sim_cfg(placement: &str, steal: bool) -> FleetSimConfig {
+    FleetSimConfig {
+        replicas: 2,
+        placement: placement.to_string(),
+        max_sessions: 4,
+        capacity: 32,
+        bytes_per_expert: 4096,
+        steal,
+        signal_tokens: 8,
+    }
+}
+
+/// Satellite: a fixed-seed placement replay is deterministic — the whole
+/// result (placements, steals, per-replica counters, latency vectors)
+/// compares equal across runs, for every registered placement policy.
+#[test]
+fn fixed_seed_placement_replays_are_deterministic() {
+    let reqs = clustered(100.0);
+    for spec in ["random:seed=7", "least-loaded", "affinity"] {
+        let cfg = fleet_sim_cfg(spec, true);
+        let a = simulate_fleet(&reqs, &lru(), DeviceProfile::device_16gb(), &cfg).unwrap();
+        let b = simulate_fleet(&reqs, &lru(), DeviceProfile::device_16gb(), &cfg).unwrap();
+        assert_eq!(a, b, "placement {spec} must replay bit-identically");
+        assert_eq!(a.completed(), 24, "placement {spec} must serve every request");
+    }
+}
+
+/// THE acceptance criterion: on a deterministic virtual-clock replay at
+/// equal aggregate tokens, `affinity` placement issues strictly fewer
+/// total store fetches than `random`, and both fleet-wide and per-replica
+/// hit rates are reported. Stealing is off in both arms so the comparison
+/// is pure placement.
+#[test]
+fn affinity_issues_strictly_fewer_store_fetches_than_random() {
+    let reqs = clustered(100.0);
+    let affinity = simulate_fleet(
+        &reqs,
+        &lru(),
+        DeviceProfile::device_16gb(),
+        &fleet_sim_cfg("affinity", false),
+    )
+    .unwrap();
+    let random = simulate_fleet(
+        &reqs,
+        &lru(),
+        DeviceProfile::device_16gb(),
+        &fleet_sim_cfg("random:seed=1", false),
+    )
+    .unwrap();
+    // Equal aggregate tokens: both arms run every request to completion.
+    assert_eq!(affinity.completed(), 24);
+    assert_eq!(random.completed(), 24);
+    let (at, rt): (u64, u64) = (
+        affinity.per_replica.iter().map(|r| r.tier.tokens).sum(),
+        random.per_replica.iter().map(|r| r.tier.tokens).sum(),
+    );
+    assert_eq!(at, rt, "arms must process the same aggregate tokens");
+    assert!(
+        affinity.total_flash_reads() < random.total_flash_reads(),
+        "affinity must issue strictly fewer store fetches ({} vs {})",
+        affinity.total_flash_reads(),
+        random.total_flash_reads()
+    );
+    // Hit rate is reported at both granularities, and affinity wins it.
+    assert!(affinity.fleet_hit_rate() > random.fleet_hit_rate());
+    for (k, rep) in affinity.per_replica.iter().enumerate() {
+        assert!(
+            rep.cache_hits + rep.cache_misses > 0,
+            "replica {k} reported no cache traffic"
+        );
+        assert!(rep.hit_rate() > 0.0, "replica {k} hit rate missing");
+    }
+}
+
+/// Live-tier counterpart of the hit-rate acceptance clause: FleetMetrics
+/// reports the fleet-wide (access-weighted) hit rate *and* each replica's
+/// own, and its summary line carries both.
+#[test]
+fn fleet_metrics_report_fleet_and_per_replica_hit_rates() {
+    let m = FleetMetrics {
+        per_replica: vec![
+            ServerMetrics { cache_hits: 3, cache_misses: 1, ..Default::default() },
+            ServerMetrics { cache_hits: 1, cache_misses: 3, ..Default::default() },
+        ],
+        placements: vec![2, 2],
+        placement_label: "least-loaded".to_string(),
+        ..Default::default()
+    };
+    assert!((m.replica_hit_rate(0) - 0.75).abs() < 1e-12);
+    assert!((m.replica_hit_rate(1) - 0.25).abs() < 1e-12);
+    assert!((m.fleet_hit_rate() - 0.5).abs() < 1e-12);
+    let s = m.summary();
+    assert!(s.contains("fleet_hit_rate=0.500"), "{s}");
+    assert!(s.contains("replica_hit_rates=[0.750,0.250]"), "{s}");
+}
+
+// ---------------------------------------------------------------------------
+// Shared-store concurrency (synthetic image, no artifacts needed).
+// ---------------------------------------------------------------------------
+
+/// Satellite: two shares of one mmap store, fetched from two engine
+/// threads concurrently, return bit-identical bytes and keep fully
+/// independent per-replica `TierStats`; the base store's accounting never
+/// observes the shares' traffic.
+#[test]
+fn shared_mmap_store_serves_concurrent_fetches_with_independent_stats() {
+    let path = common::synth_image("fleet_shared");
+    let base = MmapStore::open(&path).unwrap();
+    let handles: Vec<_> = (0..2)
+        .map(|_| {
+            let mut s = base.share();
+            std::thread::spawn(move || {
+                let mut w1 = vec![0f32; common::D * common::D];
+                let mut w3 = w1.clone();
+                let mut w2 = w1.clone();
+                for l in 0..common::N_LAYERS {
+                    for e in 0..common::N_EXPERTS {
+                        let bytes = s.fetch_into(l, e, &mut w1, &mut w3, &mut w2).unwrap();
+                        assert_eq!(bytes, common::SPAN_BYTES);
+                        for i in 0..common::D * common::D {
+                            assert_eq!(w1[i], common::val(l, e, 0, i), "w1 l{l} e{e} i{i}");
+                            assert_eq!(w3[i], common::val(l, e, 1, i), "w3 l{l} e{e} i{i}");
+                            assert_eq!(w2[i], common::val(l, e, 2, i), "w2 l{l} e{e} i{i}");
+                        }
+                    }
+                }
+                s.stats()
+            })
+        })
+        .collect();
+    let per_share = (common::N_LAYERS * common::N_EXPERTS) as u64;
+    for h in handles {
+        let st = h.join().unwrap();
+        assert_eq!(st.flash_reads, per_share, "each share keeps its own accounting");
+        assert_eq!(st.flash_bytes, per_share * common::SPAN_BYTES);
+    }
+    assert_eq!(base.stats().flash_reads, 0, "base store must not see the shares' traffic");
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------------
+// Real-engine stream conformance (needs `make artifacts`; skips on a bare
+// checkout so the tier-1 gate stays green).
+// ---------------------------------------------------------------------------
+
+fn artifacts_ready() -> bool {
+    let arts = moe_cache::artifacts_dir();
+    arts.join("qwen-tiny").join("manifest.json").exists()
+        && arts.join("qwen-tiny").join("weights_int4.bin").exists()
+        && arts.join("data").is_dir()
+}
+
+fn engine_factory(strategy: Strategy) -> moe_cache::coordinator::EngineFactory {
+    let arts = moe_cache::artifacts_dir();
+    Box::new(move || {
+        Engine::load(
+            &arts,
+            "qwen-tiny",
+            EngineOptions {
+                quant: Quant::Int4,
+                cache_capacity: 30,
+                policy: Policy::Lru,
+                strategy,
+                device: DeviceProfile::device_16gb(),
+                seed: 1,
+                record_trace: false,
+                record_logits: false,
+            },
+        )
+    })
+}
+
+fn req(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
+    Request { id, prompt, max_new, temperature: 0.8, stop_token: None, routing_spec: None }
+}
+
+/// Gather each request's full generated stream off a shared event channel.
+fn collect_streams(rx: &std::sync::mpsc::Receiver<Event>, n: usize) -> Vec<Vec<u32>> {
+    let mut streams: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut done = 0usize;
+    while done < n {
+        match rx.recv().expect("event channel closed early") {
+            Event::Token { .. } => {}
+            Event::Done(r) => {
+                done += 1;
+                streams[r.id as usize] = r.generated;
+            }
+            Event::Failed { error, id } => panic!("req {id} failed: {error}"),
+        }
+    }
+    streams
+}
+
+/// Satellite: a 1-replica fleet running the continuous schedule is
+/// bit-identical to a solo continuous `Coordinator` fed the same atomic
+/// batch — same token streams, same completion count — and its metrics
+/// collapse to one replica (fleet hit rate == replica 0's hit rate).
+#[test]
+fn single_replica_fleet_matches_solo_continuous_streams() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let strategy = Strategy::CachePrior { lambda: 0.5, j: 2, delta: DeltaMode::RunningAvg };
+    let server = ServerConfig {
+        max_sessions: 3,
+        schedule: Schedule::Continuous,
+        ..ServerConfig::default()
+    };
+    let data = EvalData::load(&moe_cache::artifacts_dir().join("data")).unwrap();
+    let prompt = data.prompts_short[0].clone();
+    let lens = [12usize, 8, 6];
+    let mk_reqs = || -> Vec<Request> {
+        lens.iter().enumerate().map(|(i, &n)| req(i as u64, prompt.clone(), n)).collect()
+    };
+
+    let solo = Coordinator::spawn(engine_factory(strategy.clone()), server.clone()).unwrap();
+    let (tx, rx) = std::sync::mpsc::channel();
+    solo.submit_batch_with(mk_reqs(), tx).unwrap();
+    let solo_streams = collect_streams(&rx, lens.len());
+    let sm = solo.shutdown();
+
+    let fleet = FleetServer::spawn(
+        vec![engine_factory(strategy)],
+        FleetConfig { replicas: 1, placement: "least-loaded".to_string(), server, steal: true },
+    )
+    .unwrap();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let pairs: Vec<(Request, Vec<Vec<u32>>)> =
+        mk_reqs().into_iter().map(|r| (r, Vec::new())).collect();
+    fleet.submit_batch_with(pairs, tx).unwrap();
+    let fleet_streams = collect_streams(&rx, lens.len());
+    let fm = fleet.shutdown();
+
+    assert_eq!(fleet_streams, solo_streams, "1-replica fleet diverged from the solo server");
+    assert_eq!(fm.completed(), sm.completed);
+    assert_eq!(fm.per_replica.len(), 1);
+    assert_eq!(fm.placements, vec![lens.len() as u64]);
+    assert_eq!(fm.steals, 0, "a 1-replica fleet has nobody to steal from");
+    assert!(fm.fleet_hit_rate() > 0.0, "cache totals must reach the fleet metrics");
+    assert!((fm.fleet_hit_rate() - fm.replica_hit_rate(0)).abs() < 1e-12);
+}
+
+/// Satellite: disjoint sessions spread across 2 replicas each reproduce
+/// their solo token streams. `Strategy::Original` makes routing
+/// timing-independent, so any divergence is a placement/forwarding bug.
+#[test]
+fn disjoint_sessions_across_replicas_match_solo_streams() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let server = ServerConfig {
+        max_sessions: 3,
+        schedule: Schedule::Continuous,
+        ..ServerConfig::default()
+    };
+    let data = EvalData::load(&moe_cache::artifacts_dir().join("data")).unwrap();
+    let prompt = data.prompts_short[0].clone();
+    let lens = [10usize, 8, 6, 4];
+
+    let fleet = FleetServer::spawn(
+        vec![engine_factory(Strategy::Original), engine_factory(Strategy::Original)],
+        FleetConfig {
+            replicas: 2,
+            placement: "least-loaded".to_string(),
+            server: server.clone(),
+            steal: true,
+        },
+    )
+    .unwrap();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let pairs: Vec<(Request, Vec<Vec<u32>>)> = lens
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| (req(i as u64, prompt.clone(), n), Vec::new()))
+        .collect();
+    fleet.submit_batch_with(pairs, tx).unwrap();
+    let streams = collect_streams(&rx, lens.len());
+    let fm = fleet.shutdown();
+    assert_eq!(fm.completed(), lens.len() as u64);
+    // Load-aware batch placement must actually use both replicas.
+    assert_eq!(fm.placements.iter().sum::<u64>(), lens.len() as u64);
+    assert!(
+        fm.placements.iter().all(|&p| p > 0),
+        "least-loaded left a replica idle: {:?}",
+        fm.placements
+    );
+
+    // Solo twins: same ids (same sampler/router seeds), serial fcfs.
+    let solo = Coordinator::spawn(engine_factory(Strategy::Original), ServerConfig::default())
+        .unwrap();
+    for (id, &n) in lens.iter().enumerate() {
+        let r = solo.submit(req(id as u64, prompt.clone(), n)).unwrap();
+        assert_eq!(
+            streams[id], r.generated,
+            "session {id} diverged from its solo run under fleet placement"
+        );
+        assert_eq!(streams[id].len(), n);
+    }
+    solo.shutdown();
+}
