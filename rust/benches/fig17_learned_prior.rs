@@ -173,5 +173,43 @@ fn main() -> anyhow::Result<()> {
     t.print();
     t.write_csv(&results_dir())?;
     println!("paper finding: the learned prior does not meaningfully beat the training-free one");
+
+    // Same question one tier down, on the prefetch axis: a learned
+    // activation prior — the offline `prior:file=` table distilled from a
+    // saved router trace — against the training-free `next-token`
+    // heuristic, scored on the deterministic fraction-of-oracle replay
+    // (`tracesim::predict`) over the very trace it was learned from (its
+    // in-distribution best case).
+    let mut rec = Engine::load(
+        &arts,
+        &model,
+        EngineOptions {
+            quant: Quant::Int4,
+            cache_capacity: cache,
+            policy: Policy::Lru,
+            strategy: Strategy::Original,
+            device: DeviceProfile::device_16gb(),
+            seed: 14,
+            record_trace: true,
+            record_logits: false,
+        },
+    )?;
+    eval_ppl(&mut rec, &test_chunks)?;
+    let trace = rec.trace.clone();
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let prior_path = dir.join("trace_fig17_prior.json");
+    trace.save(&prior_path)?;
+    let hint_k = 2 * cfg.top_k;
+    for spec in ["next-token".to_string(), format!("prior:file={}", prior_path.display())] {
+        let s = moe_cache::tracesim::predict::score_predictor(&trace, cache, &spec, 1, hint_k, 64)?;
+        println!(
+            "prefetch {:<14} frac_of_oracle {:.4} eff_hit {:.4} demand_fetches {}",
+            if spec.starts_with("prior") { "learned prior" } else { "next-token" },
+            s.fraction_of_oracle,
+            s.effective_hit_rate,
+            s.demand_fetches,
+        );
+    }
     Ok(())
 }

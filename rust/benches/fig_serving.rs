@@ -974,7 +974,7 @@ fn main() -> Result<()> {
     );
 
     let fleet_json = Json::Object(vec![
-        ("model".into(), Json::str(model)),
+        ("model".into(), Json::str(model.clone())),
         ("clock".into(), Json::str("virtual")),
         ("replicas".into(), Json::num(F_REPLICAS as f64)),
         ("requests".into(), Json::num(F_REQS as f64)),
@@ -987,5 +987,98 @@ fn main() -> Result<()> {
     std::fs::write(&fleet_path, format!("{fleet_json}"))?;
     fleet_table.write_csv(&dir)?;
     println!("wrote {}", fleet_path.display());
+
+    // ---- predictor stage: every registered activation predictor across
+    // hint depths, scored on the deterministic fraction-of-oracle replay
+    // (`tracesim::predict`) — results/BENCH_prefetch.json. Two traces at
+    // equal aggregate tokens per arm: a real router trace recorded from
+    // this model (token-to-token reuse, next-token's home turf) and the
+    // clustered drift trace (cross-layer structure, where the acceptance
+    // bar lives). The recorded trace doubles as the `prior:file=` input —
+    // the fig17 learned-prior path. ----
+    println!("\n== predictor stage (fraction-of-oracle replay) ==");
+    let mut rec = EngineBuilder::new(&moe_cache::artifacts_dir(), &model)
+        .cache_capacity(cache)
+        .record_trace(true)
+        .routing_spec("original")?
+        .build()?;
+    let toks: Vec<u32> =
+        (0..256.min(cfg.max_seq)).map(|t| 24 + ((t * 7) % 400) as u32).collect();
+    rec.score_sequence(&toks)?;
+    let model_trace = rec.trace.clone();
+    let model_prior = dir.join("trace_prefetch_prior.json");
+    model_trace.save(&model_prior)?;
+    let drift = moe_cache::tracesim::predict::clustered_trace(1, 600, 4, 32, 4, 4);
+    let drift_prior = dir.join("trace_prefetch_prior_clustered.json");
+    drift.save(&drift_prior)?;
+    const PF_DEPTHS: [usize; 3] = [1, 2, 4];
+    const PF_PENDING: usize = 64;
+    let mut pf_arms: Vec<Json> = Vec::new();
+    let mut clustered_bar = (0.0f64, u64::MAX); // next-token (frac, demand) at depth 1
+    let mut best_cross = (0.0f64, u64::MAX); // best cross-layer predictor at depth 1
+    for (trace_name, trace, capacity, hint_k, prior) in [
+        ("model", &model_trace, cache, 2 * cfg.top_k, &model_prior),
+        ("clustered", &drift, 8usize, 8usize, &drift_prior),
+    ] {
+        let specs = [
+            "next-token".to_string(),
+            "ewma".to_string(),
+            "ngram".to_string(),
+            format!("prior:file={}", prior.display()),
+        ];
+        for spec in &specs {
+            for depth in PF_DEPTHS {
+                let s = moe_cache::tracesim::predict::score_predictor(
+                    trace, capacity, spec, depth, hint_k, PF_PENDING,
+                )?;
+                println!(
+                    "{trace_name:>9} {:<28} depth={depth} eff_hit={:.4} frac_of_oracle={:.4} demand={} issued={} used={} wasted={}",
+                    s.predictor,
+                    s.effective_hit_rate,
+                    s.fraction_of_oracle,
+                    s.demand_fetches,
+                    s.hints_issued,
+                    s.prefetch_served,
+                    s.hints_wasted,
+                );
+                if trace_name == "clustered" && depth == 1 {
+                    if spec == "next-token" {
+                        clustered_bar = (s.fraction_of_oracle, s.demand_fetches);
+                    } else if s.fraction_of_oracle > best_cross.0 {
+                        best_cross = (s.fraction_of_oracle, s.demand_fetches);
+                    }
+                }
+                let mut o = s.to_json();
+                if let Json::Object(fields) = &mut o {
+                    fields.insert(0, ("trace".into(), Json::str(trace_name)));
+                }
+                pf_arms.push(o);
+            }
+        }
+    }
+    // The PR's acceptance bar, mirrored from tests/predict_parity.rs: at
+    // equal aggregate tokens some cross-layer predictor strictly beats
+    // next-token on BOTH fraction-of-oracle and demand fetches.
+    let beats = best_cross.0 > clustered_bar.0 && best_cross.1 < clustered_bar.1;
+    anyhow::ensure!(
+        beats,
+        "no cross-layer predictor beat next-token on the clustered trace \
+         (best frac {:.4} vs {:.4}, demand {} vs {})",
+        best_cross.0,
+        clustered_bar.0,
+        best_cross.1,
+        clustered_bar.1,
+    );
+    let pf_json = Json::Object(vec![
+        ("model".into(), Json::str(model)),
+        ("clock".into(), Json::str("replay")),
+        ("pending_cap".into(), Json::num(PF_PENDING as f64)),
+        ("depths".into(), Json::Array(PF_DEPTHS.iter().map(|d| Json::num(*d as f64)).collect())),
+        ("arms".into(), Json::Array(pf_arms)),
+        ("cross_layer_beats_next_token".into(), Json::Bool(beats)),
+    ]);
+    let pf_path = dir.join("BENCH_prefetch.json");
+    std::fs::write(&pf_path, format!("{pf_json}"))?;
+    println!("wrote {}", pf_path.display());
     Ok(())
 }

@@ -161,6 +161,27 @@ impl FleetMetrics {
         percentile(&merged, p)
     }
 
+    /// Fleet-total prefetch hints issued by the replicas' predictors.
+    pub fn prefetch_issued(&self) -> u64 {
+        self.per_replica.iter().map(|m| m.prefetch_issued).sum()
+    }
+
+    /// Fleet-total hints that served a demand miss.
+    pub fn prefetch_used(&self) -> u64 {
+        self.per_replica.iter().map(|m| m.prefetch_used).sum()
+    }
+
+    /// Fleet-wide prefetch accuracy: summed used over summed issued —
+    /// weighted by hint traffic like [`FleetMetrics::fleet_hit_rate`].
+    pub fn prefetch_accuracy(&self) -> f64 {
+        let issued = self.prefetch_issued();
+        if issued == 0 {
+            0.0
+        } else {
+            self.prefetch_used() as f64 / issued as f64
+        }
+    }
+
     /// Merged submission→admission delay percentile (seconds).
     pub fn queue_delay_percentile(&self, p: f64) -> f64 {
         let merged: Vec<f64> =
@@ -174,7 +195,7 @@ impl FleetMetrics {
             .collect();
         let placed: Vec<String> = self.placements.iter().map(|p| p.to_string()).collect();
         format!(
-            "replicas={} placement={} completed={} tokens={} fleet_hit_rate={:.3} replica_hit_rates=[{}] placements=[{}] steals={} migrations={} rejected={} ttft_p50={:.3}s ttft_p99={:.3}s tpot_p50={:.4}s flash_reads={}",
+            "replicas={} placement={} completed={} tokens={} fleet_hit_rate={:.3} replica_hit_rates=[{}] placements=[{}] steals={} migrations={} rejected={} ttft_p50={:.3}s ttft_p99={:.3}s tpot_p50={:.4}s flash_reads={} prefetch_issued={} prefetch_used={} prefetch_acc={:.3}",
             self.per_replica.len(),
             self.placement_label,
             self.completed(),
@@ -189,6 +210,9 @@ impl FleetMetrics {
             self.ttft_percentile(99.0),
             self.tpot_percentile(50.0),
             self.flash_reads(),
+            self.prefetch_issued(),
+            self.prefetch_used(),
+            self.prefetch_accuracy(),
         )
     }
 }
@@ -610,11 +634,14 @@ mod tests {
 
     #[test]
     fn fleet_summary_reports_both_hit_rate_views() {
+        let mut a = replica_metrics(3, 1, vec![0.1]);
+        a.prefetch_issued = 6;
+        a.prefetch_used = 3;
+        let mut b = replica_metrics(1, 3, vec![0.2]);
+        b.prefetch_issued = 2;
+        b.prefetch_used = 1;
         let m = FleetMetrics {
-            per_replica: vec![
-                replica_metrics(3, 1, vec![0.1]),
-                replica_metrics(1, 3, vec![0.2]),
-            ],
+            per_replica: vec![a, b],
             placements: vec![1, 1],
             placement_label: "least-loaded".to_string(),
             ..Default::default()
@@ -626,6 +653,10 @@ mod tests {
         assert!(s.contains("replica_hit_rates=[0.750,0.250]"));
         assert!(s.contains("placements=[1,1]"));
         assert!(s.contains("steals=0"));
+        // Prefetch accuracy is hint-weighted across replicas: 4 of 8.
+        assert!(s.contains("prefetch_issued=8"));
+        assert!(s.contains("prefetch_used=4"));
+        assert!(s.contains("prefetch_acc=0.500"));
     }
 
     #[test]

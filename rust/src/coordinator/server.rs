@@ -163,6 +163,19 @@ pub struct ServerMetrics {
     pub dropped_experts: u64,
     /// Quanta killed by the [`ServerConfig::quantum_deadline_s`] watchdog.
     pub watchdog_failures: u64,
+    /// Prefetch hints the activation predictor pushed into the store
+    /// pipeline over the server's lifetime (zero with prefetch off).
+    pub prefetch_issued: u64,
+    /// Issued hints that a demand miss later claimed — useful prefetches.
+    pub prefetch_used: u64,
+    /// Issued hints evicted oldest-first from the bounded pending table.
+    pub prefetch_dropped: u64,
+    /// Issued hints that neither served a miss nor were dropped —
+    /// mispredictions the slow tier fetched for nothing.
+    pub prefetch_wasted: u64,
+    /// Spec label of the activation predictor the engine ran with
+    /// (round-trips through `predict::parse_predictor`).
+    pub predictor: String,
 }
 
 impl ServerMetrics {
@@ -199,6 +212,18 @@ impl ServerMetrics {
         }
     }
 
+    /// Fraction of issued prefetch hints that went on to serve a demand
+    /// miss (0.0 when no hints were issued) — the predictor's live
+    /// accuracy, the online counterpart of `tracesim::predict`'s
+    /// fraction-of-oracle.
+    pub fn prefetch_accuracy(&self) -> f64 {
+        if self.prefetch_issued == 0 {
+            0.0
+        } else {
+            self.prefetch_used as f64 / self.prefetch_issued as f64
+        }
+    }
+
     /// Fraction of offered requests shed by SLO-aware admission. Offered =
     /// completed + aborted + rejected + shed; 0.0 when nothing was offered.
     pub fn shed_rate(&self) -> f64 {
@@ -212,7 +237,7 @@ impl ServerMetrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "completed={} aborted={} rejected={} shed={} tokens={} ttft_mean={:.3}s ttft_p50={:.3}s ttft_p99={:.3}s tpot_p50={:.4}s qdelay_p90={:.3}s tps_mean={:.2} tps_p10={:.2} flash_reads={} faults={} retries={} fetch_failures={} rerouted={} dropped={} watchdog={}",
+            "completed={} aborted={} rejected={} shed={} tokens={} ttft_mean={:.3}s ttft_p50={:.3}s ttft_p99={:.3}s tpot_p50={:.4}s qdelay_p90={:.3}s tps_mean={:.2} tps_p10={:.2} flash_reads={} faults={} retries={} fetch_failures={} rerouted={} dropped={} watchdog={} predictor={} prefetch_issued={} prefetch_used={} prefetch_dropped={} prefetch_acc={:.3}",
             self.completed,
             self.aborted,
             self.rejected,
@@ -232,6 +257,11 @@ impl ServerMetrics {
             self.rerouted_experts,
             self.dropped_experts,
             self.watchdog_failures,
+            if self.predictor.is_empty() { "-" } else { &self.predictor },
+            self.prefetch_issued,
+            self.prefetch_used,
+            self.prefetch_dropped,
+            self.prefetch_accuracy(),
         )
     }
 }
@@ -639,6 +669,12 @@ fn engine_loop(
     st.metrics.fetch_failures = tier.fetch_failures;
     st.metrics.rerouted_experts = tier.rerouted;
     st.metrics.dropped_experts = tier.dropped;
+    let pf = engine.prefetch_stats();
+    st.metrics.prefetch_issued = pf.issued;
+    st.metrics.prefetch_used = pf.used;
+    st.metrics.prefetch_dropped = pf.dropped;
+    st.metrics.prefetch_wasted = pf.wasted();
+    st.metrics.predictor = engine.predictor_label();
     st.metrics
 }
 
@@ -1525,6 +1561,11 @@ mod tests {
             rerouted_experts: 1,
             dropped_experts: 0,
             watchdog_failures: 1,
+            prefetch_issued: 8,
+            prefetch_used: 6,
+            prefetch_dropped: 1,
+            prefetch_wasted: 1,
+            predictor: "ngram:window=4096".to_string(),
         };
         let s = m.summary();
         assert!(s.contains("completed=2"));
@@ -1543,6 +1584,12 @@ mod tests {
         assert!(s.contains("rerouted=1"));
         assert!(s.contains("dropped=0"));
         assert!(s.contains("watchdog=1"));
+        assert!(s.contains("predictor=ngram:window=4096"));
+        assert!(s.contains("prefetch_issued=8"));
+        assert!(s.contains("prefetch_used=6"));
+        assert!(s.contains("prefetch_dropped=1"));
+        assert!(s.contains("prefetch_acc=0.750"));
+        assert!(ServerMetrics::default().summary().contains("predictor=-"));
     }
 
     // The percentile/mean helpers now feed SLO claims (BENCH_slo.json and

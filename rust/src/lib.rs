@@ -26,10 +26,14 @@
 //!   label-only `Strategy`/`DeltaMode` enums
 //! * [`policy`] — the pluggable policy stack: `RoutingPolicy` +
 //!   `EvictionPolicy` + `PlacementPolicy` traits (routing × eviction ×
-//!   store × placement, the four pluggable axes), the unified spec
-//!   registry (`cache-prior:0.5:2`, `lru`, `belady:trace=FILE`,
-//!   `lfu-decay:64`, `affinity:tie=random`), and all built-in
-//!   implementations
+//!   store × placement × prediction, the five pluggable axes), the
+//!   unified spec registry (`cache-prior:0.5:2`, `lru`,
+//!   `belady:trace=FILE`, `lfu-decay:64`, `affinity:tie=random`), and
+//!   all built-in implementations
+//! * [`predict`] — the predictive-prefetch tier: the
+//!   `ActivationPredictor` trait and the `next-token` / `ewma` /
+//!   `ngram` / `prior:file=` predictors that drive cancellable store
+//!   hints `--prefetch-depth` layers ahead (`docs/PREFETCH.md`)
 //! * [`runtime`] — PJRT executable registry (HLO-text artifacts; raw
 //!   components keep their output device-resident)
 //! * [`model`] — the token-generation engine composing the AOT components,
@@ -53,6 +57,7 @@ pub mod eval;
 pub mod flash;
 pub mod model;
 pub mod policy;
+pub mod predict;
 pub mod quant;
 pub mod report;
 pub mod routing;

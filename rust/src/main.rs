@@ -66,6 +66,17 @@ COMMANDS:
                                             least-loaded; see below)
                         --no-steal          disable work stealing between
                                             replica queues]
+  Every engine-building subcommand also accepts the prefetch axis:
+                        --predictor SPEC    activation predictor issuing
+                                            cross-layer prefetch hints
+                                            (default next-token; see the
+                                            predictor registry below)
+                        --prefetch-depth D  hint D layers ahead (1..=8,
+                                            default 1)
+                        --prefetch-pending N cap the async pipeline's
+                                            pending-hint table (0 = keep
+                                            the worker-scaled default;
+                                            overflow drops oldest hints)
   eval-ppl   --model M [--cache C --strategy S --policy P --chunks N --chunk-len L]
   eval-qa    --model M [--cache C --strategy S --policy P --items N]
   eval-math  --model M [--cache C --strategy S --policy P --items N]
@@ -75,7 +86,12 @@ COMMANDS:
                                               clock; mmap = measured I/O)]
   trace      --model M [--cache C --tokens N --strategy S
                         --policies P1,P2,..  eviction specs to replay
-                        --save-trace FILE    for later belady:trace=FILE]
+                        --save-trace FILE    for later belady:trace=FILE
+                                             and prior:file=FILE predictors
+                        --predictors S1,S2,. predictor specs to score
+                                             against the Belady oracle
+                                             (fraction-of-oracle replay;
+                                             default next-token,ewma,ngram)]
   footprint                          Table-1 style memory accounting
 
 Policy and store specs share one grammar: name[:arg]... with positional or
@@ -90,10 +106,11 @@ fault:inner=sim,profile=device-12gb:err=0.01; see docs/ROBUSTNESS.md).
 
 fn usage() -> String {
     format!(
-        "{USAGE}\n{}{}{}",
+        "{USAGE}\n{}{}{}{}",
         moe_cache::policy::registry_help(),
         moe_cache::policy::placement_registry_help(),
-        moe_cache::store::registry_help()
+        moe_cache::store::registry_help(),
+        moe_cache::predict::predictor_registry_help()
     )
 }
 
@@ -126,6 +143,9 @@ fn engine_from_args(args: &Args) -> Result<Engine> {
         .routing_spec(args.get_or("strategy", &default_strategy))?
         .eviction_spec(args.get_or("policy", "lru"))?
         .store_spec(args.get_or("store", "sim"))?
+        .predictor_spec(args.get_or("predictor", "next-token"))?
+        .prefetch_depth(args.usize_or("prefetch-depth", 1)?)
+        .prefetch_pending(args.usize_or("prefetch-pending", 0)?)
         .build()
 }
 
@@ -441,6 +461,9 @@ fn engine_with_store(
         .routing_spec(args.get_or("strategy", &default_strategy))?
         .eviction_spec(args.get_or("policy", "lru"))?
         .store(store)
+        .predictor_spec(args.get_or("predictor", "next-token"))?
+        .prefetch_depth(args.usize_or("prefetch-depth", 1)?)
+        .prefetch_pending(args.usize_or("prefetch-pending", 0)?)
         .build()
 }
 
@@ -632,6 +655,55 @@ fn trace_cmd(args: &Args) -> Result<()> {
         ]);
     }
     t.print();
+    // Predictor scoring on the same trace: every `--predictors` spec
+    // replays against per-layer LRU caches, hints `--prefetch-depth`
+    // layers ahead through a bounded pending table, and is scored as a
+    // fraction of the Belady oracle's hit rate at the same capacity. A
+    // saved trace doubles as its own learned prior (`prior:file=`), the
+    // fig17 upper reference.
+    let depth = args.usize_or("prefetch-depth", 1)?;
+    let hint_k = 2 * cfg.top_k;
+    let pending = match args.usize_or("prefetch-pending", 0)? {
+        0 => 64,
+        p => p,
+    };
+    let mut specs: Vec<String> = args
+        .get_or("predictors", "next-token,ewma,ngram")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if let Some(path) = args.get("save-trace") {
+        specs.push(format!("prior:file={path}"));
+    }
+    let mut pt = Table::new(
+        &format!("predict_{model}"),
+        &[
+            "predictor",
+            "depth",
+            "eff_hit_rate",
+            "demand_fetches",
+            "frac_of_oracle",
+            "issued",
+            "used",
+            "wasted",
+        ],
+    );
+    for spec in &specs {
+        let s = tracesim::predict::score_predictor(&trace, cache, spec, depth, hint_k, pending)
+            .with_context(|| format!("--predictors entry {spec:?}"))?;
+        pt.row(vec![
+            s.predictor.clone(),
+            s.depth.to_string(),
+            format!("{:.4}", s.effective_hit_rate),
+            s.demand_fetches.to_string(),
+            format!("{:.4}", s.fraction_of_oracle),
+            s.hints_issued.to_string(),
+            s.prefetch_served.to_string(),
+            s.hints_wasted.to_string(),
+        ]);
+    }
+    pt.print();
     Ok(())
 }
 

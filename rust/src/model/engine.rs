@@ -40,6 +40,7 @@ use crate::config::{DeviceProfile, ModelConfig, Quant};
 use crate::model::arena::{BatchGroups, LayerArena, MissSlot, StagedLayer};
 use crate::model::sampler::{log_prob, Sampler};
 use crate::policy::{BatchSelectInput, EvictionFactory, OriginalPolicy, RoutingPolicy};
+use crate::predict::{ActivationPredictor, MAX_PREFETCH_DISTANCE};
 use crate::routing::{self, RouterState, Selection, Strategy};
 use crate::runtime::Runtime;
 use crate::store::{self, ExpertStore, FetchDst, PrefetchStats, TierStats};
@@ -131,6 +132,8 @@ impl EngineOptions {
 ///     .routing_spec("cache-prior:0.5:2")?
 ///     .eviction_spec("lfu-decay:128")?
 ///     .store_spec("sim:profile=device-12gb")?
+///     .predictor_spec("ngram:4096")?
+///     .prefetch_depth(2)
 ///     .seed(7)
 ///     .build()?;
 /// # Ok(())
@@ -147,6 +150,9 @@ pub struct EngineBuilder {
     store: Option<String>,
     store_built: Option<Box<dyn ExpertStore>>,
     fetch_policy: Option<FetchPolicy>,
+    predictor: Option<Box<dyn ActivationPredictor>>,
+    prefetch_depth: usize,
+    prefetch_pending: Option<usize>,
 }
 
 impl EngineBuilder {
@@ -162,6 +168,9 @@ impl EngineBuilder {
             store: None,
             store_built: None,
             fetch_policy: None,
+            predictor: None,
+            prefetch_depth: 1,
+            prefetch_pending: None,
         }
     }
 
@@ -263,6 +272,39 @@ impl EngineBuilder {
         self
     }
 
+    /// Activation predictor as a trait object (the fifth pluggable axis;
+    /// see [`crate::predict`]). Defaults to `next-token`, the seed
+    /// engine's replay-the-last-band behavior.
+    pub fn predictor(mut self, p: Box<dyn ActivationPredictor>) -> Self {
+        self.predictor = Some(p);
+        self
+    }
+
+    /// Activation predictor from a registry spec (e.g. `"ngram:4096"`,
+    /// `"ewma:64"`, `"prior:file=results/trace.json"`).
+    pub fn predictor_spec(mut self, spec: &str) -> Result<Self> {
+        self.predictor = Some(crate::predict::parse_predictor(spec)?);
+        Ok(self)
+    }
+
+    /// How many layers ahead prediction hints reach (1 = next layer, the
+    /// seed behavior; validated against
+    /// [`MAX_PREFETCH_DISTANCE`](crate::predict::MAX_PREFETCH_DISTANCE)
+    /// in [`EngineBuilder::build`]). No effect until
+    /// [`Engine::enable_prefetch`] turns the pipeline on.
+    pub fn prefetch_depth(mut self, depth: usize) -> Self {
+        self.prefetch_depth = depth;
+        self
+    }
+
+    /// Cap on in-flight prefetches in the store's pending table
+    /// (`--prefetch-pending`); `0` keeps the backend default
+    /// (`workers * 8`).
+    pub fn prefetch_pending(mut self, cap: usize) -> Self {
+        self.prefetch_pending = if cap == 0 { None } else { Some(cap) };
+        self
+    }
+
     pub fn build(self) -> Result<Engine> {
         let rt = match self.runtime {
             Some(rt) => rt,
@@ -278,6 +320,11 @@ impl EngineBuilder {
         let eviction = self
             .eviction
             .unwrap_or_else(|| EvictionFactory::from_policy(opts.policy));
+        anyhow::ensure!(
+            (1..=MAX_PREFETCH_DISTANCE).contains(&self.prefetch_depth),
+            "prefetch depth {} out of range 1..={MAX_PREFETCH_DISTANCE}",
+            self.prefetch_depth
+        );
         let mut engine = Engine::build_from_parts(
             rt,
             &self.artifacts,
@@ -290,6 +337,13 @@ impl EngineBuilder {
         )?;
         if let Some(p) = self.fetch_policy {
             engine.set_fetch_policy(p);
+        }
+        if let Some(p) = self.predictor {
+            engine.set_predictor(p);
+        }
+        engine.set_prefetch_depth(self.prefetch_depth);
+        if let Some(cap) = self.prefetch_pending {
+            engine.set_prefetch_pending(cap);
         }
         Ok(engine)
     }
@@ -376,6 +430,10 @@ pub struct EngineSnapshot {
     /// Routing-policy-internal state ([`RoutingPolicy::session_state`]);
     /// `None` for the stateless built-ins.
     policy_state: Option<Json>,
+    /// Predictor-internal state
+    /// ([`ActivationPredictor::session_state`]); `None` for the
+    /// stateless `prior` table.
+    predictor_state: Option<Json>,
 }
 
 /// Per-request sequence state for multi-session serving.
@@ -400,6 +458,11 @@ pub struct SessionState {
     /// ([`RoutingPolicy::session_state`]); `None` for the stateless
     /// built-ins, so the swap stays O(1).
     policy_state: Option<Json>,
+    /// Predictor-internal per-session state
+    /// ([`ActivationPredictor::session_state`]); `None` until the
+    /// session's first prefetch-enabled step (and always `None` for
+    /// stateless predictors), so the swap stays O(1).
+    predictor_state: Option<Json>,
 }
 
 impl SessionState {
@@ -420,6 +483,7 @@ impl SessionState {
             router_state: RouterState::new(n_layers, seed),
             last_sel: vec![Vec::new(); n_layers],
             policy_state: None,
+            predictor_state: None,
         }
     }
 
@@ -524,6 +588,15 @@ pub struct Engine {
     /// third pluggable axis next to routing and eviction. Read through
     /// [`Engine::tier_stats`].
     store: Box<dyn ExpertStore>,
+    /// The activation predictor driving prefetch hints — the fifth
+    /// pluggable axis ([`crate::predict`]). Only consulted while the
+    /// store's pipeline is enabled, so with prefetch off the engine is
+    /// bit-identical regardless of predictor.
+    predictor: Box<dyn ActivationPredictor>,
+    /// How many layers ahead hints reach (1 = next layer only).
+    prefetch_depth: usize,
+    /// Pending-table cap override, applied when the pipeline is enabled.
+    prefetch_pending: Option<usize>,
     /// Retry/deadline policy for transient store faults on the fetch path.
     fetch_policy: FetchPolicy,
     /// Degradation-ladder counters (overlaid by [`Engine::tier_stats`]).
@@ -684,6 +757,9 @@ impl Engine {
         Ok(Engine {
             router_state: RouterState::new(cfg.n_layers, opts.seed),
             store,
+            predictor: Box::new(crate::predict::NextToken::new()),
+            prefetch_depth: 1,
+            prefetch_pending: None,
             fetch_policy: FetchPolicy::default(),
             degrade: DegradeStats::default(),
             fault_rng: Rng::new(opts.seed ^ FAULT_RNG_SALT),
@@ -738,6 +814,42 @@ impl Engine {
     /// No-op on backends without a pipeline.
     pub fn enable_prefetch(&mut self, workers: usize) {
         self.store.enable_prefetch(workers);
+        if let Some(cap) = self.prefetch_pending {
+            self.store.set_prefetch_max_pending(cap);
+        }
+    }
+
+    /// Swap in a different activation predictor (see
+    /// [`EngineBuilder::predictor_spec`]). Per-session predictor state
+    /// already parked in [`SessionState`]s was produced by the previous
+    /// predictor and is reset on restore if the new one rejects it.
+    pub fn set_predictor(&mut self, p: Box<dyn ActivationPredictor>) {
+        self.predictor = p;
+    }
+
+    /// The active predictor's round-trippable spec label.
+    pub fn predictor_label(&self) -> String {
+        self.predictor.label()
+    }
+
+    /// Hint depth in layers (validated by [`EngineBuilder::build`]; a
+    /// direct caller is clamped into `1..=MAX_PREFETCH_DISTANCE`).
+    pub fn set_prefetch_depth(&mut self, depth: usize) {
+        self.prefetch_depth = depth.clamp(1, MAX_PREFETCH_DISTANCE);
+    }
+
+    pub fn prefetch_depth(&self) -> usize {
+        self.prefetch_depth
+    }
+
+    /// Cap the store pipeline's pending table (applied immediately if the
+    /// pipeline is already on, and re-applied by
+    /// [`Engine::enable_prefetch`]).
+    pub fn set_prefetch_pending(&mut self, cap: usize) {
+        self.prefetch_pending = if cap == 0 { None } else { Some(cap) };
+        if let Some(c) = self.prefetch_pending {
+            self.store.set_prefetch_max_pending(c);
+        }
     }
 
     /// Totals of the store's prefetch pipeline (issued / used / deduped
@@ -748,17 +860,47 @@ impl Engine {
         self.store.prefetch_stats()
     }
 
-    /// Issue prefetch hints for `layer`'s predicted misses (the previous
-    /// token's reuse signal, skipping experts already cached). No-op with
-    /// prefetching disabled.
-    fn issue_prefetch_for_layer(&mut self, layer: usize) {
-        if !self.store.prefetch_enabled() {
-            return;
+    /// Ask the predictor for layers `from_layer+1 ..= from_layer+depth`
+    /// and hint every predicted expert not already cached at its target
+    /// layer. Distances that would cross the token boundary are NOT
+    /// issued here — only the final layer hints across the wrap, via
+    /// [`Engine::issue_wrap_hints`] — so each layer is hinted once per
+    /// token at its natural distance. Callers gate on
+    /// `store.prefetch_enabled()`.
+    fn issue_prediction_hints(&mut self, from_layer: usize, from_sel: &[u32]) {
+        let n_layers = self.cfg.n_layers;
+        let k = 2 * self.cfg.top_k;
+        for dist in 1..=self.prefetch_depth {
+            let target = from_layer + dist;
+            if target >= n_layers {
+                break;
+            }
+            let pred = self.predictor.predict(from_layer, from_sel, target, dist, k);
+            for e in pred {
+                if !self.caches[target].contains(e) {
+                    self.store.prefetch(target, e, dist);
+                }
+            }
         }
-        for i in 0..self.last_sel[layer].len() {
-            let e = self.last_sel[layer][i];
-            if !self.caches[layer].contains(e) {
-                self.store.prefetch(layer, e);
+    }
+
+    /// Token-boundary hints: after the final layer's routing, predict the
+    /// NEXT token's early layers from the final layer's selection
+    /// (distance `d` lands on layer `d - 1`), overlapping those fetches
+    /// with sampling and the caller's work between steps.
+    fn issue_wrap_hints(&mut self, from_sel: &[u32]) {
+        let n_layers = self.cfg.n_layers;
+        let k = 2 * self.cfg.top_k;
+        for dist in 1..=self.prefetch_depth {
+            let target = dist - 1;
+            if target >= n_layers {
+                break;
+            }
+            let pred = self.predictor.predict(n_layers - 1, from_sel, target, dist, k);
+            for e in pred {
+                if !self.caches[target].contains(e) {
+                    self.store.prefetch(target, e, dist);
+                }
             }
         }
     }
@@ -792,6 +934,7 @@ impl Engine {
         // so the content remains bit-exact whenever those experts return.
         // The store rewinds its accounting and cancels pending prefetches.
         self.store.reset();
+        self.predictor.reset_session_state();
         self.degrade = DegradeStats::default();
         self.fault_rng = Rng::new(self.opts.seed ^ FAULT_RNG_SALT);
         self.token_counter = 0;
@@ -884,6 +1027,8 @@ impl Engine {
         let overrides = self.override_selection.take();
         let mut trace_sel: Vec<Vec<u32>> = Vec::with_capacity(n_layers);
         let mut trace_logits: Vec<Vec<f32>> = Vec::new();
+        // Final layer's selection, captured for the token-boundary hints.
+        let mut final_sel: Vec<u32> = Vec::new();
 
         for l in 0..n_layers {
             // ---- KV acquire: persistent device buffer, or upload the host
@@ -952,11 +1097,22 @@ impl Engine {
                 }
             }
 
-            // ---- prefetch issue: predict layer l+1 from the previous
-            // token's selection; its fetches overlap with this layer's
-            // experts dispatch ----
-            if l + 1 < n_layers {
-                self.issue_prefetch_for_layer(l + 1);
+            // ---- predictive prefetch: feed this layer's routing signal
+            // (selection + top-2K near-miss band) to the predictor, then
+            // hint the next `prefetch_depth` layers; those fetches overlap
+            // with this layer's experts dispatch. Computing the band here,
+            // pre-degradation, is exact: the ladder only ever rewrites
+            // `sel.experts`, never `sel.weights`. ----
+            let mut band: Vec<u32> = Vec::new();
+            if self.store.prefetch_enabled() {
+                // Partial selection: the feed only ever consumes the
+                // top-2K band, so skip the full argsort.
+                band = routing::ranking_topk(&sel.weights, 2 * top_k);
+                self.predictor.observe(l, &sel.experts, &band);
+                self.issue_prediction_hints(l, &sel.experts);
+                if l + 1 == n_layers {
+                    final_sel = sel.experts.clone();
+                }
             }
 
             // ---- cache access + arena placement + flash fetches ----
@@ -1085,19 +1241,15 @@ impl Engine {
                 h[i] = h1[i] + y[i];
             }
 
-            // Record the prefetcher's reuse signal for the next token at
-            // this layer: the top-2K *ranked* experts, not just the
-            // selected K. A selected expert is in the cache right after
-            // this step, so next-token misses come from the near-miss band
-            // just outside the selection — the band routing drift pulls
-            // experts in from.
+            // Record the reuse signal for the next token at this layer:
+            // with the pipeline on, the top-2K *ranked* band computed at
+            // the hint site above (a selected expert is in the cache right
+            // after this step, so next-token misses come from the
+            // near-miss band routing drift pulls experts in from).
             let last = &mut self.last_sel[l];
             last.clear();
             if self.store.prefetch_enabled() {
-                // Partial selection: the feed only ever consumes the
-                // top-2K band, so skip the full argsort.
-                let r = routing::ranking_topk(&sel.weights, 2 * top_k);
-                last.extend_from_slice(&r);
+                last.extend_from_slice(&band);
             } else {
                 last.extend_from_slice(&sel.experts);
             }
@@ -1119,9 +1271,13 @@ impl Engine {
         let logits: Vec<f32> = Runtime::lit_f32(&outs[0])?;
         step_stats.t_compute_s += t0.elapsed().as_secs_f64();
 
-        // Prefetch layer 0's predicted misses for the NEXT token: the
-        // fetches overlap with sampling and caller work between steps.
-        self.issue_prefetch_for_layer(0);
+        // Token-boundary hints: predict the NEXT token's early layers from
+        // the final layer's selection; those fetches overlap with sampling
+        // and caller work between steps.
+        if self.store.prefetch_enabled() {
+            let from_sel = std::mem::take(&mut final_sel);
+            self.issue_wrap_hints(&from_sel);
+        }
 
         if self.opts.record_trace {
             let lg = if self.opts.record_logits { Some(trace_logits) } else { None };
@@ -1184,23 +1340,38 @@ impl Engine {
         let use_fallback = !self.strategy_active;
         let stateful = !use_fallback && self.routing.session_state().is_some();
         let saved_policy_state = if stateful { self.routing.session_state() } else { None };
-        let result = self.step_batch_core(slots, stateful, use_fallback);
+        // Same contract for a stateful predictor: the core exchanges its
+        // state through `SessionState::predictor_state` around every
+        // observe/predict, and the engine's resident state is restored on
+        // both exits.
+        let pred_stateful =
+            self.store.prefetch_enabled() && self.predictor.session_state().is_some();
+        let saved_predictor_state =
+            if pred_stateful { self.predictor.session_state() } else { None };
+        let result = self.step_batch_core(slots, stateful, use_fallback, pred_stateful);
         if stateful {
             match &saved_policy_state {
                 Some(st) => self.routing.restore_session_state(st),
                 None => self.routing.reset_session_state(),
             }
         }
+        if pred_stateful {
+            match &saved_predictor_state {
+                Some(st) => self.predictor.restore_session_state(st),
+                None => self.predictor.reset_session_state(),
+            }
+        }
         result
     }
 
-    /// The body of [`Engine::step_batch`]; policy-state save/restore lives
-    /// in the wrapper so it runs on the error path too.
+    /// The body of [`Engine::step_batch`]; policy- and predictor-state
+    /// save/restore lives in the wrapper so it runs on the error path too.
     fn step_batch_core(
         &mut self,
         slots: &mut [SessionSlot],
         stateful: bool,
         use_fallback: bool,
+        pred_stateful: bool,
     ) -> Result<BatchPlan> {
         let n_layers = self.cfg.n_layers;
         let b = slots.len();
@@ -1244,6 +1415,9 @@ impl Engine {
         let mut h1s: Vec<Vec<f32>> = vec![Vec::new(); b];
         let mut zs: Vec<Vec<f32>> = vec![Vec::new(); b];
         let mut xns: Vec<Vec<f32>> = vec![Vec::new(); b];
+        // Per-slot final-layer selections, captured for the token-boundary
+        // hints after the head.
+        let mut final_sels: Vec<Vec<u32>> = vec![Vec::new(); b];
 
         for l in 0..n_layers {
             // ---- attention + router per session (own KV, host mirrors) ----
@@ -1319,16 +1493,31 @@ impl Engine {
                 out
             };
 
-            // ---- prefetch hints for layer l+1 (previous token's per-slot
-            // predictions; cross-session duplicates coalesce in the
-            // store-owned pipeline and are counted as deduped) ----
-            if prefetch_on && l + 1 < n_layers {
-                for slot in slots.iter() {
-                    let pred = slot.state.last_sel.get(l + 1).map(Vec::as_slice).unwrap_or(&[]);
-                    for &e in pred {
-                        if !self.caches[l + 1].contains(e) {
-                            self.store.prefetch(l + 1, e);
+            // ---- predictive prefetch per slot: feed each session's
+            // routing signal to the predictor (exchanging per-session
+            // predictor state exactly like stateful routing-policy state
+            // above), then hint the next `prefetch_depth` layers.
+            // Cross-session duplicates coalesce in the store-owned
+            // pipeline and are counted as deduped. The band is computed
+            // pre-degradation, which is exact: the ladder only rewrites
+            // `experts`, never `weights`. ----
+            let mut bands: Vec<Vec<u32>> = vec![Vec::new(); b];
+            if prefetch_on {
+                for (i, slot) in slots.iter_mut().enumerate() {
+                    bands[i] = routing::ranking_topk(&sels[i].weights, 2 * top_k);
+                    if pred_stateful {
+                        match slot.state.predictor_state.take() {
+                            Some(st) => self.predictor.restore_session_state(&st),
+                            None => self.predictor.reset_session_state(),
                         }
+                    }
+                    self.predictor.observe(l, &sels[i].experts, &bands[i]);
+                    self.issue_prediction_hints(l, &sels[i].experts);
+                    if pred_stateful {
+                        slot.state.predictor_state = self.predictor.session_state();
+                    }
+                    if l + 1 == n_layers {
+                        final_sels[i] = sels[i].experts.clone();
                     }
                 }
             }
@@ -1522,13 +1711,13 @@ impl Engine {
             // staged weights (the whole batch is "this step" now).
             self.arenas[l].finish_step();
 
-            // ---- per-slot reuse signal for the next token ----
+            // ---- per-slot reuse signal for the next token (the top-2K
+            // band computed at the hint site above) ----
             for (i, slot) in slots.iter_mut().enumerate() {
                 let last = &mut slot.state.last_sel[l];
                 last.clear();
                 if prefetch_on {
-                    let r = routing::ranking_topk(&sels[i].weights, 2 * top_k);
-                    last.extend_from_slice(&r);
+                    last.extend_from_slice(&bands[i]);
                 } else {
                     last.extend_from_slice(&sels[i].experts);
                 }
@@ -1560,14 +1749,19 @@ impl Engine {
             slot.state.pos += 1;
         }
 
-        // Layer-0 hints for the NEXT batch step.
+        // Token-boundary hints for the NEXT batch step's early layers
+        // (per-slot predictor state exchanged exactly as at the hint site).
         if prefetch_on {
-            for slot in slots.iter() {
-                let pred = slot.state.last_sel.first().map(Vec::as_slice).unwrap_or(&[]);
-                for &e in pred {
-                    if !self.caches[0].contains(e) {
-                        self.store.prefetch(0, e);
+            for (i, slot) in slots.iter_mut().enumerate() {
+                if pred_stateful {
+                    match slot.state.predictor_state.take() {
+                        Some(st) => self.predictor.restore_session_state(&st),
+                        None => self.predictor.reset_session_state(),
                     }
+                }
+                self.issue_wrap_hints(&final_sels[i]);
+                if pred_stateful {
+                    slot.state.predictor_state = self.predictor.session_state();
                 }
             }
         }
@@ -1661,6 +1855,14 @@ impl Engine {
             None => self.routing.reset_session_state(),
         }
         s.policy_state = outgoing;
+        // Same exchange for predictor-internal per-session state (the
+        // cross-layer predictors' transition/frequency history).
+        let outgoing_pred = self.predictor.session_state();
+        match s.predictor_state.take() {
+            Some(st) => self.predictor.restore_session_state(&st),
+            None => self.predictor.reset_session_state(),
+        }
+        s.predictor_state = outgoing_pred;
         self.kv_dev_k.iter_mut().for_each(|b| *b = None);
         self.kv_dev_v.iter_mut().for_each(|b| *b = None);
     }
@@ -1678,6 +1880,12 @@ impl Engine {
         t.fetch_failures += self.degrade.fetch_failures;
         t.rerouted += self.degrade.rerouted;
         t.dropped += self.degrade.dropped;
+        // Prefetch-pipeline accounting, folded in so one snapshot also
+        // tells the prediction story (zero with the pipeline off).
+        let pf = self.store.prefetch_stats();
+        t.prefetch_issued += pf.issued;
+        t.prefetch_unused += pf.wasted();
+        t.prefetch_dropped += pf.dropped;
         t
     }
 
@@ -1759,6 +1967,7 @@ impl Engine {
             last_sel: self.last_sel.clone(),
             router_state: self.router_state.clone(),
             policy_state: self.routing.session_state(),
+            predictor_state: self.predictor.session_state(),
         }
     }
 
@@ -1777,6 +1986,10 @@ impl Engine {
         match &snap.policy_state {
             Some(st) => self.routing.restore_session_state(st),
             None => self.routing.reset_session_state(),
+        }
+        match &snap.predictor_state {
+            Some(st) => self.predictor.restore_session_state(st),
+            None => self.predictor.reset_session_state(),
         }
         // Staged buffers need no invalidation: their keys name immutable
         // expert weights, so matching positions stay bit-exact.

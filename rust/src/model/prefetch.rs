@@ -6,7 +6,11 @@
 //! at layer `l+1` is a strong predictor of the next one. While layer `l`'s
 //! attention/experts dispatches run, the engine issues fetches for layer
 //! `l+1`'s predicted misses; by the time the decode loop reaches `l+1`,
-//! the weights are (usually) dequantized and ready.
+//! the weights are (usually) dequantized and ready. With the predictive
+//! tier ([`crate::predict`]) the hints can come from any registered
+//! predictor and reach up to `--prefetch-depth` layers ahead; every hint
+//! carries its layer *distance* so the accounting can attribute wins and
+//! waste per distance.
 //!
 //! Expert weights are immutable in the flash image, so a completed
 //! prefetch never goes stale: mispredictions simply wait in the pending
@@ -30,12 +34,17 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::predict::MAX_PREFETCH_DISTANCE;
+use crate::store::DistanceStats;
 use crate::util::threadpool::WorkerPool;
 use crate::weights::{ExpertWeights, FlashImage};
 
 pub struct Prefetcher {
     pool: WorkerPool,
-    pending: HashMap<(usize, u32), mpsc::Receiver<Result<ExpertWeights>>>,
+    /// In-flight fetches keyed by `(layer, expert)`; the value carries the
+    /// result channel and the hint's layer distance (for per-distance
+    /// accounting on use/drop).
+    pending: HashMap<(usize, u32), (mpsc::Receiver<Result<ExpertWeights>>, usize)>,
     /// Pending keys in issue order — mispredictions are evicted
     /// oldest-first when the table fills, so a long run with routing drift
     /// can never clog the pipeline with stale predictions.
@@ -47,6 +56,13 @@ pub struct Prefetcher {
     /// a duplicate. Gang-scheduled sessions hint the same `(layer, expert)`
     /// many times per round, so this is the pipeline's dedup win counter.
     pub deduped: u64,
+    /// Pending entries evicted oldest-first to make room for fresh hints —
+    /// depth-d prediction multiplies table pressure, so drops are a tuning
+    /// signal (`--prefetch-pending`), not noise.
+    pub dropped: u64,
+    /// issued/used/dropped split by hint distance (index = distance - 1,
+    /// clamped to [`MAX_PREFETCH_DISTANCE`]).
+    pub by_distance: [DistanceStats; MAX_PREFETCH_DISTANCE],
     max_pending: usize,
 }
 
@@ -59,20 +75,40 @@ impl Prefetcher {
             issued: 0,
             used: 0,
             deduped: 0,
+            dropped: 0,
+            by_distance: [DistanceStats::default(); MAX_PREFETCH_DISTANCE],
             // Bounds both memory and the worst-case take() stall (a claim
             // can wait behind at most this many queued fetches).
             max_pending: workers.max(1) * 8,
         }
     }
 
+    /// Override the pending-table bound (`--prefetch-pending`). The
+    /// default `workers * 8` is sized for depth-1 hinting; depth-d
+    /// prediction issues up to d× the hints per layer and drops fresh
+    /// ones silently once the table fills.
+    pub fn set_max_pending(&mut self, cap: usize) {
+        self.max_pending = cap.max(1);
+    }
+
+    pub fn max_pending(&self) -> usize {
+        self.max_pending
+    }
+
+    fn dist_slot(distance: usize) -> usize {
+        distance.clamp(1, MAX_PREFETCH_DISTANCE) - 1
+    }
+
     /// Begin fetching `(layer, expert)` off-thread unless it is already in
-    /// flight. A duplicate hint — e.g. several gang-scheduled sessions
-    /// predicting the same expert within one round — coalesces onto the
-    /// in-flight fetch and is counted in [`Prefetcher::deduped`]. A full
-    /// table evicts its oldest entry first (a stale misprediction;
-    /// dropping it only costs a demand fetch later), so fresh predictions
-    /// always get through.
-    pub fn issue(&mut self, image: &Arc<FlashImage>, layer: usize, expert: u32) {
+    /// flight. `distance` is how many layers ahead of the hinting layer
+    /// the target sits (1 = next layer, the seed behavior). A duplicate
+    /// hint — e.g. several gang-scheduled sessions predicting the same
+    /// expert within one round — coalesces onto the in-flight fetch and is
+    /// counted in [`Prefetcher::deduped`] (the original hint keeps its
+    /// distance). A full table evicts its oldest entry first (a stale
+    /// misprediction; dropping it only costs a demand fetch later), so
+    /// fresh predictions always get through.
+    pub fn issue(&mut self, image: &Arc<FlashImage>, layer: usize, expert: u32, distance: usize) {
         if self.pending.contains_key(&(layer, expert)) {
             self.deduped += 1;
             return;
@@ -82,7 +118,10 @@ impl Prefetcher {
                 Some(old) => {
                     // Dropping the receiver orphans the worker's send —
                     // harmless; the fetch result is simply discarded.
-                    self.pending.remove(&old);
+                    if let Some((_, d)) = self.pending.remove(&old) {
+                        self.dropped += 1;
+                        self.by_distance[Self::dist_slot(d)].dropped += 1;
+                    }
                 }
                 None => break, // order/pending desync: fail open
             }
@@ -92,9 +131,10 @@ impl Prefetcher {
         self.pool.submit(move || {
             let _ = tx.send(image.fetch_expert(layer, expert as usize, false));
         });
-        self.pending.insert((layer, expert), rx);
+        self.pending.insert((layer, expert), (rx, distance));
         self.order.push_back((layer, expert));
         self.issued += 1;
+        self.by_distance[Self::dist_slot(distance)].issued += 1;
     }
 
     /// Claim a prefetched expert, blocking if the fetch is still queued or
@@ -106,12 +146,13 @@ impl Prefetcher {
     /// issued, was evicted as stale, or its worker died — the caller falls
     /// back to a demand fetch.
     pub fn take(&mut self, layer: usize, expert: u32) -> Option<Result<ExpertWeights>> {
-        let rx = self.pending.remove(&(layer, expert))?;
+        let (rx, distance) = self.pending.remove(&(layer, expert))?;
         self.order.retain(|k| *k != (layer, expert));
         match rx.recv() {
             Ok(res) => {
                 if res.is_ok() {
                     self.used += 1;
+                    self.by_distance[Self::dist_slot(distance)].used += 1;
                 }
                 Some(res)
             }
@@ -131,6 +172,8 @@ impl Prefetcher {
         self.issued = 0;
         self.used = 0;
         self.deduped = 0;
+        self.dropped = 0;
+        self.by_distance = [DistanceStats::default(); MAX_PREFETCH_DISTANCE];
     }
 }
 
@@ -147,6 +190,24 @@ mod tests {
         let mut p = Prefetcher::new(1);
         assert!(p.take(0, 42).is_none());
         assert_eq!(p.in_flight(), 0);
-        assert_eq!((p.issued, p.used, p.deduped), (0, 0, 0));
+        assert_eq!((p.issued, p.used, p.deduped, p.dropped), (0, 0, 0, 0));
+    }
+
+    #[test]
+    fn max_pending_is_configurable() {
+        let mut p = Prefetcher::new(2);
+        assert_eq!(p.max_pending(), 16);
+        p.set_max_pending(3);
+        assert_eq!(p.max_pending(), 3);
+        p.set_max_pending(0); // clamped: a zero cap would deadlock issue()
+        assert_eq!(p.max_pending(), 1);
+    }
+
+    #[test]
+    fn distance_slots_clamp() {
+        assert_eq!(Prefetcher::dist_slot(0), 0);
+        assert_eq!(Prefetcher::dist_slot(1), 0);
+        assert_eq!(Prefetcher::dist_slot(MAX_PREFETCH_DISTANCE), MAX_PREFETCH_DISTANCE - 1);
+        assert_eq!(Prefetcher::dist_slot(99), MAX_PREFETCH_DISTANCE - 1);
     }
 }

@@ -1,0 +1,307 @@
+//! The predictive-prefetch tier: pluggable cross-layer activation
+//! predictors — the system's fifth pluggable axis, next to routing,
+//! eviction, storage and placement.
+//!
+//! The paper's cache-aware router makes consecutive selections sticky,
+//! which is why replaying the *previous token's same-layer* top-2K band
+//! (the seed prefetch heuristic, now the [`predictors::NextToken`]
+//! baseline) works at all. But related systems (MoE-Infinity, ExpertFlow)
+//! show the larger win comes from predicting activations *ahead*, across
+//! layers, from the current routing signal. This module turns that idea
+//! into a trait:
+//!
+//! * [`ActivationPredictor`] — given the layer-`L` routing signal and
+//!   whatever per-session history the predictor keeps, name the experts
+//!   layers `L+1..L+d` are about to select. The engine feeds every real
+//!   selection back through [`ActivationPredictor::observe`] and turns
+//!   predictions into cancellable [`crate::store::ExpertStore::prefetch`]
+//!   hints `--prefetch-depth` layers ahead.
+//! * The registry — the same PR-3 spec grammar as every other axis
+//!   (`name[:arg|key=value]...`, `_` ≡ `-`): `next-token` (the parity
+//!   baseline), `ewma:half-life=H` (decayed per-layer expert-frequency
+//!   prior), `ngram:window=W` (per-session cross-layer transition table),
+//!   `prior:file=TRACE` (offline transition table from a saved
+//!   `tracesim` trace — the fig17 learned-prior path).
+//!
+//! ## Invariants (pinned by `tests/predict_parity.rs`)
+//!
+//! * Predictions are *hints*: they must never change routing, cache
+//!   contents (until a real miss claims a staged fetch), or sampled
+//!   tokens. Token streams are bit-identical with prediction on and off.
+//! * `next-token` at depth 1 reproduces the seed prefetch hint stream
+//!   exactly (same hints, same order).
+//! * Per-session predictor state snapshots/restores through
+//!   [`crate::model::SessionState`] exactly like routing-policy state, so
+//!   session swaps and fused batch steps cannot leak one session's
+//!   history into another.
+//!
+//! Predictors are *scored*, not trusted: `tracesim::predict` replays a
+//! recorded trace deterministically, counts hints issued / hints that
+//! served a demand miss / wasted per layer-distance, and reports
+//! effective hit rate as a fraction of the Belady oracle's hit rate on
+//! the same trace. See `docs/PREFETCH.md` for the add-a-predictor
+//! walkthrough.
+
+#![warn(clippy::unwrap_used)]
+
+pub mod predictors;
+
+pub use predictors::{Ewma, Ngram, NextToken, Prior};
+
+use anyhow::{Context, Result};
+
+use crate::policy::SpecArgs;
+use crate::util::json::Json;
+
+/// Hard ceiling on hint distance (layers ahead): bounds the per-distance
+/// accounting arrays and the n-gram history window. `--prefetch-depth`
+/// values above this are rejected at build time.
+pub const MAX_PREFETCH_DISTANCE: usize = 8;
+
+/// A cross-layer activation predictor (object-safe).
+///
+/// The engine traverses layers in decode order — `0..n_layers` within a
+/// token, wrapping to layer 0 of the next token — and drives the
+/// predictor in exactly that order:
+///
+/// 1. After routing layer `L`, it calls
+///    [`ActivationPredictor::observe`] with the real selection and the
+///    top-2K ranked band.
+/// 2. It then calls [`ActivationPredictor::predict`] once per distance
+///    `1..=depth` (target layer `L+d`, wrapping onto the next token's
+///    early layers after the last layer) and issues the returned experts
+///    as [`crate::store::ExpertStore::prefetch`] hints, skipping experts
+///    already cached at the target layer.
+///
+/// Predictions must be deterministic functions of the observation
+/// history (no wall clock, no unseeded randomness) — the `tracesim`
+/// scoring replay and the engine must agree.
+pub trait ActivationPredictor: Send {
+    /// Feed one real routing decision: `sel` is the selected top-K
+    /// (weight-descending), `band` the top-2K ranked band (equal to
+    /// `sel` in trace replays, where only selections were recorded).
+    fn observe(&mut self, layer: usize, sel: &[u32], band: &[u32]);
+
+    /// Predict up to `k` experts `target_layer` (= `from_layer +
+    /// distance` in traversal order, wrapping across the token boundary)
+    /// is about to select, given layer `from_layer`'s just-routed
+    /// selection. Order matters: hints are issued in the returned order
+    /// and the pending table evicts oldest-first under pressure. An
+    /// empty vector means "no idea" — no hints are issued.
+    fn predict(
+        &mut self,
+        from_layer: usize,
+        from_sel: &[u32],
+        target_layer: usize,
+        distance: usize,
+        k: usize,
+    ) -> Vec<u32>;
+
+    /// Canonical spec label; must round-trip through [`parse_predictor`].
+    fn label(&self) -> String;
+
+    /// Snapshot mutable per-session state (observation history). `None`
+    /// = stateless (the offline `prior:file=` table). Stateful
+    /// predictors must return `Some` from every snapshot so a round-trip
+    /// through [`ActivationPredictor::restore_session_state`] is
+    /// lossless — the engine exchanges this through
+    /// [`crate::model::SessionState`] on session swaps and per-slot in
+    /// fused batch steps, exactly like routing-policy state.
+    fn session_state(&self) -> Option<Json> {
+        None
+    }
+
+    /// Restore state captured by [`ActivationPredictor::session_state`].
+    fn restore_session_state(&mut self, _state: &Json) {}
+
+    /// Reset per-session state to its fresh-session value (the engine
+    /// calls this when materializing a session with no recorded state).
+    fn reset_session_state(&mut self) {}
+
+    fn clone_box(&self) -> Box<dyn ActivationPredictor>;
+}
+
+impl Clone for Box<dyn ActivationPredictor> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------
+
+/// One registered activation predictor.
+pub struct PredictorEntry {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub summary: &'static str,
+    /// A spec string that builds with defaults (registry smoke test).
+    pub example: &'static str,
+    pub build: fn(&SpecArgs) -> Result<Box<dyn ActivationPredictor>>,
+}
+
+fn build_next_token(a: &SpecArgs) -> Result<Box<dyn ActivationPredictor>> {
+    a.no_args()?;
+    Ok(Box::new(NextToken::new()))
+}
+
+fn build_ewma(a: &SpecArgs) -> Result<Box<dyn ActivationPredictor>> {
+    let half_life = a.f64_or(0, "half-life", Ewma::DEFAULT_HALF_LIFE)?;
+    anyhow::ensure!(
+        half_life > 0.0 && half_life.is_finite(),
+        "{:?}: half-life must be a finite number > 0",
+        a.raw()
+    );
+    Ok(Box::new(Ewma::new(half_life)))
+}
+
+fn build_ngram(a: &SpecArgs) -> Result<Box<dyn ActivationPredictor>> {
+    let window = a.usize_or(0, "window", Ngram::DEFAULT_WINDOW)?;
+    anyhow::ensure!(window > 0, "{:?}: window must be > 0", a.raw());
+    Ok(Box::new(Ngram::new(window)))
+}
+
+fn build_prior(a: &SpecArgs) -> Result<Box<dyn ActivationPredictor>> {
+    let path = a
+        .get(0, "file")
+        .with_context(|| format!("{:?}: prior needs file=TRACE", a.raw()))?;
+    let p = Prior::load(std::path::Path::new(path))?;
+    Ok(Box::new(p))
+}
+
+const PREDICTOR_ENTRIES: &[PredictorEntry] = &[
+    PredictorEntry {
+        name: "next-token",
+        aliases: &["last"],
+        summary: "previous token's same-layer top-2K band (seed behavior, parity baseline)",
+        example: "next-token",
+        build: build_next_token,
+    },
+    PredictorEntry {
+        name: "ewma",
+        aliases: &[],
+        summary: "per-layer exponentially-decayed expert-frequency prior (half-life in observations, default 64)",
+        example: "ewma:64",
+        build: build_ewma,
+    },
+    PredictorEntry {
+        name: "ngram",
+        aliases: &[],
+        summary: "per-session cross-layer transition table: layer-L selections predict layer-L+d (window in transitions, default 4096)",
+        example: "ngram:4096",
+        build: build_ngram,
+    },
+    PredictorEntry {
+        name: "prior",
+        aliases: &[],
+        summary: "offline transition table from a saved tracesim trace (prior:file=TRACE, the fig17 learned-prior path)",
+        example: "prior:file=results/trace.json",
+        build: build_prior,
+    },
+];
+
+pub fn predictor_entries() -> &'static [PredictorEntry] {
+    PREDICTOR_ENTRIES
+}
+
+fn predictor_names() -> String {
+    PREDICTOR_ENTRIES
+        .iter()
+        .map(|e| e.example)
+        .collect::<Vec<_>>()
+        .join(" | ")
+}
+
+fn find_entry(name: &str) -> Result<&'static PredictorEntry> {
+    PREDICTOR_ENTRIES
+        .iter()
+        .find(|e| e.name == name || e.aliases.contains(&name))
+        .with_context(|| {
+            format!("unknown predictor {name:?}; registered: {}", predictor_names())
+        })
+}
+
+/// Grammar + name check without touching the filesystem (`prior:file=`
+/// only opens its trace in [`parse_predictor`]) — configuration-time
+/// validation for the builder/CLI.
+pub fn validate_predictor_spec(spec: &str) -> Result<()> {
+    let args = SpecArgs::parse(spec)?;
+    find_entry(args.name()).map(|_| ())
+}
+
+/// Build a predictor from a registry spec.
+pub fn parse_predictor(spec: &str) -> Result<Box<dyn ActivationPredictor>> {
+    let args = SpecArgs::parse(spec)?;
+    let entry = find_entry(args.name())?;
+    (entry.build)(&args).with_context(|| format!("in predictor spec {spec:?}"))
+}
+
+/// Human-readable registry listing for `--help` output.
+pub fn predictor_registry_help() -> String {
+    let mut out = String::from("PREDICTORS (--predictor):\n");
+    for e in PREDICTOR_ENTRIES {
+        out.push_str(&format!("  {:<24} {}\n", e.example, e.summary));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used)]
+
+    use super::*;
+
+    #[test]
+    fn every_entry_example_builds_and_roundtrips() {
+        for e in predictor_entries() {
+            if e.name == "prior" {
+                // prior:file= needs a trace on disk; its build/roundtrip
+                // is covered by tests/predict_parity.rs with a real file.
+                assert!(validate_predictor_spec(e.example).is_ok());
+                continue;
+            }
+            let p = parse_predictor(e.example)
+                .unwrap_or_else(|err| panic!("{}: {err:#}", e.example));
+            let p2 = parse_predictor(&p.label()).unwrap();
+            assert_eq!(p.label(), p2.label(), "label roundtrip for {}", e.name);
+        }
+    }
+
+    #[test]
+    fn unknown_names_enumerate_registry() {
+        let err = format!("{:#}", parse_predictor("bogus").unwrap_err());
+        assert!(err.contains("next-token") && err.contains("ngram"), "{err}");
+        assert!(validate_predictor_spec("bogus").is_err());
+        assert!(validate_predictor_spec("prior:file=nonexistent.json").is_ok());
+    }
+
+    #[test]
+    fn named_and_positional_specs_agree() {
+        assert_eq!(
+            parse_predictor("ewma:32").unwrap().label(),
+            parse_predictor("ewma:half_life=32").unwrap().label()
+        );
+        assert_eq!(
+            parse_predictor("ngram:window=128").unwrap().label(),
+            parse_predictor("ngram:128").unwrap().label()
+        );
+    }
+
+    #[test]
+    fn registry_help_lists_everything() {
+        let h = predictor_registry_help();
+        for e in predictor_entries() {
+            assert!(h.contains(e.name), "help missing {}", e.name);
+        }
+    }
+
+    #[test]
+    fn bad_args_rejected() {
+        assert!(parse_predictor("next-token:3").is_err());
+        assert!(parse_predictor("ewma:0").is_err());
+        assert!(parse_predictor("ewma:nan").is_err());
+        assert!(parse_predictor("ngram:0").is_err());
+        assert!(parse_predictor("prior").is_err());
+    }
+}

@@ -1,0 +1,590 @@
+//! The registered [`ActivationPredictor`] implementations.
+//!
+//! All four are deterministic functions of their observation history (no
+//! clocks, no unseeded randomness) and break score ties by ascending
+//! expert id, so the engine and the `tracesim::predict` scoring replay
+//! produce identical hint streams.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::{ActivationPredictor, MAX_PREFETCH_DISTANCE};
+
+/// Rank `(id, score)` pairs by score descending, id ascending, and keep
+/// the top `k` with strictly positive score.
+fn top_k_by_score(mut scored: Vec<(u32, f64)>, k: usize) -> Vec<u32> {
+    scored.retain(|&(_, s)| s > 0.0);
+    scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal).then(a.0.cmp(&b.0)));
+    scored.truncate(k);
+    scored.into_iter().map(|(e, _)| e).collect()
+}
+
+fn ids_to_json(ids: &[u32]) -> Json {
+    Json::Array(ids.iter().map(|&e| Json::num(e as f64)).collect())
+}
+
+fn ids_from_json(j: &Json) -> Vec<u32> {
+    j.as_array()
+        .map(|a| a.iter().filter_map(|v| v.as_f64()).map(|f| f as u32).collect())
+        .unwrap_or_default()
+}
+
+// ---------------------------------------------------------------------
+// next-token
+// ---------------------------------------------------------------------
+
+/// The seed behavior as a predictor: replay the previous token's
+/// *same-layer* top-2K band. `observe` stores each layer's band;
+/// `predict(target)` returns whatever band was last seen at the target
+/// layer, which — because layers are observed in traversal order — is
+/// exactly the previous token's band for that layer. Ignores the routing
+/// signal entirely; it is the parity baseline `tests/predict_parity.rs`
+/// pins against the seed hint stream at depth 1.
+#[derive(Clone, Default)]
+pub struct NextToken {
+    bands: Vec<Vec<u32>>,
+}
+
+impl NextToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl ActivationPredictor for NextToken {
+    fn observe(&mut self, layer: usize, _sel: &[u32], band: &[u32]) {
+        if self.bands.len() <= layer {
+            self.bands.resize(layer + 1, Vec::new());
+        }
+        self.bands[layer] = band.to_vec();
+    }
+
+    fn predict(
+        &mut self,
+        _from_layer: usize,
+        _from_sel: &[u32],
+        target_layer: usize,
+        _distance: usize,
+        k: usize,
+    ) -> Vec<u32> {
+        let mut band = self.bands.get(target_layer).cloned().unwrap_or_default();
+        band.truncate(k);
+        band
+    }
+
+    fn label(&self) -> String {
+        "next-token".into()
+    }
+
+    fn session_state(&self) -> Option<Json> {
+        Some(Json::obj(vec![(
+            "bands",
+            Json::Array(self.bands.iter().map(|b| ids_to_json(b)).collect()),
+        )]))
+    }
+
+    fn restore_session_state(&mut self, state: &Json) {
+        self.bands = state
+            .get("bands")
+            .and_then(|b| b.as_array())
+            .map(|a| a.iter().map(ids_from_json).collect())
+            .unwrap_or_default();
+    }
+
+    fn reset_session_state(&mut self) {
+        self.bands.clear();
+    }
+
+    fn clone_box(&self) -> Box<dyn ActivationPredictor> {
+        Box::new(self.clone())
+    }
+}
+
+// ---------------------------------------------------------------------
+// ewma
+// ---------------------------------------------------------------------
+
+/// Per-layer exponentially-decayed expert-frequency prior. Each
+/// observation decays the target layer's scores by `2^(-1/half_life)`
+/// and adds 1 to every selected expert; `predict` returns the target
+/// layer's current top-k. A half-life of H observations means an expert
+/// selected H tokens ago carries half the weight of one selected now —
+/// this tracks the slow-moving popularity skew the paper's fig. 17
+/// exploits, without modeling transitions.
+#[derive(Clone)]
+pub struct Ewma {
+    half_life: f64,
+    decay: f64,
+    /// `scores[layer][expert]`, both dimensions grown on demand.
+    scores: Vec<Vec<f64>>,
+}
+
+impl Ewma {
+    pub const DEFAULT_HALF_LIFE: f64 = 64.0;
+
+    pub fn new(half_life: f64) -> Self {
+        Ewma { half_life, decay: 0.5f64.powf(1.0 / half_life), scores: Vec::new() }
+    }
+}
+
+impl ActivationPredictor for Ewma {
+    fn observe(&mut self, layer: usize, sel: &[u32], _band: &[u32]) {
+        if self.scores.len() <= layer {
+            self.scores.resize(layer + 1, Vec::new());
+        }
+        let row = &mut self.scores[layer];
+        for s in row.iter_mut() {
+            *s *= self.decay;
+        }
+        for &e in sel {
+            let e = e as usize;
+            if row.len() <= e {
+                row.resize(e + 1, 0.0);
+            }
+            row[e] += 1.0;
+        }
+    }
+
+    fn predict(
+        &mut self,
+        _from_layer: usize,
+        _from_sel: &[u32],
+        target_layer: usize,
+        _distance: usize,
+        k: usize,
+    ) -> Vec<u32> {
+        let Some(row) = self.scores.get(target_layer) else { return Vec::new() };
+        let scored = row.iter().enumerate().map(|(e, &s)| (e as u32, s)).collect();
+        top_k_by_score(scored, k)
+    }
+
+    fn label(&self) -> String {
+        format!("ewma:{}", self.half_life)
+    }
+
+    fn session_state(&self) -> Option<Json> {
+        Some(Json::obj(vec![(
+            "scores",
+            Json::Array(
+                self.scores
+                    .iter()
+                    .map(|row| Json::Array(row.iter().map(|&s| Json::num(s)).collect()))
+                    .collect(),
+            ),
+        )]))
+    }
+
+    fn restore_session_state(&mut self, state: &Json) {
+        self.scores = state
+            .get("scores")
+            .and_then(|s| s.as_array())
+            .map(|rows| {
+                rows.iter()
+                    .map(|row| {
+                        row.as_array()
+                            .map(|r| r.iter().filter_map(|v| v.as_f64()).collect())
+                            .unwrap_or_default()
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+    }
+
+    fn reset_session_state(&mut self) {
+        self.scores.clear();
+    }
+
+    fn clone_box(&self) -> Box<dyn ActivationPredictor> {
+        Box::new(self.clone())
+    }
+}
+
+// ---------------------------------------------------------------------
+// ngram (cross-layer transition table)
+// ---------------------------------------------------------------------
+
+/// Per-session cross-layer transition table: counts, for each layer
+/// distance `d`, how often seeing expert `ef` selected at layer `lf`
+/// was followed `d` observations later by expert `et` — where "d
+/// observations later" in traversal order *is* layer distance d,
+/// including the wrap from the last layer onto the next token's early
+/// layers, so the predictor never needs to know `n_layers`. `predict`
+/// merges the transition rows of every expert in the current selection
+/// and returns the top-k.
+///
+/// `window` bounds memory and keeps the table adaptive: once a row's
+/// total mass exceeds it, all counts in the row are halved and dust
+/// below 0.5 is pruned — old transitions fade instead of accumulating
+/// forever.
+#[derive(Clone)]
+pub struct Ngram {
+    window: usize,
+    /// `(distance, from_layer, from_expert) -> to_expert -> count`.
+    /// BTreeMaps keep iteration and serialization deterministic.
+    table: BTreeMap<(usize, usize, u32), BTreeMap<u32, f64>>,
+    /// Most recent observations, newest at the back, capped at
+    /// [`MAX_PREFETCH_DISTANCE`].
+    history: VecDeque<(usize, Vec<u32>)>,
+}
+
+impl Ngram {
+    pub const DEFAULT_WINDOW: usize = 4096;
+
+    pub fn new(window: usize) -> Self {
+        Ngram { window, table: BTreeMap::new(), history: VecDeque::new() }
+    }
+
+    fn bump(&mut self, dist: usize, from_layer: usize, from_expert: u32, to: &[u32]) {
+        let row = self.table.entry((dist, from_layer, from_expert)).or_default();
+        for &et in to {
+            *row.entry(et).or_insert(0.0) += 1.0;
+        }
+        let total: f64 = row.values().sum();
+        if total > self.window as f64 {
+            row.retain(|_, c| {
+                *c *= 0.5;
+                *c >= 0.5
+            });
+        }
+    }
+}
+
+impl ActivationPredictor for Ngram {
+    fn observe(&mut self, layer: usize, sel: &[u32], _band: &[u32]) {
+        // History is newest-last: the entry `a` slots from the back was
+        // observed `a + 1` steps (= layers, in traversal order) ago.
+        for age in 0..self.history.len() {
+            let idx = self.history.len() - 1 - age;
+            let (from_layer, from_sel) = self.history[idx].clone();
+            for ef in from_sel {
+                self.bump(age + 1, from_layer, ef, sel);
+            }
+        }
+        self.history.push_back((layer, sel.to_vec()));
+        while self.history.len() > MAX_PREFETCH_DISTANCE {
+            self.history.pop_front();
+        }
+    }
+
+    fn predict(
+        &mut self,
+        from_layer: usize,
+        from_sel: &[u32],
+        _target_layer: usize,
+        distance: usize,
+        k: usize,
+    ) -> Vec<u32> {
+        let mut merged: BTreeMap<u32, f64> = BTreeMap::new();
+        for &ef in from_sel {
+            if let Some(row) = self.table.get(&(distance, from_layer, ef)) {
+                for (&et, &c) in row {
+                    *merged.entry(et).or_insert(0.0) += c;
+                }
+            }
+        }
+        top_k_by_score(merged.into_iter().collect(), k)
+    }
+
+    fn label(&self) -> String {
+        format!("ngram:{}", self.window)
+    }
+
+    fn session_state(&self) -> Option<Json> {
+        let table = Json::Array(
+            self.table
+                .iter()
+                .map(|(&(d, l, e), row)| {
+                    Json::obj(vec![
+                        ("d", Json::num(d as f64)),
+                        ("l", Json::num(l as f64)),
+                        ("e", Json::num(e as f64)),
+                        (
+                            "to",
+                            Json::Array(
+                                row.iter()
+                                    .map(|(&et, &c)| {
+                                        Json::Array(vec![Json::num(et as f64), Json::num(c)])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        let history = Json::Array(
+            self.history
+                .iter()
+                .map(|(l, sel)| Json::Array(vec![Json::num(*l as f64), ids_to_json(sel)]))
+                .collect(),
+        );
+        Some(Json::obj(vec![("table", table), ("history", history)]))
+    }
+
+    fn restore_session_state(&mut self, state: &Json) {
+        self.table.clear();
+        self.history.clear();
+        if let Some(entries) = state.get("table").and_then(|t| t.as_array()) {
+            for e in entries {
+                let (Some(d), Some(l), Some(ex)) = (
+                    e.get("d").and_then(|v| v.as_usize()),
+                    e.get("l").and_then(|v| v.as_usize()),
+                    e.get("e").and_then(|v| v.as_f64()),
+                ) else {
+                    continue;
+                };
+                let mut row = BTreeMap::new();
+                if let Some(pairs) = e.get("to").and_then(|t| t.as_array()) {
+                    for p in pairs {
+                        if let Some(pair) = p.as_array() {
+                            if let (Some(et), Some(c)) =
+                                (pair.first().and_then(|v| v.as_f64()), pair.get(1).and_then(|v| v.as_f64()))
+                            {
+                                row.insert(et as u32, c);
+                            }
+                        }
+                    }
+                }
+                self.table.insert((d, l, ex as u32), row);
+            }
+        }
+        if let Some(entries) = state.get("history").and_then(|h| h.as_array()) {
+            for e in entries {
+                if let Some(pair) = e.as_array() {
+                    if let (Some(l), Some(sel)) =
+                        (pair.first().and_then(|v| v.as_usize()), pair.get(1))
+                    {
+                        self.history.push_back((l, ids_from_json(sel)));
+                    }
+                }
+            }
+        }
+    }
+
+    fn reset_session_state(&mut self) {
+        self.table.clear();
+        self.history.clear();
+    }
+
+    fn clone_box(&self) -> Box<dyn ActivationPredictor> {
+        Box::new(self.clone())
+    }
+}
+
+// ---------------------------------------------------------------------
+// prior:file= (offline table from a saved tracesim trace)
+// ---------------------------------------------------------------------
+
+/// The frozen tables a [`Prior`] predicts from, shared via `Arc` so
+/// cloning the predictor (session swaps, batch slots) never copies them.
+struct PriorTable {
+    /// Same keying as [`Ngram::table`], built once from the whole trace.
+    transitions: BTreeMap<(usize, usize, u32), BTreeMap<u32, f64>>,
+    /// `freq[layer][expert]` selection counts — the fallback when a
+    /// routing signal was never seen in the trace.
+    freq: Vec<Vec<f64>>,
+}
+
+/// The fig17 learned-prior path: an *offline* cross-layer transition
+/// table built from a saved `tracesim` trace (`moe_cache trace
+/// --save-trace …`), plus a per-layer frequency fallback for signals the
+/// trace never saw. Stateless at inference time: `observe` is a no-op
+/// and there is no per-session state to swap.
+#[derive(Clone)]
+pub struct Prior {
+    table: Arc<PriorTable>,
+    path: String,
+}
+
+impl Prior {
+    pub fn load(path: &Path) -> Result<Self> {
+        let trace = crate::tracesim::Trace::load(path)
+            .with_context(|| format!("loading prior trace {}", path.display()))?;
+        Ok(Prior::from_trace(&trace, &path.display().to_string()))
+    }
+
+    /// Build the tables from an in-memory trace (`path` only labels it).
+    pub fn from_trace(trace: &crate::tracesim::Trace, path: &str) -> Self {
+        let mut transitions: BTreeMap<(usize, usize, u32), BTreeMap<u32, f64>> = BTreeMap::new();
+        let mut freq = vec![vec![0.0f64; trace.n_experts]; trace.n_layers];
+        // Flatten to the engine's traversal order so positional distance
+        // equals layer distance, wrap included — the same convention the
+        // online Ngram learns.
+        let seq: Vec<(usize, &Vec<u32>)> = trace
+            .selections
+            .iter()
+            .flat_map(|token| token.iter().enumerate())
+            .collect();
+        for (i, &(layer, sel)) in seq.iter().enumerate() {
+            for &e in sel {
+                if let Some(f) = freq.get_mut(layer).and_then(|r| r.get_mut(e as usize)) {
+                    *f += 1.0;
+                }
+            }
+            for dist in 1..=MAX_PREFETCH_DISTANCE {
+                let Some(&(_, to_sel)) = seq.get(i + dist) else { break };
+                for &ef in sel {
+                    let row = transitions.entry((dist, layer, ef)).or_default();
+                    for &et in to_sel {
+                        *row.entry(et).or_insert(0.0) += 1.0;
+                    }
+                }
+            }
+        }
+        Prior { table: Arc::new(PriorTable { transitions, freq }), path: path.to_string() }
+    }
+}
+
+impl ActivationPredictor for Prior {
+    fn observe(&mut self, _layer: usize, _sel: &[u32], _band: &[u32]) {}
+
+    fn predict(
+        &mut self,
+        from_layer: usize,
+        from_sel: &[u32],
+        target_layer: usize,
+        distance: usize,
+        k: usize,
+    ) -> Vec<u32> {
+        let mut merged: BTreeMap<u32, f64> = BTreeMap::new();
+        for &ef in from_sel {
+            if let Some(row) = self.table.transitions.get(&(distance, from_layer, ef)) {
+                for (&et, &c) in row {
+                    *merged.entry(et).or_insert(0.0) += c;
+                }
+            }
+        }
+        if !merged.is_empty() {
+            return top_k_by_score(merged.into_iter().collect(), k);
+        }
+        let Some(row) = self.table.freq.get(target_layer) else { return Vec::new() };
+        let scored = row.iter().enumerate().map(|(e, &c)| (e as u32, c)).collect();
+        top_k_by_score(scored, k)
+    }
+
+    fn label(&self) -> String {
+        format!("prior:file={}", self.path)
+    }
+
+    fn clone_box(&self) -> Box<dyn ActivationPredictor> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used)]
+
+    use super::*;
+
+    fn roundtrip(p: &mut dyn ActivationPredictor) -> Option<Json> {
+        let s = p.session_state()?;
+        let text = s.to_string();
+        Some(crate::util::json::parse(&text).unwrap())
+    }
+
+    #[test]
+    fn next_token_replays_last_band() {
+        let mut p = NextToken::new();
+        p.observe(0, &[1, 2], &[1, 2, 3, 4]);
+        p.observe(1, &[5], &[5, 6]);
+        assert_eq!(p.predict(0, &[1, 2], 1, 1, 4), vec![5, 6]);
+        assert_eq!(p.predict(1, &[5], 0, 1, 2), vec![1, 2]);
+        assert_eq!(p.predict(0, &[], 7, 1, 4), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn next_token_state_roundtrips() {
+        let mut p = NextToken::new();
+        p.observe(0, &[1], &[1, 9]);
+        p.observe(2, &[4], &[4, 7]);
+        let j = roundtrip(&mut p).unwrap();
+        let mut q = NextToken::new();
+        q.restore_session_state(&j);
+        assert_eq!(q.predict(0, &[], 2, 2, 8), p.predict(0, &[], 2, 2, 8));
+        p.reset_session_state();
+        assert_eq!(p.predict(0, &[], 0, 1, 4), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn ewma_prefers_recent_frequency() {
+        let mut p = Ewma::new(4.0);
+        for _ in 0..8 {
+            p.observe(0, &[3], &[3]);
+        }
+        for _ in 0..3 {
+            p.observe(0, &[7], &[7]);
+        }
+        // 7 is recent but 3's mass (≈ decayed 8 hits) still dominates the
+        // top slot; both rank above never-seen experts.
+        let top = p.predict(0, &[], 0, 1, 2);
+        assert_eq!(top.len(), 2);
+        assert!(top.contains(&3) && top.contains(&7));
+        let j = roundtrip(&mut p).unwrap();
+        let mut q = Ewma::new(4.0);
+        q.restore_session_state(&j);
+        assert_eq!(q.predict(0, &[], 0, 1, 2), top);
+    }
+
+    #[test]
+    fn ngram_learns_cross_layer_transitions() {
+        let mut p = Ngram::new(Ngram::DEFAULT_WINDOW);
+        // Two layers, repeating pattern: expert e at layer 0 predicts
+        // expert e+10 at layer 1, and layer 1's e+10 predicts next
+        // token's layer-0 e (wrap, distance 1 again).
+        for _ in 0..10 {
+            p.observe(0, &[2], &[2]);
+            p.observe(1, &[12], &[12]);
+        }
+        assert_eq!(p.predict(0, &[2], 1, 1, 2), vec![12]);
+        // Distance 2 = same layer, next token.
+        assert_eq!(p.predict(0, &[2], 0, 2, 2), vec![2]);
+        assert_eq!(p.predict(0, &[99], 1, 1, 2), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn ngram_state_roundtrips() {
+        let mut p = Ngram::new(64);
+        for t in 0..6u32 {
+            p.observe(0, &[t % 3], &[t % 3]);
+            p.observe(1, &[10 + t % 3], &[10 + t % 3]);
+        }
+        let j = roundtrip(&mut p).unwrap();
+        let mut q = Ngram::new(64);
+        q.restore_session_state(&j);
+        assert_eq!(q.predict(0, &[1], 1, 1, 4), p.predict(0, &[1], 1, 1, 4));
+        assert_eq!(q.session_state().unwrap().to_string(), p.session_state().unwrap().to_string());
+    }
+
+    #[test]
+    fn ngram_window_halves_counts() {
+        let mut p = Ngram::new(4);
+        for _ in 0..32 {
+            p.observe(0, &[1], &[1]);
+            p.observe(1, &[2], &[2]);
+        }
+        let row = p.table.get(&(1, 0, 1)).unwrap();
+        let total: f64 = row.values().sum();
+        assert!(total <= 8.0, "window failed to bound row mass: {total}");
+        assert_eq!(p.predict(0, &[1], 1, 1, 1), vec![2]);
+    }
+
+    #[test]
+    fn prior_learns_from_trace_and_falls_back_to_frequency() {
+        let mut trace = crate::tracesim::Trace::new(16, 2);
+        for _ in 0..10 {
+            trace.push_token(vec![vec![3], vec![9]], None);
+        }
+        let mut p = Prior::from_trace(&trace, "mem");
+        assert_eq!(p.predict(0, &[3], 1, 1, 2), vec![9]);
+        // Unseen signal: per-layer frequency fallback.
+        assert_eq!(p.predict(0, &[15], 1, 1, 1), vec![9]);
+        assert!(p.session_state().is_none(), "prior is stateless");
+        assert_eq!(p.label(), "prior:file=mem");
+    }
+}

@@ -196,8 +196,8 @@ impl ExpertStore for FaultStore {
         Ok(total)
     }
 
-    fn prefetch(&mut self, layer: usize, expert: u32) {
-        self.inner.prefetch(layer, expert);
+    fn prefetch(&mut self, layer: usize, expert: u32, distance: usize) {
+        self.inner.prefetch(layer, expert, distance);
     }
 
     fn take_prefetched(
@@ -217,6 +217,10 @@ impl ExpertStore for FaultStore {
 
     fn prefetch_enabled(&self) -> bool {
         self.inner.prefetch_enabled()
+    }
+
+    fn set_prefetch_max_pending(&mut self, cap: usize) {
+        self.inner.set_prefetch_max_pending(cap);
     }
 
     fn prefetch_stats(&self) -> PrefetchStats {

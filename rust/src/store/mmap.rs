@@ -236,9 +236,9 @@ impl ExpertStore for MmapStore {
         Ok(total)
     }
 
-    fn prefetch(&mut self, layer: usize, expert: u32) {
+    fn prefetch(&mut self, layer: usize, expert: u32, distance: usize) {
         if let Some(p) = self.prefetcher.as_mut() {
-            p.issue(&self.image, layer, expert);
+            p.issue(&self.image, layer, expert, distance);
         }
     }
 
@@ -280,6 +280,12 @@ impl ExpertStore for MmapStore {
 
     fn prefetch_enabled(&self) -> bool {
         self.prefetcher.is_some()
+    }
+
+    fn set_prefetch_max_pending(&mut self, cap: usize) {
+        if let Some(p) = self.prefetcher.as_mut() {
+            p.set_max_pending(cap);
+        }
     }
 
     fn prefetch_stats(&self) -> PrefetchStats {

@@ -6,7 +6,8 @@
 //! tier each selected expert is served from (§3, Fig. 8). This module
 //! turns that hierarchy into an API, the system's third pluggable axis
 //! next to routing and eviction policies (replica placement, the fourth,
-//! lives in [`crate::policy::placement`]):
+//! lives in [`crate::policy::placement`]; activation prediction, the
+//! fifth, in [`crate::predict`]):
 //!
 //! * [`ExpertStore`] — owns the full lifecycle of expert bytes: span
 //!   metadata, demand [`ExpertStore::fetch_into`] (dequantized, straight
@@ -212,6 +213,16 @@ pub struct TierStats {
     pub rerouted: u64,
     /// Failed selections dropped (gate weights renormalized over the rest).
     pub dropped: u64,
+    /// Predictor-accuracy overlay, filled by the *engine* (from
+    /// [`PrefetchStats`]) — stores themselves leave these at zero, so the
+    /// pre-existing store-level parity comparisons are unaffected.
+    /// Prefetch hints handed to the worker pool.
+    pub prefetch_issued: u64,
+    /// Issued hints that never served a miss (completed but unclaimed —
+    /// mispredictions).
+    pub prefetch_unused: u64,
+    /// Issued hints evicted oldest-first under pending-table pressure.
+    pub prefetch_dropped: u64,
 }
 
 impl TierStats {
@@ -248,6 +259,19 @@ pub struct SpanMeta {
     pub bytes: u64,
 }
 
+/// Per-layer-distance slice of the prefetch accounting: how hints issued
+/// `distance` layers ahead fared. Index convention: slot `d - 1` holds
+/// distance `d`, clamped to [`crate::predict::MAX_PREFETCH_DISTANCE`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DistanceStats {
+    /// Hints handed to the worker pool at this distance.
+    pub issued: u64,
+    /// Of those, hints that went on to serve a demand miss.
+    pub used: u64,
+    /// Of those, hints evicted oldest-first under pending-table pressure.
+    pub dropped: u64,
+}
+
 /// Totals of a store's async prefetch pipeline.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PrefetchStats {
@@ -258,8 +282,26 @@ pub struct PrefetchStats {
     /// Hints coalesced onto an already-in-flight fetch instead of being
     /// re-issued — the cross-session dedup win under gang scheduling.
     pub deduped: u64,
+    /// Issued fetches evicted oldest-first to make room for fresh hints
+    /// (tune with `--prefetch-pending`).
+    pub dropped: u64,
     /// Fetches currently pending in the pipeline.
     pub in_flight: usize,
+    /// Accuracy accounting split by hint distance (slot `d - 1` =
+    /// distance `d`).
+    pub by_distance: [DistanceStats; crate::predict::MAX_PREFETCH_DISTANCE],
+}
+
+impl PrefetchStats {
+    /// Issued hints that will never serve a miss: completed (or still
+    /// completing) fetches that were neither claimed, dropped, nor are
+    /// still awaiting their chance — pure misprediction cost.
+    pub fn wasted(&self) -> u64 {
+        self.issued
+            .saturating_sub(self.used)
+            .saturating_sub(self.dropped)
+            .saturating_sub(self.in_flight as u64)
+    }
 }
 
 /// One destination of a coalesced fetch: a distinct routed expert and the
@@ -329,10 +371,13 @@ pub trait ExpertStore: Send {
     }
 
     /// Async hint: begin staging `(layer, expert)` ahead of demand.
-    /// Cancellable — [`ExpertStore::reset`] drops all pending hints, and
-    /// backends may drop stale hints under pressure. No-op by default
-    /// (backends without a pipeline, or pipeline disabled).
-    fn prefetch(&mut self, _layer: usize, _expert: u32) {}
+    /// `distance` is how many layers ahead of the hinting layer the
+    /// target sits (1 = next layer, the seed behavior) — accounting
+    /// only, it never changes what is fetched. Cancellable —
+    /// [`ExpertStore::reset`] drops all pending hints, and backends may
+    /// drop stale hints under pressure. No-op by default (backends
+    /// without a pipeline, or pipeline disabled).
+    fn prefetch(&mut self, _layer: usize, _expert: u32, _distance: usize) {}
 
     /// Claim a prefetched expert into the caller's slot views, charging a
     /// pipeline-served miss. `Ok(None)` means the pair was never staged
@@ -359,6 +404,11 @@ pub trait ExpertStore: Send {
     fn prefetch_enabled(&self) -> bool {
         false
     }
+
+    /// Bound the prefetch pending table (oldest entries are evicted
+    /// first beyond it). No-op for backends without a pipeline; call
+    /// after [`ExpertStore::enable_prefetch`].
+    fn set_prefetch_max_pending(&mut self, _cap: usize) {}
 
     /// Pipeline totals (issued / used / deduped hints / in-flight).
     fn prefetch_stats(&self) -> PrefetchStats {
@@ -426,7 +476,9 @@ pub(crate) fn pipeline_stats(prefetcher: &Option<Prefetcher>) -> PrefetchStats {
             issued: p.issued,
             used: p.used,
             deduped: p.deduped,
+            dropped: p.dropped,
             in_flight: p.in_flight(),
+            by_distance: p.by_distance,
         })
         .unwrap_or_default()
 }
@@ -631,6 +683,17 @@ mod tests {
         assert!(matches!(classify_fetch_err(2, 3, e), StoreError::Corrupt { .. }));
         let hard = classify_fetch_err(0, 0, anyhow::anyhow!("disk on fire"));
         assert!(matches!(hard, StoreError::Backend(_)));
+    }
+
+    #[test]
+    fn prefetch_wasted_accounting() {
+        let mut p = PrefetchStats { issued: 10, used: 4, deduped: 3, ..Default::default() };
+        p.dropped = 2;
+        p.in_flight = 1;
+        assert_eq!(p.wasted(), 3);
+        // Saturates rather than underflowing on torn snapshots.
+        p.used = 20;
+        assert_eq!(p.wasted(), 0);
     }
 
     #[test]

@@ -100,9 +100,9 @@ impl ExpertStore for SimStore {
         Ok(total)
     }
 
-    fn prefetch(&mut self, layer: usize, expert: u32) {
+    fn prefetch(&mut self, layer: usize, expert: u32, distance: usize) {
         if let Some(p) = self.prefetcher.as_mut() {
-            p.issue(&self.image, layer, expert);
+            p.issue(&self.image, layer, expert, distance);
         }
     }
 
@@ -134,6 +134,12 @@ impl ExpertStore for SimStore {
 
     fn prefetch_enabled(&self) -> bool {
         self.prefetcher.is_some()
+    }
+
+    fn set_prefetch_max_pending(&mut self, cap: usize) {
+        if let Some(p) = self.prefetcher.as_mut() {
+            p.set_max_pending(cap);
+        }
     }
 
     fn prefetch_stats(&self) -> PrefetchStats {

@@ -28,6 +28,7 @@
 #![warn(clippy::unwrap_used)]
 
 pub mod fleet;
+pub mod predict;
 pub mod serving;
 
 use std::path::Path;

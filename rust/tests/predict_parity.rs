@@ -1,0 +1,226 @@
+//! Predictive-prefetch parity gate.
+//!
+//! 1. Artifact-free: the predictor registry round-trips; the replay
+//!    scorer is deterministic; and the PR's pinned acceptance bar — on
+//!    the clustered synthetic trace the cross-layer `ngram` predictor
+//!    achieves strictly higher fraction-of-oracle AND strictly fewer
+//!    demand fetches than the seed `next-token` heuristic, at equal
+//!    aggregate tokens (same trace, same capacity, same pending cap).
+//! 2. Artifact-gated (skips without `make artifacts`): enabling
+//!    prediction must not change a single generated token for any
+//!    registered predictor — hints move fetch cost off the critical
+//!    path, never what gets computed — and a fixed seed replays
+//!    identically with the pipeline on.
+
+use std::path::PathBuf;
+
+use moe_cache::model::{Engine, EngineBuilder, Sampler};
+use moe_cache::predict::{parse_predictor, predictor_entries, validate_predictor_spec};
+use moe_cache::tracesim::predict::{clustered_trace, score_predictor};
+
+const MODEL: &str = "qwen-tiny";
+/// Small cache (of qwen-tiny's 60 experts) so misses — the thing hints
+/// exist to hide — stay plentiful.
+const CACHE: usize = 8;
+const MAX_NEW: usize = 32;
+
+// ---------------------------------------------------------------------
+// Artifact-free: registry, determinism, the pinned acceptance bar
+// ---------------------------------------------------------------------
+
+#[test]
+fn registry_examples_build_and_labels_roundtrip() {
+    for e in predictor_entries() {
+        validate_predictor_spec(e.example).expect(e.name);
+        let p = parse_predictor_or_prior(e.example);
+        let label = p.label();
+        // The label is itself a valid spec that parses back to the same
+        // label (the round-trip contract every axis registry shares).
+        let p2 = parse_predictor_or_prior(&label);
+        assert_eq!(p2.label(), label, "{} label must round-trip", e.name);
+    }
+}
+
+/// `prior:` needs a real trace file; registry examples for it point at a
+/// fixture we synthesize on the fly so the test stays artifact-free.
+fn parse_predictor_or_prior(spec: &str) -> Box<dyn moe_cache::predict::ActivationPredictor> {
+    if let Ok(p) = parse_predictor(spec) {
+        return p;
+    }
+    let path = temp_dir().join("registry_prior_trace.json");
+    clustered_trace(2, 60, 3, 16, 2, 4).save(&path).unwrap();
+    parse_predictor(&format!("prior:file={}", path.display())).unwrap()
+}
+
+fn temp_dir() -> PathBuf {
+    let d = std::env::temp_dir().join("moe_cache_predict_parity");
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn scorer_is_deterministic_for_every_registered_predictor() {
+    let tr = clustered_trace(3, 300, 4, 32, 4, 4);
+    let prior_path = temp_dir().join("det_prior_trace.json");
+    tr.save(&prior_path).unwrap();
+    let specs = vec![
+        "next-token".to_string(),
+        "ewma:32".to_string(),
+        "ngram:window=512".to_string(),
+        format!("prior:file={}", prior_path.display()),
+    ];
+    for spec in &specs {
+        let a = score_predictor(&tr, CACHE, spec, 2, 8, 64).unwrap();
+        let b = score_predictor(&tr, CACHE, spec, 2, 8, 64).unwrap();
+        assert_eq!(a.hints_issued, b.hints_issued, "{spec}");
+        assert_eq!(a.prefetch_served, b.prefetch_served, "{spec}");
+        assert_eq!(a.demand_fetches, b.demand_fetches, "{spec}");
+        assert_eq!(a.fraction_of_oracle.to_bits(), b.fraction_of_oracle.to_bits(), "{spec}");
+    }
+}
+
+/// The acceptance bar, pinned: a cross-layer predictor strictly beats the
+/// seed next-token heuristic on fraction-of-oracle AND demand fetches on
+/// the clustered trace, at both depth 1 and depth 2.
+#[test]
+fn ngram_strictly_beats_next_token_on_clustered_trace() {
+    let tr = clustered_trace(1, 600, 4, 32, 4, 4);
+    for depth in [1usize, 2] {
+        let nt = score_predictor(&tr, CACHE, "next-token", depth, 8, 64).unwrap();
+        let ng = score_predictor(&tr, CACHE, "ngram", depth, 8, 64).unwrap();
+        assert!(
+            ng.fraction_of_oracle > nt.fraction_of_oracle,
+            "depth {depth}: ngram fraction-of-oracle {:.4} must strictly beat next-token {:.4}",
+            ng.fraction_of_oracle,
+            nt.fraction_of_oracle
+        );
+        assert!(
+            ng.demand_fetches < nt.demand_fetches,
+            "depth {depth}: ngram demand fetches {} must strictly undercut next-token {}",
+            ng.demand_fetches,
+            nt.demand_fetches
+        );
+    }
+}
+
+/// The learned prior built from the trace itself is the fig17 upper
+/// reference among the offline predictors: at minimum it must also beat
+/// next-token on this workload.
+#[test]
+fn trace_prior_beats_next_token_on_its_own_trace() {
+    let tr = clustered_trace(4, 400, 4, 32, 4, 4);
+    let path = temp_dir().join("own_prior_trace.json");
+    tr.save(&path).unwrap();
+    let nt = score_predictor(&tr, CACHE, "next-token", 1, 8, 64).unwrap();
+    let pr =
+        score_predictor(&tr, CACHE, &format!("prior:file={}", path.display()), 1, 8, 64).unwrap();
+    assert!(pr.fraction_of_oracle > nt.fraction_of_oracle);
+    assert!(pr.demand_fetches < nt.demand_fetches);
+}
+
+// ---------------------------------------------------------------------
+// Artifact-gated: live-engine parity (skip, not fail, on bare checkouts)
+// ---------------------------------------------------------------------
+
+fn artifacts_ready() -> bool {
+    let arts = moe_cache::artifacts_dir();
+    arts.join(MODEL).join("manifest.json").exists()
+        && arts.join(MODEL).join("weights_int4.bin").exists()
+}
+
+fn build_engine(predictor: &str, depth: usize, record_trace: bool) -> Engine {
+    EngineBuilder::new(&moe_cache::artifacts_dir(), MODEL)
+        .cache_capacity(CACHE)
+        .seed(3)
+        .record_trace(record_trace)
+        .routing_spec("cache-prior:0.5:2")
+        .unwrap()
+        .predictor_spec(predictor)
+        .unwrap()
+        .prefetch_depth(depth)
+        .prefetch_pending(32)
+        .build()
+        .unwrap()
+}
+
+fn prompt() -> Vec<u32> {
+    (0..16).map(|t| 24 + ((t * 7) % 400) as u32).collect()
+}
+
+struct RunOut {
+    stream: Vec<u32>,
+    hits: u64,
+    misses: u64,
+    issued: u64,
+}
+
+fn run(predictor: &str, depth: usize, prefetch_on: bool) -> RunOut {
+    let mut e = build_engine(predictor, depth, false);
+    if prefetch_on {
+        e.enable_prefetch(2);
+    }
+    let mut sampler = Sampler::new(0.8, 40, 11);
+    let stream = e.generate(&prompt(), MAX_NEW, &mut sampler, None).unwrap();
+    let (hits, misses, _) = e.cache_totals();
+    RunOut { stream, hits, misses, issued: e.prefetch_stats().issued }
+}
+
+#[test]
+fn prediction_on_is_bit_identical_to_off_for_every_predictor() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let off = run("next-token", 1, false);
+    assert_eq!(off.stream.len(), MAX_NEW);
+    assert_eq!(off.issued, 0, "pipeline off must issue nothing");
+    for (spec, depth) in [
+        ("next-token", 1usize),
+        ("ewma:32", 1),
+        ("ngram:window=512", 1),
+        ("next-token", 2),
+        ("ngram:window=512", 3),
+    ] {
+        let on = run(spec, depth, true);
+        assert_eq!(
+            off.stream, on.stream,
+            "{spec} depth {depth}: hints must never change generated tokens"
+        );
+        assert_eq!(
+            (off.hits, off.misses),
+            (on.hits, on.misses),
+            "{spec} depth {depth}: hints must never change hit/miss accounting"
+        );
+    }
+}
+
+#[test]
+fn prior_predictor_from_saved_trace_is_bit_identical_too() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    // Record the trace the prior is learned from on the same workload.
+    let mut rec = build_engine("next-token", 1, true);
+    let mut sampler = Sampler::new(0.8, 40, 11);
+    let base = rec.generate(&prompt(), MAX_NEW, &mut sampler, None).unwrap();
+    let path = temp_dir().join("live_prior_trace.json");
+    rec.trace.save(&path).unwrap();
+    let on = run(&format!("prior:file={}", path.display()), 2, true);
+    assert_eq!(base, on.stream, "learned-prior hints must never change generated tokens");
+}
+
+#[test]
+fn fixed_seed_replay_is_deterministic_with_prediction_on() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let a = run("ngram:window=512", 2, true);
+    let b = run("ngram:window=512", 2, true);
+    assert_eq!(a.stream, b.stream);
+    // Hint issue depends only on cache state + predictor state, both
+    // deterministic; only the used/in-flight split is timing-dependent.
+    assert_eq!(a.issued, b.issued);
+    assert!(a.issued > 0, "an enabled pipeline on a cold cache must hint");
+}
