@@ -435,6 +435,104 @@ fn main() -> anyhow::Result<()> {
     store_out.push(("mmap_fetch_many_ns".into(), Json::num(coalesced.median_ns)));
     store_out.push(("fetch_many_batch".into(), Json::num(batch_n as f64)));
 
+    // ---- pread worker pool vs mmap on the same coalesced batch ----
+    // Same spans, same request order; the pool overlaps the per-span
+    // pread + dequant across workers, so the batch approaches max instead
+    // of sum. (In-process the page cache is warm, so this measures the
+    // overlap of the dequant work; the cold-I/O gap is larger.)
+    let pread_workers = 4usize;
+    let mut pread_store: Box<dyn moe_cache::store::ExpertStore> =
+        Box::new(moe_cache::store::PreadStore::open(&image_path, pread_workers)?);
+    let pread_coalesced = bench(
+        &format!("pread fetch_many ({batch_n} misses, {pread_workers} workers)"),
+        5,
+        40,
+        || {
+            let mut dsts: Vec<moe_cache::store::FetchDst> = batch
+                .iter()
+                .zip(bufs.iter_mut())
+                .map(|(&e, (b1, b3, b2))| moe_cache::store::FetchDst {
+                    expert: e,
+                    w1: b1.as_mut_slice(),
+                    w3: b3.as_mut_slice(),
+                    w2: b2.as_mut_slice(),
+                })
+                .collect();
+            black_box(pread_store.fetch_many(0, &mut dsts).unwrap());
+        },
+    );
+    pread_coalesced.print();
+    println!(
+        "coalesced batch ({batch_n} misses): mmap {:.0} ns -> pread {:.0} ns  ({:.2}x)",
+        coalesced.median_ns,
+        pread_coalesced.median_ns,
+        coalesced.median_ns / pread_coalesced.median_ns.max(1.0),
+    );
+    store_out.push(("pread_fetch_many_ns".into(), Json::num(pread_coalesced.median_ns)));
+    store_out.push(("pread_workers".into(), Json::num(pread_workers as f64)));
+
+    // ---- fused quantized GEMV vs dequant-then-matmul (host FFN kernels) ----
+    // The HostFused miss path computes x·W straight off the quantized
+    // bytes + per-column scales; the reference path materializes an f32
+    // matrix first. Identical f32 accumulation order, so the outputs are
+    // bit-equal — asserted here before timing either side.
+    println!();
+    let (rows, cols) = (d, f);
+    let mut krng = Rng::new(17);
+    let w_f32: Vec<f32> = (0..rows * cols).map(|_| krng.normal() as f32).collect();
+    let x: Vec<f32> = (0..rows).map(|_| krng.normal() as f32).collect();
+    let (q8, sc8) = moe_cache::quant::quant_sym(&w_f32, cols, 8);
+    let data8: Vec<u8> = q8.iter().map(|&v| v as u8).collect();
+    let (q4, sc4) = moe_cache::quant::quant_sym(&w_f32, cols, 4);
+    let data4 = moe_cache::quant::pack_i4(&q4);
+    let mut w_deq = vec![0f32; rows * cols];
+    let mut y_ref = vec![0f32; cols];
+    let mut y_fused = vec![0f32; cols];
+    for (tag, data, scales) in [("i8", &data8, &sc8), ("i4", &data4, &sc4)] {
+        if tag == "i8" {
+            moe_cache::quant::dequant_i8_into(data, scales, &mut w_deq);
+        } else {
+            moe_cache::quant::dequant_i4_into(data, scales, &mut w_deq);
+        }
+        moe_cache::quant::gemv_f32(&x, &w_deq, cols, &mut y_ref);
+        if tag == "i8" {
+            moe_cache::quant::gemv_i8(&x, data, scales, &mut y_fused);
+        } else {
+            moe_cache::quant::gemv_i4(&x, data, scales, &mut y_fused);
+        }
+        assert!(
+            y_ref.iter().zip(y_fused.iter()).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "fused {tag} GEMV must be bit-identical to dequant-then-matmul"
+        );
+        let deq = bench(&format!("dequant_{tag} + gemv_f32 ({rows}x{cols})"), 3, 30, || {
+            if tag == "i8" {
+                moe_cache::quant::dequant_i8_into(data, scales, &mut w_deq);
+            } else {
+                moe_cache::quant::dequant_i4_into(data, scales, &mut w_deq);
+            }
+            moe_cache::quant::gemv_f32(&x, &w_deq, cols, &mut y_ref);
+            black_box(&y_ref);
+        });
+        deq.print();
+        let fused = bench(&format!("fused gemv_{tag} ({rows}x{cols})"), 3, 30, || {
+            if tag == "i8" {
+                moe_cache::quant::gemv_i8(&x, data, scales, &mut y_fused);
+            } else {
+                moe_cache::quant::gemv_i4(&x, data, scales, &mut y_fused);
+            }
+            black_box(&y_fused);
+        });
+        fused.print();
+        println!(
+            "  {tag}: dequant+matmul {:.0} ns -> fused {:.0} ns  ({:.2}x)",
+            deq.median_ns,
+            fused.median_ns,
+            deq.median_ns / fused.median_ns.max(1.0),
+        );
+        out.push((format!("dequant_matmul_{tag}_ns"), Json::num(deq.median_ns)));
+        out.push((format!("gemv_fused_{tag}_ns"), Json::num(fused.median_ns)));
+    }
+
     // ---- persist the trajectory ----
     let json = Json::Object(out);
     let dir = results_dir();

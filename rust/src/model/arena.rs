@@ -52,6 +52,21 @@ struct Promotion {
     to: usize,
 }
 
+/// Raw quantized slot storage riding alongside the f32 slots — the
+/// quantized-arena mode ([`crate::model::FfnMode::HostFused`]): each slot
+/// additionally holds one expert's *still-quantized* span bytes (payload +
+/// scales, exactly as fetched via `ExpertStore::fetch_span`), and the host
+/// FFN runs the fused [`crate::quant::gemv_i8`]/[`crate::quant::gemv_i4`]
+/// kernels straight over them — a miss never materializes the
+/// intermediate f32 buffers.
+#[derive(Debug, Clone)]
+struct QuantSidecar {
+    /// Bytes of one expert span (uniform across routed experts).
+    span_bytes: usize,
+    /// `slots * span_bytes`, indexed like the f32 slot vecs.
+    raw: Vec<u8>,
+}
+
 #[derive(Debug, Clone)]
 pub struct LayerArena {
     /// Elements per slot: w1/w3 hold `df` (= d_model * d_ff), w2 holds `fd`.
@@ -71,6 +86,8 @@ pub struct LayerArena {
     overflow_used: usize,
     pending_promote: Vec<Promotion>,
     pending_release: Vec<u32>,
+    /// Raw quantized slot bytes (None = classic f32-only mode).
+    quant: Option<QuantSidecar>,
 }
 
 impl LayerArena {
@@ -90,7 +107,36 @@ impl LayerArena {
             overflow_used: 0,
             pending_promote: Vec::new(),
             pending_release: Vec::new(),
+            quant: None,
         }
+    }
+
+    /// Switch the quantized-arena mode on: every slot gains `span_bytes`
+    /// of raw quantized storage. Idempotent for a matching `span_bytes`.
+    pub fn enable_quant(&mut self, span_bytes: usize) {
+        let slots = self.n_cache + self.n_overflow;
+        match &mut self.quant {
+            Some(q) if q.span_bytes == span_bytes => {}
+            _ => self.quant = Some(QuantSidecar { span_bytes, raw: vec![0u8; slots * span_bytes] }),
+        }
+    }
+
+    /// Whether slots carry raw quantized bytes alongside the f32 views.
+    pub fn quant_enabled(&self) -> bool {
+        self.quant.is_some()
+    }
+
+    /// One slot's raw quantized span bytes (quant mode only).
+    pub fn quant_slot(&self, slot: usize) -> &[u8] {
+        let q = self.quant.as_ref().expect("quantized arena mode not enabled");
+        &q.raw[slot * q.span_bytes..(slot + 1) * q.span_bytes]
+    }
+
+    /// Mutable view of one slot's raw quantized span bytes (the
+    /// `fetch_span` copy target; quant mode only).
+    pub fn quant_slot_mut(&mut self, slot: usize) -> &mut [u8] {
+        let q = self.quant.as_mut().expect("quantized arena mode not enabled");
+        &mut q.raw[slot * q.span_bytes..(slot + 1) * q.span_bytes]
     }
 
     pub fn n_cache_slots(&self) -> usize {
@@ -227,6 +273,9 @@ impl LayerArena {
         self.w3.resize(slots * self.df, 0f32);
         self.w2.resize(slots * self.fd, 0f32);
         self.occupant.resize(slots, None);
+        if let Some(q) = &mut self.quant {
+            q.raw.resize(slots * q.span_bytes, 0u8);
+        }
         self.n_overflow = n;
     }
 
@@ -350,6 +399,10 @@ impl LayerArena {
             self.w1.copy_within(p.from * df..(p.from + 1) * df, p.to * df);
             self.w3.copy_within(p.from * df..(p.from + 1) * df, p.to * df);
             self.w2.copy_within(p.from * fd..(p.from + 1) * fd, p.to * fd);
+            if let Some(q) = &mut self.quant {
+                let sb = q.span_bytes;
+                q.raw.copy_within(p.from * sb..(p.from + 1) * sb, p.to * sb);
+            }
             self.occupant[p.to] = Some(p.expert);
             self.occupant[p.from] = None;
             self.map.insert(p.expert, p.to);
@@ -776,6 +829,44 @@ mod tests {
         assert_eq!(g.users[2], vec![(1, 0.1)]); // expert 7
         assert_eq!(g.token_accesses(), 4);
         assert_eq!(g.distinct.len(), 3, "4 token accesses, 3 distinct");
+    }
+
+    #[test]
+    fn quant_sidecar_tracks_promotions_and_growth() {
+        const SB: usize = 8;
+        let mut a = LayerArena::new(DF, FD, 2, 3);
+        assert!(!a.quant_enabled());
+        a.enable_quant(SB);
+        assert!(a.quant_enabled());
+        let s10 = a.alloc_cache_slot(10).unwrap();
+        fill(&mut a, s10, 10);
+        a.quant_slot_mut(s10).fill(10);
+        let s11 = a.alloc_cache_slot(11).unwrap();
+        fill(&mut a, s11, 11);
+        a.quant_slot_mut(s11).fill(11);
+        // Conflict-diverted miss: the raw bytes must follow the f32
+        // promotion into the victim's cache slot.
+        let plan = a
+            .plan_misses(&[20, 21], &[11, 10], &[20, 21], &[10, 20, 21])
+            .unwrap();
+        assert_eq!(plan[1].promote_to, Some(s10));
+        for m in &plan {
+            fill(&mut a, m.slot, m.expert);
+            a.quant_slot_mut(m.slot).fill(m.expert as u8);
+        }
+        a.finish_step();
+        assert_eq!(a.slot_of(21), Some(s10));
+        assert_eq!(a.quant_slot(s10), &[21u8; SB]);
+        assert_eq!(a.quant_slot(s11), &[20u8; SB]);
+        // Growing the overflow tail preserves existing raw bytes and
+        // addresses the new slots.
+        a.ensure_overflow(6);
+        assert_eq!(a.quant_slot(s10), &[21u8; SB]);
+        a.quant_slot_mut(2 + 5).fill(7);
+        assert_eq!(a.quant_slot(2 + 5), &[7u8; SB]);
+        // Re-enabling with the same span size is a no-op.
+        a.enable_quant(SB);
+        assert_eq!(a.quant_slot(s10), &[21u8; SB]);
     }
 
     #[test]

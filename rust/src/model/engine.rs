@@ -41,13 +41,14 @@ use crate::model::arena::{BatchGroups, LayerArena, MissSlot, StagedLayer};
 use crate::model::sampler::{log_prob, Sampler};
 use crate::policy::{BatchSelectInput, EvictionFactory, OriginalPolicy, RoutingPolicy};
 use crate::predict::{ActivationPredictor, MAX_PREFETCH_DISTANCE};
+use crate::quant;
 use crate::routing::{self, RouterState, Selection, Strategy};
 use crate::runtime::Runtime;
 use crate::store::{self, ExpertStore, FetchDst, PrefetchStats, TierStats};
 use crate::tracesim::Trace;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
-use crate::weights::FlashImage;
+use crate::weights::{FlashImage, SpanPart};
 
 /// Salt folded into [`EngineOptions::seed`] for the retry-jitter RNG, so
 /// the backoff stream is independent of the routing/probe RNG streams.
@@ -111,6 +112,32 @@ impl EngineOptions {
     }
 }
 
+/// Which implementation serves the per-layer experts mix.
+///
+/// `Device` is the production path. The host modes are single-session
+/// reference/bench paths for the fused-kernel hot-path work: they bypass
+/// the staged upload + XLA `experts` dispatch and compute the FFN on the
+/// host — miss fetches go straight to the store (no prefetch claims, no
+/// retry ladder), so the two host modes charge the tier *identically* by
+/// construction and their outputs are bit-identical by the fused-kernel
+/// contract (pinned by `tests/hotpath_parity.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FfnMode {
+    /// Stacked XLA `experts` dispatch over staged device buffers (the
+    /// production path; required by [`Engine::step_batch`]).
+    #[default]
+    Device,
+    /// Host-mirror reference: dequantized f32 arena slots + the plain
+    /// f32 GEMV ([`crate::quant::gemv_f32`]) — dequant-then-matmul.
+    HostRef,
+    /// Quantized-arena mode: slots hold raw span bytes
+    /// ([`crate::store::ExpertStore::fetch_span`]) and the FFN runs the
+    /// fused kernels ([`crate::quant::gemv_i8`] /
+    /// [`crate::quant::gemv_i4`]) straight over them — a miss never
+    /// materializes the intermediate f32 buffers.
+    HostFused,
+}
+
 /// Staged engine construction: artifacts → config → policies → options →
 /// sessions.
 ///
@@ -153,6 +180,7 @@ pub struct EngineBuilder {
     predictor: Option<Box<dyn ActivationPredictor>>,
     prefetch_depth: usize,
     prefetch_pending: Option<usize>,
+    ffn_mode: FfnMode,
 }
 
 impl EngineBuilder {
@@ -171,7 +199,15 @@ impl EngineBuilder {
             predictor: None,
             prefetch_depth: 1,
             prefetch_pending: None,
+            ffn_mode: FfnMode::Device,
         }
+    }
+
+    /// Which path serves the experts mix (see [`FfnMode`]; defaults to
+    /// the production `Device` dispatch).
+    pub fn ffn_mode(mut self, m: FfnMode) -> Self {
+        self.ffn_mode = m;
+        self
     }
 
     /// Reuse an already-loaded [`Runtime`] instead of loading from the
@@ -334,6 +370,7 @@ impl EngineBuilder {
             eviction,
             self.store.as_deref(),
             self.store_built,
+            self.ffn_mode,
         )?;
         if let Some(p) = self.fetch_policy {
             engine.set_fetch_policy(p);
@@ -636,6 +673,14 @@ pub struct Engine {
     /// the routed selection (Fig. 12). Cleared after each step.
     pub override_selection: Option<Vec<Vec<u32>>>,
     pub last_step: StepStats,
+    /// Which path serves the experts mix (see [`FfnMode`]).
+    ffn_mode: FfnMode,
+    /// Per-(layer, expert) span-part layout tables — resolved once at
+    /// build in `HostFused` mode (empty otherwise), so tensor lookups
+    /// stay off the decode hot path.
+    span_parts: Vec<Vec<[SpanPart; 3]>>,
+    /// Reusable raw-span fetch buffer (`HostFused` misses).
+    span_buf: Vec<u8>,
 }
 
 impl Engine {
@@ -656,7 +701,17 @@ impl Engine {
     ) -> Result<Self> {
         let routing = crate::policy::from_strategy(&opts.strategy);
         let eviction = EvictionFactory::from_policy(opts.policy);
-        Self::build_from_parts(rt, artifacts, cfg_name, opts, routing, eviction, None, None)
+        Self::build_from_parts(
+            rt,
+            artifacts,
+            cfg_name,
+            opts,
+            routing,
+            eviction,
+            None,
+            None,
+            FfnMode::Device,
+        )
     }
 
     /// The one real constructor: everything above funnels here.
@@ -670,6 +725,7 @@ impl Engine {
         eviction: EvictionFactory,
         store_spec: Option<&str>,
         store_built: Option<Box<dyn ExpertStore>>,
+        ffn_mode: FfnMode,
     ) -> Result<Self> {
         // A live engine never supplies the next-use closure, so an
         // oracle-requiring policy (plain `belady`) would panic at the
@@ -745,9 +801,27 @@ impl Engine {
             }
             staged.push(st);
         }
-        let arenas = (0..cfg.n_layers)
+        let mut arenas: Vec<LayerArena> = (0..cfg.n_layers)
             .map(|_| LayerArena::new(df, fd, opts.cache_capacity, cfg.top_k))
             .collect();
+        // Quantized-arena mode: slots additionally carry raw span bytes,
+        // and the per-(layer, expert) span layout is resolved once here so
+        // tensor lookups stay off the decode hot path.
+        let mut span_parts: Vec<Vec<[SpanPart; 3]>> = Vec::new();
+        if ffn_mode == FfnMode::HostFused {
+            let sb = image.bytes_per_expert() as usize;
+            anyhow::ensure!(sb > 0, "quantized arena mode needs routed expert spans");
+            for a in &mut arenas {
+                a.enable_quant(sb);
+            }
+            for l in 0..cfg.n_layers {
+                let mut per = Vec::with_capacity(cfg.n_experts);
+                for e in 0..cfg.n_experts {
+                    per.push(image.expert_span_parts(l, e, false)?);
+                }
+                span_parts.push(per);
+            }
+        }
         let caches = (0..cfg.n_layers)
             .map(|l| ExpertCache::with_policy(opts.cache_capacity, eviction.for_layer(l)))
             .collect();
@@ -779,6 +853,9 @@ impl Engine {
             trace,
             override_selection: None,
             last_step: StepStats::default(),
+            ffn_mode,
+            span_parts,
+            span_buf: Vec::new(),
             rt,
             cfg,
             image,
@@ -954,6 +1031,17 @@ impl Engine {
             self.caches[l].warm(&all, self.token_counter);
             for &e in &all {
                 let slot = self.arenas[l].alloc_cache_slot(e)?;
+                if self.ffn_mode == FfnMode::HostFused {
+                    // Quantized-arena warm-up: pull the raw span; any error
+                    // (host modes have no retry ladder) leaves the expert
+                    // cold, matching the best-effort contract above.
+                    if self.fetch_span_into_slot(l, e, slot).is_err() {
+                        let ms = MissSlot { expert: e, slot, promote_to: None };
+                        self.arenas[l].abort_miss(&ms);
+                        self.caches[l].invalidate(e, self.token_counter);
+                    }
+                    continue;
+                }
                 let budget_t0 = self.store.stats().time_s;
                 let (w1, w3, w2) = self.arenas[l].slot_mut(slot);
                 let fetched = fetch_guarded(
@@ -1128,38 +1216,58 @@ impl Engine {
             )?;
             let budget_t0 = self.store.stats().time_s;
             let mut failed: Vec<u32> = Vec::new();
-            for ms in &plan {
-                let (w1, w3, w2) = self.arenas[l].slot_mut(ms.slot);
-                let claimed = match self.store.take_prefetched(l, ms.expert, w1, w3, w2) {
-                    Ok(c) => c,
-                    // A fault on the prefetched copy falls back to a demand
-                    // fetch (retried below); hard errors abort the step.
-                    Err(e) if e.is_transient() => None,
-                    Err(e) => return Err(e.into()),
-                };
-                match claimed {
-                    Some(_) => {
-                        step_stats.prefetch_hits += 1;
-                        step_stats.flash_bytes += bytes_per;
-                    }
-                    None => {
-                        let fetched = fetch_guarded(
-                            self.store.as_mut(),
-                            &self.fetch_policy,
-                            &mut self.degrade,
-                            &mut self.fault_rng,
-                            budget_t0,
-                            l,
-                            ms.expert as usize,
-                            w1,
-                            w3,
-                            w2,
-                        )?;
-                        match fetched {
-                            Some(_) => step_stats.flash_bytes += bytes_per,
-                            None => failed.push(ms.expert),
+            if self.ffn_mode == FfnMode::Device {
+                for ms in &plan {
+                    let (w1, w3, w2) = self.arenas[l].slot_mut(ms.slot);
+                    let claimed = match self.store.take_prefetched(l, ms.expert, w1, w3, w2) {
+                        Ok(c) => c,
+                        // A fault on the prefetched copy falls back to a demand
+                        // fetch (retried below); hard errors abort the step.
+                        Err(e) if e.is_transient() => None,
+                        Err(e) => return Err(e.into()),
+                    };
+                    match claimed {
+                        Some(_) => {
+                            step_stats.prefetch_hits += 1;
+                            step_stats.flash_bytes += bytes_per;
+                        }
+                        None => {
+                            let fetched = fetch_guarded(
+                                self.store.as_mut(),
+                                &self.fetch_policy,
+                                &mut self.degrade,
+                                &mut self.fault_rng,
+                                budget_t0,
+                                l,
+                                ms.expert as usize,
+                                w1,
+                                w3,
+                                w2,
+                            )?;
+                            match fetched {
+                                Some(_) => step_stats.flash_bytes += bytes_per,
+                                None => failed.push(ms.expert),
+                            }
                         }
                     }
+                }
+            } else {
+                // Host-mirror modes: straight demand fetches — no prefetch
+                // claims (staged pipeline data is f32) and no retry ladder
+                // (these are reference/bench paths; errors fail the step) —
+                // so HostRef and HostFused charge the tier identically by
+                // construction.
+                let _ = budget_t0;
+                for ms in &plan {
+                    if self.ffn_mode == FfnMode::HostFused {
+                        self.fetch_span_into_slot(l, ms.expert, ms.slot)?;
+                    } else {
+                        let (w1, w3, w2) = self.arenas[l].slot_mut(ms.slot);
+                        self.store
+                            .fetch_into(l, ms.expert as usize, w1, w3, w2)
+                            .map_err(anyhow::Error::from)?;
+                    }
+                    step_stats.flash_bytes += bytes_per;
                 }
             }
             let degraded = !failed.is_empty();
@@ -1202,32 +1310,44 @@ impl Engine {
             // otherwise unchanged: `renorm` comes from the model config).
             let coef =
                 routing::gate_coefficients(&sel.weights, &sel.experts, renorm || degraded);
-            let copied = {
-                let (staged, arena) = (&mut self.staged[l], &self.arenas[l]);
-                staged.build(arena, &sel.experts, &coef)?
-            };
-            step_stats.staged_slots_copied += copied;
-            let staged = &self.staged[l];
-            if copied > 0 || self.staged_dev[l].is_none() {
-                let w1 = self.rt.buf_f32(&staged.w1, &[e_cnt, d, d_ff])?;
-                let w3 = self.rt.buf_f32(&staged.w3, &[e_cnt, d, d_ff])?;
-                let w2 = self.rt.buf_f32(&staged.w2, &[e_cnt, d_ff, d])?;
-                self.staged_dev[l] = Some((w1, w3, w2));
-                step_stats.staged_uploads += 1;
-            }
-            let coef_buf = self.rt.buf_f32(&staged.coef, &[e_cnt])?;
-            let xn_buf = self.rt.buf_f32(&xn, &[1, d])?;
-            step_stats.t_stage_s += t0.elapsed().as_secs_f64();
+            let y: Vec<f32> = if self.ffn_mode == FfnMode::Device {
+                let copied = {
+                    let (staged, arena) = (&mut self.staged[l], &self.arenas[l]);
+                    staged.build(arena, &sel.experts, &coef)?
+                };
+                step_stats.staged_slots_copied += copied;
+                let staged = &self.staged[l];
+                if copied > 0 || self.staged_dev[l].is_none() {
+                    let w1 = self.rt.buf_f32(&staged.w1, &[e_cnt, d, d_ff])?;
+                    let w3 = self.rt.buf_f32(&staged.w3, &[e_cnt, d, d_ff])?;
+                    let w2 = self.rt.buf_f32(&staged.w2, &[e_cnt, d_ff, d])?;
+                    self.staged_dev[l] = Some((w1, w3, w2));
+                    step_stats.staged_uploads += 1;
+                }
+                let coef_buf = self.rt.buf_f32(&staged.coef, &[e_cnt])?;
+                let xn_buf = self.rt.buf_f32(&xn, &[1, d])?;
+                step_stats.t_stage_s += t0.elapsed().as_secs_f64();
 
-            let t0 = Instant::now();
-            let (bw1, bw3, bw2) = self.staged_dev[l]
-                .as_ref()
-                .context("staged device buffers missing")?;
-            let outs = self
-                .rt
-                .run("experts", &[&xn_buf, bw1, bw3, bw2, &coef_buf])?;
-            let y: Vec<f32> = Runtime::lit_f32(&outs[0])?;
-            step_stats.t_compute_s += t0.elapsed().as_secs_f64();
+                let t0 = Instant::now();
+                let (bw1, bw3, bw2) = self.staged_dev[l]
+                    .as_ref()
+                    .context("staged device buffers missing")?;
+                let outs = self
+                    .rt
+                    .run("experts", &[&xn_buf, bw1, bw3, bw2, &coef_buf])?;
+                let y: Vec<f32> = Runtime::lit_f32(&outs[0])?;
+                step_stats.t_compute_s += t0.elapsed().as_secs_f64();
+                y
+            } else {
+                // Host-mirror FFN: no staging, no device upload — the
+                // routed experts are read straight out of the arena (f32
+                // slots, or the quantized sidecar via the fused kernels).
+                step_stats.t_stage_s += t0.elapsed().as_secs_f64();
+                let t0 = Instant::now();
+                let y = self.host_ffn(l, &xn, &sel.experts, &coef)?;
+                step_stats.t_compute_s += t0.elapsed().as_secs_f64();
+                y
+            };
 
             // Deferred arena moves: promote conflict-diverted misses and
             // drop streamed-but-not-retained experts — strictly AFTER the
@@ -1318,6 +1438,11 @@ impl Engine {
     /// ignores [`Engine::override_selection`].
     pub fn step_batch(&mut self, slots: &mut [SessionSlot]) -> Result<BatchPlan> {
         anyhow::ensure!(!slots.is_empty(), "step_batch on an empty batch");
+        anyhow::ensure!(
+            self.ffn_mode == FfnMode::Device,
+            "step_batch requires the device FFN path (host-mirror modes are \
+             single-session reference/bench paths)"
+        );
         let n_layers = self.cfg.n_layers;
         for (i, slot) in slots.iter().enumerate() {
             anyhow::ensure!(
@@ -2005,6 +2130,114 @@ impl Engine {
             misses as f64 / (hits + misses) as f64
         };
         (hits, misses, rate)
+    }
+
+    /// Pull one expert's raw quantized span from the store into the
+    /// arena's quantized sidecar slot ([`FfnMode::HostFused`] miss path —
+    /// no intermediate f32 dequant buffer). The scratch `span_buf` is
+    /// reused across calls so steady-state misses allocate nothing.
+    fn fetch_span_into_slot(&mut self, l: usize, expert: u32, slot: usize) -> Result<()> {
+        let mut buf = std::mem::take(&mut self.span_buf);
+        let res = self.store.fetch_span(l, expert as usize, &mut buf);
+        let out = match res {
+            Ok(_) => {
+                let dst = self.arenas[l].quant_slot_mut(slot);
+                if dst.len() == buf.len() {
+                    dst.copy_from_slice(&buf);
+                    Ok(())
+                } else {
+                    Err(anyhow::anyhow!(
+                        "expert {expert} (layer {l}): span is {} bytes, slot holds {}",
+                        buf.len(),
+                        dst.len()
+                    ))
+                }
+            }
+            Err(e) => Err(e.into()),
+        };
+        self.span_buf = buf;
+        out
+    }
+
+    /// Host-mirror FFN for one token at layer `l`: the routed experts are
+    /// applied from the arena — fused quantized GEMV over the sidecar's
+    /// raw bytes ([`FfnMode::HostFused`]) or dequant-then-f32-GEMV over
+    /// the f32 slots ([`FfnMode::HostRef`]) — then the shared experts from
+    /// the staged tail at coefficient 1.0. Both modes accumulate in f32 in
+    /// the same order, so their outputs are bit-identical (pinned by
+    /// `tests/hotpath_parity.rs`).
+    fn host_ffn(&self, l: usize, x: &[f32], experts: &[u32], coef: &[f32]) -> Result<Vec<f32>> {
+        let (d, d_ff) = (self.cfg.d_model, self.cfg.d_ff);
+        let mut y = vec![0f32; d];
+        let mut g = vec![0f32; d_ff];
+        let mut u = vec![0f32; d_ff];
+        let mut act = vec![0f32; d_ff];
+        let mut ye = vec![0f32; d];
+        for (i, &e) in experts.iter().enumerate() {
+            let slot = self.arenas[l]
+                .slot_of(e)
+                .with_context(|| format!("expert {e} selected but not staged in arena"))?;
+            if self.ffn_mode == FfnMode::HostFused {
+                let raw = self.arenas[l].quant_slot(slot);
+                let parts = &self.span_parts[l][e as usize];
+                host_gemv_part(x, &parts[0], raw, &mut g);
+                host_gemv_part(x, &parts[1], raw, &mut u);
+                silu_gate(&g, &u, &mut act);
+                host_gemv_part(&act, &parts[2], raw, &mut ye);
+            } else {
+                let (w1, w3, w2) = self.arenas[l].slot_data(slot);
+                quant::gemv_f32(x, w1, d_ff, &mut g);
+                quant::gemv_f32(x, w3, d_ff, &mut u);
+                silu_gate(&g, &u, &mut act);
+                quant::gemv_f32(&act, w2, d, &mut ye);
+            }
+            let c = coef[i];
+            for (acc, &v) in y.iter_mut().zip(ye.iter()) {
+                *acc += c * v;
+            }
+        }
+        // Shared experts live in the staged tail (always f32, always
+        // resident) at fixed positions after the routed slots.
+        let st = &self.staged[l];
+        let (df, fd) = (d * d_ff, d_ff * d);
+        for s in 0..self.cfg.n_shared {
+            let p = self.cfg.top_k + s;
+            quant::gemv_f32(x, &st.w1[p * df..(p + 1) * df], d_ff, &mut g);
+            quant::gemv_f32(x, &st.w3[p * df..(p + 1) * df], d_ff, &mut u);
+            silu_gate(&g, &u, &mut act);
+            quant::gemv_f32(&act, &st.w2[p * fd..(p + 1) * fd], d, &mut ye);
+            for (acc, &v) in y.iter_mut().zip(ye.iter()) {
+                *acc += v;
+            }
+        }
+        Ok(y)
+    }
+}
+
+/// SwiGLU activation: `act[i] = silu(g[i]) * u[i]`, matching the device
+/// graph's gate expression element-for-element.
+fn silu_gate(g: &[f32], u: &[f32], act: &mut [f32]) {
+    for ((a, &gv), &uv) in act.iter_mut().zip(g.iter()).zip(u.iter()) {
+        let s = gv * (1.0 / (1.0 + (-gv).exp()));
+        *a = s * uv;
+    }
+}
+
+/// One projection of a raw expert span: dispatch on the part's dtype to
+/// the matching fused kernel (i8/i4), falling back to a dequant + f32
+/// GEMV for f32-payload images (synthetic test fixtures).
+fn host_gemv_part(x: &[f32], part: &SpanPart, raw: &[u8], y: &mut [f32]) {
+    match part.dtype.as_str() {
+        "i8" => quant::gemv_i8(x, part.data_of(raw), &part.scales_of(raw), y),
+        "i4" => quant::gemv_i4(x, part.data_of(raw), &part.scales_of(raw), y),
+        _ => {
+            let w: Vec<f32> = part
+                .data_of(raw)
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            quant::gemv_f32(x, &w, y.len(), y);
+        }
     }
 }
 

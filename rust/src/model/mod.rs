@@ -24,7 +24,7 @@ pub mod sampler;
 pub use arena::{BatchGroups, LayerArena, MissSlot, StagedLayer};
 pub use engine::{
     BatchLayerPlan, BatchPlan, DegradeStats, Engine, EngineBuilder, EngineOptions,
-    EngineSnapshot, FetchPolicy, SessionSlot, SessionState, StepStats,
+    EngineSnapshot, FetchPolicy, FfnMode, SessionSlot, SessionState, StepStats,
 };
 pub use prefetch::Prefetcher;
 pub use sampler::Sampler;

@@ -1,18 +1,44 @@
-//! Symmetric per-output-column dequantization — the Rust half of the
-//! contract defined by `python/compile/export.py`.
+//! Symmetric per-output-column dequantization and fused quantized GEMV —
+//! the Rust half of the contract defined by `python/compile/export.py`.
 //!
 //! int4 packing: two two's-complement nibbles per byte, element `2i` in the
 //! low nibble. Scales are per last-axis column; for a row-major tensor
 //! `[.., C]`, element index `i` belongs to column `i % C`.
+//!
+//! Two kernel families share one numeric contract:
+//!
+//! * **Dequantize** ([`dequant_i8_into`] / [`dequant_i4_into`]): expand the
+//!   quantized bytes into a caller-owned f32 slice. Every element is
+//!   exactly `q as f32 * scale[col]` — one f32 multiply per element.
+//! * **Fused GEMV** ([`gemv_i8`] / [`gemv_i4`]): compute `x · W` straight
+//!   over the quantized bytes, skipping the intermediate f32 buffer. Each
+//!   output column accumulates `x[r] * (q as f32 * scale[col])` over rows
+//!   in ascending order — the *same* f32 expression and accumulation order
+//!   as dequantizing first and then running the [`gemv_f32`] reference, so
+//!   the fused path is **bit-identical** to dequant-then-matmul (pinned by
+//!   the property tests below and `tests/hotpath_parity.rs`).
+//!
+//! Both families block their inner loop by the scale period: the
+//! per-element `i % C` modulo of the naive loops is hoisted into a
+//! position-in-row walk, and the int4 unpack is branch-free
+//! (`(nib ^ 8).wrapping_sub(8)` sign-extends without a parity branch).
 
 /// Dequantize int8 into a caller-owned slice (the zero-allocation hot
 /// path: the slot arena dequantizes misses straight into their slot).
 pub fn dequant_i8_into(data: &[u8], scales: &[f32], out: &mut [f32]) {
     assert_eq!(data.len(), out.len(), "i8 dequant size mismatch");
     let c = scales.len();
-    for (i, (&b, o)) in data.iter().zip(out.iter_mut()).enumerate() {
-        let q = b as i8;
-        *o = q as f32 * scales[i % c];
+    if out.is_empty() {
+        return;
+    }
+    // Column-blocked: each chunk is one row of `c` elements, so the scale
+    // index is the position in the row — no per-element modulo. `chunks`
+    // (not `chunks_exact`) keeps a partial tail row correct; zipping with
+    // `scales` truncates to the tail's length.
+    for (drow, orow) in data.chunks(c).zip(out.chunks_mut(c)) {
+        for ((&b, o), &s) in drow.iter().zip(orow.iter_mut()).zip(scales.iter()) {
+            *o = (b as i8) as f32 * s;
+        }
     }
 }
 
@@ -22,11 +48,22 @@ pub fn dequant_i4_into(data: &[u8], scales: &[f32], out: &mut [f32]) {
     let c = scales.len();
     let n = out.len();
     assert!(data.len() * 2 >= n, "i4 dequant size mismatch");
-    for (i, o) in out.iter_mut().enumerate() {
-        let byte = data[i / 2];
-        let nib = if i % 2 == 0 { byte & 0xF } else { byte >> 4 };
-        let q = ((nib as i8) << 4) >> 4; // sign-extend the nibble
-        *o = q as f32 * scales[i % c];
+    if n == 0 {
+        return;
+    }
+    // Column-blocked like the i8 path; the flat element index `i` only
+    // survives as the nibble cursor (byte `i / 2`, low nibble when even).
+    // The unpack is branch-free: `(nib ^ 8) - 8` sign-extends a
+    // two's-complement nibble without the even/odd select.
+    let mut i = 0usize;
+    for orow in out.chunks_mut(c) {
+        for (o, &s) in orow.iter_mut().zip(scales.iter()) {
+            let byte = data[i >> 1];
+            let nib = (byte >> ((i & 1) * 4)) & 0xF;
+            let q = (nib ^ 8).wrapping_sub(8) as i8;
+            *o = q as f32 * s;
+            i += 1;
+        }
     }
 }
 
@@ -42,6 +79,88 @@ pub fn dequant_i4(data: &[u8], n: usize, scales: &[f32], out: &mut Vec<f32>) {
     out.clear();
     out.resize(n, 0.0);
     dequant_i4_into(data, scales, out);
+}
+
+/// Reference GEMV: `y = x · W` for a row-major `[rows, cols]` matrix,
+/// accumulating each output column in f32 over ascending rows.
+///
+/// This is the accumulation-order contract the fused quantized kernels
+/// ([`gemv_i8`], [`gemv_i4`]) match bit-for-bit: dequantize `W` with
+/// [`dequant_i8_into`]/[`dequant_i4_into`] and run this reference, and the
+/// result is identical to the fused kernel on the quantized bytes.
+pub fn gemv_f32(x: &[f32], w: &[f32], cols: usize, y: &mut [f32]) {
+    assert_eq!(y.len(), cols, "gemv output size mismatch");
+    assert_eq!(w.len(), x.len() * cols, "gemv weight size mismatch");
+    y.fill(0.0);
+    if cols == 0 {
+        return;
+    }
+    for (&xr, wrow) in x.iter().zip(w.chunks_exact(cols)) {
+        for (acc, &wv) in y.iter_mut().zip(wrow.iter()) {
+            *acc += xr * wv;
+        }
+    }
+}
+
+/// Fused int8 GEMV: `y = x · W` straight over the quantized bytes of a
+/// row-major `[rows, cols]` matrix with per-column scales — no
+/// intermediate f32 weight buffer. Bit-identical to
+/// [`dequant_i8_into`] + [`gemv_f32`] (same term `x[r] * (q * s)`, same
+/// ascending-row accumulation order).
+pub fn gemv_i8(x: &[f32], data: &[u8], scales: &[f32], y: &mut [f32]) {
+    let cols = scales.len();
+    assert_eq!(y.len(), cols, "gemv output size mismatch");
+    assert_eq!(data.len(), x.len() * cols, "i8 gemv size mismatch");
+    y.fill(0.0);
+    if cols == 0 {
+        return;
+    }
+    for (&xr, drow) in x.iter().zip(data.chunks_exact(cols)) {
+        for ((acc, &b), &s) in y.iter_mut().zip(drow.iter()).zip(scales.iter()) {
+            *acc += xr * ((b as i8) as f32 * s);
+        }
+    }
+}
+
+/// Fused int4 GEMV over packed nibbles (two elements per byte, low nibble
+/// first): `y = x · W` for a row-major `[rows, cols]` matrix with
+/// per-column scales. Bit-identical to [`dequant_i4_into`] + [`gemv_f32`].
+///
+/// When a row starts on a byte boundary and `cols` is even (every row of
+/// an even-width matrix), the inner loop walks whole bytes and unpacks
+/// both nibbles branch-free into adjacent columns; odd-phase rows (odd
+/// `cols`) fall back to the per-nibble cursor.
+pub fn gemv_i4(x: &[f32], data: &[u8], scales: &[f32], y: &mut [f32]) {
+    let cols = scales.len();
+    assert_eq!(y.len(), cols, "gemv output size mismatch");
+    let n = x.len() * cols;
+    assert!(data.len() * 2 >= n, "i4 gemv size mismatch");
+    y.fill(0.0);
+    let mut i = 0usize;
+    for &xr in x.iter() {
+        if i & 1 == 0 && cols & 1 == 0 {
+            // Aligned even-width row: one byte feeds two adjacent columns.
+            let start = i >> 1;
+            let bytes = &data[start..start + cols / 2];
+            for ((ypair, spair), &byte) in
+                y.chunks_exact_mut(2).zip(scales.chunks_exact(2)).zip(bytes.iter())
+            {
+                let lo = ((byte & 0xF) ^ 8).wrapping_sub(8) as i8;
+                let hi = ((byte >> 4) ^ 8).wrapping_sub(8) as i8;
+                ypair[0] += xr * (lo as f32 * spair[0]);
+                ypair[1] += xr * (hi as f32 * spair[1]);
+            }
+            i += cols;
+        } else {
+            for (acc, &s) in y.iter_mut().zip(scales.iter()) {
+                let byte = data[i >> 1];
+                let nib = (byte >> ((i & 1) * 4)) & 0xF;
+                let q = (nib ^ 8).wrapping_sub(8) as i8;
+                *acc += xr * (q as f32 * s);
+                i += 1;
+            }
+        }
+    }
 }
 
 /// Quantize (test + image-writer support; mirrors export.quantize_sym).
@@ -164,5 +283,97 @@ mod tests {
         let q: Vec<i8> = vec![1, -1];
         let packed = pack_i4(&q);
         assert_eq!(packed, vec![0b1111_0001]);
+    }
+
+    /// The column-blocked dequants are *byte-identical* to the naive
+    /// per-element `i % c` formulation they replaced (the pre-optimization
+    /// reference, written out inline so a regression cannot hide).
+    #[test]
+    fn blocked_dequant_matches_naive_reference_bitwise() {
+        prop_check("blocked dequant == naive", 100, |g| {
+            let cols = g.range(1, 24);
+            let rows = g.range(1, 24) * 2; // even element count for i4
+            let n = rows * cols;
+            let w = g.vec_f32(n, 1.0);
+
+            let (q8, s8) = quant_sym(&w, cols, 8);
+            let bytes: Vec<u8> = q8.iter().map(|&x| x as u8).collect();
+            let mut naive = vec![0f32; n];
+            for (i, o) in naive.iter_mut().enumerate() {
+                *o = (bytes[i] as i8) as f32 * s8[i % cols];
+            }
+            let mut got = vec![0f32; n];
+            dequant_i8_into(&bytes, &s8, &mut got);
+            for (i, (a, b)) in got.iter().zip(&naive).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("i8 elem {i}: {a} vs {b}"));
+                }
+            }
+
+            let (q4, s4) = quant_sym(&w, cols, 4);
+            let packed = pack_i4(&q4);
+            for (i, o) in naive.iter_mut().enumerate() {
+                let byte = packed[i / 2];
+                let nib = if i % 2 == 0 { byte & 0xF } else { byte >> 4 };
+                let q = ((nib as i8) << 4) >> 4; // branchy sign-extend
+                *o = q as f32 * s4[i % cols];
+            }
+            dequant_i4_into(&packed, &s4, &mut got);
+            for (i, (a, b)) in got.iter().zip(&naive).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("i4 elem {i}: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// THE fused-kernel pin: `gemv_i8`/`gemv_i4` over quantized bytes are
+    /// bit-identical to dequantize-then-`gemv_f32` across random shapes
+    /// (odd and even widths — both int4 phase paths) and seeds.
+    #[test]
+    fn fused_gemv_matches_dequant_then_gemv_bitwise() {
+        prop_check("fused gemv == dequant + gemv_f32", 100, |g| {
+            let cols = g.range(1, 24);
+            let rows = g.range(1, 24) * 2; // even element count for i4
+            let w = g.vec_f32(rows * cols, 1.0);
+            let x = g.vec_f32(rows, 1.0);
+
+            let (q8, s8) = quant_sym(&w, cols, 8);
+            let bytes: Vec<u8> = q8.iter().map(|&v| v as u8).collect();
+            let mut deq = vec![0f32; w.len()];
+            dequant_i8_into(&bytes, &s8, &mut deq);
+            let mut want = vec![0f32; cols];
+            gemv_f32(&x, &deq, cols, &mut want);
+            let mut got = vec![0f32; cols];
+            gemv_i8(&x, &bytes, &s8, &mut got);
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("i8 col {i}: {a} vs {b}"));
+                }
+            }
+
+            let (q4, s4) = quant_sym(&w, cols, 4);
+            let packed = pack_i4(&q4);
+            dequant_i4_into(&packed, &s4, &mut deq);
+            gemv_f32(&x, &deq, cols, &mut want);
+            gemv_i4(&x, &packed, &s4, &mut got);
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("i4 col {i}: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gemv_f32_is_plain_row_major_gemv() {
+        // 2x3: y = x0*row0 + x1*row1, accumulated in row order.
+        let w = [1.0f32, 2.0, 3.0, 10.0, 20.0, 30.0];
+        let x = [2.0f32, 0.5];
+        let mut y = vec![0f32; 3];
+        gemv_f32(&x, &w, 3, &mut y);
+        assert_eq!(y, vec![7.0, 14.0, 21.0]);
     }
 }

@@ -196,6 +196,44 @@ impl ExpertStore for FaultStore {
         Ok(total)
     }
 
+    /// Raw-span fetch: same per-fetch fault draws as [`Self::fetch_one`]
+    /// (fixed slow/err/corrupt order, so a seed determines one injection
+    /// stream whichever fetch shape the engine uses), scrubbing the raw
+    /// bytes on an injected corruption.
+    fn fetch_span(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        dst: &mut Vec<u8>,
+    ) -> StoreResult<u64> {
+        if self.healthy() {
+            return self.inner.fetch_span(layer, expert, dst);
+        }
+        let slow = self.rng.chance(self.cfg.slow);
+        let err = self.rng.chance(self.cfg.err);
+        let corrupt = self.rng.chance(self.cfg.corrupt);
+        if slow {
+            self.injected.slow += 1;
+            self.inner.charge_stall(self.cfg.slow_ms / 1000.0);
+        }
+        if err {
+            self.injected.transient += 1;
+            return Err(StoreError::Transient { layer, expert });
+        }
+        let bytes = self.inner.fetch_span(layer, expert, dst)?;
+        if corrupt {
+            self.injected.corrupt += 1;
+            let detail = self
+                .corrupt_span(layer, expert)
+                .unwrap_or_else(|e| format!("injector error: {e:#}"));
+            // The fetched bytes are suspect: scrub them so a caller that
+            // ignores the error cannot silently use them.
+            dst.fill(0);
+            return Err(StoreError::Corrupt { layer, expert, detail });
+        }
+        Ok(bytes)
+    }
+
     fn prefetch(&mut self, layer: usize, expert: u32, distance: usize) {
         self.inner.prefetch(layer, expert, distance);
     }

@@ -87,6 +87,30 @@ impl ExpertStore for MemStore {
         Ok(bytes)
     }
 
+    fn fetch_span(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        dst: &mut Vec<u8>,
+    ) -> StoreResult<u64> {
+        // Raw-span fetch for the quantized-arena path: the resident set
+        // holds dequantized f32 (the classic mode), so raw bytes come
+        // from the image each time — charged as a DRAM stream, exactly
+        // like a cache-level miss in `fetch_into` (flash counters stay 0).
+        let span = self.image.expert_span(layer, expert, false)?.clone();
+        let raw = self
+            .image
+            .read_span_bytes(&span)
+            .map_err(|e| super::classify_fetch_err(layer, expert, e))?;
+        self.image
+            .verify_span(layer, expert, false, &raw)
+            .map_err(|e| super::classify_fetch_err(layer, expert, anyhow::Error::new(e)))?;
+        *dst = raw;
+        self.stats.dram_bytes += span.bytes;
+        self.stats.time_s += span.bytes as f64 / self.profile.dram_bw_bytes_per_s;
+        Ok(span.bytes)
+    }
+
     fn charge_hit(&mut self, hits: u64, bytes_per_expert: u64) {
         let bytes = hits * bytes_per_expert;
         self.stats.dram_bytes += bytes;

@@ -41,10 +41,13 @@ extern "C" {
         offset: i64,
     ) -> *mut c_void;
     fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    fn madvise(addr: *mut c_void, len: usize, advice: c_int) -> c_int;
 }
 
 const PROT_READ: c_int = 1;
 const MAP_PRIVATE: c_int = 2;
+const MADV_WILLNEED: c_int = 3;
+const PAGE: usize = 4096;
 
 /// A read-only private mapping of one file. Unmapped when the last owner
 /// drops it (fleet replicas share one mapping behind an [`Arc`]).
@@ -163,6 +166,31 @@ impl MmapStore {
         anyhow::ensure!(end <= self.map.len, "span [{start}, {end}) outside the mapping");
         Ok(&self.map.as_slice()[start..end])
     }
+
+    /// Hint the kernel to start paging a span in (`madvise(MADV_WILLNEED)`)
+    /// so page-in overlaps with the dequantization of earlier spans in a
+    /// coalesced walk. Purely advisory: failures (and spans the bounds
+    /// check would reject — the walk fails on those properly) are ignored.
+    fn advise_willneed(&self, offset: u64, bytes: u64) {
+        let start = (self.payload_start + offset) as usize;
+        let end = start + bytes as usize;
+        if bytes == 0 || end > self.map.len {
+            return;
+        }
+        // madvise wants a page-aligned address: round down, widen the
+        // length by the slack.
+        let aligned = start & !(PAGE - 1);
+        // SAFETY: [aligned, end) lies inside the live mapping ([`Mapping`]
+        // is page-aligned by construction), and MADV_WILLNEED never
+        // alters mapping contents or validity.
+        unsafe {
+            madvise(
+                (self.map.ptr as *mut u8).add(aligned) as *mut c_void,
+                end - aligned,
+                MADV_WILLNEED,
+            );
+        }
+    }
 }
 
 impl ExpertStore for MmapStore {
@@ -219,6 +247,11 @@ impl ExpertStore for MmapStore {
             order.push((i, s.offset, s.bytes));
         }
         order.sort_unstable_by_key(|&(_, offset, _)| offset);
+        // Advise the whole sorted walk up front so the kernel pages later
+        // spans in while earlier ones dequantize.
+        for &(_, offset, bytes) in &order {
+            self.advise_willneed(offset, bytes);
+        }
         let mut total = 0u64;
         for &(i, offset, bytes) in &order {
             let d = &mut dsts[i];
@@ -234,6 +267,28 @@ impl ExpertStore for MmapStore {
         self.stats.flash_reads += dsts.len() as u64;
         self.stats.flash_bytes += total;
         Ok(total)
+    }
+
+    fn fetch_span(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        dst: &mut Vec<u8>,
+    ) -> StoreResult<u64> {
+        let t0 = Instant::now();
+        let span = self.image.expert_span(layer, expert, false)?.clone();
+        let raw = self.span_slice(span.offset, span.bytes)?;
+        self.image
+            .verify_span(layer, expert, false, raw)
+            .map_err(|e| super::classify_fetch_err(layer, expert, anyhow::Error::new(e)))?;
+        dst.clear();
+        dst.extend_from_slice(raw);
+        let dt = t0.elapsed().as_secs_f64();
+        self.stats.time_s += dt;
+        self.stats.fetch_wall_s += dt;
+        self.stats.flash_reads += 1;
+        self.stats.flash_bytes += span.bytes;
+        Ok(span.bytes)
     }
 
     fn prefetch(&mut self, layer: usize, expert: u32, distance: usize) {

@@ -22,6 +22,10 @@
 //!   on-device decode path.
 //! * [`MemStore`] — everything resident in DRAM; the unbounded-memory
 //!   upper bound Fig. 8's asymptote approaches.
+//! * [`PreadStore`] — positional `pread(2)` over a small worker pool:
+//!   coalesced [`ExpertStore::fetch_many`] batches issue genuinely
+//!   concurrent reads (span-sorted, dequantized on the worker), measured
+//!   like `mmap`.
 //!
 //! ## Spec grammar
 //!
@@ -31,6 +35,7 @@
 //! ```text
 //! sim | sim:profile=device-12gb      virtual clock on a device profile
 //! mmap | mmap:path=FILE              memory-mapped image, measured latency
+//! pread | pread:path=FILE:workers=N  pread(2) worker pool, concurrent batches
 //! mem  | mem:profile=device-16gb     all experts resident (upper bound)
 //! fault:inner=SPEC:err=P:...         fault-injecting wrapper (chaos testing)
 //! ```
@@ -100,11 +105,13 @@
 pub mod fault;
 pub mod mem;
 pub mod mmap;
+pub mod pread;
 pub mod sim;
 
 pub use fault::{FaultConfig, FaultStore};
 pub use mem::MemStore;
 pub use mmap::MmapStore;
+pub use pread::PreadStore;
 pub use sim::SimStore;
 
 use std::path::PathBuf;
@@ -370,6 +377,29 @@ pub trait ExpertStore: Send {
         Ok(total)
     }
 
+    /// Demand-fetch one routed expert's span *raw* — still-quantized
+    /// bytes, checksum-verified, resized into `dst` — for callers that
+    /// run the fused quantized kernels ([`crate::quant::gemv_i8`] /
+    /// [`crate::quant::gemv_i4`]) straight over the stored encoding and
+    /// never want the intermediate f32 buffers. Charges exactly like
+    /// [`ExpertStore::fetch_into`] (one demand miss, `span.bytes` moved),
+    /// so [`TierStats`] are identical by construction whichever path the
+    /// engine takes. Backends without byte-level access to their tier
+    /// keep the default, a hard [`StoreError::Backend`] — the engine's
+    /// quantized-arena mode requires a backend that overrides this (all
+    /// built-in backends do).
+    fn fetch_span(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        _dst: &mut Vec<u8>,
+    ) -> StoreResult<u64> {
+        Err(StoreError::Backend(anyhow::anyhow!(
+            "store {} does not support raw span fetches (expert {expert}, layer {layer})",
+            self.label()
+        )))
+    }
+
     /// Async hint: begin staging `(layer, expert)` ahead of demand.
     /// `distance` is how many layers ahead of the hinting layer the
     /// target sits (1 = next layer, the seed behavior) — accounting
@@ -533,6 +563,22 @@ fn build_mmap(a: &SpecArgs, ctx: &StoreCtx) -> Result<Box<dyn ExpertStore>> {
     Ok(Box::new(store))
 }
 
+fn build_pread(a: &SpecArgs, ctx: &StoreCtx) -> Result<Box<dyn ExpertStore>> {
+    let path = match a.get(0, "path") {
+        Some(p) => PathBuf::from(p),
+        None => ctx.image_path.clone(),
+    };
+    let workers = a.usize_or(1, "workers", PreadStore::DEFAULT_WORKERS)?;
+    anyhow::ensure!(workers >= 1, "pread workers must be >= 1, got {workers}");
+    let store = PreadStore::open(&path, workers)?;
+    anyhow::ensure!(
+        store.image().config == ctx.image.config,
+        "pread store image {} does not match the engine's model config",
+        path.display()
+    );
+    Ok(Box::new(store))
+}
+
 fn build_mem(a: &SpecArgs, ctx: &StoreCtx) -> Result<Box<dyn ExpertStore>> {
     Ok(Box::new(MemStore::new(ctx.image.clone(), profile_arg(a, ctx)?)))
 }
@@ -579,6 +625,13 @@ const STORE_ENTRIES: &[StoreEntry] = &[
         summary: "memory-mapped flash image, measured wall-clock fetch latency (path=FILE)",
         example: "mmap",
         build: build_mmap,
+    },
+    StoreEntry {
+        name: "pread",
+        aliases: &[],
+        summary: "pread(2) worker pool over the flash image: concurrent coalesced batches (path=FILE, workers=N)",
+        example: "pread",
+        build: build_pread,
     },
     StoreEntry {
         name: "mem",
@@ -662,6 +715,8 @@ mod tests {
         assert!(validate_store_spec("sim").is_ok());
         assert!(validate_store_spec("sim:profile=device-12gb").is_ok());
         assert!(validate_store_spec("mmap:path=weights.bin").is_ok());
+        assert!(validate_store_spec("pread").is_ok());
+        assert!(validate_store_spec("pread:path=weights.bin:workers=4").is_ok());
         assert!(validate_store_spec("mem").is_ok());
         assert!(validate_store_spec("resident").is_ok());
         assert!(validate_store_spec("fault:inner=sim:err=0.01:seed=7").is_ok());

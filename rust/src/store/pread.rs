@@ -1,0 +1,296 @@
+//! `PreadStore`: the concurrent measured backend — positional `pread(2)`
+//! reads over a small persistent worker pool.
+//!
+//! [`super::MmapStore`] already walks a coalesced batch in span-offset
+//! order, but every page fault still serializes inside the one calling
+//! thread. This backend makes the batch *actually* concurrent: each
+//! [`ExpertStore::fetch_many`] destination becomes one job on a
+//! [`WorkerPool`] — the worker preads the span (through the same
+//! [`FlashImage`] reader the prefetch pipeline uses, so checksum
+//! verification is shared) and dequantizes into its own buffers; the
+//! calling thread only copies finished weights into the arena slots.
+//! Wall time for a cold gang batch approaches `max` over the requests
+//! instead of their sum.
+//!
+//! Accounting follows the measured-backend contract exactly like `mmap`:
+//! `time_s` / `fetch_wall_s` are the wall-clock seconds the *calling
+//! thread* spent inside the fetch call, and byte/read totals are
+//! identical to looping [`ExpertStore::fetch_into`] by construction
+//! (pinned by `tests/hotpath_parity.rs`).
+
+use std::path::{Path, PathBuf};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::model::prefetch::Prefetcher;
+use crate::util::threadpool::WorkerPool;
+use crate::weights::FlashImage;
+
+use super::{ExpertStore, FetchDst, PrefetchStats, SpanMeta, StoreResult, TierStats};
+
+/// One worker's finished fetch: destination index, expert id, and either
+/// the dequantized parts + span bytes or the error to classify.
+type FetchedParts = (Vec<f32>, Vec<f32>, Vec<f32>, u64);
+type WorkerReply = (usize, usize, Result<FetchedParts>);
+
+pub struct PreadStore {
+    /// Shared reader: span table, checksum registry, and the `pread`
+    /// calls themselves (`read_exact_at` is `&self`, so workers read
+    /// concurrently through the one `Arc`).
+    image: Arc<FlashImage>,
+    /// The image path, kept for the round-tripping spec label.
+    path: PathBuf,
+    workers: usize,
+    pool: WorkerPool,
+    stats: TierStats,
+    prefetcher: Option<Prefetcher>,
+}
+
+impl PreadStore {
+    /// Default pool size when the spec omits `workers=`.
+    pub const DEFAULT_WORKERS: usize = 4;
+
+    /// Open the flash image at `path` with a pool of `workers` threads.
+    pub fn open(path: &Path, workers: usize) -> Result<Self> {
+        let image = Arc::new(
+            FlashImage::open(path)
+                .with_context(|| format!("opening pread store image {}", path.display()))?,
+        );
+        Ok(Self::over(image, path.to_path_buf(), workers))
+    }
+
+    /// Build over an already-open image (the share path).
+    fn over(image: Arc<FlashImage>, path: PathBuf, workers: usize) -> Self {
+        let workers = workers.max(1);
+        PreadStore {
+            image,
+            path,
+            workers,
+            pool: WorkerPool::new(workers),
+            stats: TierStats::default(),
+            prefetcher: None,
+        }
+    }
+
+    /// A new store over the *same* image reader with its own worker pool
+    /// and fresh, independent accounting — the fleet path. The checksum
+    /// registry is shared through the image `Arc`, so replicas verify
+    /// against one trusted-first-read reference.
+    pub fn share(&self) -> PreadStore {
+        PreadStore::over(self.image.clone(), self.path.clone(), self.workers)
+    }
+
+    /// The underlying image metadata (config/span validation).
+    pub fn image(&self) -> &FlashImage {
+        &self.image
+    }
+}
+
+impl ExpertStore for PreadStore {
+    fn label(&self) -> String {
+        // Path + workers round-trip so a run's store can be rebuilt from
+        // its label alone (same colon caveat as the mmap label).
+        format!("pread:path={}:workers={}", self.path.display(), self.workers)
+    }
+
+    fn try_share(&self) -> Option<Box<dyn ExpertStore>> {
+        Some(Box::new(self.share()))
+    }
+
+    fn span_meta(&self, layer: usize, expert: usize) -> Result<SpanMeta> {
+        let s = self.image.expert_span(layer, expert, false)?;
+        Ok(SpanMeta { offset: s.offset, bytes: s.bytes })
+    }
+
+    fn fetch_into(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        w1: &mut [f32],
+        w3: &mut [f32],
+        w2: &mut [f32],
+    ) -> StoreResult<u64> {
+        // A single demand miss gains nothing from the pool: pread + dequant
+        // inline on the calling thread, timed exactly like the mmap path.
+        let t0 = Instant::now();
+        let bytes = self
+            .image
+            .fetch_expert_into(layer, expert, false, w1, w3, w2)
+            .map_err(|e| super::classify_fetch_err(layer, expert, e))?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.stats.time_s += dt;
+        self.stats.fetch_wall_s += dt;
+        self.stats.flash_reads += 1;
+        self.stats.flash_bytes += bytes;
+        Ok(bytes)
+    }
+
+    /// Coalesced fetch, one pool job per destination, submitted in
+    /// span-offset order so the reads stream forward over the file. Byte
+    /// and read totals are identical to looping
+    /// [`ExpertStore::fetch_into`]; only the measured wall time changes —
+    /// it approaches the slowest single request instead of the sum.
+    fn fetch_many(&mut self, layer: usize, dsts: &mut [FetchDst<'_>]) -> StoreResult<u64> {
+        if dsts.is_empty() {
+            return Ok(0);
+        }
+        let t0 = Instant::now();
+        let mut order: Vec<(usize, u64)> = Vec::with_capacity(dsts.len());
+        for (i, d) in dsts.iter().enumerate() {
+            let s = self.image.expert_span(layer, d.expert, false)?;
+            order.push((i, s.offset));
+        }
+        order.sort_unstable_by_key(|&(_, offset)| offset);
+        let (tx, rx) = mpsc::channel::<WorkerReply>();
+        for &(i, _) in &order {
+            let d = &dsts[i];
+            let (expert, n1, n3, n2) = (d.expert, d.w1.len(), d.w3.len(), d.w2.len());
+            let image = Arc::clone(&self.image);
+            let tx = tx.clone();
+            self.pool.submit(move || {
+                // Jobs are 'static: dequantize into owned buffers sized
+                // from the destination views, ship them back whole.
+                let mut w1 = vec![0.0f32; n1];
+                let mut w3 = vec![0.0f32; n3];
+                let mut w2 = vec![0.0f32; n2];
+                let res = image
+                    .fetch_expert_into(layer, expert, false, &mut w1, &mut w3, &mut w2)
+                    .map(|bytes| (w1, w3, w2, bytes));
+                // Send only fails if the caller already bailed on an
+                // earlier error and dropped the receiver.
+                let _ = tx.send((i, expert, res));
+            });
+        }
+        drop(tx);
+        let mut total = 0u64;
+        for _ in 0..dsts.len() {
+            let (i, expert, res) = rx.recv().map_err(|_| {
+                super::StoreError::Backend(anyhow::anyhow!(
+                    "pread worker died before completing a layer-{layer} batch fetch"
+                ))
+            })?;
+            let (w1, w3, w2, bytes) =
+                res.map_err(|e| super::classify_fetch_err(layer, expert, e))?;
+            let d = &mut dsts[i];
+            d.w1.copy_from_slice(&w1);
+            d.w3.copy_from_slice(&w3);
+            d.w2.copy_from_slice(&w2);
+            total += bytes;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        self.stats.time_s += dt;
+        self.stats.fetch_wall_s += dt;
+        self.stats.flash_reads += dsts.len() as u64;
+        self.stats.flash_bytes += total;
+        Ok(total)
+    }
+
+    fn fetch_span(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        dst: &mut Vec<u8>,
+    ) -> StoreResult<u64> {
+        let t0 = Instant::now();
+        let span = self.image.expert_span(layer, expert, false)?.clone();
+        let raw = self
+            .image
+            .read_span_bytes(&span)
+            .map_err(|e| super::classify_fetch_err(layer, expert, e))?;
+        self.image
+            .verify_span(layer, expert, false, &raw)
+            .map_err(|e| super::classify_fetch_err(layer, expert, anyhow::Error::new(e)))?;
+        *dst = raw;
+        let dt = t0.elapsed().as_secs_f64();
+        self.stats.time_s += dt;
+        self.stats.fetch_wall_s += dt;
+        self.stats.flash_reads += 1;
+        self.stats.flash_bytes += span.bytes;
+        Ok(span.bytes)
+    }
+
+    fn prefetch(&mut self, layer: usize, expert: u32, distance: usize) {
+        if let Some(p) = self.prefetcher.as_mut() {
+            p.issue(&self.image, layer, expert, distance);
+        }
+    }
+
+    fn take_prefetched(
+        &mut self,
+        layer: usize,
+        expert: u32,
+        w1: &mut [f32],
+        w3: &mut [f32],
+        w2: &mut [f32],
+    ) -> StoreResult<Option<u64>> {
+        // Measured backend: charge only the blocking part (wait + copy);
+        // the overlapped fetch itself ran off-thread.
+        let t0 = Instant::now();
+        let claimed = super::claim_prefetched(&mut self.prefetcher, layer, expert, w1, w3, w2)
+            .map_err(|e| super::classify_fetch_err(layer, expert as usize, e))?;
+        match claimed {
+            None => Ok(None),
+            Some(bytes) => {
+                let dt = t0.elapsed().as_secs_f64();
+                self.stats.time_s += dt;
+                self.stats.fetch_wall_s += dt;
+                self.stats.flash_reads += 1;
+                self.stats.flash_bytes += bytes;
+                self.stats.prefetch_reads += 1;
+                self.stats.prefetch_bytes += bytes;
+                Ok(Some(bytes))
+            }
+        }
+    }
+
+    fn enable_prefetch(&mut self, workers: usize) -> bool {
+        if self.prefetcher.is_none() {
+            self.prefetcher = Some(Prefetcher::new(workers));
+        }
+        true
+    }
+
+    fn prefetch_enabled(&self) -> bool {
+        self.prefetcher.is_some()
+    }
+
+    fn set_prefetch_max_pending(&mut self, cap: usize) {
+        if let Some(p) = self.prefetcher.as_mut() {
+            p.set_max_pending(cap);
+        }
+    }
+
+    fn prefetch_stats(&self) -> PrefetchStats {
+        super::pipeline_stats(&self.prefetcher)
+    }
+
+    fn charge_hit(&mut self, hits: u64, bytes_per_expert: u64) {
+        // Hits cost a slot lookup, not a byte move — record the streamed
+        // bytes for cross-backend comparability, charge no time.
+        self.stats.dram_bytes += hits * bytes_per_expert;
+    }
+
+    fn charge_stall(&mut self, seconds: f64) {
+        // Backoff waits and injected spikes are modelled time, folded
+        // into the tier clock but not the fetch wall time.
+        self.stats.time_s += seconds;
+    }
+
+    fn end_token(&mut self, _resident_bytes: u64) {
+        // Measured backend: no synthetic compute or pressure charge.
+        self.stats.tokens += 1;
+    }
+
+    fn stats(&self) -> TierStats {
+        self.stats.clone()
+    }
+
+    fn reset(&mut self) {
+        self.stats = TierStats::default();
+        if let Some(p) = self.prefetcher.as_mut() {
+            p.reset();
+        }
+    }
+}

@@ -100,6 +100,28 @@ impl ExpertStore for SimStore {
         Ok(total)
     }
 
+    fn fetch_span(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        dst: &mut Vec<u8>,
+    ) -> StoreResult<u64> {
+        // Raw-span fetch for the quantized-arena path: same pread, same
+        // checksum gate, same one-read virtual-clock charge as
+        // `fetch_into` — `TierStats` cannot tell the two modes apart.
+        let span = self.image.expert_span(layer, expert, false)?.clone();
+        let raw = self
+            .image
+            .read_span_bytes(&span)
+            .map_err(|e| super::classify_fetch_err(layer, expert, e))?;
+        self.image
+            .verify_span(layer, expert, false, &raw)
+            .map_err(|e| super::classify_fetch_err(layer, expert, anyhow::Error::new(e)))?;
+        *dst = raw;
+        self.sim.read_flash(span.bytes);
+        Ok(span.bytes)
+    }
+
     fn prefetch(&mut self, layer: usize, expert: u32, distance: usize) {
         if let Some(p) = self.prefetcher.as_mut() {
             p.issue(&self.image, layer, expert, distance);

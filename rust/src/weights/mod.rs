@@ -107,6 +107,38 @@ pub struct ExpertSpan {
     pub bytes: u64,
 }
 
+/// Byte layout of one expert part *inside* its span: where the quantized
+/// payload and the per-column scales live relative to the span's first
+/// byte. Lets a holder of raw span bytes (the quantized slot arena) run
+/// the fused [`crate::quant::gemv_i8`]/[`crate::quant::gemv_i4`] kernels
+/// straight over them — no intermediate f32 buffer. Obtained from
+/// [`FlashImage::expert_span_parts`]; pure metadata, so callers may cache
+/// it per expert.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanPart {
+    /// Element dtype: `"f32"`, `"i8"` or `"i4"`.
+    pub dtype: String,
+    /// Quantized payload bytes, relative to the span start.
+    pub data: std::ops::Range<usize>,
+    /// Per-column scale bytes (little-endian f32s), relative to the span
+    /// start; empty for f32 parts.
+    pub scales: std::ops::Range<usize>,
+    /// Logical element count of the part.
+    pub elems: usize,
+}
+
+impl SpanPart {
+    /// The part's quantized payload inside the span's raw bytes.
+    pub fn data_of<'a>(&self, raw: &'a [u8]) -> &'a [u8] {
+        &raw[self.data.clone()]
+    }
+
+    /// Decode the part's per-column scales out of the span's raw bytes.
+    pub fn scales_of(&self, raw: &[u8]) -> Vec<f32> {
+        le_f32s(&raw[self.scales.clone()])
+    }
+}
+
 /// An opened flash image. Cheap to clone the metadata; reads go through the
 /// shared file handle.
 pub struct FlashImage {
@@ -469,6 +501,44 @@ impl FlashImage {
         dequant_part("w3", w3)?;
         dequant_part("w2", w2)?;
         Ok(())
+    }
+
+    /// The three parts (`w1`, `w3`, `w2`) of one expert as byte layouts
+    /// inside its span (see [`SpanPart`]), validated against the span
+    /// bounds once here so callers can slice raw span bytes directly.
+    /// Integrity is the caller's side of the contract: verify the raw
+    /// bytes with [`FlashImage::verify_span`] when they are first read
+    /// (every store fetch does).
+    pub fn expert_span_parts(
+        &self,
+        layer: usize,
+        expert: usize,
+        shared: bool,
+    ) -> Result<[SpanPart; 3]> {
+        let span = self.expert_span(layer, expert, shared)?;
+        let (base, len) = (span.offset, span.bytes);
+        let prefix = if shared { "shared" } else { "experts" };
+        let part = |part: &str| -> Result<SpanPart> {
+            let name = format!("layers.{layer}.{prefix}.{expert}.{part}");
+            let t = self.tensor(&name)?;
+            anyhow::ensure!(
+                t.offset >= base && t.offset + t.bytes <= base + len,
+                "tensor {name} outside its span"
+            );
+            let data = (t.offset - base) as usize..(t.offset - base + t.bytes) as usize;
+            let scales = if t.scales_offset >= 0 {
+                let so = t.scales_offset as u64;
+                anyhow::ensure!(
+                    so >= base && so + t.scales_bytes <= base + len,
+                    "tensor {name}: scales outside its span"
+                );
+                (so - base) as usize..(so - base + t.scales_bytes) as usize
+            } else {
+                0..0
+            };
+            Ok(SpanPart { dtype: t.dtype.clone(), data, scales, elems: t.elems() })
+        };
+        Ok([part("w1")?, part("w3")?, part("w2")?])
     }
 
     /// Total bytes of all routed-expert spans (the "cacheable" set).

@@ -1,0 +1,258 @@
+//! Decode hot-path parity gate (fused kernels + pread store).
+//!
+//! 1. Artifact-free: `PreadStore` serves bit-identical weights with
+//!    identical byte/read accounting to `MmapStore` on a synthetic f32
+//!    image — single fetches, coalesced batches, raw-span fetches and
+//!    shared (`try_share`) replicas — and the span-part table used by the
+//!    fused host FFN describes the synthetic layout exactly.
+//! 2. Artifact-gated (`make artifacts`): a `pread:`-backed engine decodes
+//!    bit-identically to `mmap:` (logits, hit/miss, byte/read totals),
+//!    and the host-mirror FFN modes are bit-identical to each other —
+//!    `HostFused` (fused quantized GEMV over the arena's raw sidecar)
+//!    reproduces `HostRef` (dequant-then-f32-GEMV) logits and TierStats
+//!    exactly, the engine-level pin on the fused-kernel contract.
+
+mod common;
+
+use std::sync::Arc;
+
+use moe_cache::store::{ExpertStore, FetchDst, MmapStore, PreadStore};
+
+use common::{synth_image, val, D, N_EXPERTS, N_LAYERS, SPAN_BYTES};
+
+/// Flat buffers for one expert's three parts on the synthetic image.
+fn part_bufs() -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    (vec![0f32; D * D], vec![0f32; D * D], vec![0f32; D * D])
+}
+
+#[test]
+fn pread_fetch_into_matches_mmap_bitwise() {
+    let path = synth_image("pread_fetch_into");
+    let mut mmap = MmapStore::open(&path).expect("open mmap");
+    let mut pread = PreadStore::open(&path, 3).expect("open pread");
+    for l in 0..N_LAYERS {
+        for e in 0..N_EXPERTS {
+            let (mut a1, mut a3, mut a2) = part_bufs();
+            let (mut b1, mut b3, mut b2) = part_bufs();
+            let ba = mmap.fetch_into(l, e, &mut a1, &mut a3, &mut a2).expect("mmap fetch");
+            let bb = pread.fetch_into(l, e, &mut b1, &mut b3, &mut b2).expect("pread fetch");
+            assert_eq!(ba, bb, "L{l} E{e}: byte totals diverged");
+            assert_eq!(ba, SPAN_BYTES);
+            for (p, (got, want)) in [(&b1, &a1), (&b3, &a3), (&b2, &a2)].iter().enumerate() {
+                for (i, (x, y)) in got.iter().zip(want.iter()).enumerate() {
+                    assert_eq!(x.to_bits(), y.to_bits(), "L{l} E{e} part {p} elem {i}");
+                    assert_eq!(*x, val(l, e, p, i), "L{l} E{e} part {p} elem {i}: wrong value");
+                }
+            }
+        }
+    }
+    let (sa, sb) = (mmap.stats(), pread.stats());
+    assert_eq!(sa.flash_reads, sb.flash_reads, "read totals diverged");
+    assert_eq!(sa.flash_bytes, sb.flash_bytes, "byte totals diverged");
+    assert!(sb.fetch_wall_s > 0.0, "pread must measure wall time");
+}
+
+#[test]
+fn pread_fetch_many_matches_mmap_bitwise() {
+    let path = synth_image("pread_fetch_many");
+    let mut mmap = MmapStore::open(&path).expect("open mmap");
+    let mut pread = PreadStore::open(&path, 3).expect("open pread");
+    // Request order deliberately != span order, so both backends exercise
+    // their offset sort; every expert of the layer lands in one batch.
+    let experts: Vec<usize> = (0..N_EXPERTS).map(|i| (i * 3 + 1) % N_EXPERTS).collect();
+    let run = |store: &mut dyn ExpertStore| {
+        let mut bufs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> =
+            (0..N_EXPERTS).map(|_| part_bufs()).collect();
+        let mut dsts: Vec<FetchDst> = experts
+            .iter()
+            .zip(bufs.iter_mut())
+            .map(|(&e, (w1, w3, w2))| FetchDst { expert: e, w1, w3, w2 })
+            .collect();
+        let bytes = store.fetch_many(0, &mut dsts).expect("fetch_many");
+        drop(dsts);
+        (bytes, bufs)
+    };
+    let (bytes_a, bufs_a) = run(&mut mmap);
+    let (bytes_b, bufs_b) = run(&mut pread);
+    assert_eq!(bytes_a, bytes_b, "batch byte totals diverged");
+    assert_eq!(bytes_a, SPAN_BYTES * N_EXPERTS as u64);
+    for (i, &e) in experts.iter().enumerate() {
+        let (a1, a3, a2) = &bufs_a[i];
+        let (b1, b3, b2) = &bufs_b[i];
+        for (p, (got, want)) in [(b1, a1), (b3, a3), (b2, a2)].iter().enumerate() {
+            for (j, (x, y)) in got.iter().zip(want.iter()).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "E{e} part {p} elem {j}");
+                assert_eq!(*x, val(0, e, p, j), "E{e} part {p} elem {j}: wrong value");
+            }
+        }
+    }
+    let (sa, sb) = (mmap.stats(), pread.stats());
+    assert_eq!(
+        (sa.flash_reads, sa.flash_bytes),
+        (sb.flash_reads, sb.flash_bytes),
+        "coalesced accounting diverged"
+    );
+    // A shared replica reads through the same image with fresh accounting.
+    let mut replica = pread.try_share().expect("pread must support try_share");
+    assert_eq!(replica.stats().flash_reads, 0, "replica accounting must start fresh");
+    let (mut r1, mut r3, mut r2) = part_bufs();
+    replica.fetch_into(1, 2, &mut r1, &mut r3, &mut r2).expect("replica fetch");
+    assert_eq!(r1[0], val(1, 2, 0, 0));
+}
+
+#[test]
+fn pread_fetch_span_matches_mmap_and_reference_bytes() {
+    let path = synth_image("pread_fetch_span");
+    let mut mmap = MmapStore::open(&path).expect("open mmap");
+    let mut pread = PreadStore::open(&path, 2).expect("open pread");
+    let image = Arc::new(moe_cache::weights::FlashImage::open(&path).expect("open image"));
+    for l in 0..N_LAYERS {
+        for e in 0..N_EXPERTS {
+            let span = image.expert_span(l, e, false).expect("span").clone();
+            let want = image.read_span_bytes(&span).expect("reference bytes");
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            let ba = mmap.fetch_span(l, e, &mut a).expect("mmap span");
+            let bb = pread.fetch_span(l, e, &mut b).expect("pread span");
+            assert_eq!(ba, bb);
+            assert_eq!(ba, span.bytes);
+            assert_eq!(a, want, "L{l} E{e}: mmap raw bytes diverged");
+            assert_eq!(b, want, "L{l} E{e}: pread raw bytes diverged");
+        }
+    }
+    // fetch_span charges exactly like fetch_into: one read, span bytes.
+    let n = (N_LAYERS * N_EXPERTS) as u64;
+    for s in [mmap.stats(), pread.stats()] {
+        assert_eq!(s.flash_reads, n);
+        assert_eq!(s.flash_bytes, n * SPAN_BYTES);
+    }
+}
+
+#[test]
+fn pread_spec_and_label_round_trip() {
+    let path = synth_image("pread_label");
+    let pread = PreadStore::open(&path, 5).expect("open pread");
+    let label = pread.label();
+    assert!(label.starts_with("pread:path="), "{label}");
+    assert!(label.ends_with(":workers=5"), "{label}");
+    moe_cache::store::validate_store_spec(&label).expect("label must re-validate as a spec");
+    moe_cache::store::validate_store_spec("pread").expect("bare spec");
+    moe_cache::store::validate_store_spec("pread:workers=8").expect("workers-only spec");
+}
+
+/// The span-part table driving the fused host FFN describes the synthetic
+/// layout exactly: three f32 parts, densely packed, no scales.
+#[test]
+fn expert_span_parts_describe_synth_layout() {
+    let path = synth_image("span_parts");
+    let image = moe_cache::weights::FlashImage::open(&path).expect("open image");
+    for l in 0..N_LAYERS {
+        for e in 0..N_EXPERTS {
+            let span = image.expert_span(l, e, false).expect("span").clone();
+            let raw = image.read_span_bytes(&span).expect("raw");
+            let parts = image.expert_span_parts(l, e, false).expect("parts");
+            for (p, part) in parts.iter().enumerate() {
+                assert_eq!(part.dtype, "f32", "L{l} E{e} part {p}");
+                assert_eq!(part.elems, D * D);
+                assert!(part.scales_of(&raw).is_empty(), "f32 parts carry no scales");
+                let data = part.data_of(&raw);
+                assert_eq!(data.len(), D * D * 4);
+                for i in 0..D * D {
+                    let b = &data[i * 4..(i + 1) * 4];
+                    let got = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+                    assert_eq!(got, val(l, e, p, i), "L{l} E{e} part {p} elem {i}");
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Artifact-gated suites
+// ---------------------------------------------------------------------
+
+const MODEL: &str = "qwen-tiny";
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let p = moe_cache::artifacts_dir();
+    let ready = p.join(MODEL).join("manifest.json").exists()
+        && p.join(MODEL).join("weights_int4.bin").exists();
+    if ready {
+        Some(p)
+    } else {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        None
+    }
+}
+
+/// `pread:` engines decode bit-identically to `mmap:` — same logits, same
+/// hit/miss totals, same bytes moved and reads issued; only the measured
+/// wall time may differ.
+#[test]
+fn pread_engine_decodes_identically_to_mmap() {
+    let Some(arts) = artifacts() else { return };
+    let data = moe_cache::eval::EvalData::load(&arts.join("data")).unwrap();
+    let tokens: Vec<u32> = data.ppl_test[..40].to_vec();
+    let run = |store: &str| {
+        let mut e = moe_cache::model::EngineBuilder::new(&arts, MODEL)
+            .cache_capacity(16)
+            .seed(3)
+            .routing_spec("cache-prior:0.5:2")
+            .unwrap()
+            .store_spec(store)
+            .unwrap()
+            .build()
+            .unwrap();
+        let (nll, n) = e.score_sequence(&tokens).unwrap();
+        assert_eq!(n, tokens.len() - 1, "{store}");
+        let (hits, misses, _) = e.cache_totals();
+        (nll, hits, misses, e.tier_stats(), e.store_label())
+    };
+    let (nll_m, h_m, m_m, tier_m, _) = run("mmap");
+    let (nll_p, h_p, m_p, tier_p, label_p) = run("pread:workers=4");
+    assert_eq!(nll_m.to_bits(), nll_p.to_bits(), "pread changed the math");
+    assert_eq!((h_m, m_m), (h_p, m_p), "hit/miss diverged");
+    assert_eq!(tier_m.flash_bytes, tier_p.flash_bytes, "byte totals diverged");
+    assert_eq!(tier_m.flash_reads, tier_p.flash_reads, "read totals diverged");
+    assert_eq!(tier_m.dram_bytes, tier_p.dram_bytes, "hit streaming diverged");
+    assert!(label_p.starts_with("pread:path="), "{label_p}");
+    moe_cache::store::validate_store_spec(&label_p).unwrap();
+    assert!(tier_p.fetch_wall_s > 0.0, "pread must report measured latency");
+}
+
+/// The engine-level fused-kernel pin: `HostFused` (raw quantized sidecar
+/// + fused GEMV) reproduces `HostRef` (f32 arena + dequant-then-GEMV)
+/// bit-identically — logits, hit/miss, and the full virtual-clock
+/// TierStats, since `fetch_span` charges exactly like `fetch_into`.
+#[test]
+fn host_fused_ffn_is_bit_identical_to_host_reference() {
+    let Some(arts) = artifacts() else { return };
+    let data = moe_cache::eval::EvalData::load(&arts.join("data")).unwrap();
+    let tokens: Vec<u32> = data.ppl_test[..32].to_vec();
+    let run = |mode: moe_cache::model::FfnMode| {
+        let mut e = moe_cache::model::EngineBuilder::new(&arts, MODEL)
+            .cache_capacity(16)
+            .seed(11)
+            .routing_spec("cache-prior:0.5:2")
+            .unwrap()
+            .store_spec("sim")
+            .unwrap()
+            .ffn_mode(mode)
+            .build()
+            .unwrap();
+        let (nll, n) = e.score_sequence(&tokens).unwrap();
+        assert_eq!(n, tokens.len() - 1, "{mode:?}");
+        let (hits, misses, _) = e.cache_totals();
+        (nll, hits, misses, e.tier_stats())
+    };
+    let (nll_r, h_r, m_r, tier_r) = run(moe_cache::model::FfnMode::HostRef);
+    let (nll_f, h_f, m_f, tier_f) = run(moe_cache::model::FfnMode::HostFused);
+    assert_eq!(nll_r.to_bits(), nll_f.to_bits(), "fused kernels changed the math");
+    assert_eq!((h_r, m_r), (h_f, m_f), "hit/miss diverged");
+    assert_eq!(tier_r.flash_bytes, tier_f.flash_bytes, "byte totals diverged");
+    assert_eq!(tier_r.flash_reads, tier_f.flash_reads, "read totals diverged");
+    assert_eq!(
+        tier_r.time_s.to_bits(),
+        tier_f.time_s.to_bits(),
+        "virtual time diverged: fetch_span must charge exactly like fetch_into"
+    );
+}
